@@ -1,0 +1,126 @@
+//! End-to-end serving driver (the EXPERIMENTS.md headline run): starts the
+//! full lacache-serve stack in-process, fires a batch of concurrent client
+//! requests over TCP (retrieval prompts + freeform continuations), and
+//! reports latency percentiles, throughput, and a needle accuracy spot-check.
+//!
+//! ```bash
+//! cargo run --release --example e2e_serve -- --requests 24 --clients 4
+//! ```
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+use lacache::config::ServeConfig;
+use lacache::data::tasks::{fresh_entity, needle_prompt};
+use lacache::server::run_server;
+use lacache::util::args::Args;
+use lacache::util::json::Json;
+use lacache::util::rng::SplitMix64;
+use lacache::util::stats::Samples;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let n_requests = args.usize_or("requests", 24);
+    let n_clients = args.usize_or("clients", 4);
+    let listen = args.str_or("listen", "127.0.0.1:7411");
+    let policy = args.str_or("policy", "lacache:budget=128,span=2");
+
+    // server thread (owns the PJRT runtime)
+    let cfg = ServeConfig { listen: listen.clone(), policy: policy.clone(), ..Default::default() };
+    let server = std::thread::spawn(move || run_server(cfg));
+
+    // wait for the listener
+    let mut probe = None;
+    for _ in 0..100 {
+        if let Ok(s) = TcpStream::connect(&listen) {
+            probe = Some(s);
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(100));
+    }
+    drop(probe.context("server did not come up")?);
+    println!("server up at {listen} with policy {policy}; firing {n_requests} requests from {n_clients} clients");
+
+    // client threads: needle-retrieval prompts (scorable) over 512..1024-token contexts
+    let t0 = Instant::now();
+    let mut handles = Vec::new();
+    for client in 0..n_clients {
+        let listen = listen.clone();
+        let per_client = n_requests / n_clients;
+        handles.push(std::thread::spawn(move || -> Result<Vec<(f64, f64, f64)>> {
+            let conn = TcpStream::connect(&listen)?;
+            let mut reader = BufReader::new(conn.try_clone()?);
+            let mut writer = conn;
+            let mut out = Vec::new();
+            for i in 0..per_client {
+                let mut rng = SplitMix64::new((client * 1000 + i) as u64);
+                let ctx = 512 + (i % 3) * 256;
+                let e = fresh_entity(&mut rng);
+                let task = needle_prompt(&mut rng, ctx, &[(0.4, e)], 0);
+                let prompt: Vec<i64> = task.prompt.iter().map(|&t| t as i64).collect();
+                let req = Json::from_pairs(vec![
+                    ("op", "generate".into()),
+                    ("id", ((client * 1000 + i) as i64).into()),
+                    ("prompt_tokens", prompt.into()),
+                    ("max_new_tokens", 4usize.into()),
+                ]);
+                writer.write_all(req.to_string().as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+                let mut line = String::new();
+                reader.read_line(&mut line)?;
+                let resp = Json::parse(&line).map_err(|e| anyhow::anyhow!("{e}"))?;
+                anyhow::ensure!(resp.bool_of("ok") == Some(true), "request failed: {line}");
+                let gen: Vec<i32> = resp
+                    .req("tokens")
+                    .as_arr()
+                    .unwrap()
+                    .iter()
+                    .map(|t| t.as_i64().unwrap() as i32)
+                    .collect();
+                let score = lacache::data::tasks::score_generation(&task, &gen);
+                out.push((
+                    resp.f64_of("ttft_ms").unwrap_or(0.0),
+                    resp.f64_of("total_ms").unwrap_or(0.0),
+                    score,
+                ));
+            }
+            Ok(out)
+        }));
+    }
+    let mut ttft = Samples::new();
+    let mut total = Samples::new();
+    let mut scores = Samples::new();
+    for h in handles {
+        for (tt, to, sc) in h.join().unwrap()? {
+            ttft.record(tt);
+            total.record(to);
+            scores.record(sc);
+        }
+    }
+    let wall = t0.elapsed().as_secs_f64();
+
+    // pull server-side stats, then shut down
+    let conn = TcpStream::connect(&listen)?;
+    let mut reader = BufReader::new(conn.try_clone()?);
+    let mut writer = conn;
+    writer.write_all(b"{\"op\":\"stats\",\"id\":9998}\n")?;
+    writer.flush()?;
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let stats = Json::parse(&line).unwrap();
+    writer.write_all(b"{\"op\":\"shutdown\",\"id\":9999}\n")?;
+    writer.flush()?;
+    let _ = server.join();
+
+    println!("\n=== e2e serving report ===");
+    println!("requests completed : {}", scores.len());
+    println!("wall time          : {wall:.2}s  ({:.2} req/s)", scores.len() as f64 / wall);
+    println!("ttft   (ms)        : {}", ttft.summary("ms"));
+    println!("e2e    (ms)        : {}", total.summary("ms"));
+    println!("needle accuracy    : {:.1}%", scores.mean() * 100.0);
+    println!("server stats       : {}", stats.req("stats").to_string());
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! Needle-in-a-haystack mini-heatmap: LaCache vs StreamingLLM at the same
+//! budget (the Fig. 8 mechanism, terminal edition).
+//!
+//! ```bash
+//! cargo run --release --example needle_demo -- --budget 128 --reps 2
+//! ```
+
+use anyhow::Result;
+use lacache::eval::niah::niah_heatmap;
+use lacache::runtime::Runtime;
+use lacache::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env();
+    let budget = args.usize_or("budget", 128);
+    let reps = args.usize_or("reps", 2);
+    let rt = Runtime::load(&lacache::artifacts_dir(), &["base"])?;
+    let ctx = [384, 512, 768, 1024];
+    let depths = [0.1, 0.3, 0.5, 0.7, 0.9];
+    for (label, spec) in [
+        ("StreamingLLM", format!("streaming:budget={budget}")),
+        ("LaCache", format!("lacache_und:budget={budget},ratio=0.5")),
+    ] {
+        let h = niah_heatmap(&rt, "base", &spec, 128, 256, &ctx, &depths, reps, 123)?;
+        println!("\n{label} @ budget {budget}: mean accuracy {:.1}%", h.mean() * 100.0);
+        println!("{}", h.render());
+    }
+    println!("StreamingLLM evicts early/mid-context needles; LaCache's ladder keeps them in a subset of layers.");
+    Ok(())
+}

@@ -1,0 +1,163 @@
+"""AOT compile path: lower every serving program to HLO *text* + write the
+artifact manifest the rust runtime consumes.
+
+HLO text (NOT serialized HloModuleProto): jax >= 0.5 emits protos with 64-bit
+instruction ids which xla_extension 0.5.1 (the version behind the `xla` 0.1.6
+crate) rejects; the text parser reassigns ids and round-trips cleanly
+(see /opt/xla-example/README.md).
+
+Artifacts layout:
+  artifacts/manifest.json            program + weight index (read by rust)
+  artifacts/corpus_golden.json       parity vectors for rust data generators
+  artifacts/<model>/weights.bin      flat f32 weights (written by train.py)
+  artifacts/<model>/<prog>.hlo.txt   HLO text programs
+
+Python runs ONCE at build time and never on the request path.
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import corpus
+from .model import CONFIGS, ModelConfig, generate, n_params, score_window
+
+# Static shape grid (DESIGN.md §2). C must be a multiple of the Pallas
+# kernel block (64); budgets are enforced by masking so one C serves many.
+SCORE_WINDOWS = (32, 128)
+C_SMALL = 256     # all budget-bound policies (budget + W <= C_SMALL)
+C_FULL = 2048     # full-cache runs (PPL explosion / simulated OOM axis)
+GEN_KS = (1, 16)
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def i32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.int32)
+
+
+def program_specs(cfg: ModelConfig):
+    """Yield (name, fn, arg_specs, meta) for every program of one model."""
+    L, H, Dh, P = cfg.n_layers, cfg.n_heads, cfg.head_dim, n_params(cfg)
+
+    def cache_specs(c):
+        return [f32(L, H, c, Dh), f32(L, H, c, Dh), i32(L)]
+
+    for w in SCORE_WINDOWS:
+        for c in (C_SMALL, C_FULL):
+            for scored in (False, True):
+                if scored and c == C_FULL:
+                    continue  # baselines never run the full-cache config
+                name = f"score{'_scored' if scored else ''}_w{w}_c{c}"
+                fn = functools.partial(score_window, cfg, with_mass=scored)
+                specs = [f32(P), i32(w), i32(w)] + cache_specs(c)
+                outs = ["logprobs", "win_k", "win_v"] + (["mass"] if scored else [])
+                yield name, fn, specs, {
+                    "kind": "score", "w": w, "c": c, "scored": scored,
+                    "inputs": ["weights", "tokens", "targets", "kcache", "vcache", "lens"],
+                    "outputs": outs,
+                }
+
+    # Decode programs. The default fast path uses the fused jnp attention:
+    # on this CPU-only PJRT the Pallas kernel can only run in interpret mode,
+    # whose wallclock is an emulation artifact, not a TPU prediction
+    # (DESIGN.md §Hardware-Adaptation). The interpret-mode kernel is still
+    # emitted as the `generate_pallas_*` variant: numerics-identical (asserted
+    # by rust integration tests through PJRT) and the artifact a TPU target
+    # would compile natively.
+    gen_variants = [(k, False, False) for k in GEN_KS]  # fast jnp
+    gen_variants.append((16, True, False))  # scored (slow path)
+    gen_variants.append((16, False, True))  # pallas kernel path
+    for k, scored, pallas in gen_variants:
+        tag = "_scored" if scored else ("_pallas" if pallas else "")
+        name = f"generate{tag}_k{k}_c{C_SMALL}"
+        fn = functools.partial(generate, cfg, n_steps=k,
+                               use_pallas=pallas, with_mass=scored)
+        specs = [f32(P)] + cache_specs(C_SMALL) + [i32()]
+        outs = ["tokens", "last_logits", "kcache", "vcache", "lens"] + (
+            ["mass"] if scored else [])
+        yield name, fn, specs, {
+            "kind": "generate", "k": k, "c": C_SMALL, "scored": scored,
+            "uses_pallas": pallas,
+            "inputs": ["weights", "kcache", "vcache", "lens", "last_token"],
+            "outputs": outs,
+        }
+
+
+def lower_model(cfg: ModelConfig, outdir: str):
+    progs = {}
+    mdir = os.path.join(outdir, cfg.name)
+    os.makedirs(mdir, exist_ok=True)
+    for name, fn, specs, meta in program_specs(cfg):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        rel = f"{cfg.name}/{name}.hlo.txt"
+        with open(os.path.join(outdir, rel), "w") as f:
+            f.write(text)
+        meta = dict(meta)
+        meta["path"] = rel
+        meta["hlo_bytes"] = len(text)
+        progs[name] = meta
+        print(f"  {cfg.name}/{name}: {len(text)} chars ({time.time()-t0:.1f}s)", flush=True)
+    return progs
+
+
+def export_corpus_golden(outdir: str):
+    """Golden vectors for the rust corpus-generator parity test."""
+    golden = {}
+    for seed in (1, 42, 20250711):
+        golden[str(seed)] = corpus.take(seed, 2048)
+    doc = {"doclen_min": 192, "doclen_max": 512, "n_ent": 4,
+           "phrase_len": corpus.PHRASE_LEN, "name_len": corpus.NAME_LEN,
+           "streams": golden}
+    with open(os.path.join(outdir, "corpus_golden.json"), "w") as f:
+        json.dump(doc, f)
+    print(f"  corpus_golden.json: {len(golden)} seeds x 2048 tokens")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--models", default="base,mini")
+    args = ap.parse_args()
+    out = os.path.abspath(args.out)
+    os.makedirs(out, exist_ok=True)
+
+    manifest = {"version": 1, "c_small": C_SMALL, "c_full": C_FULL, "models": []}
+    for name in args.models.split(","):
+        cfg = CONFIGS[name]
+        print(f"[{name}] lowering programs")
+        progs = lower_model(cfg, out)
+        manifest["models"].append({
+            "name": name,
+            "config": cfg.to_dict(),
+            "weights": f"{name}/weights.bin",
+            "n_params": n_params(cfg),
+            "programs": progs,
+        })
+    export_corpus_golden(out)
+    with open(os.path.join(out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Synthetic long-range corpus ("synthtext" / "synthbooks").
+
+This is the data substrate substituting for Wikitext-2 / PG19 (see DESIGN.md §6).
+The generator is *integer-only* and deterministic so the Rust side
+(rust/src/data/corpus.rs) can mirror it bit-for-bit; parity is asserted against
+golden vectors exported into artifacts/corpus_golden.json.
+
+Structure per document:
+  - background: order-1 Markov chain over 240 word tokens with a linearly
+    decaying (Zipf-ish) marginal,
+  - entities: MARK <name:2> SEP <phrase:P> introductions whose *re-mentions*
+    repeat the same surface form -> a model that still holds the introduction
+    in its KV cache predicts the phrase tokens (long-range PPL signal),
+  - recall queries: QUERY <name> ANSWER <phrase> (associative recall; the
+    mechanism behind the NIAH / RULER tasks).
+"""
+
+MASK64 = (1 << 64) - 1
+
+VOCAB = 256
+WORD_BASE = 16
+N_WORDS = 184  # background words: [16, 200)
+NAME_BASE = 200
+N_NAMES = 56  # entity-name tokens: [200, 256) — disjoint from background
+
+BOS, EOS, SEP, QUERY, ANSWER, MARK = 0, 1, 2, 3, 4, 5
+
+PHRASE_LEN = 4
+NAME_LEN = 2
+
+
+class Rng:
+    """SplitMix64 — mirrored in rust/src/util/rng.rs."""
+
+    def __init__(self, seed: int):
+        self.s = seed & MASK64
+
+    def next_u64(self) -> int:
+        self.s = (self.s + 0x9E3779B97F4A7C15) & MASK64
+        z = self.s
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def below(self, n: int) -> int:
+        return self.next_u64() % n
+
+
+def succ(prev: int, j: int) -> int:
+    """j-th Markov successor of token `prev` (pure hash function)."""
+    return WORD_BASE + ((prev * 2654435761 + j * 40503 + 12345) % N_WORDS)
+
+
+def draw_word(rng: Rng) -> int:
+    """Word with linearly decaying rank distribution (min of two uniforms)."""
+    u = rng.below(N_WORDS)
+    v = rng.below(N_WORDS)
+    return WORD_BASE + min(u, v)
+
+
+def draw_name(rng: Rng) -> int:
+    """Entity-name token from the dedicated [NAME_BASE, VOCAB) range."""
+    return NAME_BASE + rng.below(N_NAMES)
+
+
+def gen_doc(rng: Rng, doclen: int, n_ent: int = 4):
+    """One document of exactly `doclen` tokens."""
+    toks = [BOS]
+    prev = draw_word(rng)
+    ents = []  # list of (name, phrase)
+    while len(toks) < doclen:
+        a = rng.below(10)
+        if a == 0 and len(ents) < n_ent:
+            name = [draw_name(rng) for _ in range(NAME_LEN)]
+            phrase = [draw_word(rng) for _ in range(PHRASE_LEN)]
+            ents.append((name, phrase))
+            toks += [MARK] + name + [SEP] + phrase
+            prev = phrase[-1]
+        elif a == 1 and ents:
+            i = rng.below(len(ents))
+            name, phrase = ents[i]
+            toks += [MARK] + name + [SEP] + phrase
+            prev = phrase[-1]
+        elif a == 2 and ents:
+            i = rng.below(len(ents))
+            name, phrase = ents[i]
+            toks += [QUERY] + name + [ANSWER] + phrase
+            prev = phrase[-1]
+        else:
+            run = 4 + rng.below(12)
+            for _ in range(run):
+                if rng.next_u64() & 1:
+                    prev = succ(prev, rng.below(4))
+                else:
+                    prev = draw_word(rng)
+                toks.append(prev)
+    return toks[:doclen]
+
+
+def stream(seed: int, doclen_min: int = 192, doclen_max: int = 512, n_ent: int = 4):
+    """Infinite token stream of concatenated documents."""
+    rng = Rng(seed)
+    while True:
+        span = doclen_max - doclen_min
+        doclen = doclen_min + (rng.below(span) if span > 0 else 0)
+        yield from gen_doc(rng, doclen, n_ent)
+
+
+def take(seed: int, n: int, doclen_min: int = 192, doclen_max: int = 512, n_ent: int = 4):
+    out = []
+    it = stream(seed, doclen_min, doclen_max, n_ent)
+    for _ in range(n):
+        out.append(next(it))
+    return out

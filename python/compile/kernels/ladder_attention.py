@@ -1,0 +1,125 @@
+"""Layer-1 Pallas kernel: flash-style decode attention over a compacted cache.
+
+This is the hot-spot of LaCache's serving path. The defining property (the one
+that gives LaCache its throughput edge over H2O/TOVA/SnapKV in the paper's
+Fig. 7) is that the kernel is *attention-map-free*: a single pass over the
+cache-slot axis with an online softmax; the [H, C] score tensor is never
+materialized to memory. Eviction needs only `length` (valid-slot count), never
+attention scores.
+
+TPU mapping of the paper's CUDA/FlashAttention framing (DESIGN.md §2):
+  - the query tile (one head, Dh lanes) is pinned in VMEM,
+  - K/V stream HBM->VMEM in (BLOCK_C, Dh) tiles expressed via BlockSpec,
+  - the online-softmax state (m, l, acc) lives in VMEM scratch and persists
+    across the sequential grid steps of the slot axis,
+  - masking of empty slots is additive -inf on in-register scores.
+
+`interpret=True` is mandatory on CPU PJRT (real TPU lowering emits a Mosaic
+custom-call the CPU plugin cannot execute); numerics are validated against
+`ref.py` by the pytest suite.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_C = 64
+NEG_INF = -1e30
+
+
+def _decode_kernel(len_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *, block_c: int):
+    """One (head, slot-block) grid step of online-softmax decode attention.
+
+    Refs (VMEM blocks):
+      len_ref : (1,)            i32  valid slot count (same for all heads)
+      q_ref   : (1, Dh)         f32  roped query for this head
+      k_ref   : (1, block_c, Dh) f32 roped key tile
+      v_ref   : (1, block_c, Dh) f32 value tile
+      o_ref   : (1, Dh)         f32  output (written on the last slot block)
+      scratch : m (1,), l (1,), acc (Dh,) — online softmax state
+    """
+    c = pl.program_id(1)
+    n_blocks = pl.num_programs(1)
+
+    @pl.when(c == 0)
+    def _init():
+        m_ref[0] = NEG_INF
+        l_ref[0] = 0.0
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, :]  # [Dh]
+    k = k_ref[0, :, :]  # [block_c, Dh]
+    v = v_ref[0, :, :]  # [block_c, Dh]
+    dh = q.shape[-1]
+
+    scores = jnp.dot(k, q) * (1.0 / (dh**0.5))  # [block_c]
+    slot = c * block_c + jax.lax.iota(jnp.int32, block_c)
+    valid = slot < len_ref[0]
+    scores = jnp.where(valid, scores, NEG_INF)
+
+    m_prev = m_ref[0]
+    m_cur = jnp.maximum(m_prev, jnp.max(scores))
+    alpha = jnp.exp(m_prev - m_cur)
+    # Masked lanes must contribute exactly 0 even when every lane is masked
+    # (m_cur == NEG_INF would make exp(score - m_cur) == 1 otherwise).
+    p = jnp.where(valid, jnp.exp(scores - m_cur), 0.0)  # [block_c]
+    l_ref[0] = l_ref[0] * alpha + jnp.sum(p)
+    acc_ref[...] = acc_ref[...] * alpha + jnp.dot(p, v)
+    m_ref[0] = m_cur
+
+    @pl.when(c == n_blocks - 1)
+    def _finish():
+        denom = jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, :] = (acc_ref[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_c", "interpret"))
+def ladder_decode_attention(q, k, v, length, *, block_c: int = DEFAULT_BLOCK_C, interpret: bool = True):
+    """Single-token decode attention over a compacted per-layer cache.
+
+    Args:
+      q: [H, Dh] roped queries.
+      k: [H, C, Dh] roped keys (slots >= length are garbage and masked).
+      v: [H, C, Dh] values.
+      length: scalar i32, number of valid slots (0 <= length <= C).
+    Returns:
+      [H, Dh] attention output. If length == 0, returns zeros.
+    """
+    h, dh = q.shape
+    _, c, _ = k.shape
+    block_c = min(block_c, c)
+    if c % block_c != 0:
+        raise ValueError(f"cache size {c} must be a multiple of block_c {block_c}")
+    n_blocks = c // block_c
+    len_arr = jnp.reshape(length.astype(jnp.int32), (1,))
+
+    kernel = functools.partial(_decode_kernel, block_c=block_c)
+    return pl.pallas_call(
+        kernel,
+        grid=(h, n_blocks),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1, dh), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, block_c, dh), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, block_c, dh), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, dh), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((1,), jnp.float32),
+            pltpu.VMEM((dh,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(len_arr, q, k, v)
+
+
+def vmem_footprint_bytes(h: int, c: int, dh: int, block_c: int = DEFAULT_BLOCK_C) -> int:
+    """Estimated per-grid-step VMEM residency (DESIGN.md §7, EXPERIMENTS.md §Perf).
+
+    q tile + k tile + v tile + scratch; all f32.
+    """
+    return 4 * (dh + 2 * block_c * dh + (2 + dh))

@@ -1,0 +1,54 @@
+"""Pure-jnp correctness oracles for the Pallas kernels and attention paths.
+
+These are the ground truth the pytest suite compares against (assert_allclose)
+under shape/dtype/length sweeps. Nothing here is ever lowered into the AOT
+artifacts' hot path.
+"""
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def decode_attention_ref(q, k, v, length):
+    """Masked softmax decode attention, materialized scores.
+
+    q: [H, Dh], k/v: [H, C, Dh] (roped keys), length: scalar i32.
+    Returns [H, Dh]; zeros when length == 0.
+    """
+    h, dh = q.shape
+    c = k.shape[1]
+    scores = jnp.einsum("hd,hcd->hc", q, k) / jnp.sqrt(jnp.float32(dh))
+    slot = jnp.arange(c)[None, :]
+    scores = jnp.where(slot < length, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    denom = jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    p = p / denom
+    out = jnp.einsum("hc,hcd->hd", p, v)
+    return jnp.where(length > 0, out, jnp.zeros_like(out))
+
+
+def window_attention_ref(q, k_cache, v_cache, k_win, v_win, length):
+    """Window (prefill/score) attention: W queries over [cache ; window] keys.
+
+    q: [W, H, Dh] roped; k_cache/v_cache: [H, C, Dh] roped; k_win/v_win:
+    [W, H, Dh] roped. Query i sees cache slots < length plus window keys <= i.
+    Returns [W, H, Dh].
+    """
+    w, h, dh = q.shape
+    c = k_cache.shape[1]
+    sc = jnp.einsum("whd,hcd->whc", q, k_cache) / jnp.sqrt(jnp.float32(dh))  # [W,H,C]
+    sw = jnp.einsum("whd,uhd->whu", q, k_win) / jnp.sqrt(jnp.float32(dh))  # [W,H,W]
+    slot = jnp.arange(c)[None, None, :]
+    sc = jnp.where(slot < length, sc, NEG_INF)
+    i = jnp.arange(w)[:, None, None]
+    u = jnp.arange(w)[None, None, :]
+    sw = jnp.where(u <= i, sw, NEG_INF)
+    scores = jnp.concatenate([sc, sw], axis=-1)  # [W,H,C+W]
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = p / jnp.maximum(jnp.sum(p, axis=-1, keepdims=True), 1e-30)
+    vc = jnp.einsum("whc,hcd->whd", p[..., :c], v_cache)
+    vw = jnp.einsum("whu,uhd->whd", p[..., c:], v_win)
+    return vc + vw

@@ -1,0 +1,301 @@
+"""Layer-2: tiny Llama-architecture decoder in JAX with an explicit,
+per-layer compacted KV cache threaded through every program.
+
+Architecture: RMSNorm, rotary positions (cache-relative, StreamingLLM-style:
+keys are stored PRE-RoPE and rotated at attention time by their *slot index*,
+so eviction/compaction automatically re-packs positions — exactly the position
+handling LaCache inherits from StreamingLLM), multi-head attention, SwiGLU MLP,
+tied embeddings.
+
+Programs lowered by aot.py (python never runs at serve time):
+  score    : W teacher-forced tokens over the resident cache -> per-token
+             logprobs + the window's (pre-RoPE) K/V for the rust policy layer.
+  scored   : same + per-slot attention mass (the *slow path* that
+             H2O/TOVA/SnapKV/PyramidInfer require; LaCache never calls it).
+  generate : K greedy decode steps with in-graph cache append, decode
+             attention via the Layer-1 Pallas kernel.
+
+The rust coordinator owns eviction: between program calls it gathers the
+per-layer caches according to the active policy (LaCache ladder, StreamingLLM,
+H2O, ...) and adjusts `lens`.
+"""
+
+from dataclasses import dataclass, asdict
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels.ladder_attention import ladder_decode_attention
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    vocab: int
+    n_layers: int
+    n_heads: int
+    d_model: int
+    head_dim: int
+    d_ff: int
+    rope_theta: float
+    t_train: int  # pretraining context length (positions seen in training)
+
+    def to_dict(self):
+        return asdict(self)
+
+
+BASE = ModelConfig("base", 256, 8, 4, 96, 24, 192, 10000.0, 256)
+MINI = ModelConfig("mini", 256, 4, 4, 64, 16, 128, 10000.0, 256)
+
+CONFIGS = {c.name: c for c in (BASE, MINI)}
+
+
+# ---------------------------------------------------------------------------
+# Weights: flat f32 vector <-> named pytree. The flat form is the single
+# runtime weights parameter the rust side uploads once per model.
+# ---------------------------------------------------------------------------
+
+def weight_spec(cfg: ModelConfig):
+    """Ordered (name, shape) list defining the flat layout."""
+    d, hd, f, v = cfg.d_model, cfg.n_heads * cfg.head_dim, cfg.d_ff, cfg.vocab
+    spec = [("embed", (v, d))]
+    for l in range(cfg.n_layers):
+        spec += [
+            (f"l{l}.ln1", (d,)),
+            (f"l{l}.wq", (d, hd)),
+            (f"l{l}.wk", (d, hd)),
+            (f"l{l}.wv", (d, hd)),
+            (f"l{l}.wo", (hd, d)),
+            (f"l{l}.ln2", (d,)),
+            (f"l{l}.wg", (d, f)),
+            (f"l{l}.wu", (d, f)),
+            (f"l{l}.wd", (f, d)),
+        ]
+    spec.append(("ln_f", (d,)))
+    return spec
+
+
+def n_params(cfg: ModelConfig) -> int:
+    return sum(int(np.prod(s)) for _, s in weight_spec(cfg))
+
+
+def unpack(flat, cfg: ModelConfig):
+    params, off = {}, 0
+    for name, shape in weight_spec(cfg):
+        n = int(np.prod(shape))
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def pack(params, cfg: ModelConfig):
+    return jnp.concatenate([params[name].reshape(-1) for name, _ in weight_spec(cfg)])
+
+
+def init_params(cfg: ModelConfig, seed: int = 0):
+    key = jax.random.PRNGKey(seed)
+    params = {}
+    for name, shape in weight_spec(cfg):
+        key, sub = jax.random.split(key)
+        if name.endswith(("ln1", "ln2", "ln_f")):
+            params[name] = jnp.ones(shape, jnp.float32)
+        else:
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * (0.7 / np.sqrt(shape[0]))
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps=1e-5):
+    return x * w * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+
+
+def rope(x, pos, theta):
+    """Rotate-half RoPE. x: [..., Dh]; pos broadcastable to x.shape[:-1]."""
+    dh = x.shape[-1]
+    half = dh // 2
+    inv = theta ** (-jnp.arange(half, dtype=jnp.float32) / half)
+    ang = pos.astype(jnp.float32)[..., None] * inv  # [..., half]
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+# Fraction of heads that receive rotary position (the rest are NoPE —
+# position-free content-matching heads). Mixed RoPE/NoPE attention makes
+# content-addressed retrieval (induction) learnable at tiny scale and is an
+# established design choice in production LLMs.
+ROPE_HEAD_FRACTION = 0.5
+
+
+def n_rope_heads(n_heads):
+    return max(1, int(round(n_heads * ROPE_HEAD_FRACTION)))
+
+
+def rope_heads(x, pos, theta, n_heads):
+    """RoPE on the first n_rope heads only; x: [..., H, Dh]."""
+    n_rope = n_rope_heads(n_heads)
+    roped = rope(x[..., :n_rope, :], pos, theta)
+    return jnp.concatenate([roped, x[..., n_rope:, :]], axis=-2)
+
+
+def rope_lead_heads(x, pos, theta, n_heads):
+    """RoPE on the first n_rope heads only; x: [H, ..., Dh] (heads leading)."""
+    n_rope = n_rope_heads(n_heads)
+    roped = rope(x[:n_rope], pos, theta)
+    return jnp.concatenate([roped, x[n_rope:]], axis=0)
+
+
+def _swiglu(h, params, l):
+    g = h @ params[f"l{l}.wg"]
+    u = h @ params[f"l{l}.wu"]
+    return (jax.nn.silu(g) * u) @ params[f"l{l}.wd"]
+
+
+def _qkv(h, params, l, cfg):
+    q = (h @ params[f"l{l}.wq"]).reshape(h.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+    k = (h @ params[f"l{l}.wk"]).reshape(h.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+    v = (h @ params[f"l{l}.wv"]).reshape(h.shape[:-1] + (cfg.n_heads, cfg.head_dim))
+    return q, k, v
+
+
+# ---------------------------------------------------------------------------
+# score: teacher-forced window over the resident cache
+# ---------------------------------------------------------------------------
+
+def score_window(cfg: ModelConfig, flat_w, tokens, targets, kcache, vcache, lens,
+                 with_mass: bool = False):
+    """W queries attend [cache(valid) ; window(causal)].
+
+    tokens, targets: [W] i32; kcache/vcache: [L, H, C, Dh] (pre-RoPE keys);
+    lens: [L] i32 valid-slot counts.
+    Returns (logprobs[W], win_k[L,H,W,Dh], win_v[L,H,W,Dh][, mass[L,C+W]]).
+    """
+    params = unpack(flat_w, cfg)
+    L, H, C, Dh = kcache.shape
+    W = tokens.shape[0]
+    x = params["embed"][tokens]  # [W, D]
+    slot = jnp.arange(C)
+    i_idx = jnp.arange(W)[:, None, None]
+    u_idx = jnp.arange(W)[None, None, :]
+    win_ks, win_vs, masses = [], [], []
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.ln1"])
+        q, k, v = _qkv(h, params, l, cfg)  # [W,H,Dh]
+        win_ks.append(k)
+        win_vs.append(v)
+        pos_w = lens[l] + jnp.arange(W)
+        q_r = rope_heads(q, pos_w[:, None], cfg.rope_theta, cfg.n_heads)  # [W,H,Dh]
+        k_w = rope_heads(k, pos_w[:, None], cfg.rope_theta, cfg.n_heads)
+        k_c = rope_lead_heads(kcache[l], slot[None, :], cfg.rope_theta, cfg.n_heads)  # [H,C,Dh]
+        scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+        sc = jnp.einsum("whd,hcd->whc", q_r, k_c) * scale
+        sc = jnp.where(slot[None, None, :] < lens[l], sc, NEG_INF)
+        sw = jnp.einsum("whd,uhd->whu", q_r, k_w) * scale
+        sw = jnp.where(u_idx <= i_idx, sw, NEG_INF)
+        probs = jax.nn.softmax(jnp.concatenate([sc, sw], axis=-1), axis=-1)  # [W,H,C+W]
+        if with_mass:
+            masses.append(jnp.sum(probs, axis=(0, 1)))  # [C+W]
+        att = jnp.einsum("whc,hcd->whd", probs[..., :C], vcache[l]) + \
+              jnp.einsum("whu,uhd->whd", probs[..., C:], v)
+        x = x + att.reshape(W, -1) @ params[f"l{l}.wo"]
+        x = x + _swiglu(rmsnorm(x, params[f"l{l}.ln2"]), params, l)
+    logits = rmsnorm(x, params["ln_f"]) @ params["embed"].T  # [W,V]
+    lp = jax.nn.log_softmax(logits, axis=-1)
+    logprobs = jnp.take_along_axis(lp, targets[:, None], axis=-1)[:, 0]
+    win_k = jnp.stack(win_ks).transpose(0, 2, 1, 3)  # [L,H,W,Dh]
+    win_v = jnp.stack(win_vs).transpose(0, 2, 1, 3)
+    if with_mass:
+        return logprobs, win_k, win_v, jnp.stack(masses)  # mass [L, C+W]
+    return logprobs, win_k, win_v
+
+
+# ---------------------------------------------------------------------------
+# generate: K greedy steps, Pallas decode attention, in-graph cache append
+# ---------------------------------------------------------------------------
+
+def generate(cfg: ModelConfig, flat_w, kcache, vcache, lens, last_token, n_steps: int,
+             use_pallas: bool = True, with_mass: bool = False):
+    """Greedy-decode n_steps tokens starting after `last_token`.
+
+    kcache/vcache: [L,H,C,Dh] pre-RoPE; lens: [L]; caller guarantees
+    lens[l] + n_steps <= C for every layer.
+    Returns (tokens[K], last_logits[V], kcache', vcache', lens'[, mass[L,C]]).
+    """
+    params = unpack(flat_w, cfg)
+    L, H, C, Dh = kcache.shape
+    slot = jnp.arange(C)
+
+    def step(carry, _):
+        kc, vc, ln, tok, mass = carry
+        x = params["embed"][tok]  # [D]
+        new_mass = mass
+        for l in range(cfg.n_layers):
+            h = rmsnorm(x, params[f"l{l}.ln1"])
+            q, k_new, v_new = _qkv(h[None, :], params, l, cfg)  # [1,H,Dh]
+            q, k_new, v_new = q[0], k_new[0], v_new[0]  # [H,Dh]
+            # Append the new token's (pre-RoPE) K/V at slot ln[l].
+            kc_l = jax.lax.dynamic_update_slice(kc[l], k_new[:, None, :], (0, ln[l], 0))
+            vc_l = jax.lax.dynamic_update_slice(vc[l], v_new[:, None, :], (0, ln[l], 0))
+            q_r = rope_lead_heads(q, ln[l], cfg.rope_theta, cfg.n_heads)  # [H,Dh]
+            k_r = rope_lead_heads(kc_l, slot[None, :], cfg.rope_theta, cfg.n_heads)  # [H,C,Dh]
+            length = ln[l] + 1
+            if use_pallas and not with_mass:
+                att = ladder_decode_attention(q_r, k_r, vc_l, length)  # [H,Dh]
+            else:
+                scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+                s = jnp.einsum("hd,hcd->hc", q_r, k_r) * scale
+                s = jnp.where(slot[None, :] < length, s, NEG_INF)
+                p = jax.nn.softmax(s, axis=-1)
+                if with_mass:
+                    new_mass = new_mass.at[l].add(jnp.sum(p, axis=0))
+                att = jnp.einsum("hc,hcd->hd", p, vc_l)
+            x = x + att.reshape(-1) @ params[f"l{l}.wo"]
+            x = x + _swiglu(rmsnorm(x, params[f"l{l}.ln2"]), params, l)
+            kc = kc.at[l].set(kc_l)
+            vc = vc.at[l].set(vc_l)
+        logits = rmsnorm(x, params["ln_f"]) @ params["embed"].T  # [V]
+        nxt = jnp.argmax(logits).astype(jnp.int32)
+        return (kc, vc, ln + 1, nxt, new_mass), (nxt, logits)
+
+    mass0 = jnp.zeros((L, C), jnp.float32)
+    carry0 = (kcache, vcache, lens, last_token.astype(jnp.int32), mass0)
+    (kc, vc, ln, _, mass), (toks, logits_all) = jax.lax.scan(step, carry0, None, length=n_steps)
+    out = (toks, logits_all[-1], kc, vc, ln)
+    if with_mass:
+        out = out + (mass,)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# training forward: full attention over T with per-layer additive masks
+# (the ladder-robustness augmentation — see DESIGN.md §6)
+# ---------------------------------------------------------------------------
+
+def train_forward(cfg: ModelConfig, params, tokens, layer_masks):
+    """tokens: [B,T] i32; layer_masks: [L,T,T] additive (0 or NEG_INF).
+
+    Returns logits [B,T,V].
+    """
+    B, T = tokens.shape
+    x = params["embed"][tokens]  # [B,T,D]
+    pos = jnp.arange(T)
+    causal = jnp.where(pos[None, :] <= pos[:, None], 0.0, NEG_INF)  # [T,T]
+    for l in range(cfg.n_layers):
+        h = rmsnorm(x, params[f"l{l}.ln1"])
+        q, k, v = _qkv(h, params, l, cfg)  # [B,T,H,Dh]
+        q_r = rope_heads(q, pos[None, :, None], cfg.rope_theta, cfg.n_heads)
+        k_r = rope_heads(k, pos[None, :, None], cfg.rope_theta, cfg.n_heads)
+        scale = 1.0 / jnp.sqrt(jnp.float32(cfg.head_dim))
+        s = jnp.einsum("bihd,bjhd->bhij", q_r, k_r) * scale
+        s = s + causal[None, None] + layer_masks[l][None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        att = jnp.einsum("bhij,bjhd->bihd", p, v)
+        x = x + att.reshape(B, T, -1) @ params[f"l{l}.wo"]
+        x = x + _swiglu(rmsnorm(x, params[f"l{l}.ln2"]), params, l)
+    return rmsnorm(x, params["ln_f"]) @ params["embed"].T

@@ -1,0 +1,67 @@
+"""AOT pipeline: program inventory + HLO text sanity (full round-trip through
+PJRT is exercised on the rust side)."""
+
+import json
+import os
+
+import pytest
+
+from compile.aot import C_FULL, C_SMALL, GEN_KS, SCORE_WINDOWS, program_specs
+from compile.model import CONFIGS, n_params
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_program_inventory():
+    names = [n for n, _, _, _ in program_specs(CONFIGS["mini"])]
+    for w in SCORE_WINDOWS:
+        assert f"score_w{w}_c{C_SMALL}" in names
+        assert f"score_w{w}_c{C_FULL}" in names
+        assert f"score_scored_w{w}_c{C_SMALL}" in names
+    for k in GEN_KS:
+        assert f"generate_k{k}_c{C_SMALL}" in names
+    assert f"generate_scored_k16_c{C_SMALL}" in names
+
+
+def test_spec_shapes_consistent():
+    cfg = CONFIGS["mini"]
+    for name, _, specs, meta in program_specs(cfg):
+        assert specs[0].shape == (n_params(cfg),)
+        if meta["kind"] == "score":
+            assert specs[1].shape == (meta["w"],)
+            assert specs[3].shape[2] == meta["c"]
+        else:
+            assert specs[1].shape[2] == meta["c"]
+        assert len(specs) == len(meta["inputs"])
+
+
+needs_artifacts = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+@needs_artifacts
+def test_manifest_complete():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        man = json.load(f)
+    assert man["version"] == 1
+    assert {m["name"] for m in man["models"]} >= {"base", "mini"}
+    for m in man["models"]:
+        cfg = CONFIGS[m["name"]]
+        assert m["n_params"] == n_params(cfg)
+        for prog, meta in m["programs"].items():
+            path = os.path.join(ART, meta["path"])
+            assert os.path.exists(path), path
+            text = open(path).read()
+            assert "ENTRY" in text and text.startswith("HloModule")
+
+
+@needs_artifacts
+def test_corpus_golden_exported():
+    with open(os.path.join(ART, "corpus_golden.json")) as f:
+        g = json.load(f)
+    assert set(g["streams"].keys()) == {"1", "42", "20250711"}
+    from compile import corpus
+    for seed, toks in g["streams"].items():
+        assert toks[:64] == corpus.take(int(seed), 64)

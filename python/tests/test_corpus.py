@@ -1,0 +1,82 @@
+"""Synthetic corpus generator invariants + determinism (the rust side mirrors
+this generator; parity is asserted there against corpus_golden.json)."""
+
+import pytest
+
+from compile import corpus
+
+
+def test_deterministic():
+    a = corpus.take(123, 1000)
+    b = corpus.take(123, 1000)
+    assert a == b
+
+
+def test_seeds_differ():
+    assert corpus.take(1, 500) != corpus.take(2, 500)
+
+
+def test_token_range():
+    toks = corpus.take(9, 3000)
+    assert all(0 <= t < corpus.VOCAB for t in toks)
+    # no stray tokens between specials and words
+    assert all(t < 6 or t >= corpus.WORD_BASE for t in toks)
+
+
+def test_doc_structure():
+    rng = corpus.Rng(5)
+    doc = corpus.gen_doc(rng, 400)
+    assert len(doc) == 400
+    assert doc[0] == corpus.BOS
+    # every MARK is followed by name + SEP + phrase (unless truncated)
+    i = 0
+    found = 0
+    while i < len(doc) - (corpus.NAME_LEN + 1 + corpus.PHRASE_LEN):
+        if doc[i] == corpus.MARK:
+            assert doc[i + 1 + corpus.NAME_LEN] == corpus.SEP
+            found += 1
+            i += 1 + corpus.NAME_LEN + 1 + corpus.PHRASE_LEN
+        else:
+            i += 1
+    assert found >= 1
+
+
+def test_re_mention_repeats_phrase():
+    """A re-mention of an entity repeats the exact intro surface form —
+    the long-range predictability signal."""
+    rng = corpus.Rng(1234)
+    doc = corpus.gen_doc(rng, 1500, n_ent=2)
+    seqs = {}
+    i = 0
+    span = 1 + corpus.NAME_LEN + 1 + corpus.PHRASE_LEN
+    repeats = 0
+    while i < len(doc) - span:
+        if doc[i] == corpus.MARK:
+            name = tuple(doc[i + 1 : i + 1 + corpus.NAME_LEN])
+            phrase = tuple(doc[i + 2 + corpus.NAME_LEN : i + span])
+            if name in seqs:
+                assert seqs[name] == phrase
+                repeats += 1
+            seqs[name] = phrase
+            i += span
+        else:
+            i += 1
+    assert repeats >= 1
+
+
+def test_rng_golden():
+    """SplitMix64 reference values (mirrored in rust/src/util/rng.rs tests)."""
+    r = corpus.Rng(0)
+    vals = [r.next_u64() for _ in range(3)]
+    assert vals == [16294208416658607535, 7960286522194355700, 487617019471545679]
+
+
+def test_succ_pure():
+    assert corpus.succ(20, 0) == corpus.succ(20, 0)
+    assert 16 <= corpus.succ(20, 1) < 256
+
+
+def test_stream_matches_concat_docs():
+    toks = corpus.take(77, 700)
+    assert toks[0] == corpus.BOS
+    assert corpus.BOS in toks[1:]  # stream crosses at least one doc boundary

@@ -1,0 +1,167 @@
+"""Layer-2 invariants: cache threading, window/generate/full-forward
+consistency, weight packing, RoPE semantics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.model import (
+    CONFIGS,
+    generate,
+    init_params,
+    n_params,
+    pack,
+    rope,
+    score_window,
+    train_forward,
+    unpack,
+    weight_spec,
+)
+
+CFG = CONFIGS["mini"]
+
+
+@pytest.fixture(scope="module")
+def flat_w():
+    return pack(init_params(CFG, seed=11), CFG)
+
+
+def empty_cache(c=128):
+    L, H, Dh = CFG.n_layers, CFG.n_heads, CFG.head_dim
+    return (jnp.zeros((L, H, c, Dh), jnp.float32),
+            jnp.zeros((L, H, c, Dh), jnp.float32),
+            jnp.zeros((L,), jnp.int32))
+
+
+def toks(seed, n):
+    return jnp.asarray(np.random.default_rng(seed).integers(0, CFG.vocab, n), jnp.int32)
+
+
+def test_pack_unpack_roundtrip(flat_w):
+    params = unpack(flat_w, CFG)
+    flat2 = pack(params, CFG)
+    np.testing.assert_array_equal(flat_w, flat2)
+    assert flat_w.shape == (n_params(CFG),)
+
+
+def test_weight_spec_shapes():
+    spec = weight_spec(CFG)
+    names = [n for n, _ in spec]
+    assert names[0] == "embed" and names[-1] == "ln_f"
+    assert len([n for n in names if n.endswith(".wq")]) == CFG.n_layers
+
+
+def test_score_empty_cache_matches_full_forward(flat_w):
+    """Teacher-forced logprobs with an empty cache == plain causal forward."""
+    t = toks(0, 17)
+    tgt = toks(1, 17)
+    kc, vc, lens = empty_cache()
+    lp, _, _ = score_window(CFG, flat_w, t, tgt, kc, vc, lens)
+    params = unpack(flat_w, CFG)
+    masks = jnp.zeros((CFG.n_layers, 17, 17), jnp.float32)
+    logits = train_forward(CFG, params, t[None], masks)[0]
+    want = jnp.take_along_axis(jax.nn.log_softmax(logits, -1), tgt[:, None], -1)[:, 0]
+    np.testing.assert_allclose(lp, want, rtol=2e-4, atol=2e-4)
+
+
+def test_split_window_equals_single_window(flat_w):
+    """Scoring [0:8] then [8:16] with full KV carry == scoring [0:16] at once."""
+    t = toks(2, 16)
+    tgt = toks(3, 16)
+    kc, vc, lens = empty_cache()
+    lp_full, _, _ = score_window(CFG, flat_w, t, tgt, kc, vc, lens)
+
+    lp1, wk1, wv1 = score_window(CFG, flat_w, t[:8], tgt[:8], kc, vc, lens)
+    # merge window KV into the cache unevicted (rust would do this)
+    kc2 = kc.at[:, :, 0:8, :].set(wk1)
+    vc2 = vc.at[:, :, 0:8, :].set(wv1)
+    lens2 = lens + 8
+    lp2, _, _ = score_window(CFG, flat_w, t[8:], tgt[8:], kc2, vc2, lens2)
+    got = jnp.concatenate([lp1, lp2])
+    np.testing.assert_allclose(got, lp_full, rtol=2e-4, atol=2e-4)
+
+
+def test_generate_pallas_matches_jnp(flat_w):
+    """The Pallas decode path and the materialized-softmax path agree."""
+    kc, vc, lens = empty_cache()
+    out_p = generate(CFG, flat_w, kc, vc, lens, jnp.int32(5), 8, use_pallas=True)
+    out_j = generate(CFG, flat_w, kc, vc, lens, jnp.int32(5), 8, use_pallas=False)
+    np.testing.assert_array_equal(out_p[0], out_j[0])  # identical greedy tokens
+    np.testing.assert_allclose(out_p[1], out_j[1], rtol=2e-4, atol=2e-4)
+    np.testing.assert_array_equal(out_p[4], out_j[4])
+
+
+def test_generate_appends_cache(flat_w):
+    kc, vc, lens = empty_cache()
+    tokens, _, kc2, vc2, lens2 = generate(CFG, flat_w, kc, vc, lens, jnp.int32(1), 4)
+    assert tokens.shape == (4,)
+    np.testing.assert_array_equal(np.asarray(lens2), np.full(CFG.n_layers, 4))
+    # appended slots are non-zero, untouched slots remain zero
+    assert float(jnp.abs(kc2[:, :, :4]).sum()) > 0
+    assert float(jnp.abs(kc2[:, :, 4:]).sum()) == 0
+
+
+def test_generate_consistent_with_score(flat_w):
+    """Greedy tokens from generate() must be argmaxes under score_window's
+    teacher-forced view of the same prefix."""
+    kc, vc, lens = empty_cache()
+    start = jnp.int32(7)
+    tokens, _, _, _, _ = generate(CFG, flat_w, kc, vc, lens, start, 4)
+    seq = jnp.concatenate([jnp.array([start], jnp.int32), tokens])
+    # score the sequence: logprob target positions = next tokens
+    lp, _, _ = score_window(CFG, flat_w, seq[:-1], seq[1:], kc, vc, lens)
+    # every generated token was the greedy choice => its logprob is the max
+    # over the vocab; verify via a second scoring against a perturbed target
+    rng = np.random.default_rng(0)
+    for i in range(4):
+        alt = jnp.int32((int(seq[i + 1]) + 1 + rng.integers(0, CFG.vocab - 2)) % CFG.vocab)
+        tgt2 = seq[1:].at[i].set(alt)
+        lp2, _, _ = score_window(CFG, flat_w, seq[:-1], tgt2, kc, vc, lens)
+        assert float(lp[i]) >= float(lp2[i]) - 1e-5
+
+
+def test_scored_mass_sums_to_queries(flat_w):
+    """Attention mass per layer sums to (#queries x #heads)."""
+    t = toks(4, 12)
+    kc, vc, lens = empty_cache()
+    lp, _, _, mass = score_window(CFG, flat_w, t, t, kc, vc, lens, with_mass=True)
+    total = np.asarray(jnp.sum(mass, axis=1))
+    np.testing.assert_allclose(total, np.full(CFG.n_layers, 12.0 * CFG.n_heads), rtol=1e-4)
+
+
+def test_mass_zero_on_invalid_cache_slots(flat_w):
+    t = toks(5, 8)
+    kc, vc, lens = empty_cache(64)
+    _, _, _, mass = score_window(CFG, flat_w, t, t, kc, vc, lens, with_mass=True)
+    # empty cache -> all mass on window part
+    np.testing.assert_allclose(np.asarray(mass[:, :64]).sum(), 0.0, atol=1e-6)
+
+
+def test_rope_relative_shift_invariance():
+    """RoPE inner products depend only on position differences."""
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    y = jnp.asarray(rng.normal(size=(16,)), jnp.float32)
+    def ip(p, q):
+        return float(jnp.dot(rope(x, jnp.float32(p), 10000.0),
+                             rope(y, jnp.float32(q), 10000.0)))
+    assert abs(ip(5, 3) - ip(105, 103)) < 1e-3
+    assert abs(ip(0, 0) - ip(77, 77)) < 1e-3
+
+
+def test_budget_masking_equivalence(flat_w):
+    """A cache padded to larger C with the same valid prefix gives identical
+    logprobs — the property that lets one compiled C serve every budget."""
+    t = toks(6, 8)
+    kc64, vc64, _ = empty_cache(64)
+    kc128, vc128, _ = empty_cache(128)
+    rng = np.random.default_rng(1)
+    fill_k = jnp.asarray(rng.normal(size=(CFG.n_layers, CFG.n_heads, 20, CFG.head_dim)), jnp.float32)
+    fill_v = jnp.asarray(rng.normal(size=(CFG.n_layers, CFG.n_heads, 20, CFG.head_dim)), jnp.float32)
+    kc64 = kc64.at[:, :, :20].set(fill_k); vc64 = vc64.at[:, :, :20].set(fill_v)
+    kc128 = kc128.at[:, :, :20].set(fill_k); vc128 = vc128.at[:, :, :20].set(fill_v)
+    lens = jnp.full((CFG.n_layers,), 20, jnp.int32)
+    lp64, _, _ = score_window(CFG, flat_w, t, t, kc64, vc64, lens)
+    lp128, _, _ = score_window(CFG, flat_w, t, t, kc128, vc128, lens)
+    np.testing.assert_allclose(lp64, lp128, rtol=1e-5, atol=1e-5)

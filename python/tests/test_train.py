@@ -1,0 +1,92 @@
+"""Trainer substrate tests: data mixes, loss weighting, mask augmentation."""
+
+import numpy as np
+import pytest
+
+from compile import corpus
+from compile import train as T
+from compile.model import CONFIGS
+
+
+def test_batches_shapes_and_mix():
+    gen = T.batches(7, 8, 64, mix=(0.25, 0.5, 0.25))
+    arr = next(gen)
+    assert arr.shape == (8, 65)
+    assert arr.dtype == np.int32
+    assert arr.min() >= 0 and arr.max() < corpus.VOCAB
+
+
+def test_batches_deterministic():
+    a = next(T.batches(3, 4, 32))
+    b = next(T.batches(3, 4, 32))
+    np.testing.assert_array_equal(a, b)
+
+
+def test_repeat_doc_repeats():
+    rng = corpus.Rng(5)
+    doc = T.repeat_doc(rng, 100)
+    assert len(doc) == 100
+    assert doc[0] == corpus.BOS
+    body = doc[1:]
+    # find the segment period: body is seg tiled
+    for period in range(8, 25):
+        if body[:period] == body[period : 2 * period]:
+            break
+    else:
+        pytest.fail("no repetition found")
+
+
+def test_loss_weights_upweight_phrases():
+    toks = np.array([[corpus.BOS, 20, corpus.SEP, 30, 31, 32, 33, 20, 20, 20]], np.int32)
+    w = T.loss_weights(toks)
+    assert w.shape == (1, 9)
+    # targets following SEP (positions 2..5 predict 30,31,32,33) get weight 3
+    assert w[0, 2] == 3.0 and w[0, 5] == 3.0
+    assert w[0, 0] == 1.0 and w[0, 8] == 1.0
+
+
+def test_streaming_mask_shape_and_semantics():
+    m = T.streaming_mask(16, 4, sink=2, recent=4)
+    assert m.shape == (4, 16, 16)
+    # sinks always visible
+    assert m[0, 15, 0] == 0.0 and m[0, 15, 1] == 0.0
+    # recent window visible
+    assert m[0, 15, 14] == 0.0
+    # middle masked
+    assert m[0, 15, 7] < -1e20
+
+
+def test_ladder_mask_layers_differ():
+    m = T.ladder_mask(64, 8, sink=2, recent=8, span=2, seg=8)
+    assert m.shape == (8, 64, 64)
+    assert not np.array_equal(m[0], m[4])
+    # every layer keeps sinks + recency
+    for l in range(8):
+        assert m[l, 60, 0] == 0.0
+        assert m[l, 60, 59] == 0.0
+
+
+def test_sample_masks_distribution():
+    rng = np.random.default_rng(0)
+    kinds = {"full": 0, "other": 0}
+    for _ in range(60):
+        # t must exceed the max sampled recency window (128) or streaming
+        # masks degenerate to fully-visible
+        m = T.sample_masks(rng, 160, 4)
+        if float(np.abs(m).sum()) == 0.0:
+            kinds["full"] += 1
+        else:
+            kinds["other"] += 1
+    assert kinds["full"] > 10 and kinds["other"] > 10
+
+
+def test_adam_converges_quadratic():
+    import jax
+    import jax.numpy as jnp
+
+    params = {"x": jnp.array([5.0, -3.0])}
+    opt = T.adam_init(params)
+    for _ in range(300):
+        grads = {"x": 2 * params["x"]}
+        params, opt = T.adam_update(params, grads, opt, lr=0.1)
+    assert float(jnp.abs(params["x"]).max()) < 1e-2

@@ -1,0 +1,98 @@
+//! End-to-end decode/score benchmarks over the real PJRT runtime — the
+//! measured halves of Tab. 1 (score path) and Fig. 7 (fast vs scored decode;
+//! the attention-map-free property is *the* LaCache throughput claim).
+//!
+//! Run: `cargo bench` (requires `make artifacts`).
+
+use lacache::cache::make_policy;
+use lacache::data::corpus::Stream;
+use lacache::engine::{Engine, EngineOpts};
+use lacache::runtime::Runtime;
+use lacache::util::bench::Bench;
+
+fn main() -> anyhow::Result<()> {
+    let dir = lacache::artifacts_dir();
+    if !dir.join("manifest.json").exists() || !dir.join("base/weights.bin").exists() {
+        eprintln!("bench_decode: run `make artifacts` first — skipping");
+        return Ok(());
+    }
+    let rt = Runtime::load(&dir, &["base"])?;
+    let cfg = rt.model("base")?.cfg.clone();
+    let b = Bench::new(2, 8);
+
+    // --- decode fast path (LaCache / StreamingLLM; Pallas kernel) ----------
+    for (label, spec) in [
+        ("decode16/lacache(128)", "lacache:budget=128,span=2"),
+        ("decode16/streaming(128)", "streaming:budget=128"),
+    ] {
+        let policy = make_policy(spec, cfg.n_layers)?;
+        let mut eng = Engine::new(
+            &rt,
+            EngineOpts { model: "base".into(), w: 128, c: 256, memory_budget_bytes: None },
+            policy,
+        )?;
+        let ctx = Stream::default_eval(3).take_n(256);
+        eng.prefill(&ctx)?;
+        b.run_throughput(label, 16, "tok", || {
+            eng.generate(16).unwrap();
+        });
+    }
+
+    // --- Pallas-kernel decode variant (interpret mode emulation) -----------
+    {
+        let policy = make_policy("lacache:budget=128,span=2", cfg.n_layers)?;
+        let mut eng = Engine::new(
+            &rt,
+            EngineOpts { model: "base".into(), w: 128, c: 256, memory_budget_bytes: None },
+            policy,
+        )?;
+        let ctx = Stream::default_eval(3).take_n(256);
+        eng.prefill(&ctx)?;
+        let cache = eng.cache.clone();
+        b.run_throughput("decode16/pallas-interpret(128)", 16, "tok", || {
+            rt.generate_variant("base", 16, false, true, &cache, 7).unwrap();
+        });
+    }
+
+    // --- decode slow (scored) path (H2O family) ----------------------------
+    {
+        let policy = make_policy("h2o:budget=128", cfg.n_layers)?;
+        let mut eng = Engine::new(
+            &rt,
+            EngineOpts { model: "base".into(), w: 128, c: 256, memory_budget_bytes: None },
+            policy,
+        )?;
+        let ctx = Stream::default_eval(3).take_n(256);
+        eng.prefill(&ctx)?;
+        b.run_throughput("decode16/h2o(128,scored)", 16, "tok", || {
+            eng.generate(16).unwrap();
+        });
+    }
+
+    // --- score (window PPL) path -------------------------------------------
+    for (label, spec, w) in [
+        ("score_w128/lacache(128)", "lacache:budget=128,span=2", 128usize),
+        ("score_w32/lacache(128)", "lacache:budget=128,span=2", 32),
+        ("score_w128/h2o(128,scored)", "h2o:budget=128", 128),
+    ] {
+        let policy = make_policy(spec, cfg.n_layers)?;
+        let mut eng = Engine::new(
+            &rt,
+            EngineOpts { model: "base".into(), w, c: 256, memory_budget_bytes: None },
+            policy,
+        )?;
+        let mut stream = Stream::default_eval(5);
+        let toks = stream.take_n(w + 1);
+        b.run_throughput(label, w as u64, "tok", || {
+            eng.feed_score(&toks[..w], &toks[1..]).unwrap();
+        });
+    }
+
+    // --- runtime breakdown --------------------------------------------------
+    let st = rt.stats();
+    println!(
+        "\nruntime totals: {} calls, compile {:.2}s, upload {:.3}s, execute {:.3}s, download {:.3}s",
+        st.calls, st.compile_s, st.upload_s, st.execute_s, st.download_s
+    );
+    Ok(())
+}

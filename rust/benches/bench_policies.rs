@@ -1,0 +1,60 @@
+//! Pure-CPU policy micro-benchmarks: keep-set computation + gather cost per
+//! compaction for every policy (the L3 contribution must never bottleneck
+//! the device hot path; EXPERIMENTS.md §Perf tracks these).
+
+use lacache::cache::make_policy;
+use lacache::runtime::KvCache;
+use lacache::util::bench::Bench;
+
+fn filled_cache(l: usize, h: usize, c: usize, dh: usize, n: usize) -> KvCache {
+    let mut kv = KvCache::new(l, h, c, dh);
+    for layer in 0..l {
+        let wk = vec![0.1f32; h * n * dh];
+        kv.append_layer(layer, &wk, &wk, n, n, 0).unwrap();
+        let mass: Vec<f32> = (0..n).map(|i| ((i * 37) % 101) as f32).collect();
+        kv.add_mass(layer, &mass);
+    }
+    kv
+}
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::new(10, 50);
+    // realistic serving shape: L=8, H=4, C=256, Dh=24, occupancy 250
+    for spec in [
+        "lacache:budget=128,span=2",
+        "streaming:budget=128",
+        "h2o:budget=128",
+        "tova:budget=128",
+        "snapkv:budget=128",
+        "pyramid:budget=128",
+        "random:budget=128,frac=0.3",
+    ] {
+        let policy = make_policy(spec, 8)?;
+        let proto = filled_cache(8, 4, 256, 24, 250);
+        b.run(&format!("evict/{spec}"), || {
+            let mut kv = proto.clone();
+            policy.evict(&mut kv).unwrap();
+            std::hint::black_box(kv.max_len());
+        });
+    }
+
+    // keep-set computation only (no gather)
+    let policy = make_policy("lacache:budget=128,span=2", 8)?;
+    let kv = filled_cache(8, 4, 256, 24, 250);
+    b.run("keep_slots/lacache (8 layers)", || {
+        for l in 0..8 {
+            std::hint::black_box(policy.keep_slots(l, &kv));
+        }
+    });
+
+    // gather (retain) cost at full occupancy
+    let keep: Vec<usize> = (0..250).step_by(2).collect();
+    b.run("retain_slots/gather 125-of-250", || {
+        let mut kv2 = kv.clone();
+        for l in 0..8 {
+            kv2.retain_slots(l, &keep).unwrap();
+        }
+        std::hint::black_box(kv2.lens[0]);
+    });
+    Ok(())
+}

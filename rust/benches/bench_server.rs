@@ -1,0 +1,62 @@
+//! Server-substrate benchmarks: scheduler round overhead (with an instant
+//! backend, isolating pure L3 cost), wire-protocol encode/decode, and JSON
+//! parse throughput for the manifest-sized payloads.
+
+use lacache::server::batcher::{Scheduler, SeqBackend};
+use lacache::server::protocol::{ok_generate, parse_request};
+use lacache::util::bench::Bench;
+use lacache::util::json::Json;
+
+struct InstantBackend;
+struct NoSeq {
+    emitted: usize,
+}
+
+impl SeqBackend for InstantBackend {
+    type Seq = NoSeq;
+    fn new_seq(&mut self) -> anyhow::Result<NoSeq> {
+        Ok(NoSeq { emitted: 0 })
+    }
+    fn prefill_chunk(&mut self, _s: &mut NoSeq, _c: &[i32]) -> anyhow::Result<()> {
+        Ok(())
+    }
+    fn decode(&mut self, s: &mut NoSeq, n: usize) -> anyhow::Result<Vec<i32>> {
+        s.emitted += n;
+        Ok(vec![17; n])
+    }
+}
+
+fn main() -> anyhow::Result<()> {
+    let b = Bench::new(5, 20);
+
+    // scheduler: 64 requests through admission->prefill->decode->finish
+    b.run_throughput("scheduler/64-requests (instant backend)", 64, "req", || {
+        let mut s = Scheduler::new(InstantBackend, 128, 16, 4, 1024);
+        for _ in 0..64 {
+            s.submit(vec![1; 300], 32).unwrap();
+        }
+        while s.has_work() {
+            std::hint::black_box(s.step());
+        }
+    });
+
+    // protocol encode/decode
+    let line = r#"{"op":"generate","id":42,"prompt":"<bos> w1 w2 w3 w4 w5 w6 w7","max_new_tokens":16}"#;
+    b.run_throughput("protocol/parse_request", 1, "req", || {
+        std::hint::black_box(parse_request(line).unwrap());
+    });
+    let toks: Vec<i32> = (16..80).collect();
+    b.run_throughput("protocol/ok_generate(64 tokens)", 1, "resp", || {
+        std::hint::black_box(ok_generate(1, &toks, 300, 1.0, 2.0));
+    });
+
+    // json: manifest-scale parse
+    let man_path = lacache::artifacts_dir().join("manifest.json");
+    if man_path.exists() {
+        let text = std::fs::read_to_string(&man_path)?;
+        b.run_throughput("json/parse manifest", text.len() as u64, "byte", || {
+            std::hint::black_box(Json::parse(&text).unwrap());
+        });
+    }
+    Ok(())
+}

@@ -1,0 +1,369 @@
+//! Baseline eviction policies the paper compares against (Tab. 1/3/4/5,
+//! Fig. 7): StreamingLLM, full cache, H2O, TOVA, SnapKV, PyramidInfer.
+//!
+//! The H2O family consumes per-slot attention mass and therefore routes the
+//! engine onto the scored (attention-map-emitting) programs — the slow path
+//! that costs them throughput in Fig. 7. LaCache and StreamingLLM never need
+//! it.
+
+use super::policy::{fallback_recency, top_k_sorted, CachePolicy, MassUse};
+use crate::runtime::KvCache;
+
+/// StreamingLLM (Xiao et al., 2023): attention sinks + recency window,
+/// identical in every layer.
+#[derive(Clone, Debug)]
+pub struct StreamingPolicy {
+    pub budget: usize,
+    pub n_sink: usize,
+}
+
+impl StreamingPolicy {
+    pub fn new(budget: usize) -> Self {
+        Self { budget, n_sink: 4 }
+    }
+}
+
+impl CachePolicy for StreamingPolicy {
+    fn name(&self) -> String {
+        format!("streaming_llm(b={},sink={})", self.budget, self.n_sink)
+    }
+
+    fn budget(&self) -> usize {
+        self.budget
+    }
+
+    fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
+        fallback_recency(cache.lens[layer], self.budget, self.n_sink)
+    }
+}
+
+/// Full KV cache: never evicts; the engine's memory accountant supplies the
+/// OOM axis (Fig. 5) and positions grow past t_train (PPL explosion, Tab. 1).
+#[derive(Clone, Debug, Default)]
+pub struct FullPolicy;
+
+impl CachePolicy for FullPolicy {
+    fn name(&self) -> String {
+        "full".into()
+    }
+
+    fn budget(&self) -> usize {
+        usize::MAX
+    }
+
+    fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
+        (0..cache.lens[layer]).collect()
+    }
+}
+
+/// H2O (Zhang et al., 2024): heavy hitters by *accumulated* attention mass +
+/// a recency half, per layer.
+#[derive(Clone, Debug)]
+pub struct H2oPolicy {
+    pub budget: usize,
+    pub n_sink: usize,
+    /// Fraction of the budget reserved for the recency window (paper: 1/2).
+    pub recent_frac: f64,
+}
+
+impl H2oPolicy {
+    pub fn new(budget: usize) -> Self {
+        Self { budget, n_sink: 4, recent_frac: 0.5 }
+    }
+}
+
+impl CachePolicy for H2oPolicy {
+    fn name(&self) -> String {
+        format!("h2o(b={})", self.budget)
+    }
+
+    fn budget(&self) -> usize {
+        self.budget
+    }
+
+    fn mass_use(&self) -> MassUse {
+        MassUse::Accumulated
+    }
+
+    fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
+        let n = cache.lens[layer];
+        let sink = self.n_sink.min(n).min(self.budget);
+        let recent = ((self.budget as f64 * self.recent_frac) as usize).min(n - sink);
+        let heavy_budget = self.budget.saturating_sub(sink + recent);
+        let middle: Vec<usize> = (sink..n - recent).collect();
+        let mut keep: Vec<usize> = (0..sink).collect();
+        keep.extend(top_k_sorted(
+            &cache.mass[layer].iter().map(|&m| m).collect::<Vec<f64>>(),
+            &middle,
+            heavy_budget,
+        ));
+        keep.extend(n - recent..n);
+        keep
+    }
+}
+
+/// TOVA (Oren et al., 2024): at each eviction point drop the tokens with the
+/// lowest attention from the *most recent* queries (fresh window mass).
+#[derive(Clone, Debug)]
+pub struct TovaPolicy {
+    pub budget: usize,
+    pub n_sink: usize,
+}
+
+impl TovaPolicy {
+    pub fn new(budget: usize) -> Self {
+        Self { budget, n_sink: 4 }
+    }
+}
+
+impl CachePolicy for TovaPolicy {
+    fn name(&self) -> String {
+        format!("tova(b={})", self.budget)
+    }
+
+    fn budget(&self) -> usize {
+        self.budget
+    }
+
+    fn mass_use(&self) -> MassUse {
+        MassUse::LastWindow
+    }
+
+    fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
+        let n = cache.lens[layer];
+        let sink = self.n_sink.min(n).min(self.budget);
+        let k = self.budget - sink;
+        let cands: Vec<usize> = (sink..n).collect();
+        let mut keep: Vec<usize> = (0..sink).collect();
+        keep.extend(top_k_sorted(&cache.mass[layer], &cands, k));
+        keep
+    }
+}
+
+/// SnapKV (Li et al., 2024): selection by observation-window attention with
+/// local pooling (cluster-preserving smoothing) + recency.
+#[derive(Clone, Debug)]
+pub struct SnapKvPolicy {
+    pub budget: usize,
+    pub n_sink: usize,
+    pub pool_radius: usize,
+    pub recent_frac: f64,
+}
+
+impl SnapKvPolicy {
+    pub fn new(budget: usize) -> Self {
+        Self { budget, n_sink: 4, pool_radius: 2, recent_frac: 0.25 }
+    }
+}
+
+impl CachePolicy for SnapKvPolicy {
+    fn name(&self) -> String {
+        format!("snapkv(b={})", self.budget)
+    }
+
+    fn budget(&self) -> usize {
+        self.budget
+    }
+
+    fn mass_use(&self) -> MassUse {
+        MassUse::LastWindow
+    }
+
+    fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
+        let n = cache.lens[layer];
+        let sink = self.n_sink.min(n).min(self.budget);
+        let recent = ((self.budget as f64 * self.recent_frac) as usize).min(n - sink);
+        let k = self.budget.saturating_sub(sink + recent);
+        // pooled mass: average over a [-r, +r] neighborhood
+        let mass = &cache.mass[layer];
+        let r = self.pool_radius;
+        let pooled: Vec<f64> = (0..n)
+            .map(|i| {
+                let lo = i.saturating_sub(r);
+                let hi = (i + r + 1).min(n);
+                mass[lo..hi].iter().sum::<f64>() / (hi - lo) as f64
+            })
+            .collect();
+        let cands: Vec<usize> = (sink..n - recent).collect();
+        let mut keep: Vec<usize> = (0..sink).collect();
+        keep.extend(top_k_sorted(&pooled, &cands, k));
+        keep.extend(n - recent..n);
+        keep
+    }
+}
+
+/// PyramidInfer (Yang et al., 2024): per-layer *decreasing* budgets (deep
+/// layers keep less), selection by accumulated mass + recency within each
+/// layer's own budget. Mean budget across layers equals `budget`.
+#[derive(Clone, Debug)]
+pub struct PyramidPolicy {
+    pub budget: usize,
+    pub n_sink: usize,
+    pub n_layers: usize,
+    /// Budget ratio between the shallowest and deepest layer (e.g. 3.0).
+    pub taper: f64,
+}
+
+impl PyramidPolicy {
+    pub fn new(budget: usize, n_layers: usize) -> Self {
+        Self { budget, n_sink: 4, n_layers, taper: 3.0 }
+    }
+
+    /// Per-layer budget, linearly tapered, mean == self.budget.
+    pub fn layer_budget(&self, layer: usize) -> usize {
+        let l = self.n_layers.max(2) as f64;
+        let t = self.taper;
+        // weights w_l linear from t down to 1, normalized to mean 1
+        let w = t - (t - 1.0) * (layer as f64) / (l - 1.0);
+        let mean_w = (t + 1.0) / 2.0;
+        ((self.budget as f64) * w / mean_w).round().max(8.0) as usize
+    }
+}
+
+impl CachePolicy for PyramidPolicy {
+    fn name(&self) -> String {
+        format!("pyramid_infer(b={},taper={})", self.budget, self.taper)
+    }
+
+    fn budget(&self) -> usize {
+        // capacity planning must account for the *widest* layer
+        self.layer_budget(0)
+    }
+
+    fn mass_use(&self) -> MassUse {
+        MassUse::Accumulated
+    }
+
+    fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
+        let b = self.layer_budget(layer);
+        let n = cache.lens[layer];
+        if n <= b {
+            return (0..n).collect();
+        }
+        let sink = self.n_sink.min(n).min(b);
+        let recent = (b / 2).min(n - sink);
+        let k = b.saturating_sub(sink + recent);
+        let cands: Vec<usize> = (sink..n - recent).collect();
+        let mut keep: Vec<usize> = (0..sink).collect();
+        keep.extend(top_k_sorted(&cache.mass[layer], &cands, k));
+        keep.extend(n - recent..n);
+        keep
+    }
+
+    fn evict(&self, cache: &mut KvCache) -> anyhow::Result<usize> {
+        // trigger on the *per-layer* budgets, not the mean
+        let mut evicted = 0;
+        for layer in 0..cache.l {
+            if cache.lens[layer] > self.layer_budget(layer) {
+                let keep = self.keep_slots(layer, cache);
+                evicted += cache.lens[layer] - keep.len();
+                cache.retain_slots(layer, &keep)?;
+            }
+        }
+        Ok(evicted)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cache_with_mass(l: usize, n: usize) -> KvCache {
+        let mut kv = KvCache::new(l, 1, 256, 2);
+        for layer in 0..l {
+            let wk = vec![0.0f32; n * 2];
+            kv.append_layer(layer, &wk, &wk, n, n, 0).unwrap();
+            // mass: slot i has mass i%7 (so "heavy hitters" are i%7==6)
+            let mass: Vec<f32> = (0..n).map(|i| (i % 7) as f32).collect();
+            kv.add_mass(layer, &mass);
+        }
+        kv
+    }
+
+    #[test]
+    fn streaming_is_layer_uniform() {
+        let p = StreamingPolicy::new(32);
+        let kv = cache_with_mass(4, 100);
+        let k0 = p.keep_slots(0, &kv);
+        for l in 1..4 {
+            assert_eq!(k0, p.keep_slots(l, &kv));
+        }
+        assert_eq!(k0.len(), 32);
+        assert_eq!(&k0[..4], &[0, 1, 2, 3]);
+        assert_eq!(*k0.last().unwrap(), 99);
+    }
+
+    #[test]
+    fn full_never_evicts() {
+        let p = FullPolicy;
+        let mut kv = cache_with_mass(2, 200);
+        assert_eq!(p.evict(&mut kv).unwrap(), 0);
+        assert_eq!(kv.lens, vec![200, 200]);
+    }
+
+    #[test]
+    fn h2o_keeps_heavy_hitters() {
+        let p = H2oPolicy::new(40);
+        let kv = cache_with_mass(2, 120);
+        let keep = p.keep_slots(0, &kv);
+        assert_eq!(keep.len(), 40);
+        // middle keepers must be heavy (mass 6 = i%7==6)
+        let recent_lo = 120 - 20;
+        let middle: Vec<usize> =
+            keep.iter().copied().filter(|&s| s >= 4 && s < recent_lo).collect();
+        assert!(!middle.is_empty());
+        // top-k by accumulated mass: only the heaviest two tiers survive
+        assert!(middle.iter().all(|&s| s % 7 >= 5), "non-heavy slot kept: {middle:?}");
+        assert!(middle.iter().filter(|&&s| s % 7 == 6).count() >= 12);
+        assert!(p.needs_scores());
+    }
+
+    #[test]
+    fn tova_budget_respected() {
+        let p = TovaPolicy::new(24);
+        let mut kv = cache_with_mass(2, 90);
+        p.evict(&mut kv).unwrap();
+        assert!(kv.lens.iter().all(|&n| n == 24));
+        kv.check_invariants().unwrap();
+        assert_eq!(p.mass_use(), MassUse::LastWindow);
+    }
+
+    #[test]
+    fn snapkv_pooling_prefers_clusters() {
+        let p = SnapKvPolicy::new(24);
+        let mut kv = KvCache::new(1, 1, 256, 2);
+        let n = 100;
+        let wk = vec![0.0f32; n * 2];
+        kv.append_layer(0, &wk, &wk, n, n, 0).unwrap();
+        // one tight cluster of mass at 40..45, one isolated spike at 70
+        let mut mass = vec![0.0f32; n];
+        for i in 40..45 {
+            mass[i] = 5.0;
+        }
+        mass[70] = 6.0;
+        kv.add_mass(0, &mass);
+        let keep = p.keep_slots(0, &kv);
+        let cluster_kept = (38..47).filter(|s| keep.contains(s)).count();
+        assert!(cluster_kept >= 5, "cluster not preserved: {keep:?}");
+    }
+
+    #[test]
+    fn pyramid_budgets_decrease_and_average() {
+        let p = PyramidPolicy::new(64, 8);
+        let budgets: Vec<usize> = (0..8).map(|l| p.layer_budget(l)).collect();
+        assert!(budgets.windows(2).all(|w| w[0] >= w[1]), "{budgets:?}");
+        let mean = budgets.iter().sum::<usize>() as f64 / 8.0;
+        assert!((mean - 64.0).abs() < 4.0, "mean {mean} budgets {budgets:?}");
+    }
+
+    #[test]
+    fn pyramid_evicts_per_layer_budget() {
+        let p = PyramidPolicy::new(32, 4);
+        let mut kv = cache_with_mass(4, 100);
+        p.evict(&mut kv).unwrap();
+        for l in 0..4 {
+            assert!(kv.lens[l] <= p.layer_budget(l));
+        }
+        assert!(kv.lens[0] > kv.lens[3], "pyramid shape missing: {:?}", kv.lens);
+    }
+}

@@ -1,0 +1,341 @@
+//! **LaCache**: the ladder-shaped retention pattern + iterative compaction
+//! (paper §3.2/§3.3).
+//!
+//! Geometry (integer formulation of Fig. 2): within a layer's resident slots,
+//! `[sinks | middle | recent]`. The middle region is tiled with period
+//! `P = ceil(L·O/S)` tokens; layer `ℓ` keeps the contiguous window of width
+//! `O` (the paper's *overlap/coverage* hyper-parameter) starting at
+//! `(ℓ·O)/S` within each period (the paper's *span* `S` = number of
+//! consecutive layers that retain the same token, since the window start
+//! advances by `O/S` per layer). The phase anchors the ladder's end at the
+//! newest middle slot, so deeper layers hold newer tokens — the stepwise
+//! ladder of Fig. 1(c)/Fig. 2.
+//!
+//! **Iterative compaction** (§3.3) falls out operationally: `keep_slots` is
+//! invoked on the *already-compacted* slot sequence every time occupancy
+//! exceeds the budget, so older content is geometrically re-thinned while
+//! fresh tokens arrive at full resolution — exactly Fig. 4.
+
+use super::policy::{fallback_recency, CachePolicy};
+use crate::runtime::KvCache;
+
+#[derive(Clone, Debug)]
+pub struct LadderPolicy {
+    /// Per-layer slot budget (compaction trigger).
+    pub budget: usize,
+    /// Attention sinks always kept (StreamingLLM heritage; default 4).
+    pub n_sink: usize,
+    /// Newest slots kept in all layers (0 = pure ladder).
+    pub n_recent: usize,
+    /// Span S: #consecutive layers retaining the same token.
+    pub span: usize,
+    /// Overlap O: per-layer kept window width (tokens per period).
+    pub overlap: usize,
+}
+
+impl LadderPolicy {
+    /// Paper defaults for language modeling (§4.4): S = L/4, O = S/2,
+    /// a small recency tail, 4 sinks.
+    pub fn lm_default(budget: usize, n_layers: usize) -> Self {
+        let span = (n_layers / 4).max(1);
+        Self {
+            budget,
+            n_sink: 4,
+            n_recent: (budget / 4).max(8),
+            span,
+            overlap: (span / 2).max(1),
+        }
+    }
+
+    /// Paper defaults for long-context understanding (§4.4):
+    /// S ≈ L · budget_ratio, O task-dependent (default S/4).
+    pub fn understanding_default(budget: usize, n_layers: usize, budget_ratio: f64) -> Self {
+        let span = ((n_layers as f64 * budget_ratio).round() as usize).clamp(1, n_layers);
+        Self {
+            budget,
+            n_sink: 4,
+            n_recent: (budget / 4).max(8),
+            span,
+            overlap: (span / 4).max(1),
+        }
+    }
+
+    /// Is middle-offset `m` (0 = oldest middle slot) covered by `layer`?
+    #[inline]
+    pub fn covered(&self, layer: usize, m: usize, middle_len: usize, n_layers: usize) -> bool {
+        let o = self.overlap.max(1);
+        let s = self.span.clamp(1, n_layers);
+        let p = (n_layers * o).div_ceil(s).max(1);
+        // anchor the ladder's end at the newest middle slot
+        let phase = (p - (middle_len % p)) % p;
+        let pos = (m + phase) % p;
+        let start = (layer * o / s) % p;
+        let end = start + o;
+        if end <= p {
+            pos >= start && pos < end
+        } else {
+            pos >= start || pos < end - p
+        }
+    }
+}
+
+impl CachePolicy for LadderPolicy {
+    fn name(&self) -> String {
+        format!(
+            "lacache(b={},S={},O={},sink={},recent={})",
+            self.budget, self.span, self.overlap, self.n_sink, self.n_recent
+        )
+    }
+
+    fn budget(&self) -> usize {
+        self.budget
+    }
+
+    fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
+        let n = cache.lens[layer];
+        let n_layers = cache.l;
+        let sink = self.n_sink.min(n).min(self.budget);
+        let recent = self.n_recent.min(n - sink);
+        let middle_lo = sink;
+        let middle_hi = n - recent;
+        let middle_len = middle_hi - middle_lo;
+
+        let mut keep: Vec<usize> = (0..sink).collect();
+        for m in 0..middle_len {
+            // bubble guard (paper footnote 1): rung boundaries at the very
+            // ends of the ladder are always preserved
+            let boundary = m == 0 || m + 1 == middle_len;
+            if boundary || self.covered(layer, m, middle_len, n_layers) {
+                keep.push(middle_lo + m);
+            }
+        }
+        keep.extend(middle_hi..n);
+        if keep.len() >= n && n > self.budget {
+            return fallback_recency(n, self.budget, self.n_sink);
+        }
+        keep
+    }
+}
+
+/// Random retention patterns with the *same* per-layer kept-count as a
+/// reference ladder — the Fig. 3 pattern cloud. Each layer keeps sinks +
+/// recent + a seeded random middle subset.
+#[derive(Clone, Debug)]
+pub struct RandomPatternPolicy {
+    pub budget: usize,
+    pub n_sink: usize,
+    pub n_recent: usize,
+    /// Fraction of the middle region each layer keeps.
+    pub keep_frac: f64,
+    pub seed: u64,
+}
+
+impl CachePolicy for RandomPatternPolicy {
+    fn name(&self) -> String {
+        format!("random(b={},frac={:.3},seed={})", self.budget, self.keep_frac, self.seed)
+    }
+
+    fn budget(&self) -> usize {
+        self.budget
+    }
+
+    fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
+        let n = cache.lens[layer];
+        let sink = self.n_sink.min(n).min(self.budget);
+        let recent = self.n_recent.min(n - sink);
+        let middle_len = n - sink - recent;
+        let target = ((middle_len as f64) * self.keep_frac).round() as usize;
+        // seeded per (seed, layer) but *stable across compactions* only in
+        // distribution — mirrors how the paper samples arbitrary patterns
+        let mut rng = crate::util::rng::Xoshiro256::new(
+            self.seed ^ (layer as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15),
+        );
+        let mut middle: Vec<usize> = (0..middle_len).collect();
+        rng.shuffle(&mut middle);
+        middle.truncate(target);
+        middle.sort_unstable();
+        let mut keep: Vec<usize> = (0..sink).collect();
+        keep.extend(middle.into_iter().map(|m| m + sink));
+        keep.extend(n - recent..n);
+        if keep.len() >= n && n > self.budget {
+            return fallback_recency(n, self.budget, self.n_sink);
+        }
+        keep
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::KvCache;
+    use crate::util::prop::PropRunner;
+    use crate::util::rng::Xoshiro256;
+
+    fn cache_with(l: usize, n: usize) -> KvCache {
+        let mut kv = KvCache::new(l, 1, 256, 2);
+        for layer in 0..l {
+            let wk = vec![0.0f32; n * 2];
+            kv.append_layer(layer, &wk, &wk, n, n, 0).unwrap();
+        }
+        kv
+    }
+
+    #[test]
+    fn keeps_sinks_and_recent() {
+        let p = LadderPolicy { budget: 64, n_sink: 4, n_recent: 16, span: 2, overlap: 4 };
+        let kv = cache_with(8, 128);
+        for layer in 0..8 {
+            let keep = p.keep_slots(layer, &kv);
+            assert!(keep.windows(2).all(|w| w[0] < w[1]));
+            for s in 0..4 {
+                assert!(keep.contains(&s), "sink {s} evicted in layer {layer}");
+            }
+            for s in 112..128 {
+                assert!(keep.contains(&s), "recent {s} evicted in layer {layer}");
+            }
+            assert!(keep.len() < 128);
+        }
+    }
+
+    #[test]
+    fn equal_coverage_across_layers() {
+        // Rationale 1 (§3.2): per-layer coverage of the middle is balanced.
+        let p = LadderPolicy { budget: 64, n_sink: 4, n_recent: 8, span: 2, overlap: 8 };
+        let kv = cache_with(8, 200);
+        let counts: Vec<usize> = (0..8).map(|l| p.keep_slots(l, &kv).len()).collect();
+        let min = *counts.iter().min().unwrap();
+        let max = *counts.iter().max().unwrap();
+        // tolerance: one shift (O/S) per period boundary
+        assert!(max - min <= 2 * (p.overlap / p.span).max(1), "unbalanced coverage: {counts:?}");
+    }
+
+    #[test]
+    fn union_coverage_spans_middle() {
+        // The union over layers covers every middle slot (no dead zones).
+        let p = LadderPolicy { budget: 64, n_sink: 4, n_recent: 8, span: 2, overlap: 8 };
+        let kv = cache_with(8, 200);
+        let mut covered = vec![false; 200];
+        for l in 0..8 {
+            for s in p.keep_slots(l, &kv) {
+                covered[s] = true;
+            }
+        }
+        let holes = covered.iter().filter(|&&c| !c).count();
+        assert_eq!(holes, 0, "ladder left {holes} uncovered slots");
+    }
+
+    #[test]
+    fn span_property_tokens_kept_in_s_consecutive_layers() {
+        // The defining ladder property: a middle token's retaining layers
+        // form ~S consecutive layers (mod wraparound).
+        let n_layers = 8;
+        let p = LadderPolicy { budget: 64, n_sink: 0, n_recent: 0, span: 2, overlap: 8 };
+        let middle_len = 64; // one full period = L*O/S = 32 -> two periods
+        for m in 0..middle_len {
+            let keepers: Vec<usize> = (0..n_layers)
+                .filter(|&l| p.covered(l, m, middle_len, n_layers))
+                .collect();
+            assert!(
+                (1..=p.span + 1).contains(&keepers.len()),
+                "token {m} kept in {keepers:?} (span {})",
+                p.span
+            );
+        }
+    }
+
+    #[test]
+    fn deeper_layers_hold_newer_tokens() {
+        // The ladder slope (Fig. 2): the mean middle-offset retained grows
+        // with layer depth within one period.
+        let p = LadderPolicy { budget: 64, n_sink: 0, n_recent: 0, span: 1, overlap: 4 };
+        let n_layers = 8;
+        let middle_len = 32; // exactly one period
+        let mean_of = |l: usize| {
+            let kept: Vec<f64> = (0..middle_len)
+                .filter(|&m| p.covered(l, m, middle_len, n_layers))
+                .map(|m| m as f64)
+                .collect();
+            kept.iter().sum::<f64>() / kept.len() as f64
+        };
+        assert!(mean_of(6) > mean_of(1), "ladder slope inverted");
+    }
+
+    #[test]
+    fn iterative_compaction_thins_geometrically() {
+        // §3.3: repeated evict() keeps compressing older content while
+        // occupancy stays bounded.
+        let p = LadderPolicy { budget: 48, n_sink: 4, n_recent: 8, span: 2, overlap: 4 };
+        let mut kv = cache_with(8, 0);
+        let mut next_pos = 0u64;
+        for _round in 0..20 {
+            for layer in 0..8 {
+                let add = 16;
+                let wk = vec![0.0f32; add * 2];
+                let first = next_pos;
+                kv.append_layer(layer, &wk, &wk, add, add, first).unwrap();
+            }
+            next_pos += 16;
+            p.evict(&mut kv).unwrap();
+            kv.check_invariants().unwrap();
+            assert!(kv.max_len() <= 48, "over budget after evict");
+        }
+        // oldest retained (non-sink) middle content is sparse, recent dense:
+        let pos = &kv.positions[4];
+        let old_density = pos.iter().filter(|&&p| p > 16 && p < 100).count();
+        let new_density = pos.iter().filter(|&&p| p >= next_pos - 16).count();
+        assert!(new_density >= 8, "recent tokens missing");
+        assert!(old_density <= new_density, "old {old_density} new {new_density}");
+    }
+
+    #[test]
+    fn progress_guarantee_property() {
+        // For arbitrary (budget, span, overlap, occupancy), evict always
+        // reduces an over-budget layer strictly below occupancy.
+        PropRunner::new(200).run(
+            |rng: &mut Xoshiro256| {
+                let budget = 16 + rng.below(64) as usize;
+                let span = 1 + rng.below(8) as usize;
+                let overlap = 1 + rng.below(16) as usize;
+                let n = budget + 1 + rng.below(100) as usize;
+                let n_recent = rng.below(budget as u64 / 2) as usize;
+                (budget, span, overlap, n, n_recent)
+            },
+            |&(budget, span, overlap, n, n_recent)| {
+                let p = LadderPolicy { budget, n_sink: 4, n_recent, span, overlap };
+                let kv = cache_with(8, n.min(250));
+                let n = n.min(250);
+                for layer in 0..8 {
+                    let keep = p.keep_slots(layer, &kv);
+                    crate::prop_assert!(keep.len() < n, "no progress: kept {} of {n}", keep.len());
+                    crate::prop_assert!(
+                        keep.windows(2).all(|w| w[0] < w[1]),
+                        "not strictly increasing"
+                    );
+                    crate::prop_assert!(
+                        keep.iter().all(|&s| s < n),
+                        "out of range"
+                    );
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn random_pattern_same_budget_discipline() {
+        let p = RandomPatternPolicy {
+            budget: 64,
+            n_sink: 4,
+            n_recent: 8,
+            keep_frac: 0.25,
+            seed: 7,
+        };
+        let mut kv = cache_with(8, 128);
+        p.evict(&mut kv).unwrap();
+        kv.check_invariants().unwrap();
+        for l in 0..8 {
+            assert!(kv.lens[l] < 128);
+            assert!(kv.positions[l].iter().take(4).eq([0, 1, 2, 3].iter()));
+        }
+    }
+}

@@ -1,0 +1,125 @@
+//! KV-cache eviction policies: LaCache (the paper's contribution) and every
+//! baseline in its evaluation, behind one [`CachePolicy`] trait consumed by
+//! the engine and server.
+
+pub mod baselines;
+pub mod ladder;
+pub mod policy;
+
+pub use baselines::{FullPolicy, H2oPolicy, PyramidPolicy, SnapKvPolicy, StreamingPolicy, TovaPolicy};
+pub use ladder::{LadderPolicy, RandomPatternPolicy};
+pub use policy::{CachePolicy, MassUse};
+
+use anyhow::{bail, Context, Result};
+
+/// Build a policy from a CLI-style spec string:
+/// `"lacache:budget=128,span=2,overlap=1,recent=16,sink=4"`,
+/// `"streaming:budget=128"`, `"full"`, `"h2o:budget=64"`, ...
+pub fn make_policy(spec: &str, n_layers: usize) -> Result<Box<dyn CachePolicy>> {
+    let (name, rest) = spec.split_once(':').unwrap_or((spec, ""));
+    let mut kv = std::collections::BTreeMap::new();
+    for part in rest.split(',').filter(|p| !p.is_empty()) {
+        let (k, v) = part.split_once('=').with_context(|| format!("bad policy param `{part}`"))?;
+        kv.insert(k.trim().to_string(), v.trim().to_string());
+    }
+    let get = |k: &str| -> Option<usize> { kv.get(k).map(|v| v.parse().expect("bad number")) };
+    let budget = get("budget").unwrap_or(128);
+    Ok(match name {
+        "lacache" | "ladder" => {
+            let mut p = ladder::LadderPolicy::lm_default(budget, n_layers);
+            if let Some(s) = get("span") {
+                p.span = s;
+            }
+            if let Some(o) = get("overlap") {
+                p.overlap = o;
+            }
+            if let Some(r) = get("recent") {
+                p.n_recent = r;
+            }
+            if let Some(s) = get("sink") {
+                p.n_sink = s;
+            }
+            Box::new(p)
+        }
+        "lacache_und" => {
+            let ratio = kv
+                .get("ratio")
+                .map(|v| v.parse::<f64>().expect("bad ratio"))
+                .unwrap_or(0.5);
+            let mut p = ladder::LadderPolicy::understanding_default(budget, n_layers, ratio);
+            if let Some(o) = get("overlap") {
+                p.overlap = o;
+            }
+            if let Some(r) = get("recent") {
+                p.n_recent = r;
+            }
+            Box::new(p)
+        }
+        "streaming" | "streaming_llm" => {
+            let mut p = baselines::StreamingPolicy::new(budget);
+            if let Some(s) = get("sink") {
+                p.n_sink = s;
+            }
+            Box::new(p)
+        }
+        "full" => Box::new(baselines::FullPolicy),
+        "h2o" => Box::new(baselines::H2oPolicy::new(budget)),
+        "tova" => Box::new(baselines::TovaPolicy::new(budget)),
+        "snapkv" => Box::new(baselines::SnapKvPolicy::new(budget)),
+        "pyramid" | "pyramid_infer" => Box::new(baselines::PyramidPolicy::new(budget, n_layers)),
+        "random" => {
+            let frac = kv
+                .get("frac")
+                .map(|v| v.parse::<f64>().expect("bad frac"))
+                .unwrap_or(0.25);
+            let seed = get("seed").unwrap_or(1) as u64;
+            let mut p = RandomPatternPolicy {
+                budget,
+                n_sink: 4,
+                n_recent: (budget / 4).max(8),
+                keep_frac: frac,
+                seed,
+            };
+            if let Some(r) = get("recent") {
+                p.n_recent = r;
+            }
+            Box::new(p)
+        }
+        other => bail!("unknown policy `{other}`"),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_policies() {
+        for spec in [
+            "lacache:budget=64,span=2,overlap=4",
+            "streaming:budget=64",
+            "full",
+            "h2o:budget=32",
+            "tova:budget=32",
+            "snapkv:budget=32",
+            "pyramid:budget=32",
+            "random:budget=64,frac=0.3,seed=9",
+            "lacache_und:budget=64,ratio=0.25",
+        ] {
+            let p = make_policy(spec, 8).unwrap();
+            assert!(!p.name().is_empty());
+        }
+        assert!(make_policy("bogus", 8).is_err());
+    }
+
+    #[test]
+    fn parsed_params_take_effect() {
+        let p = make_policy("lacache:budget=99,span=3,overlap=7,recent=11,sink=2", 8).unwrap();
+        assert_eq!(p.budget(), 99);
+        assert!(p.name().contains("S=3"));
+        assert!(p.name().contains("O=7"));
+        assert!(!p.needs_scores());
+        let h = make_policy("h2o:budget=10", 8).unwrap();
+        assert!(h.needs_scores());
+    }
+}

@@ -1,0 +1,101 @@
+//! The cache-policy abstraction: given a layer's occupancy state, decide
+//! which slots survive. Policies are *pure position/metadata functions* —
+//! except the H2O family, which additionally consumes per-slot attention
+//! mass and therefore forces the runtime onto the scored (slow) program
+//! variant. That architectural split is exactly the paper's Fig. 7 axis.
+
+use crate::runtime::KvCache;
+
+/// How a policy consumes attention mass (drives program selection and
+/// engine-side mass bookkeeping).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MassUse {
+    /// Attention-free (LaCache, StreamingLLM, full, random): fast path.
+    None,
+    /// Accumulated mass across the whole stream (H2O, PyramidInfer).
+    Accumulated,
+    /// Only the most recent window's mass (TOVA, SnapKV).
+    LastWindow,
+}
+
+pub trait CachePolicy {
+    fn name(&self) -> String;
+
+    /// Per-layer slot budget (compaction trigger threshold).
+    fn budget(&self) -> usize;
+
+    fn mass_use(&self) -> MassUse {
+        MassUse::None
+    }
+
+    fn needs_scores(&self) -> bool {
+        self.mass_use() != MassUse::None
+    }
+
+    /// Slots (sorted, strictly increasing) to keep for `layer`. Called when
+    /// `cache.lens[layer] > budget()`. Must return fewer slots than
+    /// currently resident (progress guarantee).
+    fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize>;
+
+    /// Apply the policy to every over-budget layer. A single ladder pass may
+    /// keep more than the budget (its keep-ratio is S/L of the middle); the
+    /// pass is re-applied to the already-compacted slots until occupancy is
+    /// within budget — this IS the paper's iterative compaction (§3.3).
+    fn evict(&self, cache: &mut KvCache) -> anyhow::Result<usize> {
+        let mut evicted = 0;
+        for layer in 0..cache.l {
+            let mut guard = 0;
+            while cache.lens[layer] > self.budget() {
+                let mut keep = self.keep_slots(layer, cache);
+                let n = cache.lens[layer];
+                if keep.len() >= n || guard >= 8 {
+                    // progress guarantee: degenerate configs fall back to
+                    // a recency truncation at budget
+                    keep = fallback_recency(n, self.budget(), 4);
+                }
+                evicted += n - keep.len();
+                cache.retain_slots(layer, &keep)?;
+                guard += 1;
+            }
+        }
+        Ok(evicted)
+    }
+}
+
+/// Sink + recency keep-set (shared fallback and StreamingLLM core).
+pub fn fallback_recency(n: usize, budget: usize, n_sink: usize) -> Vec<usize> {
+    let sink = n_sink.min(n).min(budget);
+    let recent = budget.saturating_sub(sink).min(n - sink);
+    let mut keep: Vec<usize> = (0..sink).collect();
+    keep.extend(n - recent..n);
+    keep
+}
+
+/// Helper: top-`k` slot indices by score, returned sorted ascending.
+pub fn top_k_sorted(scores: &[f64], candidates: &[usize], k: usize) -> Vec<usize> {
+    let mut idx: Vec<usize> = candidates.to_vec();
+    idx.sort_by(|&a, &b| scores[b].partial_cmp(&scores[a]).unwrap_or(std::cmp::Ordering::Equal));
+    idx.truncate(k);
+    idx.sort_unstable();
+    idx
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fallback_recency_shapes() {
+        assert_eq!(fallback_recency(10, 6, 4), vec![0, 1, 2, 3, 8, 9]);
+        assert_eq!(fallback_recency(3, 6, 4), vec![0, 1, 2]);
+        assert_eq!(fallback_recency(10, 2, 4), vec![0, 1]);
+    }
+
+    #[test]
+    fn top_k_sorted_orders_by_score_then_position() {
+        let scores = vec![0.1, 5.0, 0.2, 3.0, 9.9];
+        let cands = vec![0, 1, 2, 3, 4];
+        assert_eq!(top_k_sorted(&scores, &cands, 2), vec![1, 4]);
+        assert_eq!(top_k_sorted(&scores, &cands, 10), vec![0, 1, 2, 3, 4]);
+    }
+}

@@ -1,0 +1,183 @@
+//! Typed configuration: serving + experiment configs, JSON-file loadable
+//! with CLI overrides (the framework's "config system" — vLLM-style).
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::args::Args;
+use crate::util::json::Json;
+
+/// Serving configuration (`lacache-serve --config serve.json`).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    pub model: String,
+    pub policy: String,
+    /// TCP listen address for the JSON-lines protocol.
+    pub listen: String,
+    /// Max tokens a single request may generate.
+    pub max_new_tokens: usize,
+    /// Max in-flight requests admitted to the scheduler queue.
+    pub max_queue: usize,
+    /// Score-window (prompt ingestion chunk).
+    pub window: usize,
+    /// Cache capacity (compiled program C).
+    pub capacity: usize,
+    /// Scheduler quantum: decode steps per scheduling round per sequence.
+    pub decode_quantum: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self {
+            model: "base".into(),
+            policy: "lacache:budget=128".into(),
+            listen: "127.0.0.1:7333".into(),
+            max_new_tokens: 256,
+            max_queue: 64,
+            window: 128,
+            capacity: 256,
+            decode_quantum: 16,
+        }
+    }
+}
+
+impl ServeConfig {
+    pub fn from_json(j: &Json) -> Result<Self> {
+        let d = Self::default();
+        Ok(Self {
+            model: j.str_of("model").unwrap_or(&d.model).to_string(),
+            policy: j.str_of("policy").unwrap_or(&d.policy).to_string(),
+            listen: j.str_of("listen").unwrap_or(&d.listen).to_string(),
+            max_new_tokens: j.usize_of("max_new_tokens").unwrap_or(d.max_new_tokens),
+            max_queue: j.usize_of("max_queue").unwrap_or(d.max_queue),
+            window: j.usize_of("window").unwrap_or(d.window),
+            capacity: j.usize_of("capacity").unwrap_or(d.capacity),
+            decode_quantum: j.usize_of("decode_quantum").unwrap_or(d.decode_quantum),
+        })
+    }
+
+    pub fn load(path: &Path) -> Result<Self> {
+        Self::from_json(&Json::parse_file(path)?)
+    }
+
+    /// CLI overrides on top of (optional) file config.
+    pub fn from_args(args: &Args) -> Result<Self> {
+        let mut cfg = match args.get("config") {
+            Some(p) => Self::load(Path::new(p)).context("loading --config")?,
+            None => Self::default(),
+        };
+        if let Some(m) = args.get("model") {
+            cfg.model = m.to_string();
+        }
+        if let Some(p) = args.get("policy") {
+            cfg.policy = p.to_string();
+        }
+        if let Some(l) = args.get("listen") {
+            cfg.listen = l.to_string();
+        }
+        cfg.max_new_tokens = args.usize_or("max-new-tokens", cfg.max_new_tokens);
+        cfg.max_queue = args.usize_or("max-queue", cfg.max_queue);
+        cfg.window = args.usize_or("window", cfg.window);
+        cfg.capacity = args.usize_or("capacity", cfg.capacity);
+        cfg.decode_quantum = args.usize_or("decode-quantum", cfg.decode_quantum);
+        Ok(cfg)
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("model", self.model.as_str().into()),
+            ("policy", self.policy.as_str().into()),
+            ("listen", self.listen.as_str().into()),
+            ("max_new_tokens", self.max_new_tokens.into()),
+            ("max_queue", self.max_queue.into()),
+            ("window", self.window.into()),
+            ("capacity", self.capacity.into()),
+            ("decode_quantum", self.decode_quantum.into()),
+        ])
+    }
+}
+
+/// Shared experiment knobs (scaled-down decode lengths etc. — DESIGN.md §4).
+#[derive(Clone, Debug)]
+pub struct ExpConfig {
+    pub models: Vec<String>,
+    pub budgets: Vec<usize>,
+    pub lengths: Vec<usize>,
+    pub seeds: Vec<u64>,
+    pub window: usize,
+    pub out_dir: String,
+}
+
+impl Default for ExpConfig {
+    fn default() -> Self {
+        Self {
+            models: vec!["base".into(), "mini".into()],
+            budgets: vec![128, 64],
+            lengths: vec![64, 128, 256, 512, 1024],
+            seeds: vec![42],
+            window: 32,
+            out_dir: "results".into(),
+        }
+    }
+}
+
+impl ExpConfig {
+    pub fn from_args(args: &Args) -> Self {
+        let d = Self::default();
+        Self {
+            models: args.list_or("models", &["base", "mini"]),
+            budgets: args.usize_list_or("budgets", &d.budgets),
+            lengths: args.usize_list_or("lengths", &d.lengths),
+            seeds: args
+                .get("seeds")
+                .map(|s| s.split(',').map(|x| x.parse().unwrap()).collect())
+                .unwrap_or(d.seeds),
+            window: args.usize_or("window", d.window),
+            out_dir: args.str_or("out", &d.out_dir),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_config_defaults_and_json() {
+        let d = ServeConfig::default();
+        let j = d.to_json();
+        let back = ServeConfig::from_json(&j).unwrap();
+        assert_eq!(back.model, d.model);
+        assert_eq!(back.capacity, d.capacity);
+    }
+
+    #[test]
+    fn serve_config_cli_overrides() {
+        let args = Args::parse(
+            ["--model", "mini", "--policy", "streaming:budget=64", "--capacity", "512"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        );
+        let cfg = ServeConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.model, "mini");
+        assert_eq!(cfg.policy, "streaming:budget=64");
+        assert_eq!(cfg.capacity, 512);
+        assert_eq!(cfg.window, 128); // default preserved
+    }
+
+    #[test]
+    fn exp_config_lists() {
+        let args = Args::parse(
+            ["--budgets", "32,64", "--lengths", "128,256", "--seeds", "1,2,3"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        );
+        let cfg = ExpConfig::from_args(&args);
+        assert_eq!(cfg.budgets, vec![32, 64]);
+        assert_eq!(cfg.lengths, vec![128, 256]);
+        assert_eq!(cfg.seeds, vec![1, 2, 3]);
+    }
+}

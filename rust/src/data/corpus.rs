@@ -1,0 +1,194 @@
+//! Synthetic long-range corpus — bit-for-bit mirror of
+//! `python/compile/corpus.py` (the substitute for Wikitext-2, DESIGN.md §6).
+//! Parity with the python generator is asserted against
+//! `artifacts/corpus_golden.json`.
+
+use crate::util::rng::SplitMix64;
+
+pub const VOCAB: i32 = 256;
+pub const WORD_BASE: i32 = 16;
+pub const N_WORDS: u64 = 184; // background words: [16, 200)
+pub const NAME_BASE: i32 = 200;
+pub const N_NAMES: u64 = 56; // entity-name tokens: [200, 256)
+
+pub const BOS: i32 = 0;
+pub const EOS: i32 = 1;
+pub const SEP: i32 = 2;
+pub const QUERY: i32 = 3;
+pub const ANSWER: i32 = 4;
+pub const MARK: i32 = 5;
+
+pub const PHRASE_LEN: usize = 4;
+pub const NAME_LEN: usize = 2;
+
+/// j-th Markov successor of `prev` (pure hash — mirror of corpus.succ).
+pub fn succ(prev: i32, j: u64) -> i32 {
+    WORD_BASE + ((prev as u64 * 2654435761 + j * 40503 + 12345) % N_WORDS) as i32
+}
+
+/// Word with linearly decaying rank distribution (min of two uniforms).
+pub fn draw_word(rng: &mut SplitMix64) -> i32 {
+    let u = rng.below(N_WORDS);
+    let v = rng.below(N_WORDS);
+    WORD_BASE + u.min(v) as i32
+}
+
+/// Entity-name token from the dedicated [NAME_BASE, VOCAB) range.
+pub fn draw_name(rng: &mut SplitMix64) -> i32 {
+    NAME_BASE + rng.below(N_NAMES) as i32
+}
+
+/// One document of exactly `doclen` tokens (mirror of corpus.gen_doc).
+pub fn gen_doc(rng: &mut SplitMix64, doclen: usize, n_ent: usize) -> Vec<i32> {
+    let mut toks = vec![BOS];
+    let mut prev = draw_word(rng);
+    let mut ents: Vec<(Vec<i32>, Vec<i32>)> = Vec::new();
+    while toks.len() < doclen {
+        let a = rng.below(10);
+        if a == 0 && ents.len() < n_ent {
+            let name: Vec<i32> = (0..NAME_LEN).map(|_| draw_name(rng)).collect();
+            let phrase: Vec<i32> = (0..PHRASE_LEN).map(|_| draw_word(rng)).collect();
+            toks.push(MARK);
+            toks.extend_from_slice(&name);
+            toks.push(SEP);
+            toks.extend_from_slice(&phrase);
+            prev = *phrase.last().unwrap();
+            ents.push((name, phrase));
+        } else if a == 1 && !ents.is_empty() {
+            let i = rng.below(ents.len() as u64) as usize;
+            let (name, phrase) = &ents[i];
+            toks.push(MARK);
+            toks.extend_from_slice(name);
+            toks.push(SEP);
+            toks.extend_from_slice(phrase);
+            prev = *phrase.last().unwrap();
+        } else if a == 2 && !ents.is_empty() {
+            let i = rng.below(ents.len() as u64) as usize;
+            let (name, phrase) = &ents[i];
+            toks.push(QUERY);
+            toks.extend_from_slice(name);
+            toks.push(ANSWER);
+            toks.extend_from_slice(phrase);
+            prev = *phrase.last().unwrap();
+        } else {
+            let run = 4 + rng.below(12);
+            for _ in 0..run {
+                if rng.next_u64() & 1 == 1 {
+                    let j = rng.below(4);
+                    prev = succ(prev, j);
+                } else {
+                    prev = draw_word(rng);
+                }
+                toks.push(prev);
+            }
+        }
+    }
+    toks.truncate(doclen);
+    toks
+}
+
+/// Infinite token stream of concatenated documents (mirror of corpus.stream).
+pub struct Stream {
+    rng: SplitMix64,
+    doclen_min: usize,
+    doclen_max: usize,
+    n_ent: usize,
+    buf: Vec<i32>,
+    pos: usize,
+}
+
+impl Stream {
+    pub fn new(seed: u64, doclen_min: usize, doclen_max: usize, n_ent: usize) -> Self {
+        Self { rng: SplitMix64::new(seed), doclen_min, doclen_max, n_ent, buf: Vec::new(), pos: 0 }
+    }
+
+    /// Default parameters matching the python eval/golden settings.
+    pub fn default_eval(seed: u64) -> Self {
+        Self::new(seed, 192, 512, 4)
+    }
+
+    pub fn take_n(&mut self, n: usize) -> Vec<i32> {
+        (0..n).map(|_| self.next_token()).collect()
+    }
+
+    pub fn next_token(&mut self) -> i32 {
+        if self.pos >= self.buf.len() {
+            let span = self.doclen_max - self.doclen_min;
+            let doclen =
+                self.doclen_min + if span > 0 { self.rng.below(span as u64) as usize } else { 0 };
+            self.buf = gen_doc(&mut self.rng, doclen, self.n_ent);
+            self.pos = 0;
+        }
+        let t = self.buf[self.pos];
+        self.pos += 1;
+        t
+    }
+}
+
+impl Iterator for Stream {
+    type Item = i32;
+    fn next(&mut self) -> Option<i32> {
+        Some(self.next_token())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::Json;
+
+    #[test]
+    fn deterministic() {
+        let a = Stream::default_eval(123).take_n(1000);
+        let b = Stream::default_eval(123).take_n(1000);
+        assert_eq!(a, b);
+        assert_ne!(a, Stream::default_eval(124).take_n(1000));
+    }
+
+    #[test]
+    fn token_ranges() {
+        let toks = Stream::default_eval(9).take_n(3000);
+        assert!(toks.iter().all(|&t| (0..VOCAB).contains(&t)));
+        assert!(toks.iter().all(|&t| t < 6 || t >= WORD_BASE));
+    }
+
+    #[test]
+    fn doc_structure() {
+        let mut rng = SplitMix64::new(5);
+        let doc = gen_doc(&mut rng, 400, 4);
+        assert_eq!(doc.len(), 400);
+        assert_eq!(doc[0], BOS);
+        let span = 1 + NAME_LEN + 1 + PHRASE_LEN;
+        let mut i = 0;
+        let mut found = 0;
+        while i + span < doc.len() {
+            if doc[i] == MARK {
+                assert_eq!(doc[i + 1 + NAME_LEN], SEP);
+                found += 1;
+                i += span;
+            } else {
+                i += 1;
+            }
+        }
+        assert!(found >= 1);
+    }
+
+    /// THE parity test: rust generator == python generator, bit for bit.
+    #[test]
+    fn golden_parity_with_python() {
+        let path = crate::artifacts_dir().join("corpus_golden.json");
+        if !path.exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let g = Json::parse_file(&path).unwrap();
+        let streams = g.req("streams").as_obj().unwrap();
+        assert_eq!(streams.len(), 3);
+        for (seed, toks) in streams {
+            let want: Vec<i32> =
+                toks.as_arr().unwrap().iter().map(|j| j.as_i64().unwrap() as i32).collect();
+            let got = Stream::default_eval(seed.parse().unwrap()).take_n(want.len());
+            assert_eq!(got, want, "corpus divergence for seed {seed}");
+        }
+    }
+}

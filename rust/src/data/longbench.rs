@@ -1,0 +1,193 @@
+//! LongBench substrate (Bai et al., 2023; paper Tab. 3/4/6 and Fig. 7): 21
+//! synthetic datasets in the benchmark's six categories, each mapped to a
+//! generator whose *eviction-sensitivity profile* mirrors the original
+//! (QA = local answers, summarization/synthetic = global coverage, few-shot
+//! = pattern recall, code = recency-dominated) — see DESIGN.md §6.
+
+use super::corpus;
+use super::tasks::{filler, fresh_entity, intro, needle_prompt, query, Entity, GenTask, Scorer};
+use crate::util::rng::SplitMix64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Category {
+    QaSingle,
+    QaMulti,
+    Summarization,
+    FewShot,
+    Synthetic,
+    Code,
+}
+
+/// (dataset name, category, context length, answer depth fraction)
+pub const LONGBENCH_DATASETS: [(&str, Category, usize, f64); 21] = [
+    ("HotpotQA", Category::QaMulti, 1024, 0.35),
+    ("2WikiMultihopQA", Category::QaMulti, 1024, 0.5),
+    ("MuSiQue", Category::QaMulti, 1536, 0.45),
+    ("DuReader", Category::QaMulti, 1024, 0.65),
+    ("MultiFieldQA-en", Category::QaSingle, 768, 0.4),
+    ("MultiFieldQA-zh", Category::QaSingle, 768, 0.6),
+    ("NarrativeQA", Category::QaSingle, 1536, 0.3),
+    ("Qasper", Category::QaSingle, 1024, 0.7),
+    ("GovReport", Category::Summarization, 1536, 0.0),
+    ("QMSum", Category::Summarization, 1024, 0.0),
+    ("MultiNews", Category::Summarization, 768, 0.0),
+    ("VCSUM", Category::Summarization, 1024, 0.0),
+    ("TriviaQA", Category::FewShot, 768, 0.5),
+    ("SAMSum", Category::FewShot, 768, 0.35),
+    ("TREC", Category::FewShot, 512, 0.5),
+    ("LSHT", Category::FewShot, 512, 0.65),
+    ("PassageCount", Category::Synthetic, 1024, 0.0),
+    ("PassageRetrieval-en", Category::Synthetic, 1024, 0.2),
+    ("PassageRetrieval-zh", Category::Synthetic, 1024, 0.8),
+    ("LCC", Category::Code, 768, 0.0),
+    ("RepoBench-P", Category::Code, 1024, 0.0),
+];
+
+pub fn category_of(dataset: &str) -> Category {
+    LONGBENCH_DATASETS
+        .iter()
+        .find(|(n, _, _, _)| *n == dataset)
+        .map(|(_, c, _, _)| *c)
+        .unwrap_or_else(|| panic!("unknown LongBench dataset `{dataset}`"))
+}
+
+/// Build one LongBench task instance.
+pub fn longbench_task(dataset: &str, seed: u64, scale: f64) -> GenTask {
+    let (_, cat, base_len, depth) = *LONGBENCH_DATASETS
+        .iter()
+        .find(|(n, _, _, _)| *n == dataset)
+        .unwrap_or_else(|| panic!("unknown LongBench dataset `{dataset}`"));
+    let ctx_len = ((base_len as f64) * scale).round() as usize;
+    let mut rng = SplitMix64::new(seed ^ hash_name(dataset));
+    let mut t = match cat {
+        Category::QaSingle => {
+            let e = fresh_entity(&mut rng);
+            needle_prompt(&mut rng, ctx_len, &[(depth, e)], 0)
+        }
+        Category::QaMulti => {
+            // answered first-hop in-prompt; generate the second hop
+            let e1 = fresh_entity(&mut rng);
+            let e2 = fresh_entity(&mut rng);
+            let d2 = (depth + 0.3).min(0.9);
+            let mut task =
+                needle_prompt(&mut rng, ctx_len, &[(depth, e1.clone()), (d2, e2.clone())], 1);
+            let cut = task.prompt.len() - (corpus::NAME_LEN + 2);
+            let mut hop = query(&e1);
+            hop.extend_from_slice(&e1.phrase);
+            task.prompt.splice(cut..cut, hop);
+            task
+        }
+        Category::Summarization => {
+            // global coverage: three entities spread over the document; the
+            // earliest is queried (a summary must retain the whole doc)
+            let es: Vec<Entity> = (0..3).map(|_| fresh_entity(&mut rng)).collect();
+            let needles: Vec<(f64, Entity)> =
+                es.iter().enumerate().map(|(i, e)| (0.08 + 0.3 * i as f64, e.clone())).collect();
+            let mut task = needle_prompt(&mut rng, ctx_len, &needles, 0);
+            task.expected = vec![es[0].phrase.clone()];
+            task
+        }
+        Category::FewShot => {
+            // several solved QUERY/ANSWER exemplars precede the final query
+            let e = fresh_entity(&mut rng);
+            let mut task = needle_prompt(&mut rng, ctx_len, &[(depth, e)], 0);
+            let cut = task.prompt.len() - (corpus::NAME_LEN + 2);
+            let mut shots = Vec::new();
+            for _ in 0..3 {
+                let ex = fresh_entity(&mut rng);
+                shots.extend(intro(&ex));
+                shots.extend(filler(&mut rng, 4));
+                shots.extend(query(&ex));
+                shots.extend_from_slice(&ex.phrase);
+            }
+            task.prompt.splice(cut..cut, shots);
+            task
+        }
+        Category::Synthetic => {
+            if dataset == "PassageCount" {
+                // aggregation over the whole context: the queried entity is
+                // re-mentioned in every "passage"
+                let e = fresh_entity(&mut rng);
+                let mentions: Vec<(f64, Entity)> =
+                    [0.1, 0.35, 0.6, 0.85].iter().map(|&d| (d, e.clone())).collect();
+                needle_prompt(&mut rng, ctx_len, &mentions, 0)
+            } else {
+                let e = fresh_entity(&mut rng);
+                needle_prompt(&mut rng, ctx_len, &[(depth, e)], 0)
+            }
+        }
+        Category::Code => {
+            // induction on a structured "API template": a signature repeated
+            // throughout; the final (recent) occurrence must be completed
+            let sig: Vec<i32> = (0..6).map(|_| corpus::draw_word(&mut rng)).collect();
+            let mut prompt = vec![corpus::BOS];
+            while prompt.len() + 40 < ctx_len {
+                let run = 16 + rng.below(16) as usize;
+                prompt.extend(filler(&mut rng, run));
+                prompt.extend_from_slice(&sig);
+            }
+            prompt.extend(filler(&mut rng, 8));
+            prompt.extend_from_slice(&sig[..2]); // start the template ...
+            GenTask {
+                name: String::new(),
+                prompt,
+                expected: vec![sig[2..].to_vec()], // ... model completes it
+                gen_len: 4,
+                scorer: Scorer::PrefixMatch,
+            }
+        }
+    };
+    t.name = format!("longbench/{dataset}");
+    t
+}
+
+fn hash_name(s: &str) -> u64 {
+    s.bytes().fold(0xcbf29ce484222325u64, |h, b| (h ^ b as u64).wrapping_mul(0x100000001b3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_21_generate() {
+        for (name, _, base_len, _) in LONGBENCH_DATASETS {
+            let t = longbench_task(name, 9, 1.0);
+            assert!(
+                t.prompt.len() >= base_len - 64 && t.prompt.len() <= base_len + 128,
+                "{name}: {} vs {base_len}",
+                t.prompt.len()
+            );
+            assert!(!t.expected.is_empty(), "{name}");
+        }
+    }
+
+    #[test]
+    fn scale_shrinks_contexts() {
+        let big = longbench_task("NarrativeQA", 1, 1.0);
+        let small = longbench_task("NarrativeQA", 1, 0.5);
+        assert!(small.prompt.len() < big.prompt.len());
+    }
+
+    #[test]
+    fn categories_cover_six() {
+        use std::collections::BTreeSet;
+        let cats: BTreeSet<String> =
+            LONGBENCH_DATASETS.iter().map(|(_, c, _, _)| format!("{c:?}")).collect();
+        assert_eq!(cats.len(), 6);
+    }
+
+    #[test]
+    fn code_task_is_recency_answerable() {
+        let t = longbench_task("LCC", 4, 1.0);
+        // the template prefix appears near the end of the prompt
+        let tail = &t.prompt[t.prompt.len() - 16..];
+        assert!(tail.len() >= 2);
+        assert_eq!(t.scorer, Scorer::PrefixMatch);
+    }
+
+    #[test]
+    fn deterministic() {
+        assert_eq!(longbench_task("TREC", 3, 1.0).prompt, longbench_task("TREC", 3, 1.0).prompt);
+    }
+}

@@ -1,0 +1,6 @@
+//! Workload substrates: corpus streams (Wikitext-2/PG19 substitutes) and
+//! long-context task generators (NIAH / RULER / LongBench substitutes).
+pub mod corpus;
+pub mod longbench;
+pub mod ruler;
+pub mod tasks;

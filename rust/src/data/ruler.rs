@@ -1,0 +1,214 @@
+//! RULER benchmark substrate (Hsieh et al., 2024; paper Tab. 5): faithful
+//! scaled re-implementations of the 13 task generators over the synthetic
+//! token language. Relative task structure (retrieval / multi-key /
+//! multi-value / tracking / aggregation / QA) is preserved; absolute scores
+//! reflect the tiny substitute model.
+
+use super::corpus::{self, PHRASE_LEN};
+use super::tasks::{fresh_entity, intro, needle_prompt, query, Entity, GenTask, Scorer};
+use crate::util::rng::SplitMix64;
+
+pub const RULER_TASKS: [&str; 13] = [
+    "single_1", "single_2", "single_3", "multikey_1", "multikey_2", "multikey_3", "multivalue",
+    "multiquery", "vt", "cwe", "fwe", "qa_1", "qa_2",
+];
+
+/// Build one RULER task instance.
+pub fn ruler_task(name: &str, ctx_len: usize, seed: u64) -> GenTask {
+    let mut rng = SplitMix64::new(seed ^ 0x521e5);
+    let mut t = match name {
+        // --- retrieval ----------------------------------------------------
+        "single_1" => {
+            // constant-noise haystack (easiest)
+            let e = fresh_entity(&mut rng);
+            let mut task = needle_prompt(&mut rng, ctx_len, &[(0.5, e)], 0);
+            for tok in task.prompt.iter_mut() {
+                if *tok >= corpus::WORD_BASE && rng.below(2) == 0 {
+                    *tok = corpus::WORD_BASE + 7; // flatten half the noise
+                }
+            }
+            task
+        }
+        "single_2" => {
+            let e = fresh_entity(&mut rng);
+            let d = 0.1 + 0.8 * (rng.below(1000) as f64 / 1000.0);
+            needle_prompt(&mut rng, ctx_len, &[(d, e)], 0)
+        }
+        "single_3" => {
+            // long value (8-token phrase)
+            let mut e = fresh_entity(&mut rng);
+            e.phrase.extend((0..PHRASE_LEN).map(|_| corpus::draw_word(&mut rng)));
+            let mut task = needle_prompt(&mut rng, ctx_len, &[(0.5, e.clone())], 0);
+            task.expected = vec![e.phrase.clone()];
+            task.gen_len = e.phrase.len();
+            task
+        }
+        "multikey_1" | "multikey_2" | "multikey_3" => {
+            let n_distract = match name {
+                "multikey_1" => 3,
+                "multikey_2" => 7,
+                _ => 5,
+            };
+            let mut needles: Vec<(f64, Entity)> = Vec::new();
+            let target_e = fresh_entity(&mut rng);
+            for i in 0..=n_distract {
+                let d = 0.1 + 0.8 * (i as f64) / (n_distract as f64 + 1.0);
+                let mut e = if i == n_distract / 2 { target_e.clone() } else { fresh_entity(&mut rng) };
+                if name == "multikey_3" && i != n_distract / 2 {
+                    e.name[0] = target_e.name[0]; // confusable keys
+                }
+                needles.push((d, e));
+            }
+            let target = n_distract / 2;
+            needle_prompt(&mut rng, ctx_len, &needles, target)
+        }
+        "multivalue" => {
+            // one key introduced 3x with different values; all must surface
+            let name_toks: Vec<i32> =
+                (0..corpus::NAME_LEN).map(|_| corpus::draw_name(&mut rng)).collect();
+            let values: Vec<Vec<i32>> = (0..3)
+                .map(|_| (0..PHRASE_LEN).map(|_| corpus::draw_word(&mut rng)).collect())
+                .collect();
+            let needles: Vec<(f64, Entity)> = values
+                .iter()
+                .enumerate()
+                .map(|(i, v)| {
+                    (0.2 + 0.3 * i as f64, Entity { name: name_toks.clone(), phrase: v.clone() })
+                })
+                .collect();
+            let mut task = needle_prompt(&mut rng, ctx_len, &needles, 2);
+            task.expected = values;
+            task.gen_len = 3 * (PHRASE_LEN + 2);
+            task.scorer = Scorer::ContainsAll;
+            task
+        }
+        "multiquery" => {
+            // two needles; first query answered in-prompt, second generated
+            let e1 = fresh_entity(&mut rng);
+            let e2 = fresh_entity(&mut rng);
+            let mut task =
+                needle_prompt(&mut rng, ctx_len, &[(0.25, e1.clone()), (0.6, e2.clone())], 1);
+            // insert an answered query for e1 before the final query
+            let cut = task.prompt.len() - (corpus::NAME_LEN + 2);
+            let mut extra = query(&e1);
+            extra.extend_from_slice(&e1.phrase);
+            task.prompt.splice(cut..cut, extra);
+            task
+        }
+        // --- tracking / aggregation ---------------------------------------
+        "vt" => {
+            // variable tracking (alias form): two names bound to one phrase;
+            // the queried alias's intro is far from the phrase's first intro
+            let e1 = fresh_entity(&mut rng);
+            let alias = Entity {
+                name: (0..corpus::NAME_LEN).map(|_| corpus::draw_name(&mut rng)).collect(),
+                phrase: e1.phrase.clone(),
+            };
+            needle_prompt(&mut rng, ctx_len, &[(0.15, e1), (0.5, alias)], 1)
+        }
+        "cwe" => {
+            // common-entity recall: the queried entity is (re-)mentioned
+            // repeatedly across the WHOLE context — global coverage pays
+            let e = fresh_entity(&mut rng);
+            let mentions: Vec<(f64, Entity)> =
+                [0.1, 0.3, 0.5, 0.7].iter().map(|&d| (d, e.clone())).collect();
+            needle_prompt(&mut rng, ctx_len, &mentions, 0)
+        }
+        "fwe" => {
+            // front-loaded entity: mentions only in the first third; recency
+            // windows have long since evicted them
+            let e = fresh_entity(&mut rng);
+            let mentions: Vec<(f64, Entity)> =
+                [0.05, 0.15, 0.3].iter().map(|&d| (d, e.clone())).collect();
+            needle_prompt(&mut rng, ctx_len, &mentions, 0)
+        }
+        // --- QA -------------------------------------------------------------
+        "qa_1" => {
+            // natural-ish context: corpus documents as haystack
+            let e = fresh_entity(&mut rng);
+            let mut prompt = vec![corpus::BOS];
+            let mut doc_rng = SplitMix64::new(seed ^ 0x9a1);
+            while prompt.len() < ctx_len / 2 {
+                prompt.extend(corpus::gen_doc(&mut doc_rng, 256, 3));
+            }
+            prompt.extend(intro(&e));
+            while prompt.len() + corpus::NAME_LEN + 2 < ctx_len {
+                prompt.extend(corpus::gen_doc(&mut doc_rng, 256, 3));
+            }
+            prompt.truncate(ctx_len - corpus::NAME_LEN - 2);
+            prompt.extend(query(&e));
+            GenTask {
+                name: String::new(),
+                prompt,
+                expected: vec![e.phrase],
+                gen_len: PHRASE_LEN,
+                scorer: Scorer::PrefixMatch,
+            }
+        }
+        "qa_2" => {
+            // two-document QA with a distractor entity sharing name[1]
+            let e = fresh_entity(&mut rng);
+            let mut distract = fresh_entity(&mut rng);
+            distract.name[1] = e.name[1];
+            needle_prompt(&mut rng, ctx_len, &[(0.3, e), (0.7, distract)], 0)
+        }
+        other => panic!("unknown RULER task `{other}`"),
+    };
+    t.name = format!("ruler/{name}");
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_tasks_generate() {
+        for name in RULER_TASKS {
+            let t = ruler_task(name, 768, 42);
+            assert!(t.prompt.len() >= 700, "{name}: {}", t.prompt.len());
+            assert!(t.prompt.len() <= 900, "{name}: {}", t.prompt.len());
+            assert!(!t.expected.is_empty());
+            assert!(t.gen_len >= PHRASE_LEN);
+            assert_eq!(t.name, format!("ruler/{name}"));
+        }
+    }
+
+    #[test]
+    fn tasks_deterministic_per_seed() {
+        let a = ruler_task("multikey_2", 512, 5);
+        let b = ruler_task("multikey_2", 512, 5);
+        assert_eq!(a.prompt, b.prompt);
+        assert_ne!(a.prompt, ruler_task("multikey_2", 512, 6).prompt);
+    }
+
+    #[test]
+    fn multivalue_has_three_values() {
+        let t = ruler_task("multivalue", 512, 1);
+        assert_eq!(t.expected.len(), 3);
+        assert_eq!(t.scorer, Scorer::ContainsAll);
+    }
+
+    #[test]
+    fn cwe_mentions_repeat() {
+        let t = ruler_task("cwe", 1024, 3);
+        let e_name = &t.prompt[t.prompt.len() - 1 - corpus::NAME_LEN..t.prompt.len() - 1];
+        let count = t.prompt.windows(corpus::NAME_LEN).filter(|w| *w == e_name).count();
+        assert!(count >= 4, "only {count} mentions");
+    }
+
+    #[test]
+    fn fwe_mentions_front_loaded() {
+        let t = ruler_task("fwe", 1024, 3);
+        let e_name = &t.prompt[t.prompt.len() - 1 - corpus::NAME_LEN..t.prompt.len() - 1];
+        let last_mention = t
+            .prompt
+            .windows(corpus::NAME_LEN)
+            .enumerate()
+            .filter(|(i, w)| *w == e_name && *i < t.prompt.len() - 8)
+            .map(|(i, _)| i)
+            .max()
+            .unwrap();
+        assert!(last_mention < t.prompt.len() / 2, "mention at {last_mention}");
+    }
+}

@@ -1,0 +1,207 @@
+//! Shared generation-task primitives for the NIAH / RULER / LongBench-style
+//! suites (DESIGN.md §6): prompts are synthetic token sequences whose answers
+//! require retrieving entity introductions planted in the context; scoring is
+//! token-level recall of the expected phrase(s).
+
+use crate::data::corpus::{self, ANSWER, MARK, NAME_LEN, PHRASE_LEN, QUERY, SEP};
+use crate::util::rng::SplitMix64;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Scorer {
+    /// Fraction of expected[0] matched positionally at the generation start.
+    PrefixMatch,
+    /// Fraction of expected groups appearing (contiguously) anywhere.
+    ContainsAll,
+}
+
+#[derive(Clone, Debug)]
+pub struct GenTask {
+    pub name: String,
+    pub prompt: Vec<i32>,
+    pub expected: Vec<Vec<i32>>,
+    pub gen_len: usize,
+    pub scorer: Scorer,
+}
+
+/// Score a greedy generation against the task's expectation, in [0, 1].
+pub fn score_generation(task: &GenTask, generated: &[i32]) -> f64 {
+    match task.scorer {
+        Scorer::PrefixMatch => {
+            let exp = &task.expected[0];
+            let hits = exp
+                .iter()
+                .zip(generated.iter())
+                .filter(|(a, b)| a == b)
+                .count();
+            hits as f64 / exp.len() as f64
+        }
+        Scorer::ContainsAll => {
+            let found = task
+                .expected
+                .iter()
+                .filter(|grp| generated.windows(grp.len()).any(|w| w == grp.as_slice()))
+                .count();
+            found as f64 / task.expected.len().max(1) as f64
+        }
+    }
+}
+
+/// One named entity: 2-token name + 4-token phrase.
+#[derive(Clone, Debug)]
+pub struct Entity {
+    pub name: Vec<i32>,
+    pub phrase: Vec<i32>,
+}
+
+pub fn fresh_entity(rng: &mut SplitMix64) -> Entity {
+    Entity {
+        name: (0..NAME_LEN).map(|_| corpus::draw_name(rng)).collect(),
+        phrase: (0..PHRASE_LEN).map(|_| corpus::draw_word(rng)).collect(),
+    }
+}
+
+/// Markov-chain background filler (no entities, no special tokens).
+pub fn filler(rng: &mut SplitMix64, n: usize) -> Vec<i32> {
+    let mut out = Vec::with_capacity(n);
+    let mut prev = corpus::draw_word(rng);
+    for _ in 0..n {
+        if rng.next_u64() & 1 == 1 {
+            let j = rng.below(4);
+            prev = corpus::succ(prev, j);
+        } else {
+            prev = corpus::draw_word(rng);
+        }
+        out.push(prev);
+    }
+    out
+}
+
+/// `MARK <name> SEP <phrase>` introduction tokens.
+pub fn intro(e: &Entity) -> Vec<i32> {
+    let mut t = vec![MARK];
+    t.extend_from_slice(&e.name);
+    t.push(SEP);
+    t.extend_from_slice(&e.phrase);
+    t
+}
+
+/// `QUERY <name> ANSWER` trigger tokens (the model must continue with the
+/// phrase).
+pub fn query(e: &Entity) -> Vec<i32> {
+    let mut t = vec![QUERY];
+    t.extend_from_slice(&e.name);
+    t.push(ANSWER);
+    t
+}
+
+/// Build a needle-in-haystack prompt: `ctx_len` total tokens of filler with
+/// `needles` planted at the given depth fractions, ending with a query for
+/// `target` (an index into `needles`).
+pub fn needle_prompt(
+    rng: &mut SplitMix64,
+    ctx_len: usize,
+    needles: &[(f64, Entity)],
+    target: usize,
+) -> GenTask {
+    let mut inserts: Vec<(usize, Vec<i32>)> = needles
+        .iter()
+        .map(|(depth, e)| {
+            let at = ((ctx_len as f64 - 32.0) * depth).max(1.0) as usize;
+            (at, intro(e))
+        })
+        .collect();
+    inserts.sort_by_key(|(at, _)| *at);
+    let mut prompt = vec![corpus::BOS];
+    let mut cursor = 1usize;
+    for (at, toks) in inserts {
+        if at > cursor {
+            prompt.extend(filler(rng, at - cursor));
+            cursor = at;
+        }
+        cursor += toks.len();
+        prompt.extend(toks);
+    }
+    let tail_len = ctx_len.saturating_sub(prompt.len() + NAME_LEN + 2);
+    prompt.extend(filler(rng, tail_len));
+    prompt.extend(query(&needles[target].1));
+    GenTask {
+        name: "needle".into(),
+        prompt,
+        expected: vec![needles[target].1.phrase.clone()],
+        gen_len: PHRASE_LEN,
+        scorer: Scorer::PrefixMatch,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scorer_prefix() {
+        let t = GenTask {
+            name: "t".into(),
+            prompt: vec![],
+            expected: vec![vec![10, 11, 12, 13]],
+            gen_len: 4,
+            scorer: Scorer::PrefixMatch,
+        };
+        assert_eq!(score_generation(&t, &[10, 11, 12, 13]), 1.0);
+        assert_eq!(score_generation(&t, &[10, 11, 0, 0]), 0.5);
+        assert_eq!(score_generation(&t, &[0, 0, 0, 0]), 0.0);
+    }
+
+    #[test]
+    fn scorer_contains() {
+        let t = GenTask {
+            name: "t".into(),
+            prompt: vec![],
+            expected: vec![vec![1, 2], vec![3, 4]],
+            gen_len: 8,
+            scorer: Scorer::ContainsAll,
+        };
+        assert_eq!(score_generation(&t, &[9, 1, 2, 9, 3, 4]), 1.0);
+        assert_eq!(score_generation(&t, &[9, 1, 2, 9]), 0.5);
+    }
+
+    #[test]
+    fn needle_prompt_structure() {
+        let mut rng = SplitMix64::new(7);
+        let e = fresh_entity(&mut rng);
+        let task = needle_prompt(&mut rng, 512, &[(0.5, e.clone())], 0);
+        // length close to requested
+        assert!((500..=540).contains(&task.prompt.len()), "{}", task.prompt.len());
+        // needle present around the middle
+        let pos = task
+            .prompt
+            .windows(2 + NAME_LEN)
+            .position(|w| w[0] == MARK && w[1] == e.name[0])
+            .unwrap();
+        assert!((180..330).contains(&pos), "needle at {pos}");
+        // prompt ends with QUERY name ANSWER
+        let n = task.prompt.len();
+        assert_eq!(task.prompt[n - 2 - NAME_LEN], QUERY);
+        assert_eq!(task.prompt[n - 1], ANSWER);
+        assert_eq!(task.expected[0], e.phrase);
+    }
+
+    #[test]
+    fn filler_has_no_specials() {
+        let mut rng = SplitMix64::new(3);
+        assert!(filler(&mut rng, 1000).iter().all(|&t| t >= corpus::WORD_BASE));
+    }
+
+    #[test]
+    fn multi_needle_prompt_all_present() {
+        let mut rng = SplitMix64::new(11);
+        let needles: Vec<(f64, Entity)> =
+            [0.2, 0.5, 0.8].iter().map(|&d| (d, fresh_entity(&mut rng))).collect();
+        let task = needle_prompt(&mut rng, 1024, &needles, 1);
+        for (_, e) in &needles {
+            assert!(
+                task.prompt.windows(NAME_LEN).any(|w| w == e.name.as_slice()),
+                "needle missing"
+            );
+        }
+    }
+}

@@ -1,0 +1,247 @@
+//! The inference engine: drives AOT programs through the runtime with the
+//! active cache policy applied between calls (windowed scoring for context
+//! ingestion / PPL, greedy generate for decoding), plus the simulated
+//! device-memory accountant that reproduces the paper's OOM axis.
+
+use anyhow::{bail, Result};
+
+use crate::cache::{CachePolicy, MassUse};
+use crate::runtime::{KvCache, Runtime};
+
+/// Raised (as a string-matched anyhow error) when the memory budget is hit —
+/// the full-cache failure mode of Fig. 5.
+pub const OOM_MARKER: &str = "simulated-OOM";
+
+pub struct EngineOpts {
+    pub model: String,
+    /// Score-window length (eviction cadence for teacher-forced evaluation).
+    pub w: usize,
+    /// Cache capacity (must match a compiled program C).
+    pub c: usize,
+    /// Simulated device-memory budget for resident KV bytes.
+    pub memory_budget_bytes: Option<usize>,
+}
+
+pub struct Engine<'rt> {
+    rt: &'rt Runtime,
+    pub opts: EngineOpts,
+    pub policy: Box<dyn CachePolicy>,
+    pub cache: KvCache,
+    /// Original-stream token index of the next token to ingest.
+    pub n_tokens: u64,
+    pub last_token: i32,
+    /// Total evictions performed (diagnostics).
+    pub n_evicted: u64,
+    /// Compaction events (iterative-compaction counter).
+    pub n_compactions: u64,
+}
+
+impl<'rt> Engine<'rt> {
+    pub fn new(rt: &'rt Runtime, opts: EngineOpts, policy: Box<dyn CachePolicy>) -> Result<Self> {
+        let lm = rt.model(&opts.model)?;
+        let cfg = &lm.cfg;
+        if policy.budget() != usize::MAX && policy.budget() + opts.w > opts.c {
+            bail!(
+                "budget {} + window {} exceeds program capacity {}",
+                policy.budget(),
+                opts.w,
+                opts.c
+            );
+        }
+        let cache = KvCache::new(cfg.n_layers, cfg.n_heads, opts.c, cfg.head_dim);
+        Ok(Self {
+            rt,
+            opts,
+            policy,
+            cache,
+            n_tokens: 0,
+            last_token: crate::data::corpus::BOS,
+            n_evicted: 0,
+            n_compactions: 0,
+        })
+    }
+
+    pub fn reset(&mut self) {
+        let cfg = self.cache.clone();
+        self.cache = KvCache::new(cfg.l, cfg.h, cfg.c, cfg.dh);
+        self.n_tokens = 0;
+        self.last_token = crate::data::corpus::BOS;
+    }
+
+    fn scored(&self) -> bool {
+        self.policy.needs_scores()
+    }
+
+    fn check_memory(&self, extra_tokens: usize) -> Result<()> {
+        if let Some(limit) = self.opts.memory_budget_bytes {
+            let per_tok = 2 * self.cache.h * self.cache.dh * 4 * self.cache.l;
+            let projected = self.cache.kv_bytes() + extra_tokens * per_tok;
+            if projected > limit {
+                bail!(
+                    "{OOM_MARKER}: resident KV {} + window {} bytes > budget {} \
+                     (at stream position {})",
+                    self.cache.kv_bytes(),
+                    extra_tokens * per_tok,
+                    limit,
+                    self.n_tokens
+                );
+            }
+        }
+        // hard capacity check (full-cache runs exhaust the compiled C)
+        if self.cache.max_len() + extra_tokens > self.opts.c {
+            bail!(
+                "{OOM_MARKER}: cache capacity C={} exhausted at stream position {} \
+                 (resident {}, incoming {extra_tokens})",
+                self.opts.c,
+                self.n_tokens,
+                self.cache.max_len()
+            );
+        }
+        Ok(())
+    }
+
+    fn evict(&mut self) -> Result<()> {
+        let before = self.cache.max_len();
+        let n = self.policy.evict(&mut self.cache)?;
+        if n > 0 {
+            self.n_evicted += n as u64;
+            self.n_compactions += 1;
+        }
+        debug_assert!(self.cache.check_invariants().is_ok());
+        let _ = before;
+        Ok(())
+    }
+
+    /// Teacher-forced scoring of a token stream continuation: returns the
+    /// per-token logprobs of `targets[i] = stream[i+1]` for the provided
+    /// `tokens`. Applies the eviction policy every window (the iterative
+    /// compaction cadence).
+    pub fn feed_score(&mut self, tokens: &[i32], targets: &[i32]) -> Result<Vec<f32>> {
+        if tokens.len() != targets.len() {
+            bail!("tokens/targets length mismatch");
+        }
+        let w = self.opts.w;
+        let scored = self.scored();
+        let mut out = Vec::with_capacity(tokens.len());
+        for (chunk_t, chunk_g) in tokens.chunks(w).zip(targets.chunks(w)) {
+            let n_valid = chunk_t.len();
+            self.check_memory(n_valid)?;
+            if self.policy.mass_use() == MassUse::LastWindow {
+                for l in 0..self.cache.l {
+                    for m in self.cache.mass[l].iter_mut() {
+                        *m = 0.0;
+                    }
+                }
+            }
+            let so = self.rt.score(
+                &self.opts.model,
+                w,
+                self.opts.c,
+                scored,
+                chunk_t,
+                chunk_g,
+                &self.cache,
+            )?;
+            out.extend_from_slice(&so.logprobs[..n_valid]);
+            // merge window KV into every layer, then compact
+            let (l, h, dh, c) = (self.cache.l, self.cache.h, self.cache.dh, self.cache.c);
+            for layer in 0..l {
+                let base = layer * h * w * dh;
+                let wk = &so.win_k[base..base + h * w * dh];
+                let wv = &so.win_v[base..base + h * w * dh];
+                self.cache.append_layer(layer, wk, wv, w, n_valid, self.n_tokens)?;
+            }
+            if let Some(mass) = &so.mass {
+                // device row layout [L, C+W]: resident slots then window slots
+                for layer in 0..l {
+                    let row = &mass[layer * (c + w)..(layer + 1) * (c + w)];
+                    // window tokens were appended after `old_len` resident
+                    // slots; stitch their mass onto the appended entries
+                    let old_len = self.cache.lens[layer] - n_valid;
+                    let mut stitched = row[..old_len].to_vec();
+                    stitched.extend_from_slice(&row[c..c + n_valid]);
+                    for (i, &mv) in stitched.iter().enumerate() {
+                        self.cache.mass[layer][i] += mv as f64;
+                    }
+                }
+            }
+            self.n_tokens += n_valid as u64;
+            self.last_token = *chunk_t.last().unwrap();
+            self.evict()?;
+        }
+        Ok(out)
+    }
+
+    /// Ingest context without keeping logprobs (prompt prefill path).
+    pub fn prefill(&mut self, tokens: &[i32]) -> Result<()> {
+        if tokens.is_empty() {
+            return Ok(());
+        }
+        // targets = next tokens (last target is a dummy BOS)
+        let mut targets: Vec<i32> = tokens[1..].to_vec();
+        targets.push(crate::data::corpus::BOS);
+        self.feed_score(tokens, &targets)?;
+        Ok(())
+    }
+
+    /// Greedy-decode `n` tokens (chunked through the compiled K-step
+    /// programs), applying the policy between chunks.
+    pub fn generate(&mut self, n: usize) -> Result<Vec<i32>> {
+        let scored = self.scored();
+        let mut out = Vec::with_capacity(n);
+        let mut remaining = n;
+        while remaining > 0 {
+            // scored programs are only compiled at K=16; over-generate and
+            // truncate (the extra KV appends are evicted like any tokens)
+            let k = if remaining >= 16 || scored { 16 } else { 1 };
+            self.check_memory(k)?;
+            if self.policy.mass_use() == MassUse::LastWindow {
+                for l in 0..self.cache.l {
+                    for m in self.cache.mass[l].iter_mut() {
+                        *m = 0.0;
+                    }
+                }
+            }
+            let go = self.rt.generate(&self.opts.model, k, scored, &self.cache, self.last_token)?;
+            self.cache.replace_from_device(go.k, go.v, &go.lens, k);
+            if let Some(mass) = &go.mass {
+                let c = self.cache.c;
+                for layer in 0..self.cache.l {
+                    self.cache.add_mass(layer, &mass[layer * c..(layer + 1) * c]);
+                }
+            }
+            out.extend_from_slice(&go.tokens);
+            self.last_token = *go.tokens.last().unwrap();
+            self.n_tokens += k as u64;
+            remaining = remaining.saturating_sub(k);
+            self.evict()?;
+        }
+        out.truncate(n);
+        Ok(out)
+    }
+
+    /// One decode step returning the *logits* (serving path with host-side
+    /// sampling).
+    pub fn step_logits(&mut self) -> Result<Vec<f32>> {
+        self.check_memory(1)?;
+        let go = self.rt.generate(&self.opts.model, 1, false, &self.cache, self.last_token)?;
+        self.cache.replace_from_device(go.k, go.v, &go.lens, 1);
+        self.last_token = go.tokens[0];
+        self.n_tokens += 1;
+        self.evict()?;
+        Ok(go.last_logits)
+    }
+
+    /// Force the sampled token to `tok` (after host-side sampling the device
+    /// already appended KV for its own greedy choice — the KV of a token
+    /// depends only on the *input* token at that step, which was
+    /// `last_token`, so the cache is correct; only the continuation token
+    /// changes).
+    pub fn set_last_token(&mut self, tok: i32) {
+        self.last_token = tok;
+    }
+}
+
+pub fn is_oom(err: &anyhow::Error) -> bool {
+    format!("{err}").contains(OOM_MARKER)
+}

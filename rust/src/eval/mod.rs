@@ -1,0 +1,4 @@
+//! Evaluation harnesses reproducing the paper's benchmark suites.
+pub mod niah;
+pub mod ppl;
+pub mod tasks;

@@ -1,0 +1,88 @@
+//! Needle-In-A-Haystack heatmap harness (paper Fig. 8/9): accuracy over a
+//! (context length × needle depth) grid, repeated over seeds.
+
+use anyhow::Result;
+
+use crate::data::tasks::{fresh_entity, needle_prompt};
+use crate::eval::tasks::run_task;
+use crate::runtime::Runtime;
+use crate::util::rng::SplitMix64;
+
+#[derive(Clone, Debug)]
+pub struct Heatmap {
+    pub ctx_lens: Vec<usize>,
+    pub depths: Vec<f64>,
+    /// acc[i][j] = accuracy at ctx_lens[i], depths[j].
+    pub acc: Vec<Vec<f64>>,
+}
+
+impl Heatmap {
+    pub fn mean(&self) -> f64 {
+        let all: Vec<f64> = self.acc.iter().flatten().copied().collect();
+        all.iter().sum::<f64>() / all.len().max(1) as f64
+    }
+
+    /// ASCII rendering (the paper's green heatmap, terminal edition).
+    pub fn render(&self) -> String {
+        let mut s = String::from("ctx\\depth ");
+        for d in &self.depths {
+            s.push_str(&format!("{d:>6.2}"));
+        }
+        s.push('\n');
+        for (i, c) in self.ctx_lens.iter().enumerate() {
+            s.push_str(&format!("{c:>9} "));
+            for v in &self.acc[i] {
+                s.push_str(&format!("{:>6.2}", v));
+            }
+            s.push('\n');
+        }
+        s
+    }
+}
+
+#[allow(clippy::too_many_arguments)]
+pub fn niah_heatmap(
+    rt: &Runtime,
+    model: &str,
+    policy_spec: &str,
+    w: usize,
+    c: usize,
+    ctx_lens: &[usize],
+    depths: &[f64],
+    reps: usize,
+    seed0: u64,
+) -> Result<Heatmap> {
+    let mut acc = vec![vec![0.0; depths.len()]; ctx_lens.len()];
+    for (i, &ctx) in ctx_lens.iter().enumerate() {
+        for (j, &depth) in depths.iter().enumerate() {
+            let mut total = 0.0;
+            for rep in 0..reps {
+                let seed = seed0 ^ ((ctx as u64) << 24) ^ ((j as u64) << 8) ^ rep as u64;
+                let mut rng = SplitMix64::new(seed);
+                let e = fresh_entity(&mut rng);
+                let task = needle_prompt(&mut rng, ctx, &[(depth, e)], 0);
+                let r = run_task(rt, model, policy_spec, w, c, &task)?;
+                total += r.score;
+            }
+            acc[i][j] = total / reps as f64;
+        }
+    }
+    Ok(Heatmap { ctx_lens: ctx_lens.to_vec(), depths: depths.to_vec(), acc })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn heatmap_render_and_mean() {
+        let h = Heatmap {
+            ctx_lens: vec![256, 512],
+            depths: vec![0.2, 0.8],
+            acc: vec![vec![1.0, 0.5], vec![0.0, 0.5]],
+        };
+        assert!((h.mean() - 0.5).abs() < 1e-9);
+        let r = h.render();
+        assert!(r.contains("256") && r.contains("0.80"));
+    }
+}

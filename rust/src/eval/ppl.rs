@@ -1,0 +1,146 @@
+//! Perplexity harnesses: cumulative decode-length PPL (Tab. 1/2, Fig. 3,
+//! Fig. 10) and streaming segment PPL over long corpora (PG19-style,
+//! Fig. 5/6).
+
+use anyhow::Result;
+
+use crate::cache::make_policy;
+use crate::data::corpus::Stream;
+use crate::engine::{is_oom, Engine, EngineOpts};
+use crate::runtime::Runtime;
+
+#[derive(Clone, Debug)]
+pub struct PplPoint {
+    pub len: usize,
+    pub ppl: f64,
+    pub oom: bool,
+}
+
+/// Cumulative PPL at a set of decode lengths (teacher-forced over the
+/// synthetic corpus — the Wikitext-2 substitute).
+pub fn decode_ppl(
+    rt: &Runtime,
+    model: &str,
+    policy_spec: &str,
+    seed: u64,
+    lengths: &[usize],
+    w: usize,
+    c: usize,
+    memory_budget_bytes: Option<usize>,
+) -> Result<Vec<PplPoint>> {
+    let cfg = rt.model(model)?.cfg.clone();
+    let policy = make_policy(policy_spec, cfg.n_layers)?;
+    let opts = EngineOpts { model: model.into(), w, c, memory_budget_bytes };
+    let mut eng = Engine::new(rt, opts, policy)?;
+
+    let max_len = *lengths.iter().max().unwrap();
+    let mut stream = Stream::default_eval(seed);
+    let toks = stream.take_n(max_len + 1);
+
+    let mut out = Vec::new();
+    let mut nll_sum = 0.0f64;
+    let mut n = 0usize;
+    let mut checkpoints = lengths.to_vec();
+    checkpoints.sort_unstable();
+    let mut ci = 0;
+    let mut pos = 0usize;
+    let mut oom = false;
+    while ci < checkpoints.len() {
+        let target_len = checkpoints[ci];
+        if !oom {
+            let step = (target_len - pos).min(w);
+            if step == 0 {
+                // checkpoint reached
+            } else {
+                let chunk = &toks[pos..pos + step];
+                let tgts = &toks[pos + 1..pos + step + 1];
+                match eng.feed_score(chunk, tgts) {
+                    Ok(lps) => {
+                        for lp in lps {
+                            nll_sum -= lp as f64;
+                            n += 1;
+                        }
+                        pos += step;
+                    }
+                    Err(e) if is_oom(&e) => {
+                        oom = true;
+                    }
+                    Err(e) => return Err(e),
+                }
+            }
+        }
+        if oom {
+            out.push(PplPoint { len: target_len, ppl: f64::NAN, oom: true });
+            ci += 1;
+            continue;
+        }
+        if pos >= target_len {
+            out.push(PplPoint { len: target_len, ppl: (nll_sum / n as f64).exp(), oom: false });
+            ci += 1;
+        }
+    }
+    Ok(out)
+}
+
+/// Streaming segment PPL: local perplexity of each `report_every`-token
+/// segment over a very long stream (the Fig. 5/6 curves; the full-cache
+/// explosion + OOM point is visible directly).
+pub fn stream_ppl_curve(
+    rt: &Runtime,
+    model: &str,
+    policy_spec: &str,
+    seed: u64,
+    total_len: usize,
+    report_every: usize,
+    w: usize,
+    c: usize,
+    memory_budget_bytes: Option<usize>,
+) -> Result<Vec<(usize, f64)>> {
+    let cfg = rt.model(model)?.cfg.clone();
+    let policy = make_policy(policy_spec, cfg.n_layers)?;
+    let opts = EngineOpts { model: model.into(), w, c, memory_budget_bytes };
+    let mut eng = Engine::new(rt, opts, policy)?;
+
+    let mut stream = Stream::new(seed, 1024, 4096, 8); // book-like long docs
+    let mut prev = stream.next_token();
+    let mut curve = Vec::new();
+    let mut seg_nll = 0.0f64;
+    let mut seg_n = 0usize;
+    let mut pos = 0usize;
+    'outer: while pos < total_len {
+        let step = w.min(total_len - pos);
+        let mut chunk = Vec::with_capacity(step);
+        let mut tgts = Vec::with_capacity(step);
+        let mut cur = prev;
+        for _ in 0..step {
+            let nxt = stream.next_token();
+            chunk.push(cur);
+            tgts.push(nxt);
+            cur = nxt;
+        }
+        prev = cur;
+        match eng.feed_score(&chunk, &tgts) {
+            Ok(lps) => {
+                for lp in lps {
+                    seg_nll -= lp as f64;
+                    seg_n += 1;
+                }
+            }
+            Err(e) if is_oom(&e) => {
+                curve.push((pos, f64::NAN)); // OOM sentinel
+                break 'outer;
+            }
+            Err(e) => return Err(e),
+        }
+        pos += step;
+        if seg_n >= report_every {
+            curve.push((pos, (seg_nll / seg_n as f64).exp()));
+            seg_nll = 0.0;
+            seg_n = 0;
+        }
+    }
+    if seg_n > 0 {
+        curve.push((pos, (seg_nll / seg_n as f64).exp()));
+    }
+    Ok(curve)
+}

@@ -1,0 +1,87 @@
+//! Task-suite runner: drives a [`GenTask`] through the engine (windowed
+//! context ingestion under the active policy, then greedy generation) and
+//! scores the output. Also measures wall-clock throughput — the Fig. 7 axis.
+
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::cache::make_policy;
+use crate::data::tasks::{score_generation, GenTask};
+use crate::engine::{Engine, EngineOpts};
+use crate::runtime::Runtime;
+
+#[derive(Clone, Debug)]
+pub struct TaskResult {
+    pub name: String,
+    pub score: f64,
+    pub prompt_tokens: usize,
+    pub gen_tokens: usize,
+    pub wall_s: f64,
+}
+
+/// Run one task under one policy.
+pub fn run_task(
+    rt: &Runtime,
+    model: &str,
+    policy_spec: &str,
+    w: usize,
+    c: usize,
+    task: &GenTask,
+) -> Result<TaskResult> {
+    let cfg = rt.model(model)?.cfg.clone();
+    let policy = make_policy(policy_spec, cfg.n_layers)?;
+    let opts = EngineOpts { model: model.into(), w, c, memory_budget_bytes: None };
+    let mut eng = Engine::new(rt, opts, policy)?;
+    let t0 = Instant::now();
+    eng.prefill(&task.prompt)?;
+    let gen = eng.generate(task.gen_len)?;
+    let wall_s = t0.elapsed().as_secs_f64();
+    Ok(TaskResult {
+        name: task.name.clone(),
+        score: score_generation(task, &gen),
+        prompt_tokens: task.prompt.len(),
+        gen_tokens: gen.len(),
+        wall_s,
+    })
+}
+
+/// Run a batch of task instances, aggregating score + throughput.
+pub fn run_suite(
+    rt: &Runtime,
+    model: &str,
+    policy_spec: &str,
+    w: usize,
+    c: usize,
+    tasks: &[GenTask],
+) -> Result<SuiteResult> {
+    let mut scores = Vec::new();
+    let mut total_tokens = 0usize;
+    let mut total_wall = 0.0;
+    // warmup: run the first task untimed so lazy program compilation is not
+    // billed to whichever policy happens to run first
+    let _ = run_task(rt, model, policy_spec, w, c, &tasks[0])?;
+    for task in tasks {
+        let r = run_task(rt, model, policy_spec, w, c, task)?;
+        total_tokens += r.prompt_tokens + r.gen_tokens;
+        total_wall += r.wall_s;
+        scores.push(r.score);
+    }
+    let mean = scores.iter().sum::<f64>() / scores.len().max(1) as f64;
+    Ok(SuiteResult {
+        policy: policy_spec.to_string(),
+        mean_score: mean,
+        scores,
+        tokens_per_s: total_tokens as f64 / total_wall.max(1e-9),
+        wall_s: total_wall,
+    })
+}
+
+#[derive(Clone, Debug)]
+pub struct SuiteResult {
+    pub policy: String,
+    pub mean_score: f64,
+    pub scores: Vec<f64>,
+    pub tokens_per_s: f64,
+    pub wall_s: f64,
+}

@@ -1,0 +1,37 @@
+//! # lacache-serve
+//!
+//! Production-shaped reproduction of **LaCache: Ladder-Shaped KV Caching for
+//! Efficient Long-Context Modeling of Large Language Models** (ICML 2025) as
+//! a three-layer Rust + JAX + Pallas serving stack:
+//!
+//! - **Layer 3 (this crate)** — serving coordinator: request router,
+//!   continuous batcher, prefill/decode scheduler and, centrally, the KV
+//!   cache *policy* layer: LaCache's ladder retention + iterative compaction
+//!   next to StreamingLLM / full-cache / H2O / TOVA / SnapKV / PyramidInfer
+//!   baselines.
+//! - **Layer 2 (python/compile, build-time only)** — a tiny Llama-style
+//!   decoder in JAX whose prefill/score/decode programs are AOT-lowered to
+//!   HLO text.
+//! - **Layer 1 (python/compile/kernels)** — the Pallas flash-decode kernel
+//!   over the compacted cache (attention-map-free: the property that gives
+//!   LaCache its throughput edge over importance-based eviction).
+//!
+//! See DESIGN.md for the experiment index and substitution ledger, and
+//! EXPERIMENTS.md for paper-vs-measured results.
+
+pub mod cache;
+pub mod config;
+pub mod data;
+pub mod engine;
+pub mod eval;
+pub mod runtime;
+pub mod server;
+pub mod util;
+
+/// Locate the artifacts directory (env override, then repo-relative).
+pub fn artifacts_dir() -> std::path::PathBuf {
+    if let Ok(d) = std::env::var("LACACHE_ARTIFACTS") {
+        return std::path::PathBuf::from(d);
+    }
+    std::path::PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}

@@ -1,0 +1,38 @@
+//! `lacache-serve` — the serving launcher (leader entrypoint).
+//!
+//! ```text
+//! lacache-serve --model base --policy lacache:budget=128 --listen 127.0.0.1:7333
+//! lacache-serve --config serve.json
+//! ```
+//!
+//! Speaks a JSON-lines protocol over TCP (see `server::protocol`); clients
+//! send `{"op":"generate","id":1,"prompt":"<mark> w4 w5 <sep> ...","max_new_tokens":8}`
+//! and receive one JSON reply line per request. `op:stats` exposes the
+//! metrics registry; `op:shutdown` drains and exits.
+
+use anyhow::Result;
+
+use lacache::config::ServeConfig;
+use lacache::server::run_server;
+use lacache::util::args::Args;
+
+fn main() -> Result<()> {
+    let args = Args::from_env()
+        .describe("config", "JSON config file", None)
+        .describe("model", "model name from artifacts/manifest.json", Some("base"))
+        .describe("policy", "cache policy spec, e.g. lacache:budget=128,span=2", Some("lacache:budget=128"))
+        .describe("listen", "TCP listen address", Some("127.0.0.1:7333"))
+        .describe("window", "prompt ingestion window", Some("128"))
+        .describe("capacity", "compiled cache capacity C", Some("256"))
+        .describe("max-new-tokens", "per-request generation cap", Some("256"))
+        .describe("max-queue", "admission-control queue bound", Some("64"))
+        .describe("decode-quantum", "decode steps per scheduling round", Some("16"));
+    if args.flag("help") {
+        print!("{}", args.usage("lacache-serve"));
+        return Ok(());
+    }
+    let cfg = ServeConfig::from_args(&args)?;
+    let final_stats = run_server(cfg)?;
+    println!("{}", final_stats.to_string());
+    Ok(())
+}

@@ -1,0 +1,242 @@
+//! Host-side KV cache state: per-layer contiguous slot arrays + occupancy +
+//! original-token-position bookkeeping.
+//!
+//! Layout matches the device tensors exactly: `k`/`v` are row-major
+//! `[L, H, C, Dh]` f32. Slot order within a layer is time order; eviction is
+//! an order-preserving per-layer gather (`retain_slots`), after which slot
+//! index == cache-relative RoPE position on the device side.
+
+use anyhow::{bail, Result};
+
+#[derive(Clone, Debug)]
+pub struct KvCache {
+    pub l: usize,
+    pub h: usize,
+    pub c: usize,
+    pub dh: usize,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    /// Valid slot count per layer.
+    pub lens: Vec<usize>,
+    /// Original token index of each valid slot, per layer (time-ordered).
+    pub positions: Vec<Vec<u64>>,
+    /// Accumulated attention mass per valid slot, per layer (H2O-family
+    /// bookkeeping; stays zero on the fast path).
+    pub mass: Vec<Vec<f64>>,
+}
+
+impl KvCache {
+    pub fn new(l: usize, h: usize, c: usize, dh: usize) -> Self {
+        Self {
+            l,
+            h,
+            c,
+            dh,
+            k: vec![0.0; l * h * c * dh],
+            v: vec![0.0; l * h * c * dh],
+            lens: vec![0; l],
+            positions: vec![Vec::new(); l],
+            mass: vec![Vec::new(); l],
+        }
+    }
+
+    pub fn lens_i32(&self) -> Vec<i32> {
+        self.lens.iter().map(|&x| x as i32).collect()
+    }
+
+    /// Total bytes resident for valid slots (the OOM-accounting metric).
+    pub fn kv_bytes(&self) -> usize {
+        self.lens.iter().map(|&n| 2 * self.h * n * self.dh * 4).sum()
+    }
+
+    /// Max occupancy across layers.
+    pub fn max_len(&self) -> usize {
+        self.lens.iter().copied().max().unwrap_or(0)
+    }
+
+    #[inline]
+    fn row_offset(&self, l: usize, h: usize, slot: usize) -> usize {
+        ((l * self.h + h) * self.c + slot) * self.dh
+    }
+
+    /// Append one layer's window K/V rows (from a score program's output,
+    /// shaped `[H, W, Dh]` with `n_valid <= W` rows valid) at the tail.
+    pub fn append_layer(
+        &mut self,
+        layer: usize,
+        win_k: &[f32],
+        win_v: &[f32],
+        w: usize,
+        n_valid: usize,
+        first_pos: u64,
+    ) -> Result<()> {
+        let len = self.lens[layer];
+        if len + n_valid > self.c {
+            bail!("cache overflow: layer {layer} len {len} + {n_valid} > C {}", self.c);
+        }
+        debug_assert_eq!(win_k.len(), self.h * w * self.dh);
+        for hh in 0..self.h {
+            for i in 0..n_valid {
+                let src = (hh * w + i) * self.dh;
+                let dst = self.row_offset(layer, hh, len + i);
+                self.k[dst..dst + self.dh].copy_from_slice(&win_k[src..src + self.dh]);
+                self.v[dst..dst + self.dh].copy_from_slice(&win_v[src..src + self.dh]);
+            }
+        }
+        self.lens[layer] = len + n_valid;
+        for i in 0..n_valid {
+            self.positions[layer].push(first_pos + i as u64);
+            self.mass[layer].push(0.0);
+        }
+        Ok(())
+    }
+
+    /// Order-preserving gather: keep exactly the slots in `keep` (sorted,
+    /// unique, all < lens[layer]) for one layer.
+    pub fn retain_slots(&mut self, layer: usize, keep: &[usize]) -> Result<()> {
+        let len = self.lens[layer];
+        let mut prev: Option<usize> = None;
+        for &s in keep {
+            if s >= len {
+                bail!("retain_slots: slot {s} >= len {len}");
+            }
+            if let Some(p) = prev {
+                if s <= p {
+                    bail!("retain_slots: indices must be strictly increasing");
+                }
+            }
+            prev = Some(s);
+        }
+        for hh in 0..self.h {
+            for (dst_i, &src_i) in keep.iter().enumerate() {
+                if dst_i == src_i {
+                    continue; // prefix already in place
+                }
+                let src = self.row_offset(layer, hh, src_i);
+                let dst = self.row_offset(layer, hh, dst_i);
+                self.k.copy_within(src..src + self.dh, dst);
+                self.v.copy_within(src..src + self.dh, dst);
+            }
+        }
+        self.positions[layer] = keep.iter().map(|&s| self.positions[layer][s]).collect();
+        self.mass[layer] = keep.iter().map(|&s| self.mass[layer][s]).collect();
+        self.lens[layer] = keep.len();
+        Ok(())
+    }
+
+    /// Replace full device-shaped state (from a generate program's outputs).
+    pub fn replace_from_device(&mut self, k: Vec<f32>, v: Vec<f32>, lens: &[i32], appended: usize) {
+        debug_assert_eq!(k.len(), self.k.len());
+        self.k = k;
+        self.v = v;
+        for l in 0..self.l {
+            let new_len = lens[l] as usize;
+            let old_len = self.lens[l];
+            debug_assert_eq!(new_len, old_len + appended);
+            let next_pos = self.positions[l].last().map(|&p| p + 1).unwrap_or(0);
+            for i in 0..new_len - old_len {
+                self.positions[l].push(next_pos + i as u64);
+                self.mass[l].push(0.0);
+            }
+            self.lens[l] = new_len;
+        }
+    }
+
+    /// Add per-slot attention mass from a scored program (`mass_row` is the
+    /// device `[C+W]` or `[C]` row for `layer`; only the first lens entries
+    /// apply to resident slots).
+    pub fn add_mass(&mut self, layer: usize, mass_row: &[f32]) {
+        let n = self.lens[layer].min(mass_row.len());
+        for i in 0..n {
+            self.mass[layer][i] += mass_row[i] as f64;
+        }
+    }
+
+    /// Consistency invariants (used by tests and debug assertions).
+    pub fn check_invariants(&self) -> Result<()> {
+        for l in 0..self.l {
+            if self.lens[l] > self.c {
+                bail!("len > capacity");
+            }
+            if self.positions[l].len() != self.lens[l] || self.mass[l].len() != self.lens[l] {
+                bail!("bookkeeping length mismatch");
+            }
+            for w in self.positions[l].windows(2) {
+                if w[0] >= w[1] {
+                    bail!("positions not strictly increasing in layer {l}");
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn filled(l: usize, h: usize, c: usize, dh: usize, n: usize) -> KvCache {
+        let mut kv = KvCache::new(l, h, c, dh);
+        for layer in 0..l {
+            let w = n;
+            let mut wk = vec![0.0f32; h * w * dh];
+            let mut wv = vec![0.0f32; h * w * dh];
+            for hh in 0..h {
+                for i in 0..w {
+                    for d in 0..dh {
+                        wk[(hh * w + i) * dh + d] = (layer * 1000 + hh * 100 + i) as f32;
+                        wv[(hh * w + i) * dh + d] = -((layer * 1000 + hh * 100 + i) as f32);
+                    }
+                }
+            }
+            kv.append_layer(layer, &wk, &wv, w, n, 0).unwrap();
+        }
+        kv
+    }
+
+    #[test]
+    fn append_and_invariants() {
+        let kv = filled(2, 2, 16, 4, 5);
+        assert_eq!(kv.lens, vec![5, 5]);
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.kv_bytes(), 2 * 2 * 2 * 5 * 4 * 4);
+    }
+
+    #[test]
+    fn append_overflow_fails() {
+        let mut kv = KvCache::new(1, 1, 4, 2);
+        let w = vec![0.0; 1 * 6 * 2];
+        assert!(kv.append_layer(0, &w, &w, 6, 6, 0).is_err());
+    }
+
+    #[test]
+    fn retain_gathers_rows() {
+        let mut kv = filled(2, 2, 16, 4, 6);
+        kv.retain_slots(0, &[0, 2, 5]).unwrap();
+        assert_eq!(kv.lens[0], 3);
+        assert_eq!(kv.positions[0], vec![0, 2, 5]);
+        // head 1 row 1 should now hold original slot 2's value (=102)
+        let off = ((0 * 2 + 1) * 16 + 1) * 4;
+        assert_eq!(kv.k[off], 102.0);
+        // layer 1 untouched
+        assert_eq!(kv.lens[1], 6);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn retain_rejects_bad_indices() {
+        let mut kv = filled(1, 1, 8, 2, 4);
+        assert!(kv.retain_slots(0, &[2, 1]).is_err());
+        assert!(kv.retain_slots(0, &[0, 9]).is_err());
+        assert!(kv.retain_slots(0, &[1, 1]).is_err());
+    }
+
+    #[test]
+    fn mass_tracking() {
+        let mut kv = filled(1, 1, 8, 2, 4);
+        kv.add_mass(0, &[1.0, 2.0, 3.0, 4.0, 99.0]);
+        assert_eq!(kv.mass[0], vec![1.0, 2.0, 3.0, 4.0]);
+        kv.retain_slots(0, &[1, 3]).unwrap();
+        assert_eq!(kv.mass[0], vec![2.0, 4.0]);
+    }
+}

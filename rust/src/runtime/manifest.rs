@@ -1,0 +1,202 @@
+//! Artifact manifest: the contract between `python/compile/aot.py` (producer)
+//! and the rust runtime (consumer). See DESIGN.md §2 for the program table.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Mirror of `python/compile/model.py::ModelConfig`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ModelCfg {
+    pub name: String,
+    pub vocab: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub d_model: usize,
+    pub head_dim: usize,
+    pub d_ff: usize,
+    pub rope_theta: f64,
+    /// Pretraining context length — positions beyond this are OOD (the
+    /// full-cache PPL-explosion axis in Tab. 1 / Fig. 5).
+    pub t_train: usize,
+}
+
+impl ModelCfg {
+    fn from_json(j: &Json) -> Result<Self> {
+        Ok(Self {
+            name: j.str_of("name").context("cfg.name")?.to_string(),
+            vocab: j.usize_of("vocab").context("cfg.vocab")?,
+            n_layers: j.usize_of("n_layers").context("cfg.n_layers")?,
+            n_heads: j.usize_of("n_heads").context("cfg.n_heads")?,
+            d_model: j.usize_of("d_model").context("cfg.d_model")?,
+            head_dim: j.usize_of("head_dim").context("cfg.head_dim")?,
+            d_ff: j.usize_of("d_ff").context("cfg.d_ff")?,
+            rope_theta: j.f64_of("rope_theta").context("cfg.rope_theta")?,
+            t_train: j.usize_of("t_train").context("cfg.t_train")?,
+        })
+    }
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProgKind {
+    Score,
+    Generate,
+}
+
+/// One AOT-compiled HLO program.
+#[derive(Clone, Debug)]
+pub struct ProgMeta {
+    pub name: String,
+    pub kind: ProgKind,
+    /// Window length (score) — 0 for generate programs.
+    pub w: usize,
+    /// Cache capacity baked into the program shapes.
+    pub c: usize,
+    /// Decode steps per call (generate) — 0 for score programs.
+    pub k: usize,
+    /// Emits per-slot attention mass (the slow path for H2O-family policies).
+    pub scored: bool,
+    pub path: PathBuf,
+}
+
+#[derive(Clone, Debug)]
+pub struct ModelEntry {
+    pub cfg: ModelCfg,
+    pub weights_path: PathBuf,
+    pub n_params: usize,
+    pub programs: BTreeMap<String, ProgMeta>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub c_small: usize,
+    pub c_full: usize,
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        if j.usize_of("version") != Some(1) {
+            bail!("unsupported manifest version");
+        }
+        let mut models = BTreeMap::new();
+        for m in j.req("models").as_arr().context("models")? {
+            let cfg = ModelCfg::from_json(m.req("config"))?;
+            let mut programs = BTreeMap::new();
+            for (pname, pj) in m.req("programs").as_obj().context("programs")? {
+                let kind = match pj.str_of("kind") {
+                    Some("score") => ProgKind::Score,
+                    Some("generate") => ProgKind::Generate,
+                    other => bail!("unknown program kind {other:?}"),
+                };
+                programs.insert(
+                    pname.clone(),
+                    ProgMeta {
+                        name: pname.clone(),
+                        kind,
+                        w: pj.usize_of("w").unwrap_or(0),
+                        c: pj.usize_of("c").context("prog.c")?,
+                        k: pj.usize_of("k").unwrap_or(0),
+                        scored: pj.bool_of("scored").unwrap_or(false),
+                        path: dir.join(pj.str_of("path").context("prog.path")?),
+                    },
+                );
+            }
+            let name = m.str_of("name").context("model.name")?.to_string();
+            models.insert(
+                name,
+                ModelEntry {
+                    cfg,
+                    weights_path: dir.join(m.str_of("weights").context("weights")?),
+                    n_params: m.usize_of("n_params").context("n_params")?,
+                    programs,
+                },
+            );
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            c_small: j.usize_of("c_small").context("c_small")?,
+            c_full: j.usize_of("c_full").context("c_full")?,
+            models,
+        })
+    }
+
+    /// Pick the score program for (w, c, scored).
+    pub fn score_prog(&self, model: &str, w: usize, c: usize, scored: bool) -> Result<&ProgMeta> {
+        let name = if scored {
+            format!("score_scored_w{w}_c{c}")
+        } else {
+            format!("score_w{w}_c{c}")
+        };
+        self.prog(model, &name)
+    }
+
+    pub fn generate_prog(&self, model: &str, k: usize, c: usize, scored: bool) -> Result<&ProgMeta> {
+        let name = if scored {
+            format!("generate_scored_k{k}_c{c}")
+        } else {
+            format!("generate_k{k}_c{c}")
+        };
+        self.prog(model, &name)
+    }
+
+    /// The interpret-mode Pallas-kernel decode variant (numerics-identical to
+    /// the fast path; the artifact a TPU target would compile natively).
+    pub fn generate_pallas_prog(&self, model: &str, k: usize, c: usize) -> Result<&ProgMeta> {
+        self.prog(model, &format!("generate_pallas_k{k}_c{c}"))
+    }
+
+    pub fn prog(&self, model: &str, name: &str) -> Result<&ProgMeta> {
+        let entry = self.models.get(model).with_context(|| format!("no model `{model}`"))?;
+        entry.programs.get(name).with_context(|| format!("no program `{model}/{name}`"))
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).with_context(|| format!("no model `{name}`"))
+    }
+}
+
+/// Expected flat weight length for a config (mirrors model.py::weight_spec).
+pub fn expected_n_params(cfg: &ModelCfg) -> usize {
+    let d = cfg.d_model;
+    let hd = cfg.n_heads * cfg.head_dim;
+    let f = cfg.d_ff;
+    let per_layer = d + 3 * d * hd + hd * d + d + 2 * d * f + f * d;
+    cfg.vocab * d + cfg.n_layers * per_layer + d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+    }
+
+    #[test]
+    fn load_manifest() {
+        let dir = artifacts_dir();
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let man = Manifest::load(&dir).unwrap();
+        assert!(man.models.contains_key("base"));
+        assert!(man.models.contains_key("mini"));
+        let base = man.model("base").unwrap();
+        assert_eq!(base.cfg.n_layers, 8);
+        assert_eq!(base.n_params, expected_n_params(&base.cfg));
+        let p = man.score_prog("base", 32, 256, false).unwrap();
+        assert_eq!(p.kind, ProgKind::Score);
+        assert!(p.path.exists());
+        let g = man.generate_prog("base", 16, 256, false).unwrap();
+        assert_eq!(g.k, 16);
+        assert!(man.generate_prog("base", 16, 256, true).is_ok());
+        assert!(man.prog("base", "nonexistent").is_err());
+    }
+}

@@ -1,0 +1,308 @@
+//! PJRT runtime: loads AOT artifacts (HLO text) once, compiles them on the
+//! CPU PJRT client, and exposes typed `score` / `generate` calls over
+//! on-device buffers. Python never runs here — the rust binary is
+//! self-contained after `make artifacts`.
+//!
+//! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
+//! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
+//! Weights are uploaded to the device once per model; per call we upload the
+//! cache + token buffers and download the output tuple (PJRT returns the
+//! root tuple as a single buffer, so state round-trips host<->device per
+//! call — measured and attacked in EXPERIMENTS.md §Perf).
+
+pub mod kv;
+pub mod manifest;
+
+use std::cell::{Cell, RefCell};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+use anyhow::{bail, Context, Result};
+
+pub use kv::KvCache;
+pub use manifest::{Manifest, ModelCfg, ProgKind, ProgMeta};
+
+/// Cumulative runtime counters (per process) for the perf log.
+#[derive(Clone, Debug, Default)]
+pub struct RuntimeStats {
+    pub calls: u64,
+    pub compile_s: f64,
+    pub upload_s: f64,
+    pub execute_s: f64,
+    pub download_s: f64,
+}
+
+pub struct LoadedModel {
+    pub name: String,
+    pub cfg: ModelCfg,
+    pub n_params: usize,
+    weights: xla::PjRtBuffer,
+    #[allow(dead_code)]
+    entry: manifest::ModelEntry,
+    exes: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    pub man: Manifest,
+    models: BTreeMap<String, LoadedModel>,
+    stats: RefCell<RuntimeStats>,
+    /// Simulated device-memory budget in bytes (None = unlimited). The
+    /// engine consults this to reproduce the paper's OOM axis.
+    pub memory_budget_bytes: Cell<Option<usize>>,
+}
+
+/// Output of a score (teacher-forced window) call.
+pub struct ScoreOut {
+    /// Per-token logprob of the target, `[W]` (padding entries are garbage —
+    /// the caller slices to `n_valid`).
+    pub logprobs: Vec<f32>,
+    /// Window keys `[L, H, W, Dh]`, pre-RoPE.
+    pub win_k: Vec<f32>,
+    /// Window values `[L, H, W, Dh]`.
+    pub win_v: Vec<f32>,
+    /// Per-slot attention mass `[L, C+W]` (scored programs only).
+    pub mass: Option<Vec<f32>>,
+}
+
+/// Output of a generate (greedy decode) call.
+pub struct GenOut {
+    pub tokens: Vec<i32>,
+    pub last_logits: Vec<f32>,
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    pub lens: Vec<i32>,
+    /// Per-slot attention mass `[L, C]` (scored programs only).
+    pub mass: Option<Vec<f32>>,
+}
+
+impl Runtime {
+    /// Load the manifest and the listed models (weights uploaded eagerly;
+    /// program compilation is lazy, cached per program).
+    pub fn load(dir: &Path, model_names: &[&str]) -> Result<Runtime> {
+        let man = Manifest::load(dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        let mut models = BTreeMap::new();
+        for &name in model_names {
+            let entry = man.model(name)?.clone();
+            let bytes = std::fs::read(&entry.weights_path).with_context(|| {
+                format!(
+                    "reading weights {} (run `make artifacts` to train + lower)",
+                    entry.weights_path.display()
+                )
+            })?;
+            if bytes.len() != entry.n_params * 4 {
+                bail!(
+                    "weights size mismatch for {name}: {} bytes != {} params * 4",
+                    bytes.len(),
+                    entry.n_params
+                );
+            }
+            let floats: Vec<f32> = bytes
+                .chunks_exact(4)
+                .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
+                .collect();
+            let weights = client.buffer_from_host_buffer(&floats, &[entry.n_params], None)?;
+            models.insert(
+                name.to_string(),
+                LoadedModel {
+                    name: name.to_string(),
+                    cfg: entry.cfg.clone(),
+                    n_params: entry.n_params,
+                    weights,
+                    entry,
+                    exes: RefCell::new(BTreeMap::new()),
+                },
+            );
+        }
+        Ok(Runtime {
+            client,
+            man,
+            models,
+            stats: RefCell::new(RuntimeStats::default()),
+            memory_budget_bytes: Cell::new(None),
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&LoadedModel> {
+        self.models.get(name).with_context(|| format!("model `{name}` not loaded"))
+    }
+
+    pub fn stats(&self) -> RuntimeStats {
+        self.stats.borrow().clone()
+    }
+
+    /// Pre-compile a set of programs (avoids first-call latency in serving).
+    pub fn warmup(&self, model: &str, prog_names: &[&str]) -> Result<()> {
+        for p in prog_names {
+            let meta = self.man.prog(model, p)?.clone();
+            self.exe(model, &meta)?;
+        }
+        Ok(())
+    }
+
+    fn exe(&self, model: &str, prog: &ProgMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let lm = self.model(model)?;
+        if let Some(e) = lm.exes.borrow().get(&prog.name) {
+            return Ok(e.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&prog.path)
+            .map_err(|e| anyhow::anyhow!("parsing {}: {e}", prog.path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(
+            self.client
+                .compile(&comp)
+                .map_err(|e| anyhow::anyhow!("compiling {model}/{}: {e}", prog.name))?,
+        );
+        self.stats.borrow_mut().compile_s += t0.elapsed().as_secs_f64();
+        lm.exes.borrow_mut().insert(prog.name.clone(), exe.clone());
+        Ok(exe)
+    }
+
+    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+    }
+
+    /// Teacher-forced scoring of `tokens` (with next-token `targets`) over
+    /// the resident cache. `tokens.len()` may be shorter than the program
+    /// window; inputs are padded and only valid logprobs are meaningful.
+    pub fn score(
+        &self,
+        model: &str,
+        w: usize,
+        c: usize,
+        scored: bool,
+        tokens: &[i32],
+        targets: &[i32],
+        cache: &KvCache,
+    ) -> Result<ScoreOut> {
+        let prog = self.man.score_prog(model, w, c, scored)?.clone();
+        let exe = self.exe(model, &prog)?;
+        let lm = self.model(model)?;
+        let cfg = &lm.cfg;
+        if tokens.len() > w || tokens.len() != targets.len() {
+            bail!("score: bad window ({} tokens, prog w={w})", tokens.len());
+        }
+        if cache.c != c || cache.l != cfg.n_layers {
+            bail!("score: cache shape mismatch (cache c={} prog c={c})", cache.c);
+        }
+        let mut tok = tokens.to_vec();
+        let mut tgt = targets.to_vec();
+        tok.resize(w, 0);
+        tgt.resize(w, 0);
+
+        let t0 = Instant::now();
+        let (l, h, dh) = (cache.l, cache.h, cache.dh);
+        let tok_b = self.upload_i32(&tok, &[w])?;
+        let tgt_b = self.upload_i32(&tgt, &[w])?;
+        let kc_b = self.upload_f32(&cache.k, &[l, h, c, dh])?;
+        let vc_b = self.upload_f32(&cache.v, &[l, h, c, dh])?;
+        let lens_b = self.upload_i32(&cache.lens_i32(), &[l])?;
+        let arg_refs: Vec<&xla::PjRtBuffer> =
+            vec![&lm.weights, &tok_b, &tgt_b, &kc_b, &vc_b, &lens_b];
+        let t1 = Instant::now();
+        let out = exe.execute_b(&arg_refs)?;
+        let t2 = Instant::now();
+        let lit = out[0][0].to_literal_sync()?;
+        let mut parts = lit.to_tuple()?;
+        let t3 = Instant::now();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.calls += 1;
+            st.upload_s += (t1 - t0).as_secs_f64();
+            st.execute_s += (t2 - t1).as_secs_f64();
+            st.download_s += (t3 - t2).as_secs_f64();
+        }
+        let mass = if scored {
+            Some(parts.pop().context("missing mass output")?.to_vec::<f32>()?)
+        } else {
+            None
+        };
+        let win_v = parts.pop().context("win_v")?.to_vec::<f32>()?;
+        let win_k = parts.pop().context("win_k")?.to_vec::<f32>()?;
+        let logprobs = parts.pop().context("logprobs")?.to_vec::<f32>()?;
+        Ok(ScoreOut { logprobs, win_k, win_v, mass })
+    }
+
+    /// Greedy decode of `k_steps` tokens; the device appends K/V in-graph,
+    /// and the returned state replaces the host cache via
+    /// [`KvCache::replace_from_device`].
+    pub fn generate(
+        &self,
+        model: &str,
+        k_steps: usize,
+        scored: bool,
+        cache: &KvCache,
+        last_token: i32,
+    ) -> Result<GenOut> {
+        self.generate_variant(model, k_steps, scored, false, cache, last_token)
+    }
+
+    /// Decode with explicit program-variant selection (`pallas = true` runs
+    /// the interpret-mode Pallas-kernel artifact — numerics-identical to the
+    /// fast path, used for kernel validation and the §Perf comparison).
+    pub fn generate_variant(
+        &self,
+        model: &str,
+        k_steps: usize,
+        scored: bool,
+        pallas: bool,
+        cache: &KvCache,
+        last_token: i32,
+    ) -> Result<GenOut> {
+        let c = cache.c;
+        let prog = if pallas {
+            self.man.generate_pallas_prog(model, k_steps, c)?.clone()
+        } else {
+            self.man.generate_prog(model, k_steps, c, scored)?.clone()
+        };
+        let exe = self.exe(model, &prog)?;
+        let lm = self.model(model)?;
+        if cache.max_len() + k_steps > c {
+            bail!(
+                "generate: cache would overflow (len {} + k {} > C {})",
+                cache.max_len(),
+                k_steps,
+                c
+            );
+        }
+        let t0 = Instant::now();
+        let (l, h, dh) = (cache.l, cache.h, cache.dh);
+        let kc_b = self.upload_f32(&cache.k, &[l, h, c, dh])?;
+        let vc_b = self.upload_f32(&cache.v, &[l, h, c, dh])?;
+        let lens_b = self.upload_i32(&cache.lens_i32(), &[l])?;
+        let tok_b = self.upload_i32(&[last_token], &[])?;
+        let arg_refs: Vec<&xla::PjRtBuffer> = vec![&lm.weights, &kc_b, &vc_b, &lens_b, &tok_b];
+        let t1 = Instant::now();
+        let out = exe.execute_b(&arg_refs)?;
+        let t2 = Instant::now();
+        let lit = out[0][0].to_literal_sync()?;
+        let mut parts = lit.to_tuple()?;
+        let t3 = Instant::now();
+        {
+            let mut st = self.stats.borrow_mut();
+            st.calls += 1;
+            st.upload_s += (t1 - t0).as_secs_f64();
+            st.execute_s += (t2 - t1).as_secs_f64();
+            st.download_s += (t3 - t2).as_secs_f64();
+        }
+        let mass = if scored {
+            Some(parts.pop().context("mass")?.to_vec::<f32>()?)
+        } else {
+            None
+        };
+        let lens = parts.pop().context("lens")?.to_vec::<i32>()?;
+        let v = parts.pop().context("vcache")?.to_vec::<f32>()?;
+        let k = parts.pop().context("kcache")?.to_vec::<f32>()?;
+        let last_logits = parts.pop().context("last_logits")?.to_vec::<f32>()?;
+        let tokens = parts.pop().context("tokens")?.to_vec::<i32>()?;
+        Ok(GenOut { tokens, last_logits, k, v, lens, mass })
+    }
+}

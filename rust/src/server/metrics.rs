@@ -1,0 +1,108 @@
+//! Serving metrics registry: request counters, TTFT / end-to-end latency
+//! distributions, token throughput. Exported over the wire via `op:stats`.
+
+use std::time::Instant;
+
+use crate::util::json::Json;
+use crate::util::stats::{Meter, Samples};
+
+#[derive(Debug)]
+pub struct Metrics {
+    pub started: Instant,
+    pub submitted: u64,
+    pub completed: u64,
+    pub rejected: u64,
+    pub errored: u64,
+    pub queue_s: Samples,
+    pub ttft_s: Samples,
+    pub total_s: Samples,
+    pub gen_tokens: Meter,
+    pub prompt_tokens: u64,
+}
+
+impl Default for Metrics {
+    fn default() -> Self {
+        Self {
+            started: Instant::now(),
+            submitted: 0,
+            completed: 0,
+            rejected: 0,
+            errored: 0,
+            queue_s: Samples::new(),
+            ttft_s: Samples::new(),
+            total_s: Samples::new(),
+            gen_tokens: Meter::default(),
+            prompt_tokens: 0,
+        }
+    }
+}
+
+impl Metrics {
+    pub fn record_finished(&mut self, f: &crate::server::batcher::Finished) {
+        if f.error.is_some() {
+            self.errored += 1;
+            return;
+        }
+        self.completed += 1;
+        self.queue_s.record(f.queue_s);
+        self.ttft_s.record(f.ttft_s);
+        self.total_s.record(f.total_s);
+        self.gen_tokens.add(f.tokens.len() as u64, f.total_s);
+        self.prompt_tokens += f.prompt_tokens as u64;
+    }
+
+    pub fn to_json(&self) -> Json {
+        let uptime = self.started.elapsed().as_secs_f64();
+        Json::from_pairs(vec![
+            ("uptime_s", uptime.into()),
+            ("submitted", (self.submitted as i64).into()),
+            ("completed", (self.completed as i64).into()),
+            ("rejected", (self.rejected as i64).into()),
+            ("errored", (self.errored as i64).into()),
+            ("prompt_tokens", (self.prompt_tokens as i64).into()),
+            ("gen_tokens", (self.gen_tokens.count as i64).into()),
+            ("gen_tokens_per_s", self.gen_tokens.rate().into()),
+            ("throughput_req_per_s", (self.completed as f64 / uptime.max(1e-9)).into()),
+            ("ttft_ms_p50", (self.ttft_s.p50() * 1e3).into()),
+            ("ttft_ms_p95", (self.ttft_s.p95() * 1e3).into()),
+            ("latency_ms_p50", (self.total_s.p50() * 1e3).into()),
+            ("latency_ms_p95", (self.total_s.p95() * 1e3).into()),
+            ("queue_ms_p95", (self.queue_s.p95() * 1e3).into()),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::server::batcher::Finished;
+
+    #[test]
+    fn records_and_exports() {
+        let mut m = Metrics::default();
+        m.submitted = 2;
+        m.record_finished(&Finished {
+            id: 1,
+            tokens: vec![1, 2, 3, 4],
+            prompt_tokens: 10,
+            queue_s: 0.001,
+            ttft_s: 0.01,
+            total_s: 0.05,
+            error: None,
+        });
+        m.record_finished(&Finished {
+            id: 2,
+            tokens: vec![],
+            prompt_tokens: 5,
+            queue_s: 0.0,
+            ttft_s: 0.0,
+            total_s: 0.01,
+            error: Some("boom".into()),
+        });
+        let j = m.to_json();
+        assert_eq!(j.usize_of("completed"), Some(1));
+        assert_eq!(j.usize_of("errored"), Some(1));
+        assert_eq!(j.usize_of("gen_tokens"), Some(4));
+        assert!(j.f64_of("ttft_ms_p50").unwrap() > 9.0);
+    }
+}

@@ -1,0 +1,205 @@
+//! The serving front-end: JSON-lines TCP listener + single-executor
+//! continuous-batching loop (the PJRT client is single-device; concurrency
+//! is iteration-level interleaving, vLLM-style).
+//!
+//! Threads: N connection readers/writers + 1 executor that owns the
+//! `Runtime` (PJRT handles are not `Send`; the executor constructs it on its
+//! own thread and everything device-related stays there).
+
+pub mod batcher;
+pub mod metrics;
+pub mod protocol;
+pub mod text;
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+use std::sync::mpsc::{self, Receiver, Sender};
+use std::time::Duration;
+
+use anyhow::Result;
+
+use batcher::{Finished, Scheduler, SeqBackend};
+use protocol::{err_response, ok_generate, ok_stats, parse_request, Op};
+
+use crate::cache::make_policy;
+use crate::config::ServeConfig;
+use crate::engine::{Engine, EngineOpts};
+use crate::runtime::Runtime;
+
+/// Real backend: each sequence is an [`Engine`] with its own KV cache and a
+/// fresh policy instance; the `Runtime` (weights + compiled programs) is
+/// shared.
+pub struct EngineBackend<'rt> {
+    pub rt: &'rt Runtime,
+    pub cfg: ServeConfig,
+}
+
+impl<'rt> SeqBackend for EngineBackend<'rt> {
+    type Seq = Engine<'rt>;
+
+    fn new_seq(&mut self) -> Result<Engine<'rt>> {
+        let n_layers = self.rt.model(&self.cfg.model)?.cfg.n_layers;
+        let policy = make_policy(&self.cfg.policy, n_layers)?;
+        Engine::new(
+            self.rt,
+            EngineOpts {
+                model: self.cfg.model.clone(),
+                w: self.cfg.window,
+                c: self.cfg.capacity,
+                memory_budget_bytes: None,
+            },
+            policy,
+        )
+    }
+
+    fn prefill_chunk(&mut self, seq: &mut Engine<'rt>, chunk: &[i32]) -> Result<()> {
+        seq.prefill(chunk)
+    }
+
+    fn decode(&mut self, seq: &mut Engine<'rt>, n: usize) -> Result<Vec<i32>> {
+        seq.generate(n)
+    }
+}
+
+enum Work {
+    Req { line: String, reply: Sender<String> },
+}
+
+/// Run the server until an `op:shutdown` request arrives. Returns the final
+/// metrics snapshot.
+pub fn run_server(cfg: ServeConfig) -> Result<crate::util::json::Json> {
+    let listener = TcpListener::bind(&cfg.listen)?;
+    let addr = listener.local_addr()?;
+    eprintln!("lacache-serve listening on {addr} (model={}, policy={})", cfg.model, cfg.policy);
+    let (tx, rx) = mpsc::channel::<Work>();
+    let accept_tx = tx.clone();
+
+    // Accept loop (its own thread; exits when the process ends).
+    std::thread::spawn(move || {
+        for conn in listener.incoming().flatten() {
+            let tx = accept_tx.clone();
+            std::thread::spawn(move || {
+                let _ = handle_conn(conn, tx);
+            });
+        }
+    });
+
+    executor_loop(cfg, rx)
+}
+
+fn handle_conn(conn: TcpStream, tx: Sender<Work>) -> Result<()> {
+    let peer = conn.peer_addr()?;
+    let reader = BufReader::new(conn.try_clone()?);
+    let mut writer = conn;
+    for line in reader.lines() {
+        let line = match line {
+            Ok(l) if !l.trim().is_empty() => l,
+            Ok(_) => continue,
+            Err(_) => break,
+        };
+        let (rtx, rrx) = mpsc::channel();
+        if tx.send(Work::Req { line, reply: rtx }).is_err() {
+            break; // executor gone
+        }
+        match rrx.recv() {
+            Ok(resp) => {
+                writer.write_all(resp.as_bytes())?;
+                writer.write_all(b"\n")?;
+                writer.flush()?;
+            }
+            Err(_) => break,
+        }
+    }
+    let _ = peer;
+    Ok(())
+}
+
+/// The executor: owns the Runtime, the scheduler and the metrics registry.
+fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::json::Json> {
+    let rt = Runtime::load(&crate::artifacts_dir(), &[cfg.model.as_str()])?;
+    // pre-compile the serving programs so the first request isn't slow
+    let _ = rt.warmup(
+        &cfg.model,
+        &[
+            &format!("score_w{}_c{}", cfg.window, cfg.capacity),
+            &format!("generate_k16_c{}", cfg.capacity),
+            &format!("generate_k1_c{}", cfg.capacity),
+        ],
+    );
+    let backend = EngineBackend { rt: &rt, cfg: cfg.clone() };
+    let mut sched = Scheduler::new(backend, cfg.window, cfg.decode_quantum, 4, cfg.max_queue);
+    let mut metrics = metrics::Metrics::default();
+    let mut waiting: BTreeMap<u64, (i64, Sender<String>)> = BTreeMap::new();
+    let mut shutdown = false;
+
+    while !shutdown || sched.has_work() {
+        // drain incoming work (block briefly when idle)
+        let work = if sched.has_work() {
+            rx.try_recv().ok()
+        } else {
+            rx.recv_timeout(Duration::from_millis(50)).ok()
+        };
+        if let Some(Work::Req { line, reply }) = work {
+            match parse_request(&line) {
+                Ok(req) => match req.op {
+                    Op::Generate { prompt, max_new_tokens } => {
+                        let max_new = max_new_tokens.min(cfg.max_new_tokens);
+                        metrics.submitted += 1;
+                        match sched.submit(prompt, max_new) {
+                            Ok(sid) => {
+                                waiting.insert(sid, (req.id, reply));
+                            }
+                            Err(e) => {
+                                metrics.rejected += 1;
+                                let _ = reply.send(err_response(req.id, &format!("{e:#}")));
+                            }
+                        }
+                    }
+                    Op::Stats => {
+                        let mut j = metrics.to_json();
+                        let (q, a) = sched.depth();
+                        j.set("queue_depth", q.into());
+                        j.set("active_seqs", a.into());
+                        let rs = rt.stats();
+                        j.set("runtime_calls", (rs.calls as i64).into());
+                        j.set("runtime_execute_s", rs.execute_s.into());
+                        let _ = reply.send(ok_stats(req.id, j));
+                    }
+                    Op::Shutdown => {
+                        shutdown = true;
+                        let _ = reply.send(ok_stats(req.id, metrics.to_json()));
+                    }
+                },
+                Err(e) => {
+                    let _ = reply.send(err_response(0, &format!("{e:#}")));
+                }
+            }
+        }
+        for f in sched.step() {
+            deliver(&mut waiting, &mut metrics, f);
+        }
+    }
+    Ok(metrics.to_json())
+}
+
+fn deliver(
+    waiting: &mut BTreeMap<u64, (i64, Sender<String>)>,
+    metrics: &mut metrics::Metrics,
+    f: Finished,
+) {
+    metrics.record_finished(&f);
+    if let Some((req_id, reply)) = waiting.remove(&f.id) {
+        let resp = match &f.error {
+            Some(e) => err_response(req_id, e),
+            None => ok_generate(
+                req_id,
+                &f.tokens,
+                f.prompt_tokens,
+                f.ttft_s * 1e3,
+                f.total_s * 1e3,
+            ),
+        };
+        let _ = reply.send(resp);
+    }
+}

@@ -1,0 +1,133 @@
+//! JSON-lines wire protocol (one JSON object per line, request/response).
+//!
+//! Requests:
+//!   {"op":"generate","id":1,"prompt":"<mark> w4 w5 <sep> ...","max_new_tokens":8}
+//!   {"op":"generate","id":2,"prompt_tokens":[0,5,20,...],"max_new_tokens":4}
+//!   {"op":"stats","id":3}
+//!   {"op":"shutdown","id":4}
+//!
+//! Responses:
+//!   {"id":1,"ok":true,"text":"w84 w85 ...","tokens":[...],"ttft_ms":..,
+//!    "total_ms":..,"prompt_tokens":N,"gen_tokens":M}
+//!   {"id":3,"ok":true,"stats":{...}}
+//!   {"id":2,"ok":false,"error":"..."}
+
+use anyhow::{bail, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Op {
+    Generate { prompt: Vec<i32>, max_new_tokens: usize },
+    Stats,
+    Shutdown,
+}
+
+#[derive(Clone, Debug)]
+pub struct Request {
+    pub id: i64,
+    pub op: Op,
+}
+
+pub fn parse_request(line: &str) -> Result<Request> {
+    let j = Json::parse(line).map_err(|e| anyhow::anyhow!("bad json: {e}"))?;
+    let id = j.f64_of("id").unwrap_or(0.0) as i64;
+    let op = match j.str_of("op") {
+        Some("generate") => {
+            let prompt = if let Some(txt) = j.str_of("prompt") {
+                super::text::tokenize(txt).map_err(|e| anyhow::anyhow!(e))?
+            } else if let Some(arr) = j.get("prompt_tokens").and_then(|a| a.as_arr()) {
+                arr.iter().map(|x| x.as_i64().unwrap_or(0) as i32).collect()
+            } else {
+                bail!("generate needs `prompt` or `prompt_tokens`");
+            };
+            if prompt.is_empty() {
+                bail!("empty prompt");
+            }
+            Op::Generate { prompt, max_new_tokens: j.usize_of("max_new_tokens").unwrap_or(16) }
+        }
+        Some("stats") => Op::Stats,
+        Some("shutdown") => Op::Shutdown,
+        other => bail!("unknown op {other:?}"),
+    };
+    Ok(Request { id, op })
+}
+
+pub fn ok_generate(
+    id: i64,
+    tokens: &[i32],
+    prompt_tokens: usize,
+    ttft_ms: f64,
+    total_ms: f64,
+) -> String {
+    Json::from_pairs(vec![
+        ("id", id.into()),
+        ("ok", true.into()),
+        ("text", super::text::detokenize(tokens).into()),
+        ("tokens", tokens.iter().map(|&t| t as i64).collect::<Vec<i64>>().into()),
+        ("prompt_tokens", prompt_tokens.into()),
+        ("gen_tokens", tokens.len().into()),
+        ("ttft_ms", ttft_ms.into()),
+        ("total_ms", total_ms.into()),
+    ])
+    .to_string()
+}
+
+pub fn ok_stats(id: i64, stats: Json) -> String {
+    Json::from_pairs(vec![("id", id.into()), ("ok", true.into()), ("stats", stats)]).to_string()
+}
+
+pub fn err_response(id: i64, msg: &str) -> String {
+    Json::from_pairs(vec![("id", id.into()), ("ok", false.into()), ("error", msg.into())])
+        .to_string()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_generate_text() {
+        let r = parse_request(r#"{"op":"generate","id":7,"prompt":"<bos> w1 w2","max_new_tokens":4}"#)
+            .unwrap();
+        assert_eq!(r.id, 7);
+        match r.op {
+            Op::Generate { prompt, max_new_tokens } => {
+                assert_eq!(prompt, vec![0, 17, 18]);
+                assert_eq!(max_new_tokens, 4);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_generate_tokens() {
+        let r =
+            parse_request(r#"{"op":"generate","id":1,"prompt_tokens":[0,5,20,21,2]}"#).unwrap();
+        match r.op {
+            Op::Generate { prompt, max_new_tokens } => {
+                assert_eq!(prompt.len(), 5);
+                assert_eq!(max_new_tokens, 16);
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_errors() {
+        assert!(parse_request("{}").is_err());
+        assert!(parse_request(r#"{"op":"generate","id":1}"#).is_err());
+        assert!(parse_request(r#"{"op":"generate","id":1,"prompt":"zzz"}"#).is_err());
+        assert!(parse_request("not json").is_err());
+    }
+
+    #[test]
+    fn responses_are_valid_json() {
+        let s = ok_generate(3, &[20, 21], 10, 1.5, 8.25);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(true));
+        assert_eq!(j.usize_of("gen_tokens"), Some(2));
+        let e = err_response(4, "boom \"quoted\"");
+        assert_eq!(Json::parse(&e).unwrap().str_of("error"), Some("boom \"quoted\""));
+    }
+}

@@ -1,0 +1,77 @@
+//! Token <-> text codec for the synthetic vocabulary. Words render as
+//! `w<N>`; special tokens by name. The serving protocol speaks this text
+//! form so clients stay human-readable.
+
+use crate::data::corpus::{ANSWER, BOS, EOS, MARK, QUERY, SEP, VOCAB, WORD_BASE};
+
+pub fn detokenize(tokens: &[i32]) -> String {
+    tokens.iter().map(|&t| token_str(t)).collect::<Vec<_>>().join(" ")
+}
+
+pub fn token_str(t: i32) -> String {
+    match t {
+        x if x == BOS => "<bos>".into(),
+        x if x == EOS => "<eos>".into(),
+        x if x == SEP => "<sep>".into(),
+        x if x == QUERY => "<query>".into(),
+        x if x == ANSWER => "<answer>".into(),
+        x if x == MARK => "<mark>".into(),
+        x if (WORD_BASE..VOCAB).contains(&x) => format!("w{}", x - WORD_BASE),
+        x => format!("<unk:{x}>"),
+    }
+}
+
+pub fn tokenize(text: &str) -> Result<Vec<i32>, String> {
+    text.split_whitespace()
+        .map(|w| match w {
+            "<bos>" => Ok(BOS),
+            "<eos>" => Ok(EOS),
+            "<sep>" => Ok(SEP),
+            "<query>" => Ok(QUERY),
+            "<answer>" => Ok(ANSWER),
+            "<mark>" => Ok(MARK),
+            _ => {
+                let n: i32 = w
+                    .strip_prefix('w')
+                    .ok_or_else(|| format!("bad token `{w}`"))?
+                    .parse()
+                    .map_err(|_| format!("bad token `{w}`"))?;
+                if (0..VOCAB - WORD_BASE).contains(&n) {
+                    Ok(WORD_BASE + n)
+                } else {
+                    Err(format!("word id out of range `{w}`"))
+                }
+            }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let toks = vec![BOS, MARK, 20, 21, SEP, 100, 101, 102, 103, QUERY, 20, 21, ANSWER];
+        let text = detokenize(&toks);
+        assert_eq!(tokenize(&text).unwrap(), toks);
+        assert!(text.starts_with("<bos> <mark> w4 w5 <sep>"));
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(tokenize("hello").is_err());
+        assert!(tokenize("w999").is_err());
+        assert!(tokenize("w-1").is_err());
+    }
+
+    #[test]
+    fn all_tokens_render() {
+        for t in 0..VOCAB {
+            let s = token_str(t);
+            if t < 6 || t >= WORD_BASE {
+                assert!(!s.contains("unk"), "{t} -> {s}");
+            }
+        }
+    }
+}

@@ -1,0 +1,147 @@
+//! Tiny CLI argument parser (clap substitute): `--key value`, `--flag`,
+//! positional args, with typed getters and auto-generated usage text.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+    spec: Vec<(String, String, Option<String>)>, // (name, help, default)
+}
+
+impl Args {
+    /// Parse from `std::env::args` (skipping argv[0]).
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1).collect())
+    }
+
+    pub fn parse(argv: Vec<String>) -> Self {
+        let mut a = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if let Some((k, v)) = name.split_once('=') {
+                    a.opts.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    a.opts.insert(name.to_string(), v);
+                } else {
+                    a.flags.push(name.to_string());
+                }
+            } else {
+                a.positional.push(arg);
+            }
+        }
+        a
+    }
+
+    /// Register an option for usage text (returns self for chaining).
+    pub fn describe(mut self, name: &str, help: &str, default: Option<&str>) -> Self {
+        self.spec.push((name.to_string(), help.to_string(), default.map(|s| s.to_string())));
+        self
+    }
+
+    pub fn usage(&self, prog: &str) -> String {
+        let mut s = format!("usage: {prog} [options]\n");
+        for (name, help, default) in &self.spec {
+            let d = default.as_ref().map(|d| format!(" (default: {d})")).unwrap_or_default();
+            s.push_str(&format!("  --{name:<24} {help}{d}\n"));
+        }
+        s
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name) || self.opts.get(name).map(|v| v == "true").unwrap_or(false)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.opts.get(name).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> usize {
+        self.get(name).map(|v| v.parse().expect("bad usize arg")).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> u64 {
+        self.get(name).map(|v| v.parse().expect("bad u64 arg")).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> f64 {
+        self.get(name).map(|v| v.parse().expect("bad f64 arg")).unwrap_or(default)
+    }
+
+    /// Comma-separated list option.
+    pub fn list_or(&self, name: &str, default: &[&str]) -> Vec<String> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(name) {
+            Some(v) => v.split(',').map(|s| s.trim().parse().expect("bad usize list")).collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mk(args: &[&str]) -> Args {
+        Args::parse(args.iter().map(|s| s.to_string()).collect())
+    }
+
+    #[test]
+    fn options_and_flags() {
+        // note: a bare `--flag` must be followed by another `--option` or
+        // end-of-args; `--flag value` is parsed as an option (documented).
+        let a = mk(&["--model", "base", "--budget=128", "pos1", "--verbose"]);
+        assert_eq!(a.get("model"), Some("base"));
+        assert_eq!(a.usize_or("budget", 0), 128);
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+        assert_eq!(a.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = mk(&[]);
+        assert_eq!(a.str_or("model", "mini"), "mini");
+        assert_eq!(a.f64_or("x", 1.5), 1.5);
+        assert_eq!(a.usize_list_or("budgets", &[64, 128]), vec![64, 128]);
+    }
+
+    #[test]
+    fn lists() {
+        let a = mk(&["--budgets", "32,64,128"]);
+        assert_eq!(a.usize_list_or("budgets", &[]), vec![32, 64, 128]);
+        let b = mk(&["--models", "base, mini"]);
+        assert_eq!(b.list_or("models", &[]), vec!["base", "mini"]);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = mk(&["--fast", "--model", "base"]);
+        assert!(a.flag("fast"));
+        assert_eq!(a.get("model"), Some("base"));
+    }
+
+    #[test]
+    fn usage_text() {
+        let a = mk(&[]).describe("model", "model name", Some("base"));
+        assert!(a.usage("prog").contains("--model"));
+    }
+}

@@ -1,0 +1,99 @@
+//! Mini benchmark harness (criterion substitute): warmup + timed iterations,
+//! mean/p50/p95 reporting, ns..s auto-units. Used by `cargo bench` targets
+//! (declared with `harness = false`).
+
+use std::time::Instant;
+
+use super::stats::Samples;
+
+pub struct Bench {
+    pub warmup_iters: usize,
+    pub iters: usize,
+}
+
+impl Default for Bench {
+    fn default() -> Self {
+        Self { warmup_iters: 3, iters: 10 }
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.3}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+impl Bench {
+    pub fn new(warmup_iters: usize, iters: usize) -> Self {
+        Self { warmup_iters, iters }
+    }
+
+    /// Time `f` and print a report line; returns mean seconds per iteration.
+    pub fn run<F: FnMut()>(&self, name: &str, mut f: F) -> f64 {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Samples::new();
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            f();
+            samples.record(t0.elapsed().as_secs_f64());
+        }
+        println!(
+            "bench {name:<44} mean {:>10} p50 {:>10} p95 {:>10} ({} iters)",
+            fmt_time(samples.mean()),
+            fmt_time(samples.p50()),
+            fmt_time(samples.percentile(95.0)),
+            self.iters
+        );
+        samples.mean()
+    }
+
+    /// Time `f` which processes `units` items per call; prints throughput.
+    pub fn run_throughput<F: FnMut()>(&self, name: &str, units: u64, unit_name: &str, mut f: F) -> f64 {
+        let mean_s = self.run(name, &mut f);
+        let rate = units as f64 / mean_s;
+        println!("      {name:<44} {rate:>12.1} {unit_name}/s");
+        rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_reports() {
+        let mut count = 0usize;
+        let b = Bench::new(1, 5);
+        let mean = b.run("noop", || {
+            count += 1;
+        });
+        assert_eq!(count, 6);
+        assert!(mean >= 0.0);
+    }
+
+    #[test]
+    fn throughput_positive() {
+        let b = Bench::new(0, 3);
+        let rate = b.run_throughput("sum", 1000, "elems", || {
+            let s: u64 = (0..1000u64).sum();
+            std::hint::black_box(s);
+        });
+        assert!(rate > 0.0);
+    }
+
+    #[test]
+    fn time_formatting() {
+        assert!(fmt_time(2.5e-9).ends_with("ns"));
+        assert!(fmt_time(2.5e-6).ends_with("µs"));
+        assert!(fmt_time(2.5e-3).ends_with("ms"));
+        assert!(fmt_time(2.5).ends_with('s'));
+    }
+}

@@ -1,0 +1,9 @@
+//! Support substrates hand-rolled for the offline dependency universe
+//! (no serde/clap/rand/criterion/proptest — see DESIGN.md §3/§6).
+
+pub mod args;
+pub mod bench;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

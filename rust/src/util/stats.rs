@@ -1,0 +1,219 @@
+//! Latency/throughput statistics helpers (criterion substitute foundation).
+
+/// Online mean/min/max/percentile tracker over recorded samples.
+#[derive(Clone, Debug, Default)]
+pub struct Samples {
+    vals: Vec<f64>,
+}
+
+impl Samples {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn record(&mut self, v: f64) {
+        self.vals.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.vals.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.vals.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        self.vals.iter().sum::<f64>() / self.vals.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.vals.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.vals.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    pub fn std(&self) -> f64 {
+        if self.vals.len() < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.vals.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (self.vals.len() - 1) as f64)
+            .sqrt()
+    }
+
+    /// Percentile in [0, 100] by nearest-rank on a sorted copy.
+    pub fn percentile(&self, p: f64) -> f64 {
+        if self.vals.is_empty() {
+            return 0.0;
+        }
+        let mut sorted = self.vals.clone();
+        sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((p / 100.0) * (sorted.len() as f64 - 1.0)).round() as usize;
+        sorted[rank.min(sorted.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+
+    pub fn summary(&self, unit: &str) -> String {
+        format!(
+            "n={} mean={:.3}{u} p50={:.3}{u} p95={:.3}{u} p99={:.3}{u} max={:.3}{u}",
+            self.len(),
+            self.mean(),
+            self.p50(),
+            self.p95(),
+            self.p99(),
+            self.max(),
+            u = unit
+        )
+    }
+}
+
+/// Fixed-bucket histogram (log-ish buckets) for latency tracking in the
+/// server metrics registry without unbounded memory.
+#[derive(Clone, Debug)]
+pub struct Histogram {
+    bounds: Vec<f64>,
+    counts: Vec<u64>,
+    sum: f64,
+    n: u64,
+}
+
+impl Histogram {
+    /// Buckets: geometric from `lo` to `hi` (in whatever unit the caller uses).
+    pub fn new(lo: f64, hi: f64, n_buckets: usize) -> Self {
+        assert!(lo > 0.0 && hi > lo && n_buckets >= 2);
+        let ratio = (hi / lo).powf(1.0 / (n_buckets as f64 - 1.0));
+        let bounds: Vec<f64> = (0..n_buckets).map(|i| lo * ratio.powi(i as i32)).collect();
+        let counts = vec![0; n_buckets + 1];
+        Self { bounds, counts, sum: 0.0, n: 0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        let idx = self.bounds.partition_point(|b| *b < v);
+        self.counts[idx] += 1;
+        self.sum += v;
+        self.n += 1;
+    }
+
+    pub fn count(&self) -> u64 {
+        self.n
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.sum / self.n as f64
+        }
+    }
+
+    /// Approximate quantile from bucket boundaries.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.n == 0 {
+            return 0.0;
+        }
+        let target = (q * self.n as f64).ceil() as u64;
+        let mut acc = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return if i < self.bounds.len() { self.bounds[i] } else { *self.bounds.last().unwrap() };
+            }
+        }
+        *self.bounds.last().unwrap()
+    }
+}
+
+/// Simple throughput meter.
+#[derive(Clone, Debug, Default)]
+pub struct Meter {
+    pub count: u64,
+    pub elapsed_s: f64,
+}
+
+impl Meter {
+    pub fn add(&mut self, n: u64, dt_s: f64) {
+        self.count += n;
+        self.elapsed_s += dt_s;
+    }
+
+    pub fn rate(&self) -> f64 {
+        if self.elapsed_s <= 0.0 {
+            0.0
+        } else {
+            self.count as f64 / self.elapsed_s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn samples_basic() {
+        let mut s = Samples::new();
+        for i in 1..=100 {
+            s.record(i as f64);
+        }
+        assert_eq!(s.len(), 100);
+        assert!((s.mean() - 50.5).abs() < 1e-9);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 100.0);
+        assert!((s.p50() - 50.0).abs() <= 1.0);
+        assert!((s.p95() - 95.0).abs() <= 1.0);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let mut s = Samples::new();
+        s.record(5.0);
+        assert_eq!(s.percentile(0.0), 5.0);
+        assert_eq!(s.percentile(100.0), 5.0);
+        assert_eq!(Samples::new().p99(), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantiles() {
+        let mut h = Histogram::new(0.001, 10.0, 40);
+        for i in 1..=1000 {
+            h.record(i as f64 / 1000.0);
+        }
+        assert_eq!(h.count(), 1000);
+        let q50 = h.quantile(0.5);
+        assert!(q50 > 0.3 && q50 < 0.8, "q50={q50}");
+        assert!((h.mean() - 0.5005).abs() < 1e-6);
+    }
+
+    #[test]
+    fn histogram_overflow_bucket() {
+        let mut h = Histogram::new(1.0, 10.0, 5);
+        h.record(100.0); // beyond hi
+        h.record(0.1); // below lo
+        assert_eq!(h.count(), 2);
+    }
+
+    #[test]
+    fn meter() {
+        let mut m = Meter::default();
+        m.add(100, 2.0);
+        m.add(100, 2.0);
+        assert!((m.rate() - 50.0).abs() < 1e-9);
+    }
+}
