@@ -1,7 +1,11 @@
 //! Server-substrate benchmarks: scheduler round overhead (with an instant
-//! backend, isolating pure L3 cost), wire-protocol encode/decode, and JSON
-//! parse throughput for the manifest-sized payloads.
+//! backend, isolating pure L3 cost), wire-protocol encode/decode, JSON parse
+//! throughput for the manifest-sized payloads, and the paged-KV arena
+//! memory-pressure scenario (concurrency under a fixed byte budget vs. the
+//! old dense-allocation baseline).
 
+use lacache::cache::{make_policy, CachePolicy};
+use lacache::runtime::{admission_ok, seq_footprint_bytes, KvArena, KvCache};
 use lacache::server::batcher::{Scheduler, SeqBackend};
 use lacache::server::protocol::{ok_generate, parse_request};
 use lacache::util::bench::Bench;
@@ -58,5 +62,115 @@ fn main() -> anyhow::Result<()> {
             std::hint::black_box(Json::parse(&text).unwrap());
         });
     }
+
+    memory_pressure_scenario()?;
+    Ok(())
+}
+
+/// Device-free sequence backend over a real paged-KV arena: prefill appends
+/// window rows, decode appends one row per token, and the ladder policy
+/// compacts between rounds — the full storage path minus PJRT.
+struct ArenaBackend {
+    arena: KvArena,
+    policy: Box<dyn CachePolicy>,
+    l: usize,
+    h: usize,
+    c: usize,
+    dh: usize,
+    est_seq_bytes: usize,
+    budget_bytes: usize,
+}
+
+struct ArenaSeq {
+    kv: KvCache,
+    next_pos: u64,
+}
+
+impl ArenaBackend {
+    fn append_all_layers(&self, s: &mut ArenaSeq, n: usize) -> anyhow::Result<()> {
+        let row = vec![0.125f32; self.h * n * self.dh];
+        for layer in 0..self.l {
+            s.kv.append_layer(layer, &row, &row, n, n, s.next_pos)?;
+        }
+        s.next_pos += n as u64;
+        self.policy.evict(&mut s.kv)?;
+        Ok(())
+    }
+}
+
+impl SeqBackend for ArenaBackend {
+    type Seq = ArenaSeq;
+
+    fn new_seq(&mut self) -> anyhow::Result<ArenaSeq> {
+        let kv = KvCache::with_arena(self.arena.clone(), self.l, self.h, self.c, self.dh);
+        Ok(ArenaSeq { kv, next_pos: 0 })
+    }
+
+    fn prefill_chunk(&mut self, s: &mut ArenaSeq, chunk: &[i32]) -> anyhow::Result<()> {
+        self.append_all_layers(s, chunk.len())
+    }
+
+    fn decode(&mut self, s: &mut ArenaSeq, n: usize) -> anyhow::Result<Vec<i32>> {
+        for _ in 0..n {
+            self.append_all_layers(s, 1)?;
+        }
+        Ok(vec![7; n])
+    }
+
+    fn can_admit(&self, active: usize) -> bool {
+        // the same gate the serving path uses
+        admission_ok(&self.arena.stats(), active, self.est_seq_bytes, self.budget_bytes)
+    }
+}
+
+/// Memory-pressure scenario: under one fixed simulated byte budget, how many
+/// ladder-policy sequences run concurrently with arena paging vs. the old
+/// eagerly-allocated dense `2·L·H·C·Dh` cache per sequence?
+fn memory_pressure_scenario() -> anyhow::Result<()> {
+    let (l, h, c, dh) = (8usize, 4usize, 2048usize, 24usize);
+    let (window, quantum) = (128usize, 16usize);
+    let dense_seq_bytes = 2 * l * h * c * dh * 4;
+    let budget_bytes = 4 * dense_seq_bytes; // dense fits exactly 4 sequences
+    let dense_concurrent = budget_bytes / dense_seq_bytes;
+
+    let arena = KvArena::new();
+    arena.set_budget(Some(budget_bytes));
+    let policy = make_policy("lacache:budget=128,span=2", l)?;
+    let slots = policy.budget().saturating_add(window).min(c);
+    let est_seq_bytes = seq_footprint_bytes(l, h * dh, slots);
+    let backend =
+        ArenaBackend { arena: arena.clone(), policy, l, h, c, dh, est_seq_bytes, budget_bytes };
+
+    let n_requests = 64;
+    let mut s = Scheduler::new(backend, window, quantum, usize::MAX, n_requests);
+    for _ in 0..n_requests {
+        s.submit(vec![1; 384], 32).unwrap();
+    }
+    let mut peak_active = 0usize;
+    let mut finished = 0usize;
+    let mut rounds = 0usize;
+    while s.has_work() && rounds < 100_000 {
+        finished += s.step().len();
+        peak_active = peak_active.max(s.depth().1);
+        rounds += 1;
+    }
+    let st = arena.stats();
+    println!(
+        "\nmemory-pressure: byte budget {:.1} MiB | dense baseline {} concurrent seqs \
+         | paged arena peak {} concurrent ({}x) | arena high-water {:.1} MiB | {} finished",
+        budget_bytes as f64 / (1 << 20) as f64,
+        dense_concurrent,
+        peak_active,
+        peak_active / dense_concurrent.max(1),
+        st.high_water as f64 / (1 << 20) as f64,
+        finished,
+    );
+    assert_eq!(finished, n_requests, "scenario did not drain");
+    assert!(st.high_water <= budget_bytes, "arena exceeded its budget");
+    assert!(
+        peak_active >= 4 * dense_concurrent,
+        "paged arena should fit >=4x the dense baseline's concurrency \
+         (got {peak_active} vs dense {dense_concurrent})"
+    );
     Ok(())
 }

@@ -32,6 +32,10 @@ impl CachePolicy for StreamingPolicy {
         self.budget
     }
 
+    fn n_sink(&self) -> usize {
+        self.n_sink
+    }
+
     fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
         fallback_recency(cache.lens[layer], self.budget, self.n_sink)
     }
@@ -85,6 +89,10 @@ impl CachePolicy for H2oPolicy {
         MassUse::Accumulated
     }
 
+    fn n_sink(&self) -> usize {
+        self.n_sink
+    }
+
     fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
         let n = cache.lens[layer];
         let sink = self.n_sink.min(n).min(self.budget);
@@ -92,11 +100,7 @@ impl CachePolicy for H2oPolicy {
         let heavy_budget = self.budget.saturating_sub(sink + recent);
         let middle: Vec<usize> = (sink..n - recent).collect();
         let mut keep: Vec<usize> = (0..sink).collect();
-        keep.extend(top_k_sorted(
-            &cache.mass[layer].iter().map(|&m| m).collect::<Vec<f64>>(),
-            &middle,
-            heavy_budget,
-        ));
+        keep.extend(top_k_sorted(&cache.mass[layer], &middle, heavy_budget));
         keep.extend(n - recent..n);
         keep
     }
@@ -127,6 +131,10 @@ impl CachePolicy for TovaPolicy {
 
     fn mass_use(&self) -> MassUse {
         MassUse::LastWindow
+    }
+
+    fn n_sink(&self) -> usize {
+        self.n_sink
     }
 
     fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
@@ -167,6 +175,10 @@ impl CachePolicy for SnapKvPolicy {
 
     fn mass_use(&self) -> MassUse {
         MassUse::LastWindow
+    }
+
+    fn n_sink(&self) -> usize {
+        self.n_sink
     }
 
     fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
@@ -232,6 +244,10 @@ impl CachePolicy for PyramidPolicy {
 
     fn mass_use(&self) -> MassUse {
         MassUse::Accumulated
+    }
+
+    fn n_sink(&self) -> usize {
+        self.n_sink
     }
 
     fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {

@@ -91,6 +91,10 @@ impl CachePolicy for LadderPolicy {
         self.budget
     }
 
+    fn n_sink(&self) -> usize {
+        self.n_sink
+    }
+
     fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
         let n = cache.lens[layer];
         let n_layers = cache.l;
@@ -139,6 +143,10 @@ impl CachePolicy for RandomPatternPolicy {
         self.budget
     }
 
+    fn n_sink(&self) -> usize {
+        self.n_sink
+    }
+
     fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
         let n = cache.lens[layer];
         let sink = self.n_sink.min(n).min(self.budget);
@@ -172,7 +180,7 @@ mod tests {
     use crate::util::rng::Xoshiro256;
 
     fn cache_with(l: usize, n: usize) -> KvCache {
-        let mut kv = KvCache::new(l, 1, 256, 2);
+        let mut kv = KvCache::with_arena(crate::runtime::KvArena::new(), l, 1, 256, 2);
         for layer in 0..l {
             let wk = vec![0.0f32; n * 2];
             kv.append_layer(layer, &wk, &wk, n, n, 0).unwrap();
@@ -278,6 +286,15 @@ mod tests {
             p.evict(&mut kv).unwrap();
             kv.check_invariants().unwrap();
             assert!(kv.max_len() <= 48, "over budget after evict");
+            // paged-arena invariant under the compaction workload: resident
+            // bytes track page-granular occupancy, never compiled capacity
+            let expect: usize = kv
+                .lens
+                .iter()
+                .map(|&n| n.div_ceil(crate::runtime::PAGE_SLOTS) * crate::runtime::Page::bytes(2))
+                .sum();
+            assert_eq!(kv.resident_bytes(), expect);
+            assert!(kv.resident_bytes() < 8 * 256 * 2 * 2 * 4, "resident at capacity scale");
         }
         // oldest retained (non-sink) middle content is sparse, recent dense:
         let pos = &kv.positions[4];

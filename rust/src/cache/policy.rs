@@ -32,6 +32,13 @@ pub trait CachePolicy {
         self.mass_use() != MassUse::None
     }
 
+    /// Attention sinks this policy pins at the front (consumed by the
+    /// eviction fallback so degenerate configs honor the policy's own sink
+    /// count instead of a hardcoded default).
+    fn n_sink(&self) -> usize {
+        0
+    }
+
     /// Slots (sorted, strictly increasing) to keep for `layer`. Called when
     /// `cache.lens[layer] > budget()`. Must return fewer slots than
     /// currently resident (progress guarantee).
@@ -51,7 +58,7 @@ pub trait CachePolicy {
                 if keep.len() >= n || guard >= 8 {
                     // progress guarantee: degenerate configs fall back to
                     // a recency truncation at budget
-                    keep = fallback_recency(n, self.budget(), 4);
+                    keep = fallback_recency(n, self.budget(), self.n_sink());
                 }
                 evicted += n - keep.len();
                 cache.retain_slots(layer, &keep)?;
@@ -83,6 +90,57 @@ pub fn top_k_sorted(scores: &[f64], candidates: &[usize], k: usize) -> Vec<usize
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::KvArena;
+
+    /// Degenerate policy that never makes progress on its own — forces the
+    /// `evict` fallback path.
+    struct AllKeep {
+        budget: usize,
+        sinks: usize,
+    }
+
+    impl CachePolicy for AllKeep {
+        fn name(&self) -> String {
+            "allkeep".into()
+        }
+
+        fn budget(&self) -> usize {
+            self.budget
+        }
+
+        fn n_sink(&self) -> usize {
+            self.sinks
+        }
+
+        fn keep_slots(&self, layer: usize, cache: &KvCache) -> Vec<usize> {
+            (0..cache.lens[layer]).collect()
+        }
+    }
+
+    fn cache_with(n: usize) -> KvCache {
+        let mut kv = KvCache::with_arena(KvArena::new(), 1, 1, 64, 2);
+        let w = vec![0.0f32; n * 2];
+        kv.append_layer(0, &w, &w, n, n, 0).unwrap();
+        kv
+    }
+
+    #[test]
+    fn evict_fallback_honors_policy_sink_count() {
+        // regression: the fallback used a hardcoded 4 sinks, pinning slots
+        // the policy never asked to keep (e.g. n_sink = 0 ladder configs)
+        let mut kv = cache_with(20);
+        let no_sinks = AllKeep { budget: 8, sinks: 0 };
+        no_sinks.evict(&mut kv).unwrap();
+        assert_eq!(kv.lens[0], 8);
+        assert_eq!(kv.positions[0], (12..20).collect::<Vec<u64>>());
+
+        let mut kv = cache_with(20);
+        let two_sinks = AllKeep { budget: 8, sinks: 2 };
+        two_sinks.evict(&mut kv).unwrap();
+        assert_eq!(kv.lens[0], 8);
+        assert_eq!(&kv.positions[0][..2], &[0, 1]);
+        assert_eq!(&kv.positions[0][2..], &(14..20).collect::<Vec<u64>>()[..]);
+    }
 
     #[test]
     fn fallback_recency_shapes() {

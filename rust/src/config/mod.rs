@@ -25,6 +25,12 @@ pub struct ServeConfig {
     pub capacity: usize,
     /// Scheduler quantum: decode steps per scheduling round per sequence.
     pub decode_quantum: usize,
+    /// Max concurrently active sequences in the scheduler.
+    pub max_active: usize,
+    /// Shared paged-KV arena byte budget (0 = unlimited). Drives admission
+    /// control: new sequences wait while projected arena occupancy would
+    /// exceed this, and page allocations beyond it fail.
+    pub kv_pool_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -38,6 +44,8 @@ impl Default for ServeConfig {
             window: 128,
             capacity: 256,
             decode_quantum: 16,
+            max_active: 4,
+            kv_pool_bytes: 0,
         }
     }
 }
@@ -54,6 +62,8 @@ impl ServeConfig {
             window: j.usize_of("window").unwrap_or(d.window),
             capacity: j.usize_of("capacity").unwrap_or(d.capacity),
             decode_quantum: j.usize_of("decode_quantum").unwrap_or(d.decode_quantum),
+            max_active: j.usize_of("max_active").unwrap_or(d.max_active),
+            kv_pool_bytes: j.usize_of("kv_pool_bytes").unwrap_or(d.kv_pool_bytes),
         })
     }
 
@@ -81,6 +91,8 @@ impl ServeConfig {
         cfg.window = args.usize_or("window", cfg.window);
         cfg.capacity = args.usize_or("capacity", cfg.capacity);
         cfg.decode_quantum = args.usize_or("decode-quantum", cfg.decode_quantum);
+        cfg.max_active = args.usize_or("max-active", cfg.max_active);
+        cfg.kv_pool_bytes = args.usize_or("kv-pool-bytes", cfg.kv_pool_bytes);
         Ok(cfg)
     }
 
@@ -94,6 +106,8 @@ impl ServeConfig {
             ("window", self.window.into()),
             ("capacity", self.capacity.into()),
             ("decode_quantum", self.decode_quantum.into()),
+            ("max_active", self.max_active.into()),
+            ("kv_pool_bytes", self.kv_pool_bytes.into()),
         ])
     }
 }
@@ -150,21 +164,45 @@ mod tests {
         let back = ServeConfig::from_json(&j).unwrap();
         assert_eq!(back.model, d.model);
         assert_eq!(back.capacity, d.capacity);
+        assert_eq!(back.max_active, 4);
+        assert_eq!(back.kv_pool_bytes, 0);
     }
 
     #[test]
     fn serve_config_cli_overrides() {
         let args = Args::parse(
-            ["--model", "mini", "--policy", "streaming:budget=64", "--capacity", "512"]
-                .iter()
-                .map(|s| s.to_string())
-                .collect(),
+            [
+                "--model",
+                "mini",
+                "--policy",
+                "streaming:budget=64",
+                "--capacity",
+                "512",
+                "--max-active",
+                "9",
+                "--kv-pool-bytes",
+                "1048576",
+            ]
+            .iter()
+            .map(|s| s.to_string())
+            .collect(),
         );
         let cfg = ServeConfig::from_args(&args).unwrap();
         assert_eq!(cfg.model, "mini");
         assert_eq!(cfg.policy, "streaming:budget=64");
         assert_eq!(cfg.capacity, 512);
         assert_eq!(cfg.window, 128); // default preserved
+        assert_eq!(cfg.max_active, 9);
+        assert_eq!(cfg.kv_pool_bytes, 1 << 20);
+    }
+
+    #[test]
+    fn serve_config_scheduler_fields_roundtrip_json() {
+        // regression: max_active used to be hardcoded in the executor loop
+        let cfg = ServeConfig { max_active: 7, kv_pool_bytes: 4096, ..Default::default() };
+        let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.max_active, 7);
+        assert_eq!(back.kv_pool_bytes, 4096);
     }
 
     #[test]

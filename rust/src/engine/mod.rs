@@ -62,10 +62,12 @@ impl<'rt> Engine<'rt> {
     }
 
     pub fn reset(&mut self) {
-        let cfg = self.cache.clone();
-        self.cache = KvCache::new(cfg.l, cfg.h, cfg.c, cfg.dh);
+        let (l, h, c, dh) = (self.cache.l, self.cache.h, self.cache.c, self.cache.dh);
+        self.cache = KvCache::new(l, h, c, dh);
         self.n_tokens = 0;
         self.last_token = crate::data::corpus::BOS;
+        self.n_evicted = 0;
+        self.n_compactions = 0;
     }
 
     fn scored(&self) -> bool {
@@ -192,7 +194,7 @@ impl<'rt> Engine<'rt> {
         let mut remaining = n;
         while remaining > 0 {
             // scored programs are only compiled at K=16; over-generate and
-            // truncate (the extra KV appends are evicted like any tokens)
+            // roll the surplus back after the call
             let k = if remaining >= 16 || scored { 16 } else { 1 };
             self.check_memory(k)?;
             if self.policy.mass_use() == MassUse::LastWindow {
@@ -203,20 +205,30 @@ impl<'rt> Engine<'rt> {
                 }
             }
             let go = self.rt.generate(&self.opts.model, k, scored, &self.cache, self.last_token)?;
-            self.cache.replace_from_device(go.k, go.v, &go.lens, k);
+            self.cache.replace_from_device(&go.k, &go.v, &go.lens, k, self.n_tokens)?;
             if let Some(mass) = &go.mass {
                 let c = self.cache.c;
                 for layer in 0..self.cache.l {
                     self.cache.add_mass(layer, &mass[layer * c..(layer + 1) * c]);
                 }
             }
-            out.extend_from_slice(&go.tokens);
-            self.last_token = *go.tokens.last().unwrap();
-            self.n_tokens += k as u64;
-            remaining = remaining.saturating_sub(k);
+            let take = k.min(remaining);
+            if take < k {
+                // the device appended k slots but the caller only receives
+                // `take` tokens: drop the surplus so the next quantum
+                // continues from the last *returned* token, not k-take
+                // tokens past it
+                for layer in 0..self.cache.l {
+                    let keep = self.cache.lens[layer] - (k - take);
+                    self.cache.truncate_layer(layer, keep)?;
+                }
+            }
+            out.extend_from_slice(&go.tokens[..take]);
+            self.last_token = go.tokens[take - 1];
+            self.n_tokens += take as u64;
+            remaining -= take;
             self.evict()?;
         }
-        out.truncate(n);
         Ok(out)
     }
 
@@ -225,7 +237,7 @@ impl<'rt> Engine<'rt> {
     pub fn step_logits(&mut self) -> Result<Vec<f32>> {
         self.check_memory(1)?;
         let go = self.rt.generate(&self.opts.model, 1, false, &self.cache, self.last_token)?;
-        self.cache.replace_from_device(go.k, go.v, &go.lens, 1);
+        self.cache.replace_from_device(&go.k, &go.v, &go.lens, 1, self.n_tokens)?;
         self.last_token = go.tokens[0];
         self.n_tokens += 1;
         self.evict()?;
@@ -243,5 +255,6 @@ impl<'rt> Engine<'rt> {
 }
 
 pub fn is_oom(err: &anyhow::Error) -> bool {
-    format!("{err}").contains(OOM_MARKER)
+    let msg = format!("{err:#}");
+    msg.contains(OOM_MARKER) || msg.contains(crate::runtime::ARENA_OOM_MARKER)
 }

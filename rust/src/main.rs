@@ -26,7 +26,9 @@ fn main() -> Result<()> {
         .describe("capacity", "compiled cache capacity C", Some("256"))
         .describe("max-new-tokens", "per-request generation cap", Some("256"))
         .describe("max-queue", "admission-control queue bound", Some("64"))
-        .describe("decode-quantum", "decode steps per scheduling round", Some("16"));
+        .describe("decode-quantum", "decode steps per scheduling round", Some("16"))
+        .describe("max-active", "max concurrently active sequences", Some("4"))
+        .describe("kv-pool-bytes", "paged-KV arena byte budget (0 = unlimited)", Some("0"));
     if args.flag("help") {
         print!("{}", args.usage("lacache-serve"));
         return Ok(());

@@ -1,0 +1,218 @@
+//! Shared paged-KV arena: a process-wide pool of fixed-size pages backing
+//! every [`super::KvCache`].
+//!
+//! A sequence's resident bytes track its *actual* occupancy (`lens` rounded
+//! up to the page size) instead of the compiled capacity `C`; freed pages
+//! return to the pool and are recycled across sequences, so concurrent
+//! serving pays for what the ladder policy actually keeps — the block/paged
+//! KV management idea from vLLM-style serving stacks, applied under the
+//! paper's compaction policies.
+//!
+//! The pool is keyed by row width (`H * Dh`) so models of different shapes
+//! can share one process-wide arena. An optional byte budget turns the
+//! arena into the serving-path admission signal: allocations that would
+//! exceed it fail with [`ARENA_OOM_MARKER`], and the scheduler consults
+//! [`KvArena::stats`] before admitting new sequences.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
+use anyhow::{bail, Result};
+
+/// Slots per page. 16 rows amortizes page-table overhead while keeping
+/// per-sequence over-allocation below one page per layer.
+pub const PAGE_SLOTS: usize = 16;
+
+/// Raised (string-matched, like the engine's simulated-OOM marker) when an
+/// allocation would push the pool past its byte budget.
+pub const ARENA_OOM_MARKER: &str = "kv-arena-OOM";
+
+/// One page: `PAGE_SLOTS` KV rows for one layer, row-major
+/// `[PAGE_SLOTS, H, Dh]` — one slot's full `[H, Dh]` row is contiguous, so
+/// compaction moves are single `memcpy`s per relocated slot.
+pub struct Page {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+}
+
+impl Page {
+    fn new(row_width: usize) -> Self {
+        Page { k: vec![0.0; PAGE_SLOTS * row_width], v: vec![0.0; PAGE_SLOTS * row_width] }
+    }
+
+    /// Bytes held by one page of the given row width (K + V, f32).
+    pub fn bytes(row_width: usize) -> usize {
+        2 * PAGE_SLOTS * row_width * 4
+    }
+}
+
+#[derive(Default)]
+struct Pool {
+    /// Free pages keyed by row width (`H * Dh`), recycled across sequences.
+    free: BTreeMap<usize, Vec<Page>>,
+    bytes_in_use: usize,
+    bytes_pooled: usize,
+    high_water: usize,
+    budget: Option<usize>,
+}
+
+/// Cheaply cloneable handle to a shared page pool.
+#[derive(Clone, Default)]
+pub struct KvArena {
+    pool: Arc<Mutex<Pool>>,
+}
+
+/// Point-in-time arena occupancy (the admission-control signal).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ArenaStats {
+    /// Bytes currently held by live caches.
+    pub bytes_in_use: usize,
+    /// Bytes parked on the free lists, ready for reuse.
+    pub bytes_pooled: usize,
+    /// Peak `bytes_in_use` observed over the process lifetime.
+    pub high_water: usize,
+    /// Configured pool budget (None = unlimited).
+    pub budget: Option<usize>,
+}
+
+impl KvArena {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// The process-wide arena every [`super::KvCache::new`] draws from.
+    pub fn global() -> &'static KvArena {
+        static GLOBAL: OnceLock<KvArena> = OnceLock::new();
+        GLOBAL.get_or_init(KvArena::new)
+    }
+
+    /// Cap `bytes_in_use` (None = unlimited). Existing allocations persist;
+    /// only future allocations are checked.
+    pub fn set_budget(&self, budget: Option<usize>) {
+        self.pool.lock().unwrap().budget = budget;
+    }
+
+    pub fn stats(&self) -> ArenaStats {
+        let p = self.pool.lock().unwrap();
+        ArenaStats {
+            bytes_in_use: p.bytes_in_use,
+            bytes_pooled: p.bytes_pooled,
+            high_water: p.high_water,
+            budget: p.budget,
+        }
+    }
+
+    /// Allocate one page (recycled from the free list when possible). Fails
+    /// with [`ARENA_OOM_MARKER`] when the pool budget would be exceeded.
+    pub fn alloc(&self, row_width: usize) -> Result<Page> {
+        let bytes = Page::bytes(row_width);
+        let mut p = self.pool.lock().unwrap();
+        if let Some(limit) = p.budget {
+            if p.bytes_in_use + bytes > limit {
+                bail!(
+                    "{ARENA_OOM_MARKER}: page alloc {bytes} B would exceed pool budget \
+                     {limit} B ({} B in use)",
+                    p.bytes_in_use
+                );
+            }
+        }
+        let page = match p.free.get_mut(&row_width).and_then(|v| v.pop()) {
+            Some(page) => {
+                p.bytes_pooled -= bytes;
+                page
+            }
+            None => Page::new(row_width),
+        };
+        p.bytes_in_use += bytes;
+        p.high_water = p.high_water.max(p.bytes_in_use);
+        Ok(page)
+    }
+
+    /// Return a page to the free list for reuse.
+    pub fn free(&self, row_width: usize, page: Page) {
+        let bytes = Page::bytes(row_width);
+        let mut p = self.pool.lock().unwrap();
+        p.bytes_in_use = p.bytes_in_use.saturating_sub(bytes);
+        p.bytes_pooled += bytes;
+        p.free.entry(row_width).or_default().push(page);
+    }
+}
+
+/// Page-granular worst-case footprint of one sequence holding `slots` slots
+/// in every one of `n_layers` layers at row width `H * Dh`.
+pub fn seq_footprint_bytes(n_layers: usize, row_width: usize, slots: usize) -> usize {
+    n_layers * slots.div_ceil(PAGE_SLOTS) * Page::bytes(row_width)
+}
+
+/// Shared admission gate (server + benches): measured arena pressure plus
+/// one projected footprint must fit the budget, AND reserving the peak
+/// footprint for every already-admitted sequence (which may not have
+/// allocated its pages yet) must still fit.
+pub fn admission_ok(stats: &ArenaStats, active: usize, est_seq_bytes: usize, limit: usize) -> bool {
+    let reserved = (active + 1).saturating_mul(est_seq_bytes);
+    stats.bytes_in_use + est_seq_bytes <= limit && reserved <= limit
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn alloc_free_accounting_and_reuse() {
+        let arena = KvArena::new();
+        let rw = 8;
+        let a = arena.alloc(rw).unwrap();
+        let b = arena.alloc(rw).unwrap();
+        assert_eq!(arena.stats().bytes_in_use, 2 * Page::bytes(rw));
+        arena.free(rw, a);
+        let st = arena.stats();
+        assert_eq!(st.bytes_in_use, Page::bytes(rw));
+        assert_eq!(st.bytes_pooled, Page::bytes(rw));
+        assert_eq!(st.high_water, 2 * Page::bytes(rw));
+        // reuse drains the free list instead of growing the pool
+        let c = arena.alloc(rw).unwrap();
+        let st = arena.stats();
+        assert_eq!(st.bytes_pooled, 0);
+        assert_eq!(st.bytes_in_use, 2 * Page::bytes(rw));
+        arena.free(rw, b);
+        arena.free(rw, c);
+        assert_eq!(arena.stats().bytes_in_use, 0);
+    }
+
+    #[test]
+    fn budget_rejects_with_marker() {
+        let arena = KvArena::new();
+        let rw = 4;
+        arena.set_budget(Some(Page::bytes(rw)));
+        let a = arena.alloc(rw).unwrap();
+        let err = arena.alloc(rw).unwrap_err();
+        assert!(format!("{err}").contains(ARENA_OOM_MARKER), "{err}");
+        // freeing makes room again
+        arena.free(rw, a);
+        arena.alloc(rw).unwrap();
+    }
+
+    #[test]
+    fn admission_gate_and_footprint() {
+        let est = seq_footprint_bytes(2, 8, 17); // 17 slots -> 2 pages, x2 layers
+        assert_eq!(est, 2 * 2 * Page::bytes(8));
+        let empty = ArenaStats::default();
+        assert!(admission_ok(&empty, 0, est, est));
+        // one active sequence reserves its footprint even before allocating
+        assert!(!admission_ok(&empty, 1, est, est));
+        assert!(admission_ok(&empty, 1, est, 2 * est));
+        let loaded = ArenaStats { bytes_in_use: est, ..Default::default() };
+        assert!(!admission_ok(&loaded, 0, est, est));
+    }
+
+    #[test]
+    fn row_widths_pool_independently() {
+        let arena = KvArena::new();
+        let a = arena.alloc(4).unwrap();
+        arena.free(4, a);
+        // a different row width must not receive the pooled page
+        let b = arena.alloc(8).unwrap();
+        assert_eq!(b.k.len(), PAGE_SLOTS * 8);
+        assert_eq!(arena.stats().bytes_pooled, Page::bytes(4));
+    }
+}

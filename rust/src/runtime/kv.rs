@@ -1,21 +1,28 @@
-//! Host-side KV cache state: per-layer contiguous slot arrays + occupancy +
-//! original-token-position bookkeeping.
+//! Host-side KV cache state over the shared paged arena: per-layer page
+//! tables + occupancy + original-token-position bookkeeping.
 //!
-//! Layout matches the device tensors exactly: `k`/`v` are row-major
-//! `[L, H, C, Dh]` f32. Slot order within a layer is time order; eviction is
-//! an order-preserving per-layer gather (`retain_slots`), after which slot
-//! index == cache-relative RoPE position on the device side.
+//! Rows live in fixed-size arena pages ([`PAGE_SLOTS`] slots, each slot a
+//! contiguous `[H, Dh]` row). Slot order within a layer is time order;
+//! eviction is an order-preserving in-place remap (`retain_slots`) that only
+//! touches rows whose slot index changes, after which slot index ==
+//! cache-relative RoPE position on the device side. The device-contiguous
+//! `[L, H, C, Dh]` layout is materialized on demand ([`KvCache::gather_dense`])
+//! at program-call time, so a sequence's host memory tracks its actual
+//! occupancy (`lens`) instead of the compiled capacity `C`.
 
 use anyhow::{bail, Result};
 
-#[derive(Clone, Debug)]
+use super::arena::{KvArena, Page, PAGE_SLOTS};
+
 pub struct KvCache {
     pub l: usize,
     pub h: usize,
     pub c: usize,
     pub dh: usize,
-    pub k: Vec<f32>,
-    pub v: Vec<f32>,
+    arena: KvArena,
+    /// Per-layer page table: page `i` backs slots
+    /// `[i * PAGE_SLOTS, (i + 1) * PAGE_SLOTS)`.
+    pages: Vec<Vec<Page>>,
     /// Valid slot count per layer.
     pub lens: Vec<usize>,
     /// Original token index of each valid slot, per layer (time-ordered).
@@ -26,27 +33,51 @@ pub struct KvCache {
 }
 
 impl KvCache {
+    /// Allocate against the process-wide arena (the serving default).
     pub fn new(l: usize, h: usize, c: usize, dh: usize) -> Self {
+        Self::with_arena(KvArena::global().clone(), l, h, c, dh)
+    }
+
+    /// Allocate against a specific arena (isolated pools for tests/benches).
+    pub fn with_arena(arena: KvArena, l: usize, h: usize, c: usize, dh: usize) -> Self {
         Self {
             l,
             h,
             c,
             dh,
-            k: vec![0.0; l * h * c * dh],
-            v: vec![0.0; l * h * c * dh],
+            arena,
+            pages: (0..l).map(|_| Vec::new()).collect(),
             lens: vec![0; l],
             positions: vec![Vec::new(); l],
             mass: vec![Vec::new(); l],
         }
     }
 
+    /// Floats per slot row (`H * Dh`) — the arena pooling key.
+    #[inline]
+    pub fn row_width(&self) -> usize {
+        self.h * self.dh
+    }
+
     pub fn lens_i32(&self) -> Vec<i32> {
         self.lens.iter().map(|&x| x as i32).collect()
     }
 
-    /// Total bytes resident for valid slots (the OOM-accounting metric).
+    /// Logical bytes for valid slots (the paper's OOM-accounting metric).
     pub fn kv_bytes(&self) -> usize {
         self.lens.iter().map(|&n| 2 * self.h * n * self.dh * 4).sum()
+    }
+
+    /// Actual bytes held in the arena (page-granular occupancy — what the
+    /// serving admission control sees).
+    pub fn resident_bytes(&self) -> usize {
+        let per = Page::bytes(self.row_width());
+        self.pages.iter().map(|t| t.len() * per).sum()
+    }
+
+    /// Pages currently mapped for one layer.
+    pub fn n_pages(&self, layer: usize) -> usize {
+        self.pages[layer].len()
     }
 
     /// Max occupancy across layers.
@@ -54,9 +85,34 @@ impl KvCache {
         self.lens.iter().copied().max().unwrap_or(0)
     }
 
-    #[inline]
-    fn row_offset(&self, l: usize, h: usize, slot: usize) -> usize {
-        ((l * self.h + h) * self.c + slot) * self.dh
+    /// One slot's K row for one head (`Dh` floats).
+    pub fn row_k(&self, layer: usize, head: usize, slot: usize) -> &[f32] {
+        let off = ((slot % PAGE_SLOTS) * self.h + head) * self.dh;
+        &self.pages[layer][slot / PAGE_SLOTS].k[off..off + self.dh]
+    }
+
+    /// One slot's V row for one head (`Dh` floats).
+    pub fn row_v(&self, layer: usize, head: usize, slot: usize) -> &[f32] {
+        let off = ((slot % PAGE_SLOTS) * self.h + head) * self.dh;
+        &self.pages[layer][slot / PAGE_SLOTS].v[off..off + self.dh]
+    }
+
+    fn ensure_pages(&mut self, layer: usize, new_len: usize) -> Result<()> {
+        let needed = new_len.div_ceil(PAGE_SLOTS);
+        while self.pages[layer].len() < needed {
+            let page = self.arena.alloc(self.row_width())?;
+            self.pages[layer].push(page);
+        }
+        Ok(())
+    }
+
+    fn release_excess(&mut self, layer: usize) {
+        let needed = self.lens[layer].div_ceil(PAGE_SLOTS);
+        let rw = self.row_width();
+        while self.pages[layer].len() > needed {
+            let page = self.pages[layer].pop().unwrap();
+            self.arena.free(rw, page);
+        }
     }
 
     /// Append one layer's window K/V rows (from a score program's output,
@@ -75,12 +131,16 @@ impl KvCache {
             bail!("cache overflow: layer {layer} len {len} + {n_valid} > C {}", self.c);
         }
         debug_assert_eq!(win_k.len(), self.h * w * self.dh);
-        for hh in 0..self.h {
-            for i in 0..n_valid {
-                let src = (hh * w + i) * self.dh;
-                let dst = self.row_offset(layer, hh, len + i);
-                self.k[dst..dst + self.dh].copy_from_slice(&win_k[src..src + self.dh]);
-                self.v[dst..dst + self.dh].copy_from_slice(&win_v[src..src + self.dh]);
+        self.ensure_pages(layer, len + n_valid)?;
+        let (h, dh) = (self.h, self.dh);
+        for i in 0..n_valid {
+            let slot = len + i;
+            let page = &mut self.pages[layer][slot / PAGE_SLOTS];
+            for hh in 0..h {
+                let src = (hh * w + i) * dh;
+                let dst = ((slot % PAGE_SLOTS) * h + hh) * dh;
+                page.k[dst..dst + dh].copy_from_slice(&win_k[src..src + dh]);
+                page.v[dst..dst + dh].copy_from_slice(&win_v[src..src + dh]);
             }
         }
         self.lens[layer] = len + n_valid;
@@ -91,8 +151,11 @@ impl KvCache {
         Ok(())
     }
 
-    /// Order-preserving gather: keep exactly the slots in `keep` (sorted,
-    /// unique, all < lens[layer]) for one layer.
+    /// Order-preserving compaction: keep exactly the slots in `keep`
+    /// (sorted, unique, all < lens[layer]) for one layer. Rows whose slot
+    /// index is unchanged are untouched; the rest move once (in-page
+    /// `copy_within`, or one bounce through a scratch row across pages), and
+    /// emptied tail pages return to the arena.
     pub fn retain_slots(&mut self, layer: usize, keep: &[usize]) -> Result<()> {
         let len = self.lens[layer];
         let mut prev: Option<usize> = None;
@@ -107,39 +170,112 @@ impl KvCache {
             }
             prev = Some(s);
         }
-        for hh in 0..self.h {
-            for (dst_i, &src_i) in keep.iter().enumerate() {
-                if dst_i == src_i {
-                    continue; // prefix already in place
-                }
-                let src = self.row_offset(layer, hh, src_i);
-                let dst = self.row_offset(layer, hh, dst_i);
-                self.k.copy_within(src..src + self.dh, dst);
-                self.v.copy_within(src..src + self.dh, dst);
+        let rw = self.row_width();
+        let mut scratch_k = vec![0.0f32; rw];
+        let mut scratch_v = vec![0.0f32; rw];
+        for (dst_i, &src_i) in keep.iter().enumerate() {
+            if dst_i == src_i {
+                continue; // prefix already in place
+            }
+            let (sp, so) = (src_i / PAGE_SLOTS, (src_i % PAGE_SLOTS) * rw);
+            let (dp, dof) = (dst_i / PAGE_SLOTS, (dst_i % PAGE_SLOTS) * rw);
+            if sp == dp {
+                let page = &mut self.pages[layer][sp];
+                page.k.copy_within(so..so + rw, dof);
+                page.v.copy_within(so..so + rw, dof);
+            } else {
+                scratch_k.copy_from_slice(&self.pages[layer][sp].k[so..so + rw]);
+                scratch_v.copy_from_slice(&self.pages[layer][sp].v[so..so + rw]);
+                let dpage = &mut self.pages[layer][dp];
+                dpage.k[dof..dof + rw].copy_from_slice(&scratch_k);
+                dpage.v[dof..dof + rw].copy_from_slice(&scratch_v);
             }
         }
         self.positions[layer] = keep.iter().map(|&s| self.positions[layer][s]).collect();
         self.mass[layer] = keep.iter().map(|&s| self.mass[layer][s]).collect();
         self.lens[layer] = keep.len();
+        self.release_excess(layer);
         Ok(())
     }
 
-    /// Replace full device-shaped state (from a generate program's outputs).
-    pub fn replace_from_device(&mut self, k: Vec<f32>, v: Vec<f32>, lens: &[i32], appended: usize) {
-        debug_assert_eq!(k.len(), self.k.len());
-        self.k = k;
-        self.v = v;
+    /// Drop the tail so exactly `new_len` slots remain (the engine's rollback
+    /// of over-generated decode steps). Emptied pages return to the arena.
+    pub fn truncate_layer(&mut self, layer: usize, new_len: usize) -> Result<()> {
+        if new_len > self.lens[layer] {
+            bail!("truncate_layer: {new_len} > len {}", self.lens[layer]);
+        }
+        self.lens[layer] = new_len;
+        self.positions[layer].truncate(new_len);
+        self.mass[layer].truncate(new_len);
+        self.release_excess(layer);
+        Ok(())
+    }
+
+    /// Merge a generate program's output state (device-shaped `[L, H, C, Dh]`
+    /// buffers with `appended` new slots per layer) back into the paged
+    /// store. Only the appended rows are copied — resident rows were uploaded
+    /// from this cache and are unchanged on the device. `first_pos` is the
+    /// engine's authoritative stream position of the first appended token:
+    /// it cannot be inferred from `positions.last() + 1`, which drifts
+    /// whenever the recency tail was evicted (any `n_recent = 0` config).
+    pub fn replace_from_device(
+        &mut self,
+        k: &[f32],
+        v: &[f32],
+        lens: &[i32],
+        appended: usize,
+        first_pos: u64,
+    ) -> Result<()> {
+        debug_assert_eq!(k.len(), self.l * self.h * self.c * self.dh);
+        let (h, c, dh) = (self.h, self.c, self.dh);
         for l in 0..self.l {
             let new_len = lens[l] as usize;
             let old_len = self.lens[l];
-            debug_assert_eq!(new_len, old_len + appended);
-            let next_pos = self.positions[l].last().map(|&p| p + 1).unwrap_or(0);
-            for i in 0..new_len - old_len {
-                self.positions[l].push(next_pos + i as u64);
+            if new_len != old_len + appended {
+                bail!("replace_from_device: layer {l} len {new_len} != {old_len} + {appended}");
+            }
+            if let Some(&last) = self.positions[l].last() {
+                if first_pos <= last {
+                    bail!("replace_from_device: first_pos {first_pos} <= resident tail {last}");
+                }
+            }
+            self.ensure_pages(l, new_len)?;
+            for slot in old_len..new_len {
+                let page = &mut self.pages[l][slot / PAGE_SLOTS];
+                for hh in 0..h {
+                    let src = ((l * h + hh) * c + slot) * dh;
+                    let dst = ((slot % PAGE_SLOTS) * h + hh) * dh;
+                    page.k[dst..dst + dh].copy_from_slice(&k[src..src + dh]);
+                    page.v[dst..dst + dh].copy_from_slice(&v[src..src + dh]);
+                }
+            }
+            for i in 0..appended {
+                self.positions[l].push(first_pos + i as u64);
                 self.mass[l].push(0.0);
             }
             self.lens[l] = new_len;
         }
+        Ok(())
+    }
+
+    /// Materialize the device-contiguous `[L, H, C, Dh]` K/V buffers
+    /// (invalid slots zero-padded) for a program call.
+    pub fn gather_dense(&self) -> (Vec<f32>, Vec<f32>) {
+        let (h, c, dh) = (self.h, self.c, self.dh);
+        let mut k = vec![0.0f32; self.l * h * c * dh];
+        let mut v = vec![0.0f32; self.l * h * c * dh];
+        for l in 0..self.l {
+            for slot in 0..self.lens[l] {
+                let page = &self.pages[l][slot / PAGE_SLOTS];
+                for hh in 0..h {
+                    let src = ((slot % PAGE_SLOTS) * h + hh) * dh;
+                    let dst = ((l * h + hh) * c + slot) * dh;
+                    k[dst..dst + dh].copy_from_slice(&page.k[src..src + dh]);
+                    v[dst..dst + dh].copy_from_slice(&page.v[src..src + dh]);
+                }
+            }
+        }
+        (k, v)
     }
 
     /// Add per-slot attention mass from a scored program (`mass_row` is the
@@ -161,6 +297,13 @@ impl KvCache {
             if self.positions[l].len() != self.lens[l] || self.mass[l].len() != self.lens[l] {
                 bail!("bookkeeping length mismatch");
             }
+            if self.pages[l].len() != self.lens[l].div_ceil(PAGE_SLOTS) {
+                bail!(
+                    "page table mismatch in layer {l}: {} pages for {} slots",
+                    self.pages[l].len(),
+                    self.lens[l]
+                );
+            }
             for w in self.positions[l].windows(2) {
                 if w[0] >= w[1] {
                     bail!("positions not strictly increasing in layer {l}");
@@ -171,12 +314,64 @@ impl KvCache {
     }
 }
 
+impl Clone for KvCache {
+    /// Deep copy: fresh pages from the same arena. Panics if the arena
+    /// budget cannot accommodate the copy (clones are a bench/test affair;
+    /// the serving path never clones caches).
+    fn clone(&self) -> Self {
+        let mut out = KvCache::with_arena(self.arena.clone(), self.l, self.h, self.c, self.dh);
+        let rw = self.row_width();
+        for l in 0..self.l {
+            for page in &self.pages[l] {
+                let mut p = out
+                    .arena
+                    .alloc(rw)
+                    .expect("kv-arena budget exceeded while cloning KvCache");
+                p.k.copy_from_slice(&page.k);
+                p.v.copy_from_slice(&page.v);
+                out.pages[l].push(p);
+            }
+        }
+        out.lens = self.lens.clone();
+        out.positions = self.positions.clone();
+        out.mass = self.mass.clone();
+        out
+    }
+}
+
+impl Drop for KvCache {
+    fn drop(&mut self) {
+        let rw = self.row_width();
+        for table in &mut self.pages {
+            for page in table.drain(..) {
+                self.arena.free(rw, page);
+            }
+        }
+    }
+}
+
+impl std::fmt::Debug for KvCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("KvCache")
+            .field("l", &self.l)
+            .field("h", &self.h)
+            .field("c", &self.c)
+            .field("dh", &self.dh)
+            .field("lens", &self.lens)
+            .field("resident_bytes", &self.resident_bytes())
+            .finish()
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::prop_assert;
+    use crate::util::prop::PropRunner;
+    use crate::util::rng::Xoshiro256;
 
     fn filled(l: usize, h: usize, c: usize, dh: usize, n: usize) -> KvCache {
-        let mut kv = KvCache::new(l, h, c, dh);
+        let mut kv = KvCache::with_arena(KvArena::new(), l, h, c, dh);
         for layer in 0..l {
             let w = n;
             let mut wk = vec![0.0f32; h * w * dh];
@@ -200,12 +395,14 @@ mod tests {
         assert_eq!(kv.lens, vec![5, 5]);
         kv.check_invariants().unwrap();
         assert_eq!(kv.kv_bytes(), 2 * 2 * 2 * 5 * 4 * 4);
+        // 5 slots -> one page per layer; resident bytes are page-granular
+        assert_eq!(kv.resident_bytes(), 2 * Page::bytes(2 * 4));
     }
 
     #[test]
     fn append_overflow_fails() {
-        let mut kv = KvCache::new(1, 1, 4, 2);
-        let w = vec![0.0; 1 * 6 * 2];
+        let mut kv = KvCache::with_arena(KvArena::new(), 1, 1, 4, 2);
+        let w = vec![0.0; 6 * 2];
         assert!(kv.append_layer(0, &w, &w, 6, 6, 0).is_err());
     }
 
@@ -216,8 +413,8 @@ mod tests {
         assert_eq!(kv.lens[0], 3);
         assert_eq!(kv.positions[0], vec![0, 2, 5]);
         // head 1 row 1 should now hold original slot 2's value (=102)
-        let off = ((0 * 2 + 1) * 16 + 1) * 4;
-        assert_eq!(kv.k[off], 102.0);
+        assert_eq!(kv.row_k(0, 1, 1)[0], 102.0);
+        assert_eq!(kv.row_v(0, 1, 1)[0], -102.0);
         // layer 1 untouched
         assert_eq!(kv.lens[1], 6);
         kv.check_invariants().unwrap();
@@ -238,5 +435,235 @@ mod tests {
         assert_eq!(kv.mass[0], vec![1.0, 2.0, 3.0, 4.0]);
         kv.retain_slots(0, &[1, 3]).unwrap();
         assert_eq!(kv.mass[0], vec![2.0, 4.0]);
+    }
+
+    #[test]
+    fn retain_across_page_boundaries_frees_tail_pages() {
+        // 40 slots = 3 pages; keep a sparse 10 -> 1 page
+        let mut kv = filled(1, 2, 64, 4, 40);
+        let arena_before = kv.resident_bytes();
+        assert_eq!(kv.n_pages(0), 3);
+        assert_eq!(arena_before, 3 * Page::bytes(2 * 4));
+        let keep: Vec<usize> = (0..40).step_by(4).collect();
+        kv.retain_slots(0, &keep).unwrap();
+        assert_eq!(kv.lens[0], 10);
+        assert_eq!(kv.n_pages(0), 1);
+        kv.check_invariants().unwrap();
+        // moved rows carry their content (slot 5 now holds original slot 20)
+        assert_eq!(kv.row_k(0, 1, 5)[0], 120.0);
+        assert_eq!(kv.positions[0], (0..40).step_by(4).collect::<Vec<u64>>());
+    }
+
+    #[test]
+    fn truncate_layer_drops_tail_and_pages() {
+        let mut kv = filled(1, 1, 64, 2, 33); // 3 pages
+        kv.add_mass(0, &[1.0; 33]);
+        kv.truncate_layer(0, 16).unwrap(); // exactly one page
+        assert_eq!(kv.lens[0], 16);
+        assert_eq!(kv.n_pages(0), 1);
+        assert_eq!(kv.positions[0].len(), 16);
+        assert_eq!(kv.mass[0].len(), 16);
+        kv.check_invariants().unwrap();
+        assert!(kv.truncate_layer(0, 17).is_err());
+    }
+
+    #[test]
+    fn replace_from_device_uses_stream_counter_not_tail_inference() {
+        // regression: after evicting the recency tail, the next position must
+        // come from the engine's stream counter, not `positions.last() + 1`
+        let mut kv = filled(1, 1, 8, 2, 6); // positions 0..=5
+        kv.retain_slots(0, &[0, 1]).unwrap(); // tail evicted
+        let mut k = vec![0.0f32; 8 * 2];
+        let mut v = vec![0.0f32; 8 * 2];
+        k[2 * 2] = 7.5; // slot 2, head 0, d 0
+        v[2 * 2] = -7.5;
+        kv.replace_from_device(&k, &v, &[3], 1, 6).unwrap();
+        // the appended slot is stream token 6; the old inference gave 2
+        assert_eq!(kv.positions[0], vec![0, 1, 6]);
+        assert_eq!(kv.row_k(0, 0, 2)[0], 7.5);
+        assert_eq!(kv.row_v(0, 0, 2)[0], -7.5);
+        kv.check_invariants().unwrap();
+        // non-monotone first_pos is rejected
+        let err = kv.replace_from_device(&k, &v, &[4], 1, 3).unwrap_err();
+        assert!(format!("{err}").contains("first_pos"));
+    }
+
+    #[test]
+    fn drop_returns_pages_to_arena() {
+        let arena = KvArena::new();
+        {
+            let kv = {
+                let mut kv = KvCache::with_arena(arena.clone(), 2, 1, 64, 2);
+                let w = vec![0.0f32; 20 * 2];
+                kv.append_layer(0, &w, &w, 20, 20, 0).unwrap();
+                kv.append_layer(1, &w, &w, 20, 20, 0).unwrap();
+                kv
+            };
+            assert_eq!(arena.stats().bytes_in_use, 4 * Page::bytes(2));
+            drop(kv);
+        }
+        let st = arena.stats();
+        assert_eq!(st.bytes_in_use, 0);
+        assert_eq!(st.bytes_pooled, 4 * Page::bytes(2));
+    }
+
+    #[test]
+    fn clone_is_deep() {
+        let kv = filled(1, 1, 16, 2, 5);
+        let mut c = kv.clone();
+        c.retain_slots(0, &[0, 4]).unwrap();
+        assert_eq!(kv.lens[0], 5);
+        assert_eq!(c.lens[0], 2);
+        assert_eq!(kv.row_k(0, 0, 1)[0], 1.0);
+        assert_eq!(c.row_k(0, 0, 1)[0], 4.0);
+    }
+
+    /// Reference model: plain dense per-layer rows, the old storage layout.
+    struct DenseRef {
+        h: usize,
+        dh: usize,
+        rows_k: Vec<Vec<f32>>, // per slot: [H * Dh]
+        rows_v: Vec<Vec<f32>>,
+        positions: Vec<u64>,
+    }
+
+    impl DenseRef {
+        fn append(&mut self, win_k: &[f32], win_v: &[f32], w: usize, n_valid: usize, p0: u64) {
+            for i in 0..n_valid {
+                let mut rk = vec![0.0f32; self.h * self.dh];
+                let mut rv = vec![0.0f32; self.h * self.dh];
+                for hh in 0..self.h {
+                    for d in 0..self.dh {
+                        rk[hh * self.dh + d] = win_k[(hh * w + i) * self.dh + d];
+                        rv[hh * self.dh + d] = win_v[(hh * w + i) * self.dh + d];
+                    }
+                }
+                self.rows_k.push(rk);
+                self.rows_v.push(rv);
+                self.positions.push(p0 + i as u64);
+            }
+        }
+
+        fn retain(&mut self, keep: &[usize]) {
+            self.rows_k = keep.iter().map(|&s| self.rows_k[s].clone()).collect();
+            self.rows_v = keep.iter().map(|&s| self.rows_v[s].clone()).collect();
+            self.positions = keep.iter().map(|&s| self.positions[s]).collect();
+        }
+    }
+
+    #[derive(Debug)]
+    enum Op {
+        Append { w: usize, n_valid: usize, seed: u32 },
+        Retain { keep_mask_seed: u64 },
+    }
+
+    #[test]
+    fn paged_store_matches_dense_reference_property() {
+        // arena-backed page layout must be observationally identical to the
+        // old dense layout: same gather_dense output, rows, and positions
+        // under arbitrary append/retain interleavings
+        PropRunner::new(60).run(
+            |rng: &mut Xoshiro256| {
+                let h = 1 + rng.below(3) as usize;
+                let dh = 1 + rng.below(4) as usize;
+                let ops: Vec<Op> = (0..10)
+                    .map(|_| {
+                        if rng.below(3) < 2 {
+                            Op::Append {
+                                w: 1 + rng.below(9) as usize,
+                                n_valid: 0, // filled below
+                                seed: rng.below(u32::MAX as u64) as u32,
+                            }
+                        } else {
+                            Op::Retain { keep_mask_seed: rng.below(u64::MAX) }
+                        }
+                    })
+                    .map(|op| match op {
+                        Op::Append { w, seed, .. } => {
+                            Op::Append { w, n_valid: 1 + (seed as usize) % w, seed }
+                        }
+                        other => other,
+                    })
+                    .collect();
+                (h, dh, ops)
+            },
+            |(h, dh, ops)| {
+                let (h, dh) = (*h, *dh);
+                let c = 96;
+                let mut kv = KvCache::with_arena(KvArena::new(), 1, h, c, dh);
+                let mut dref = DenseRef {
+                    h,
+                    dh,
+                    rows_k: Vec::new(),
+                    rows_v: Vec::new(),
+                    positions: Vec::new(),
+                };
+                let mut next_pos = 0u64;
+                for op in ops {
+                    match *op {
+                        Op::Append { w, n_valid, seed } => {
+                            if kv.lens[0] + n_valid > c {
+                                continue;
+                            }
+                            let mut vrng = Xoshiro256::new(seed as u64 + 1);
+                            let wk: Vec<f32> =
+                                (0..h * w * dh).map(|_| vrng.below(1000) as f32).collect();
+                            let wv: Vec<f32> =
+                                (0..h * w * dh).map(|_| vrng.below(1000) as f32).collect();
+                            kv.append_layer(0, &wk, &wv, w, n_valid, next_pos).unwrap();
+                            dref.append(&wk, &wv, w, n_valid, next_pos);
+                            next_pos += n_valid as u64;
+                        }
+                        Op::Retain { keep_mask_seed } => {
+                            let n = kv.lens[0];
+                            if n == 0 {
+                                continue;
+                            }
+                            let mut krng = Xoshiro256::new(keep_mask_seed);
+                            let keep: Vec<usize> =
+                                (0..n).filter(|_| krng.below(2) == 0).collect();
+                            kv.retain_slots(0, &keep).unwrap();
+                            dref.retain(&keep);
+                        }
+                    }
+                    // full observational equivalence after every op
+                    prop_assert!(
+                        kv.lens[0] == dref.rows_k.len(),
+                        "len {} != ref {}",
+                        kv.lens[0],
+                        dref.rows_k.len()
+                    );
+                    prop_assert!(kv.positions[0] == dref.positions, "positions diverged");
+                    prop_assert!(kv.check_invariants().is_ok(), "invariants broken");
+                    let (dk, dv) = kv.gather_dense();
+                    for slot in 0..kv.lens[0] {
+                        for hh in 0..h {
+                            for d in 0..dh {
+                                let got_k = dk[(hh * c + slot) * dh + d];
+                                let got_v = dv[(hh * c + slot) * dh + d];
+                                let want_k = dref.rows_k[slot][hh * dh + d];
+                                let want_v = dref.rows_v[slot][hh * dh + d];
+                                prop_assert!(
+                                    got_k == want_k && got_v == want_v,
+                                    "row mismatch at slot {slot} head {hh} d {d}"
+                                );
+                            }
+                        }
+                    }
+                    // padding beyond lens stays zero
+                    for slot in kv.lens[0]..c {
+                        for hh in 0..h {
+                            for d in 0..dh {
+                                prop_assert!(
+                                    dk[(hh * c + slot) * dh + d] == 0.0,
+                                    "padding not zero at slot {slot}"
+                                );
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
     }
 }

@@ -10,6 +10,7 @@
 //! root tuple as a single buffer, so state round-trips host<->device per
 //! call — measured and attacked in EXPERIMENTS.md §Perf).
 
+pub mod arena;
 pub mod kv;
 pub mod manifest;
 
@@ -21,6 +22,9 @@ use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
 
+pub use arena::{
+    admission_ok, seq_footprint_bytes, ArenaStats, KvArena, Page, ARENA_OOM_MARKER, PAGE_SLOTS,
+};
 pub use kv::KvCache;
 pub use manifest::{Manifest, ModelCfg, ProgKind, ProgMeta};
 
@@ -202,8 +206,10 @@ impl Runtime {
         let (l, h, dh) = (cache.l, cache.h, cache.dh);
         let tok_b = self.upload_i32(&tok, &[w])?;
         let tgt_b = self.upload_i32(&tgt, &[w])?;
-        let kc_b = self.upload_f32(&cache.k, &[l, h, c, dh])?;
-        let vc_b = self.upload_f32(&cache.v, &[l, h, c, dh])?;
+        // gather the paged store into the device-contiguous layout
+        let (kd, vd) = cache.gather_dense();
+        let kc_b = self.upload_f32(&kd, &[l, h, c, dh])?;
+        let vc_b = self.upload_f32(&vd, &[l, h, c, dh])?;
         let lens_b = self.upload_i32(&cache.lens_i32(), &[l])?;
         let arg_refs: Vec<&xla::PjRtBuffer> =
             vec![&lm.weights, &tok_b, &tgt_b, &kc_b, &vc_b, &lens_b];
@@ -275,8 +281,10 @@ impl Runtime {
         }
         let t0 = Instant::now();
         let (l, h, dh) = (cache.l, cache.h, cache.dh);
-        let kc_b = self.upload_f32(&cache.k, &[l, h, c, dh])?;
-        let vc_b = self.upload_f32(&cache.v, &[l, h, c, dh])?;
+        // gather the paged store into the device-contiguous layout
+        let (kd, vd) = cache.gather_dense();
+        let kc_b = self.upload_f32(&kd, &[l, h, c, dh])?;
+        let vc_b = self.upload_f32(&vd, &[l, h, c, dh])?;
         let lens_b = self.upload_i32(&cache.lens_i32(), &[l])?;
         let tok_b = self.upload_i32(&[last_token], &[])?;
         let arg_refs: Vec<&xla::PjRtBuffer> = vec![&lm.weights, &kc_b, &vc_b, &lens_b, &tok_b];

@@ -20,6 +20,15 @@ pub trait SeqBackend {
     fn prefill_chunk(&mut self, seq: &mut Self::Seq, chunk: &[i32]) -> Result<()>;
     /// Greedy-decode up to `n` tokens.
     fn decode(&mut self, seq: &mut Self::Seq, n: usize) -> Result<Vec<i32>>;
+    /// Admission gate beyond the active-count cap: return false to defer
+    /// admitting more sequences this round (real backends report paged-KV
+    /// arena pressure; queued work stays queued until pages free up).
+    /// `active` is the number of already-admitted sequences, so backends can
+    /// reserve headroom for sequences that have not allocated pages yet.
+    fn can_admit(&self, active: usize) -> bool {
+        let _ = active;
+        true
+    }
 }
 
 #[derive(Clone, Debug)]
@@ -64,7 +73,13 @@ pub struct Scheduler<B: SeqBackend> {
 }
 
 impl<B: SeqBackend> Scheduler<B> {
-    pub fn new(backend: B, window: usize, quantum: usize, max_active: usize, max_queue: usize) -> Self {
+    pub fn new(
+        backend: B,
+        window: usize,
+        quantum: usize,
+        max_active: usize,
+        max_queue: usize,
+    ) -> Self {
         Self {
             backend,
             window,
@@ -96,10 +111,18 @@ impl<B: SeqBackend> Scheduler<B> {
         (self.queue.len(), self.active.len())
     }
 
+    pub fn backend(&self) -> &B {
+        &self.backend
+    }
+
+    pub fn backend_mut(&mut self) -> &mut B {
+        &mut self.backend
+    }
+
     /// One scheduling round. Returns sequences finished this round.
     pub fn step(&mut self) -> Vec<Finished> {
-        // 1. admit
-        while self.active.len() < self.max_active {
+        // 1. admit (bounded by the active cap AND the backend's memory gate)
+        while self.active.len() < self.max_active && self.backend.can_admit(self.active.len()) {
             let Some(p) = self.queue.pop_front() else { break };
             match self.backend.new_seq() {
                 Ok(seq) => self.active.push(Active {
@@ -188,6 +211,7 @@ mod tests {
     /// Mock backend: "generates" token 100+len; fails on prompts containing -1.
     struct Mock {
         prefilled: usize,
+        admit: bool,
     }
 
     struct MockSeq {
@@ -199,6 +223,9 @@ mod tests {
         type Seq = MockSeq;
         fn new_seq(&mut self) -> Result<MockSeq> {
             Ok(MockSeq { ingested: vec![], emitted: 0 })
+        }
+        fn can_admit(&self, _active: usize) -> bool {
+            self.admit
         }
         fn prefill_chunk(&mut self, seq: &mut MockSeq, chunk: &[i32]) -> Result<()> {
             if chunk.contains(&-1) {
@@ -216,7 +243,24 @@ mod tests {
     }
 
     fn sched() -> Scheduler<Mock> {
-        Scheduler::new(Mock { prefilled: 0 }, 8, 4, 2, 4)
+        Scheduler::new(Mock { prefilled: 0, admit: true }, 8, 4, 2, 4)
+    }
+
+    #[test]
+    fn admission_deferred_while_backend_gates() {
+        let mut s = Scheduler::new(Mock { prefilled: 0, admit: false }, 8, 4, 2, 4);
+        s.submit(vec![1, 2], 1).unwrap();
+        s.step();
+        assert_eq!(s.depth(), (1, 0), "admitted despite backend pressure");
+        s.backend_mut().admit = true;
+        s.step();
+        assert_eq!(s.depth().1, 1);
+        let mut finished = Vec::new();
+        while s.has_work() {
+            finished.extend(s.step());
+        }
+        assert_eq!(finished.len(), 1);
+        assert!(finished[0].error.is_none());
     }
 
     #[test]

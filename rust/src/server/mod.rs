@@ -25,14 +25,39 @@ use protocol::{err_response, ok_generate, ok_stats, parse_request, Op};
 use crate::cache::make_policy;
 use crate::config::ServeConfig;
 use crate::engine::{Engine, EngineOpts};
-use crate::runtime::Runtime;
+use crate::runtime::{admission_ok, seq_footprint_bytes, KvArena, Runtime};
 
-/// Real backend: each sequence is an [`Engine`] with its own KV cache and a
-/// fresh policy instance; the `Runtime` (weights + compiled programs) is
-/// shared.
+/// Real backend: each sequence is an [`Engine`] with its own page tables in
+/// the shared paged-KV arena and a fresh policy instance; the `Runtime`
+/// (weights + compiled programs) and the arena are shared.
 pub struct EngineBackend<'rt> {
     pub rt: &'rt Runtime,
     pub cfg: ServeConfig,
+    arena: KvArena,
+    /// Worst-case steady-state arena bytes for one sequence: policy budget
+    /// plus one ingest window, clamped to capacity, in whole pages.
+    est_seq_bytes: usize,
+    pool_budget: Option<usize>,
+}
+
+impl<'rt> EngineBackend<'rt> {
+    pub fn new(rt: &'rt Runtime, cfg: ServeConfig) -> Result<Self> {
+        let m = rt.model(&cfg.model)?;
+        let (l, h, dh) = (m.cfg.n_layers, m.cfg.n_heads, m.cfg.head_dim);
+        let policy = make_policy(&cfg.policy, l)?;
+        let slots = policy.budget().saturating_add(cfg.window).min(cfg.capacity);
+        let est_seq_bytes = seq_footprint_bytes(l, h * dh, slots);
+        let pool_budget = (cfg.kv_pool_bytes > 0).then_some(cfg.kv_pool_bytes);
+        if let Some(limit) = pool_budget {
+            if limit < est_seq_bytes {
+                anyhow::bail!(
+                    "kv_pool_bytes {limit} is smaller than one sequence's footprint \
+                     ({est_seq_bytes} B); no request could ever be admitted"
+                );
+            }
+        }
+        Ok(Self { rt, cfg, arena: KvArena::global().clone(), est_seq_bytes, pool_budget })
+    }
 }
 
 impl<'rt> SeqBackend for EngineBackend<'rt> {
@@ -59,6 +84,15 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
 
     fn decode(&mut self, seq: &mut Engine<'rt>, n: usize) -> Result<Vec<i32>> {
         seq.generate(n)
+    }
+
+    /// Admission control by real arena pressure: see
+    /// [`crate::runtime::admission_ok`].
+    fn can_admit(&self, active: usize) -> bool {
+        match self.pool_budget {
+            None => true,
+            Some(limit) => admission_ok(&self.arena.stats(), active, self.est_seq_bytes, limit),
+        }
     }
 }
 
@@ -127,8 +161,12 @@ fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::js
             &format!("generate_k1_c{}", cfg.capacity),
         ],
     );
-    let backend = EngineBackend { rt: &rt, cfg: cfg.clone() };
-    let mut sched = Scheduler::new(backend, cfg.window, cfg.decode_quantum, 4, cfg.max_queue);
+    // unconditional: clears any stale budget from a previous run_server in
+    // the same process when the new config says unlimited (0)
+    KvArena::global().set_budget((cfg.kv_pool_bytes > 0).then_some(cfg.kv_pool_bytes));
+    let backend = EngineBackend::new(&rt, cfg.clone())?;
+    let mut sched =
+        Scheduler::new(backend, cfg.window, cfg.decode_quantum, cfg.max_active, cfg.max_queue);
     let mut metrics = metrics::Metrics::default();
     let mut waiting: BTreeMap<u64, (i64, Sender<String>)> = BTreeMap::new();
     let mut shutdown = false;
@@ -164,6 +202,10 @@ fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::js
                         let rs = rt.stats();
                         j.set("runtime_calls", (rs.calls as i64).into());
                         j.set("runtime_execute_s", rs.execute_s.into());
+                        let ast = KvArena::global().stats();
+                        j.set("kv_arena_bytes_in_use", ast.bytes_in_use.into());
+                        j.set("kv_arena_bytes_pooled", ast.bytes_pooled.into());
+                        j.set("kv_arena_high_water", ast.high_water.into());
                         let _ = reply.send(ok_stats(req.id, j));
                     }
                     Op::Shutdown => {

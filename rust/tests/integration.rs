@@ -103,6 +103,55 @@ fn full_cache_hits_simulated_oom() {
 }
 
 #[test]
+fn scored_generate_rolls_back_overgeneration() {
+    need_artifacts!();
+    // regression: the scored path over-generates K=16 and truncates the
+    // returned tokens; engine state (cache slots, last_token, n_tokens) must
+    // roll back to the truncated length so the next quantum continues from
+    // the last token the caller actually received
+    let rt = Runtime::load(&lacache::artifacts_dir(), &["mini"]).unwrap();
+    let mut eng = mini_engine(&rt, "h2o:budget=64", 32, 256);
+    let prompt = Stream::default_eval(11).take_n(40);
+    eng.prefill(&prompt).unwrap();
+    let n0 = eng.n_tokens;
+    let toks = eng.generate(5).unwrap();
+    assert_eq!(toks.len(), 5);
+    assert_eq!(eng.n_tokens, n0 + 5, "stream counter advanced past the truncation");
+    assert_eq!(eng.last_token, toks[4], "last_token is not the last returned token");
+    eng.cache.check_invariants().unwrap();
+    for l in 0..eng.cache.l {
+        assert!(
+            eng.cache.positions[l].iter().all(|&p| p < n0 + 5),
+            "cache holds positions the caller never received: {:?}",
+            eng.cache.positions[l]
+        );
+    }
+    // decoding more must keep the invariants from the rolled-back state
+    let more = eng.generate(3).unwrap();
+    assert_eq!(more.len(), 3);
+    assert_eq!(eng.n_tokens, n0 + 8);
+    eng.cache.check_invariants().unwrap();
+}
+
+#[test]
+fn reset_clears_counters_and_releases_pages() {
+    need_artifacts!();
+    let rt = Runtime::load(&lacache::artifacts_dir(), &["mini"]).unwrap();
+    let mut eng = mini_engine(&rt, "lacache:budget=48,span=1,recent=8", 32, 256);
+    let toks = Stream::default_eval(12).take_n(300);
+    let mut tgts = toks[1..].to_vec();
+    tgts.push(0);
+    eng.feed_score(&toks, &tgts).unwrap();
+    assert!(eng.n_compactions > 0);
+    eng.reset();
+    assert_eq!(eng.n_tokens, 0);
+    assert_eq!(eng.n_evicted, 0, "reset must clear eviction diagnostics");
+    assert_eq!(eng.n_compactions, 0, "reset must clear compaction diagnostics");
+    assert_eq!(eng.cache.max_len(), 0);
+    assert_eq!(eng.cache.resident_bytes(), 0, "reset must release arena pages");
+}
+
+#[test]
 fn lacache_not_worse_than_streaming_on_long_stream() {
     need_artifacts!();
     let rt = Runtime::load(&lacache::artifacts_dir(), &["mini"]).unwrap();

@@ -1,0 +1,126 @@
+//! Offline stub of the `xla` PJRT bindings consumed by the runtime layer.
+//!
+//! The real backend (PJRT CPU client executing AOT-lowered HLO) only runs
+//! where the native XLA bindings are installed and `make artifacts` has
+//! produced compiled programs. This stub keeps the whole crate buildable and
+//! unit-testable in dependency-free environments: client/buffer construction
+//! succeeds (so loaders get as far as their own file checks), while any
+//! attempt to parse, compile, or execute a program reports a clear
+//! "backend unavailable" error. Integration tests gate on artifacts and
+//! skip cleanly in stub builds.
+
+use std::fmt;
+use std::path::Path;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str =
+    "xla backend unavailable (stub build: native PJRT bindings are not linked)";
+
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable() -> Self {
+        Error { msg: UNAVAILABLE.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element types a [`Literal`] can be read back as.
+pub trait NativeType: Copy {}
+
+impl NativeType for f32 {}
+impl NativeType for f64 {}
+impl NativeType for i32 {}
+impl NativeType for i64 {}
+impl NativeType for u8 {}
+
+pub struct PjRtClient;
+
+pub struct PjRtBuffer;
+
+pub struct PjRtLoadedExecutable;
+
+pub struct HloModuleProto;
+
+pub struct XlaComputation;
+
+pub struct Literal;
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn buffer_from_host_buffer<T: Copy>(
+        &self,
+        _data: &[T],
+        _dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        Ok(PjRtBuffer)
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(Error::unavailable())
+    }
+}
+
+impl Literal {
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        Err(Error::unavailable())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_succeeds_execution_reports_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        let buf = client.buffer_from_host_buffer(&[1.0f32], &[1], None).unwrap();
+        assert!(buf.to_literal_sync().is_err());
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo").is_err());
+        let err = PjRtLoadedExecutable.execute_b(&[]).unwrap_err();
+        assert!(format!("{err}").contains("unavailable"));
+    }
+}
