@@ -48,9 +48,9 @@ fn main() -> anyhow::Result<()> {
         )?;
         let ctx = Stream::default_eval(3).take_n(256);
         eng.prefill(&ctx)?;
-        let cache = eng.cache.clone();
+        let mut cache = eng.cache.clone();
         b.run_throughput("decode16/pallas-interpret(128)", 16, "tok", || {
-            rt.generate_variant("base", 16, false, true, &cache, 7).unwrap();
+            rt.generate_variant("base", 16, false, true, &mut cache, 7).unwrap();
         });
     }
 
@@ -93,6 +93,18 @@ fn main() -> anyhow::Result<()> {
     println!(
         "\nruntime totals: {} calls, compile {:.2}s, upload {:.3}s, execute {:.3}s, download {:.3}s",
         st.calls, st.compile_s, st.upload_s, st.execute_s, st.download_s
+    );
+    println!(
+        "transfer totals: {:.1} MiB h2d, {:.1} MiB d2h | gather {:.3}s, {:.2} MiB copied \
+         ({} full / {} incremental / {} noop, {} scratch allocs)",
+        st.bytes_h2d as f64 / (1 << 20) as f64,
+        st.bytes_d2h as f64 / (1 << 20) as f64,
+        st.gather_s,
+        st.gathered_bytes as f64 / (1 << 20) as f64,
+        st.gathers_full,
+        st.gathers_incremental,
+        st.gathers_noop,
+        st.dense_scratch_allocs,
     );
     Ok(())
 }

@@ -1,6 +1,6 @@
 //! Pure-CPU policy micro-benchmarks: keep-set computation + gather cost per
 //! compaction for every policy (the L3 contribution must never bottleneck
-//! the device hot path; EXPERIMENTS.md §Perf tracks these).
+//! the device hot path; PERF.md §Bench methodology tracks these).
 
 use lacache::cache::make_policy;
 use lacache::runtime::KvCache;

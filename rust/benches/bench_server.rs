@@ -1,11 +1,17 @@
 //! Server-substrate benchmarks: scheduler round overhead (with an instant
 //! backend, isolating pure L3 cost), wire-protocol encode/decode, JSON parse
-//! throughput for the manifest-sized payloads, and the paged-KV arena
+//! throughput for the manifest-sized payloads, the paged-KV arena
 //! memory-pressure scenario (concurrency under a fixed byte budget vs. the
-//! old dense-allocation baseline).
+//! old dense-allocation baseline), and the steady-state decode transfer
+//! scenario (dirty-range incremental gather; asserts append-only decode
+//! gathers only the appended rows with zero dense-buffer allocations, and
+//! writes machine-readable `BENCH_decode.json` — see PERF.md).
+//!
+//! Set `LACACHE_BENCH_SMOKE=1` (exactly) for the short CI mode; `BENCH_JSON`
+//! overrides the JSON output path.
 
 use lacache::cache::{make_policy, CachePolicy};
-use lacache::runtime::{admission_ok, seq_footprint_bytes, KvArena, KvCache};
+use lacache::runtime::{admission_ok, seq_footprint_bytes, KvArena, KvCache, ScratchPool};
 use lacache::server::batcher::{Scheduler, SeqBackend};
 use lacache::server::protocol::{ok_generate, parse_request};
 use lacache::util::bench::Bench;
@@ -31,7 +37,8 @@ impl SeqBackend for InstantBackend {
 }
 
 fn main() -> anyhow::Result<()> {
-    let b = Bench::new(5, 20);
+    let smoke = matches!(std::env::var("LACACHE_BENCH_SMOKE").as_deref(), Ok("1"));
+    let b = if smoke { Bench::new(1, 3) } else { Bench::new(5, 20) };
 
     // scheduler: 64 requests through admission->prefill->decode->finish
     b.run_throughput("scheduler/64-requests (instant backend)", 64, "req", || {
@@ -64,6 +71,137 @@ fn main() -> anyhow::Result<()> {
     }
 
     memory_pressure_scenario()?;
+    steady_state_decode_scenario(smoke)?;
+    Ok(())
+}
+
+/// Steady-state decode transfer scenario (device-free): drives the exact
+/// storage + transfer path of a decoding sequence — append one slot per
+/// layer, re-materialize the dense image through the scratch pool — and
+/// asserts the transfer layer's two steady-state guarantees:
+///
+/// 1. each step gathers ONLY the appended rows (counter-verified, and ≪ the
+///    full `L·H·C·Dh` image the old path re-copied every call);
+/// 2. zero dense-buffer allocations after warmup.
+///
+/// Also verifies the generate-path absorb: adopting the downloaded device
+/// state as the scratch image makes the next gather a no-op. Emits
+/// machine-readable `BENCH_decode.json` (path override: `BENCH_JSON`) for
+/// the CI perf trajectory.
+fn steady_state_decode_scenario(smoke: bool) -> anyhow::Result<()> {
+    let (l, h, c, dh) = (8usize, 4usize, 1024usize, 24usize);
+    let mut kv = KvCache::with_arena(KvArena::new(), l, h, c, dh);
+    let mut pool = ScratchPool::new(4);
+
+    // prefill, then the one cold full gather
+    let n_prefill = 128usize;
+    let row = vec![0.5f32; h * n_prefill * dh];
+    for layer in 0..l {
+        kv.append_layer(layer, &row, &row, n_prefill, n_prefill, 0)?;
+    }
+    pool.gather(&mut kv);
+    let one = vec![0.25f32; h * dh];
+    let mut next_pos = n_prefill as u64;
+
+    // warmup decode steps (scratch pool + page tables reach steady state)
+    for _ in 0..4 {
+        for layer in 0..l {
+            kv.append_layer(layer, &one, &one, 1, 1, next_pos)?;
+        }
+        next_pos += 1;
+        pool.gather(&mut kv);
+    }
+
+    let warm = pool.stats();
+    let steps = if smoke { 64usize } else { 512 };
+    let t0 = std::time::Instant::now();
+    for _ in 0..steps {
+        for layer in 0..l {
+            kv.append_layer(layer, &one, &one, 1, 1, next_pos)?;
+        }
+        next_pos += 1;
+        std::hint::black_box(pool.gather(&mut kv));
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    let st = pool.stats();
+
+    let full_image_bytes = (2 * l * h * c * dh * 4) as u64;
+    let per_step_row_bytes = (2 * l * h * dh * 4) as u64; // K+V, one slot/layer
+    let gathered = st.gathered_bytes - warm.gathered_bytes;
+    let zeroed = st.zeroed_bytes - warm.zeroed_bytes;
+    let allocs = st.dense_allocs - warm.dense_allocs;
+    assert_eq!(
+        gathered,
+        steps as u64 * per_step_row_bytes,
+        "steady-state decode must gather exactly the appended rows"
+    );
+    assert_eq!(zeroed, 0, "append-only decode must not zero-fill");
+    assert_eq!(allocs, 0, "transfer scratch must not allocate after warmup");
+    assert!(
+        gathered * 16 <= steps as u64 * full_image_bytes,
+        "gathered bytes per step must be \u{226a} the full dense image"
+    );
+
+    // generate-path absorb: the downloaded device image becomes the scratch,
+    // so the next gather copies nothing at all
+    let (mut dk, mut dv) = {
+        let img = pool.gather(&mut kv);
+        (img.k.clone(), img.v.clone())
+    };
+    let lens: Vec<i32> = kv.lens.iter().map(|&x| x as i32 + 1).collect();
+    for layer in 0..l {
+        let slot = kv.lens[layer];
+        for hh in 0..h {
+            let off = ((layer * h + hh) * c + slot) * dh;
+            for x in &mut dk[off..off + dh] {
+                *x = 0.75;
+            }
+            for x in &mut dv[off..off + dh] {
+                *x = -0.75;
+            }
+        }
+    }
+    kv.replace_from_device(&dk, &dv, &lens, 1, next_pos)?;
+    pool.absorb(&mut kv, dk, dv);
+    let before = pool.stats();
+    pool.gather(&mut kv);
+    let after = pool.stats();
+    assert_eq!(
+        after.gathers_noop,
+        before.gathers_noop + 1,
+        "absorbed device image must make the next gather a no-op"
+    );
+    assert_eq!(after.gathered_bytes, before.gathered_bytes);
+
+    let tokens_per_s = steps as f64 / dt;
+    let gathered_per_step = gathered as f64 / steps as f64;
+    println!(
+        "\nsteady-state decode: {steps} steps | {tokens_per_s:.0} tok/s (storage+transfer only) \
+         | {gathered_per_step:.0} B gathered/step vs {full_image_bytes} B full image \
+         ({:.4}% of full) | {allocs} allocs after warmup",
+        100.0 * gathered_per_step / full_image_bytes as f64,
+    );
+
+    // counters are deltas: gather fields over the measured loop,
+    // absorb_noop_gathers over the absorb demonstration only
+    let incremental = (st.gathers_incremental - warm.gathers_incremental) as i64;
+    let absorb_noops = (after.gathers_noop - before.gathers_noop) as i64;
+    let out = Json::from_pairs(vec![
+        ("bench", "steady_state_decode".into()),
+        ("smoke", smoke.into()),
+        ("shape_lhcd", vec![l, h, c, dh].into()),
+        ("steps", steps.into()),
+        ("tokens_per_s", tokens_per_s.into()),
+        ("gathered_bytes_per_step", gathered_per_step.into()),
+        ("full_image_bytes", (full_image_bytes as i64).into()),
+        ("dense_allocs_after_warmup", (allocs as i64).into()),
+        ("gather_s", (st.gather_s - warm.gather_s).into()),
+        ("gathers_incremental", incremental.into()),
+        ("absorb_noop_gathers", absorb_noops.into()),
+    ]);
+    let path = std::env::var("BENCH_JSON").unwrap_or_else(|_| "BENCH_decode.json".into());
+    std::fs::write(&path, out.to_string() + "\n")?;
+    println!("wrote {path}");
     Ok(())
 }
 

@@ -5,8 +5,9 @@
 //!
 //! Budget mapping: the paper quotes budgets as tokens (512/256 of a 4096
 //! pretrain window) or as a context fraction; here budgets scale to
-//! t_train=256 (so 50% ≈ 128, 25% ≈ 64) — see EXPERIMENTS.md per-experiment
-//! notes. Defaults reproduce everything end-to-end on CPU in minutes; pass
+//! t_train=256 (so 50% ≈ 128, 25% ≈ 64). Perf-facing measurements (transfer
+//! volume, gather counters, bench output) are documented in PERF.md.
+//! Defaults reproduce everything end-to-end on CPU in minutes; pass
 //! --fast for a quick smoke pass.
 
 use std::path::Path;

@@ -142,7 +142,7 @@ impl<'rt> Engine<'rt> {
                 scored,
                 chunk_t,
                 chunk_g,
-                &self.cache,
+                &mut self.cache,
             )?;
             out.extend_from_slice(&so.logprobs[..n_valid]);
             // merge window KV into every layer, then compact
@@ -204,8 +204,12 @@ impl<'rt> Engine<'rt> {
                     }
                 }
             }
-            let go = self.rt.generate(&self.opts.model, k, scored, &self.cache, self.last_token)?;
-            self.cache.replace_from_device(&go.k, &go.v, &go.lens, k, self.n_tokens)?;
+            let mut go =
+                self.rt.generate(&self.opts.model, k, scored, &mut self.cache, self.last_token)?;
+            // merge the appended rows and adopt the downloaded state as the
+            // next upload's scratch image (the steady-state decode path
+            // re-gathers nothing)
+            self.rt.absorb_generated(&mut self.cache, &mut go, k, self.n_tokens)?;
             if let Some(mass) = &go.mass {
                 let c = self.cache.c;
                 for layer in 0..self.cache.l {
@@ -236,8 +240,9 @@ impl<'rt> Engine<'rt> {
     /// sampling).
     pub fn step_logits(&mut self) -> Result<Vec<f32>> {
         self.check_memory(1)?;
-        let go = self.rt.generate(&self.opts.model, 1, false, &self.cache, self.last_token)?;
-        self.cache.replace_from_device(&go.k, &go.v, &go.lens, 1, self.n_tokens)?;
+        let mut go =
+            self.rt.generate(&self.opts.model, 1, false, &mut self.cache, self.last_token)?;
+        self.rt.absorb_generated(&mut self.cache, &mut go, 1, self.n_tokens)?;
         self.last_token = go.tokens[0];
         self.n_tokens += 1;
         self.evict()?;

@@ -16,8 +16,9 @@
 //!   over the compacted cache (attention-map-free: the property that gives
 //!   LaCache its throughput edge over importance-based eviction).
 //!
-//! See DESIGN.md for the experiment index and substitution ledger, and
-//! EXPERIMENTS.md for paper-vs-measured results.
+//! See PERF.md for the host<->device transfer layer (dirty-range incremental
+//! KV gather, reusable scratch images) and the benchmark methodology, and
+//! ROADMAP.md for the growth plan.
 
 pub mod cache;
 pub mod config;

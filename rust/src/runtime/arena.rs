@@ -27,9 +27,12 @@ pub const PAGE_SLOTS: usize = 16;
 /// allocation would push the pool past its byte budget.
 pub const ARENA_OOM_MARKER: &str = "kv-arena-OOM";
 
-/// One page: `PAGE_SLOTS` KV rows for one layer, row-major
-/// `[PAGE_SLOTS, H, Dh]` — one slot's full `[H, Dh]` row is contiguous, so
-/// compaction moves are single `memcpy`s per relocated slot.
+/// One page: `PAGE_SLOTS` KV rows for one layer, stored **head-major**
+/// `[H, PAGE_SLOTS, Dh]` — one head's slots are contiguous, matching the
+/// device-contiguous `[L, H, C, Dh]` image layout so gather/scatter move
+/// whole `PAGE_SLOTS * Dh` runs per head (16x fewer copies than the
+/// slot-major layout's `Dh` fragments). Compaction relocates a slot with
+/// one `Dh`-sized move per head (see `KvCache::retain_slots`).
 pub struct Page {
     pub k: Vec<f32>,
     pub v: Vec<f32>,

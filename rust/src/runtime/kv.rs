@@ -1,18 +1,48 @@
 //! Host-side KV cache state over the shared paged arena: per-layer page
-//! tables + occupancy + original-token-position bookkeeping.
+//! tables + occupancy + original-token-position bookkeeping + dirty-range
+//! tracking against the last materialized dense image.
 //!
-//! Rows live in fixed-size arena pages ([`PAGE_SLOTS`] slots, each slot a
-//! contiguous `[H, Dh]` row). Slot order within a layer is time order;
-//! eviction is an order-preserving in-place remap (`retain_slots`) that only
-//! touches rows whose slot index changes, after which slot index ==
-//! cache-relative RoPE position on the device side. The device-contiguous
-//! `[L, H, C, Dh]` layout is materialized on demand ([`KvCache::gather_dense`])
-//! at program-call time, so a sequence's host memory tracks its actual
-//! occupancy (`lens`) instead of the compiled capacity `C`.
+//! Rows live in fixed-size arena pages ([`PAGE_SLOTS`] slots per page) stored
+//! **head-major** `[H, PAGE_SLOTS, Dh]`: one head's slots are contiguous, so
+//! gather/scatter against the device-contiguous `[L, H, C, Dh]` layout moves
+//! whole `PAGE_SLOTS * Dh` runs instead of `Dh`-sized fragments. Slot order
+//! within a layer is time order; eviction is an order-preserving in-place
+//! remap ([`KvCache::retain_slots`]) that only touches rows whose slot index
+//! changes, after which slot index == cache-relative RoPE position on the
+//! device side.
+//!
+//! Every mutation (append, retain, truncate, device merge) records which slot
+//! ranges diverged from the image materialized at the last
+//! [`KvCache::mark_synced`] point, so the transfer layer
+//! ([`super::transfer::ScratchPool`]) re-copies only those ranges into its
+//! reusable scratch — a pure-append decode step gathers only the appended
+//! rows, and an unchanged cache gathers nothing. See PERF.md for the
+//! dirty-tracking invariants.
+
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{bail, Result};
 
 use super::arena::{KvArena, Page, PAGE_SLOTS};
+
+/// Unique-per-instance cache ids: the scratch-pool key that makes a dense
+/// image attributable to exactly one cache (clones and resets get fresh ids).
+static NEXT_CACHE_ID: AtomicU64 = AtomicU64::new(1);
+
+/// Byte counts from one gather: page→dense copies and stale-tail zero-fill.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct GatherBytes {
+    /// Bytes copied from pages into the dense image (K + V).
+    pub copied: u64,
+    /// Bytes zero-filled where the cache shrank below the old image (K + V).
+    pub zeroed: u64,
+}
+
+impl GatherBytes {
+    pub fn total(&self) -> u64 {
+        self.copied + self.zeroed
+    }
+}
 
 pub struct KvCache {
     pub l: usize,
@@ -30,6 +60,16 @@ pub struct KvCache {
     /// Accumulated attention mass per valid slot, per layer (H2O-family
     /// bookkeeping; stays zero on the fast path).
     pub mass: Vec<Vec<f64>>,
+    /// Unique instance id (scratch-pool key).
+    id: u64,
+    /// Bumped by [`Self::mark_synced`]; a scratch image is incremental-valid
+    /// iff it recorded this exact (id, sync_gen) pair.
+    sync_gen: u64,
+    /// Per-layer slot interval `[lo, hi)` that diverged from the image at the
+    /// last sync point (`None` = layer unchanged). A single merged interval:
+    /// appends/evictions/truncations are all tail-heavy, so the union of the
+    /// true dirty set stays tight in practice.
+    dirty: Vec<Option<(usize, usize)>>,
 }
 
 impl KvCache {
@@ -50,6 +90,9 @@ impl KvCache {
             lens: vec![0; l],
             positions: vec![Vec::new(); l],
             mass: vec![Vec::new(); l],
+            id: NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed),
+            sync_gen: 0,
+            dirty: vec![None; l],
         }
     }
 
@@ -57,6 +100,56 @@ impl KvCache {
     #[inline]
     pub fn row_width(&self) -> usize {
         self.h * self.dh
+    }
+
+    /// Elements of one dense `[L, H, C, Dh]` image (K or V).
+    #[inline]
+    pub fn dense_elems(&self) -> usize {
+        self.l * self.h * self.c * self.dh
+    }
+
+    /// Unique instance id (fresh per construction/clone/reset).
+    #[inline]
+    pub fn id(&self) -> u64 {
+        self.id
+    }
+
+    /// Sync-point generation; see [`Self::mark_synced`].
+    #[inline]
+    pub fn sync_gen(&self) -> u64 {
+        self.sync_gen
+    }
+
+    /// True when no slot range diverged since the last sync point.
+    pub fn is_clean(&self) -> bool {
+        self.dirty.iter().all(|d| d.is_none())
+    }
+
+    /// Dirty slot interval for one layer (`None` = unchanged since sync).
+    pub fn dirty_range(&self, layer: usize) -> Option<(usize, usize)> {
+        self.dirty[layer]
+    }
+
+    /// Declare the current state fully materialized: clears dirty ranges and
+    /// bumps the sync generation. Only the transfer layer should call this —
+    /// immediately after it copied the dirty ranges (or a full image) into a
+    /// scratch, or absorbed a device image that equals the current state.
+    pub fn mark_synced(&mut self) {
+        self.sync_gen += 1;
+        for d in self.dirty.iter_mut() {
+            *d = None;
+        }
+    }
+
+    fn mark_dirty(&mut self, layer: usize, lo: usize, hi: usize) {
+        if lo >= hi {
+            return;
+        }
+        debug_assert!(hi <= self.c);
+        self.dirty[layer] = Some(match self.dirty[layer] {
+            None => (lo, hi),
+            Some((a, b)) => (a.min(lo), b.max(hi)),
+        });
     }
 
     pub fn lens_i32(&self) -> Vec<i32> {
@@ -85,15 +178,21 @@ impl KvCache {
         self.lens.iter().copied().max().unwrap_or(0)
     }
 
+    /// Offset of (head, in-page slot) in the head-major page buffer.
+    #[inline]
+    fn page_off(&self, head: usize, slot_in_page: usize) -> usize {
+        (head * PAGE_SLOTS + slot_in_page) * self.dh
+    }
+
     /// One slot's K row for one head (`Dh` floats).
     pub fn row_k(&self, layer: usize, head: usize, slot: usize) -> &[f32] {
-        let off = ((slot % PAGE_SLOTS) * self.h + head) * self.dh;
+        let off = self.page_off(head, slot % PAGE_SLOTS);
         &self.pages[layer][slot / PAGE_SLOTS].k[off..off + self.dh]
     }
 
     /// One slot's V row for one head (`Dh` floats).
     pub fn row_v(&self, layer: usize, head: usize, slot: usize) -> &[f32] {
-        let off = ((slot % PAGE_SLOTS) * self.h + head) * self.dh;
+        let off = self.page_off(head, slot % PAGE_SLOTS);
         &self.pages[layer][slot / PAGE_SLOTS].v[off..off + self.dh]
     }
 
@@ -117,6 +216,7 @@ impl KvCache {
 
     /// Append one layer's window K/V rows (from a score program's output,
     /// shaped `[H, W, Dh]` with `n_valid <= W` rows valid) at the tail.
+    /// Head-major pages make this a per-(page-run, head) block copy.
     pub fn append_layer(
         &mut self,
         layer: usize,
@@ -133,29 +233,36 @@ impl KvCache {
         debug_assert_eq!(win_k.len(), self.h * w * self.dh);
         self.ensure_pages(layer, len + n_valid)?;
         let (h, dh) = (self.h, self.dh);
-        for i in 0..n_valid {
+        let mut i = 0;
+        while i < n_valid {
             let slot = len + i;
+            let sp = slot % PAGE_SLOTS;
+            let run = (PAGE_SLOTS - sp).min(n_valid - i);
             let page = &mut self.pages[layer][slot / PAGE_SLOTS];
             for hh in 0..h {
                 let src = (hh * w + i) * dh;
-                let dst = ((slot % PAGE_SLOTS) * h + hh) * dh;
-                page.k[dst..dst + dh].copy_from_slice(&win_k[src..src + dh]);
-                page.v[dst..dst + dh].copy_from_slice(&win_v[src..src + dh]);
+                let dst = (hh * PAGE_SLOTS + sp) * dh;
+                page.k[dst..dst + run * dh].copy_from_slice(&win_k[src..src + run * dh]);
+                page.v[dst..dst + run * dh].copy_from_slice(&win_v[src..src + run * dh]);
             }
+            i += run;
         }
         self.lens[layer] = len + n_valid;
         for i in 0..n_valid {
             self.positions[layer].push(first_pos + i as u64);
             self.mass[layer].push(0.0);
         }
+        self.mark_dirty(layer, len, len + n_valid);
         Ok(())
     }
 
     /// Order-preserving compaction: keep exactly the slots in `keep`
     /// (sorted, unique, all < lens[layer]) for one layer. Rows whose slot
-    /// index is unchanged are untouched; the rest move once (in-page
-    /// `copy_within`, or one bounce through a scratch row across pages), and
-    /// emptied tail pages return to the arena.
+    /// index is unchanged are untouched; the rest move once per head
+    /// (in-page `copy_within`, or a direct cross-page copy — the destination
+    /// page index is always strictly below the source's), and emptied tail
+    /// pages return to the arena. Everything from the first moved slot to
+    /// the old length is marked dirty (covering the vacated tail).
     pub fn retain_slots(&mut self, layer: usize, keep: &[usize]) -> Result<()> {
         let len = self.lens[layer];
         let mut prev: Option<usize> = None;
@@ -170,43 +277,60 @@ impl KvCache {
             }
             prev = Some(s);
         }
-        let rw = self.row_width();
-        let mut scratch_k = vec![0.0f32; rw];
-        let mut scratch_v = vec![0.0f32; rw];
+        // first slot whose content changes (moved row or vacated tail)
+        let first_change = keep
+            .iter()
+            .enumerate()
+            .position(|(dst_i, &src_i)| dst_i != src_i)
+            .unwrap_or(keep.len());
+        let (h, dh) = (self.h, self.dh);
         for (dst_i, &src_i) in keep.iter().enumerate() {
             if dst_i == src_i {
                 continue; // prefix already in place
             }
-            let (sp, so) = (src_i / PAGE_SLOTS, (src_i % PAGE_SLOTS) * rw);
-            let (dp, dof) = (dst_i / PAGE_SLOTS, (dst_i % PAGE_SLOTS) * rw);
-            if sp == dp {
-                let page = &mut self.pages[layer][sp];
-                page.k.copy_within(so..so + rw, dof);
-                page.v.copy_within(so..so + rw, dof);
+            let (spi, so) = (src_i / PAGE_SLOTS, src_i % PAGE_SLOTS);
+            let (dpi, dof) = (dst_i / PAGE_SLOTS, dst_i % PAGE_SLOTS);
+            if spi == dpi {
+                let page = &mut self.pages[layer][spi];
+                for hh in 0..h {
+                    let s = (hh * PAGE_SLOTS + so) * dh;
+                    let d = (hh * PAGE_SLOTS + dof) * dh;
+                    page.k.copy_within(s..s + dh, d);
+                    page.v.copy_within(s..s + dh, d);
+                }
             } else {
-                scratch_k.copy_from_slice(&self.pages[layer][sp].k[so..so + rw]);
-                scratch_v.copy_from_slice(&self.pages[layer][sp].v[so..so + rw]);
-                let dpage = &mut self.pages[layer][dp];
-                dpage.k[dof..dof + rw].copy_from_slice(&scratch_k);
-                dpage.v[dof..dof + rw].copy_from_slice(&scratch_v);
+                // dst_i < src_i for strictly-increasing keep, so dpi < spi
+                let (head_pages, tail_pages) = self.pages[layer].split_at_mut(spi);
+                let spage = &tail_pages[0];
+                let dpage = &mut head_pages[dpi];
+                for hh in 0..h {
+                    let s = (hh * PAGE_SLOTS + so) * dh;
+                    let d = (hh * PAGE_SLOTS + dof) * dh;
+                    dpage.k[d..d + dh].copy_from_slice(&spage.k[s..s + dh]);
+                    dpage.v[d..d + dh].copy_from_slice(&spage.v[s..s + dh]);
+                }
             }
         }
         self.positions[layer] = keep.iter().map(|&s| self.positions[layer][s]).collect();
         self.mass[layer] = keep.iter().map(|&s| self.mass[layer][s]).collect();
         self.lens[layer] = keep.len();
+        self.mark_dirty(layer, first_change, len);
         self.release_excess(layer);
         Ok(())
     }
 
     /// Drop the tail so exactly `new_len` slots remain (the engine's rollback
-    /// of over-generated decode steps). Emptied pages return to the arena.
+    /// of over-generated decode steps). Emptied pages return to the arena and
+    /// the dropped range is marked dirty so the next gather zero-fills it.
     pub fn truncate_layer(&mut self, layer: usize, new_len: usize) -> Result<()> {
         if new_len > self.lens[layer] {
             bail!("truncate_layer: {new_len} > len {}", self.lens[layer]);
         }
+        let old_len = self.lens[layer];
         self.lens[layer] = new_len;
         self.positions[layer].truncate(new_len);
         self.mass[layer].truncate(new_len);
+        self.mark_dirty(layer, new_len, old_len);
         self.release_excess(layer);
         Ok(())
     }
@@ -218,6 +342,11 @@ impl KvCache {
     /// engine's authoritative stream position of the first appended token:
     /// it cannot be inferred from `positions.last() + 1`, which drifts
     /// whenever the recency tail was evicted (any `n_recent = 0` config).
+    ///
+    /// The appended ranges are marked dirty; when the caller hands the same
+    /// device buffers to [`super::transfer::ScratchPool::absorb`] right
+    /// after, that absorb marks them clean again (the device output *is* the
+    /// current dense image) and the next gather for this cache is a no-op.
     pub fn replace_from_device(
         &mut self,
         k: &[f32],
@@ -226,7 +355,7 @@ impl KvCache {
         appended: usize,
         first_pos: u64,
     ) -> Result<()> {
-        debug_assert_eq!(k.len(), self.l * self.h * self.c * self.dh);
+        debug_assert_eq!(k.len(), self.dense_elems());
         let (h, c, dh) = (self.h, self.c, self.dh);
         for l in 0..self.l {
             let new_len = lens[l] as usize;
@@ -240,40 +369,136 @@ impl KvCache {
                 }
             }
             self.ensure_pages(l, new_len)?;
-            for slot in old_len..new_len {
+            let mut slot = old_len;
+            while slot < new_len {
+                let sp = slot % PAGE_SLOTS;
+                let run = (PAGE_SLOTS - sp).min(new_len - slot);
                 let page = &mut self.pages[l][slot / PAGE_SLOTS];
                 for hh in 0..h {
                     let src = ((l * h + hh) * c + slot) * dh;
-                    let dst = ((slot % PAGE_SLOTS) * h + hh) * dh;
-                    page.k[dst..dst + dh].copy_from_slice(&k[src..src + dh]);
-                    page.v[dst..dst + dh].copy_from_slice(&v[src..src + dh]);
+                    let dst = (hh * PAGE_SLOTS + sp) * dh;
+                    page.k[dst..dst + run * dh].copy_from_slice(&k[src..src + run * dh]);
+                    page.v[dst..dst + run * dh].copy_from_slice(&v[src..src + run * dh]);
                 }
+                slot += run;
             }
             for i in 0..appended {
                 self.positions[l].push(first_pos + i as u64);
                 self.mass[l].push(0.0);
             }
             self.lens[l] = new_len;
+            self.mark_dirty(l, old_len, new_len);
         }
         Ok(())
     }
 
-    /// Materialize the device-contiguous `[L, H, C, Dh]` K/V buffers
-    /// (invalid slots zero-padded) for a program call.
-    pub fn gather_dense(&self) -> (Vec<f32>, Vec<f32>) {
+    /// Copy slots `[lo, hi)` of one layer (all heads) into a dense
+    /// `[L, H, C, Dh]` image; `hi <= lens[layer]`. Head-major pages make each
+    /// (page-run, head) transfer one contiguous `run * Dh` block on both
+    /// sides. Returns f32 elements copied per buffer side (K and V each).
+    fn copy_slots_into(
+        &self,
+        layer: usize,
+        lo: usize,
+        hi: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> u64 {
         let (h, c, dh) = (self.h, self.c, self.dh);
-        let mut k = vec![0.0f32; self.l * h * c * dh];
-        let mut v = vec![0.0f32; self.l * h * c * dh];
-        for l in 0..self.l {
-            for slot in 0..self.lens[l] {
-                let page = &self.pages[l][slot / PAGE_SLOTS];
-                for hh in 0..h {
-                    let src = ((slot % PAGE_SLOTS) * h + hh) * dh;
-                    let dst = ((l * h + hh) * c + slot) * dh;
-                    k[dst..dst + dh].copy_from_slice(&page.k[src..src + dh]);
-                    v[dst..dst + dh].copy_from_slice(&page.v[src..src + dh]);
-                }
+        let mut copied = 0u64;
+        let mut slot = lo;
+        while slot < hi {
+            let sp = slot % PAGE_SLOTS;
+            let run = (PAGE_SLOTS - sp).min(hi - slot);
+            let page = &self.pages[layer][slot / PAGE_SLOTS];
+            for hh in 0..h {
+                let src = (hh * PAGE_SLOTS + sp) * dh;
+                let dst = ((layer * h + hh) * c + slot) * dh;
+                k_out[dst..dst + run * dh].copy_from_slice(&page.k[src..src + run * dh]);
+                v_out[dst..dst + run * dh].copy_from_slice(&page.v[src..src + run * dh]);
             }
+            copied += (h * run * dh) as u64;
+            slot += run;
+        }
+        copied
+    }
+
+    /// Zero slots `[lo, hi)` of one layer (all heads) in a dense image.
+    /// Returns f32 elements written per buffer side.
+    fn zero_slots_in(
+        &self,
+        layer: usize,
+        lo: usize,
+        hi: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) -> u64 {
+        if lo >= hi {
+            return 0;
+        }
+        let (h, c, dh) = (self.h, self.c, self.dh);
+        for hh in 0..h {
+            let dst = ((layer * h + hh) * c + lo) * dh;
+            let n = (hi - lo) * dh;
+            k_out[dst..dst + n].fill(0.0);
+            v_out[dst..dst + n].fill(0.0);
+        }
+        (h * (hi - lo) * dh) as u64
+    }
+
+    /// Write the complete dense `[L, H, C, Dh]` image (valid rows + zero
+    /// padding) into caller-provided buffers, touching every element exactly
+    /// once. Does not change dirty state — callers that keep the image as a
+    /// synced scratch call [`Self::mark_synced`] afterwards.
+    pub fn gather_full_into(&self, k_out: &mut [f32], v_out: &mut [f32]) -> GatherBytes {
+        assert_eq!(k_out.len(), self.dense_elems());
+        assert_eq!(v_out.len(), self.dense_elems());
+        let mut out = GatherBytes::default();
+        for l in 0..self.l {
+            let len = self.lens[l];
+            out.copied += 2 * 4 * self.copy_slots_into(l, 0, len, k_out, v_out);
+            out.zeroed += 2 * 4 * self.zero_slots_in(l, len, self.c, k_out, v_out);
+        }
+        out
+    }
+
+    /// Re-copy only the dirty slot ranges into a dense image that was synced
+    /// with this cache at the last [`Self::mark_synced`] point: valid dirty
+    /// slots come from the pages, dirty slots beyond the current length are
+    /// zero-filled (the cache shrank since the image was made). The caller
+    /// must guarantee the buffers hold that synced image — the transfer
+    /// layer's (id, sync_gen) check. Does not change dirty state.
+    pub fn gather_dirty_into(&self, k_out: &mut [f32], v_out: &mut [f32]) -> GatherBytes {
+        assert_eq!(k_out.len(), self.dense_elems());
+        assert_eq!(v_out.len(), self.dense_elems());
+        let mut out = GatherBytes::default();
+        for l in 0..self.l {
+            let Some((lo, hi)) = self.dirty[l] else {
+                continue;
+            };
+            let len = self.lens[l];
+            let copy_hi = hi.min(len);
+            if lo < copy_hi {
+                out.copied += 2 * 4 * self.copy_slots_into(l, lo, copy_hi, k_out, v_out);
+            }
+            let zero_lo = lo.max(len);
+            if zero_lo < hi {
+                out.zeroed += 2 * 4 * self.zero_slots_in(l, zero_lo, hi, k_out, v_out);
+            }
+        }
+        out
+    }
+
+    /// Materialize a fresh device-contiguous `[L, H, C, Dh]` K/V pair
+    /// (invalid slots zero-padded). Allocates two full buffers per call —
+    /// this is the reference/cold path; the serving hot path goes through
+    /// [`super::transfer::ScratchPool::gather`] instead.
+    pub fn gather_dense(&self) -> (Vec<f32>, Vec<f32>) {
+        let n = self.dense_elems();
+        let mut k = vec![0.0f32; n];
+        let mut v = vec![0.0f32; n];
+        for l in 0..self.l {
+            self.copy_slots_into(l, 0, self.lens[l], &mut k, &mut v);
         }
         (k, v)
     }
@@ -309,15 +534,21 @@ impl KvCache {
                     bail!("positions not strictly increasing in layer {l}");
                 }
             }
+            if let Some((lo, hi)) = self.dirty[l] {
+                if lo >= hi || hi > self.c {
+                    bail!("malformed dirty range [{lo}, {hi}) in layer {l} (C {})", self.c);
+                }
+            }
         }
         Ok(())
     }
 }
 
 impl Clone for KvCache {
-    /// Deep copy: fresh pages from the same arena. Panics if the arena
-    /// budget cannot accommodate the copy (clones are a bench/test affair;
-    /// the serving path never clones caches).
+    /// Deep copy: fresh pages from the same arena and a fresh id (no scratch
+    /// image can match the clone, so its first gather is a full one). Panics
+    /// if the arena budget cannot accommodate the copy (clones are a
+    /// bench/test affair; the serving path never clones caches).
     fn clone(&self) -> Self {
         let mut out = KvCache::with_arena(self.arena.clone(), self.l, self.h, self.c, self.dh);
         let rw = self.row_width();
@@ -335,6 +566,10 @@ impl Clone for KvCache {
         out.lens = self.lens.clone();
         out.positions = self.positions.clone();
         out.mass = self.mass.clone();
+        for l in 0..out.l {
+            let len = out.lens[l];
+            out.mark_dirty(l, 0, len);
+        }
         out
     }
 }
@@ -359,6 +594,7 @@ impl std::fmt::Debug for KvCache {
             .field("dh", &self.dh)
             .field("lens", &self.lens)
             .field("resident_bytes", &self.resident_bytes())
+            .field("dirty", &self.dirty)
             .finish()
     }
 }
@@ -508,14 +744,68 @@ mod tests {
     }
 
     #[test]
-    fn clone_is_deep() {
+    fn clone_is_deep_with_fresh_identity() {
         let kv = filled(1, 1, 16, 2, 5);
         let mut c = kv.clone();
+        assert_ne!(kv.id(), c.id(), "clone must get a fresh scratch-pool id");
         c.retain_slots(0, &[0, 4]).unwrap();
         assert_eq!(kv.lens[0], 5);
         assert_eq!(c.lens[0], 2);
         assert_eq!(kv.row_k(0, 0, 1)[0], 1.0);
         assert_eq!(c.row_k(0, 0, 1)[0], 4.0);
+    }
+
+    #[test]
+    fn dirty_ranges_track_mutations_and_sync() {
+        let mut kv = filled(2, 1, 64, 2, 10);
+        // appends since construction: everything dirty
+        assert_eq!(kv.dirty_range(0), Some((0, 10)));
+        assert!(!kv.is_clean());
+        kv.mark_synced();
+        assert!(kv.is_clean());
+        let g0 = kv.sync_gen();
+
+        // pure append dirties exactly the appended range
+        let w = vec![0.0f32; 3 * 2];
+        kv.append_layer(0, &w, &w, 3, 3, 10).unwrap();
+        assert_eq!(kv.dirty_range(0), Some((10, 13)));
+        assert_eq!(kv.dirty_range(1), None, "other layers stay clean");
+
+        // truncate dirties the dropped tail
+        kv.truncate_layer(0, 11).unwrap();
+        assert_eq!(kv.dirty_range(0), Some((10, 13)), "merged with append range");
+
+        // retain dirties from the first moved slot through the old length
+        kv.mark_synced();
+        kv.retain_slots(0, &[0, 1, 5, 6]).unwrap();
+        assert_eq!(kv.dirty_range(0), Some((2, 11)));
+
+        // identity retain leaves the layer clean
+        kv.mark_synced();
+        kv.retain_slots(0, &[0, 1, 2, 3]).unwrap();
+        assert_eq!(kv.dirty_range(0), None);
+        assert!(kv.sync_gen() > g0);
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn gather_dirty_matches_full_after_shrink() {
+        // a synced image updated through gather_dirty_into must equal a
+        // from-scratch gather, including zero-fill of the shrunk tail
+        let mut kv = filled(2, 2, 32, 3, 20);
+        let n = kv.dense_elems();
+        let (mut ik, mut iv) = (vec![0.0f32; n], vec![0.0f32; n]);
+        kv.gather_full_into(&mut ik, &mut iv);
+        kv.mark_synced();
+
+        kv.retain_slots(0, &[0, 3, 7]).unwrap();
+        kv.truncate_layer(1, 4).unwrap();
+        let gb = kv.gather_dirty_into(&mut ik, &mut iv);
+        assert!(gb.zeroed > 0, "shrunk regions must be zero-filled");
+
+        let (fk, fv) = kv.gather_dense();
+        assert_eq!(ik, fk);
+        assert_eq!(iv, fv);
     }
 
     /// Reference model: plain dense per-layer rows, the old storage layout.
@@ -559,9 +849,9 @@ mod tests {
 
     #[test]
     fn paged_store_matches_dense_reference_property() {
-        // arena-backed page layout must be observationally identical to the
-        // old dense layout: same gather_dense output, rows, and positions
-        // under arbitrary append/retain interleavings
+        // the head-major arena page layout must be observationally identical
+        // to the old dense layout: same gather_dense output, rows, and
+        // positions under arbitrary append/retain interleavings
         PropRunner::new(60).run(
             |rng: &mut Xoshiro256| {
                 let h = 1 + rng.below(3) as usize;

@@ -5,14 +5,20 @@
 //!
 //! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
 //! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
-//! Weights are uploaded to the device once per model; per call we upload the
-//! cache + token buffers and download the output tuple (PJRT returns the
-//! root tuple as a single buffer, so state round-trips host<->device per
-//! call — measured and attacked in EXPERIMENTS.md §Perf).
+//! Weights are uploaded to the device once per model. Per call, the paged KV
+//! store is materialized through the [`transfer::ScratchPool`]: a reusable
+//! dense image per cache that is re-copied only over dirty slot ranges (a
+//! pure-append decode step gathers just the appended rows; an unchanged
+//! cache gathers nothing), and on the generate path the downloaded device
+//! state is absorbed wholesale as the next image
+//! ([`Runtime::absorb_generated`]). Transfer volume is tracked per call in
+//! [`RuntimeStats`] (`bytes_h2d` / `bytes_d2h` / `gather_s`); see PERF.md
+//! for the transfer-layer design, invariants, and bench methodology.
 
 pub mod arena;
 pub mod kv;
 pub mod manifest;
+pub mod transfer;
 
 use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
@@ -25,17 +31,52 @@ use anyhow::{bail, Context, Result};
 pub use arena::{
     admission_ok, seq_footprint_bytes, ArenaStats, KvArena, Page, ARENA_OOM_MARKER, PAGE_SLOTS,
 };
-pub use kv::KvCache;
+pub use kv::{GatherBytes, KvCache};
 pub use manifest::{Manifest, ModelCfg, ProgKind, ProgMeta};
+pub use transfer::{DenseImage, ScratchPool, TransferStats};
 
-/// Cumulative runtime counters (per process) for the perf log.
+/// Dense scratch images the runtime keeps warm (LRU) — one per sequence in
+/// the serving hot set. A sequence beyond this pays one full re-gather when
+/// it rotates back in.
+const SCRATCH_POOL_ENTRIES: usize = 16;
+
+/// Cumulative runtime counters (per process) for the perf log. The transfer
+/// fields are folded in from the scratch pool by [`Runtime::stats`].
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
     pub calls: u64,
     pub compile_s: f64,
+    /// Host->device upload time (includes the host-side gather; `gather_s`
+    /// isolates that part).
     pub upload_s: f64,
     pub execute_s: f64,
     pub download_s: f64,
+    /// Bytes uploaded host->device across all calls.
+    pub bytes_h2d: u64,
+    /// Bytes downloaded device->host across all calls.
+    pub bytes_d2h: u64,
+    /// Host-side gather wall-clock (pages -> dense scratch image).
+    pub gather_s: f64,
+    /// Bytes written into scratch images (dirty copies + zero-fill) — the
+    /// number the incremental path drives toward zero per decode step.
+    pub gathered_bytes: u64,
+    pub gathers_full: u64,
+    pub gathers_incremental: u64,
+    pub gathers_noop: u64,
+    /// Dense-buffer allocations by the transfer layer (zero after warmup).
+    pub dense_scratch_allocs: u64,
+    /// Host bytes currently pooled as scratch images (staging memory outside
+    /// the arena's device budget; bounded by the pool's entry cap).
+    pub scratch_resident_bytes: u64,
+}
+
+/// Reusable small per-call buffers (padded token/target windows, i32 lens):
+/// steady-state calls allocate nothing here.
+#[derive(Default)]
+struct CallBuf {
+    tok: Vec<i32>,
+    tgt: Vec<i32>,
+    lens: Vec<i32>,
 }
 
 pub struct LoadedModel {
@@ -53,6 +94,10 @@ pub struct Runtime {
     pub man: Manifest,
     models: BTreeMap<String, LoadedModel>,
     stats: RefCell<RuntimeStats>,
+    /// Reusable dense K/V transfer images (dirty-range incremental gather).
+    scratch: RefCell<ScratchPool>,
+    /// Reusable small i32 call buffers.
+    call_buf: RefCell<CallBuf>,
     /// Simulated device-memory budget in bytes (None = unlimited). The
     /// engine consults this to reproduce the paper's OOM axis.
     pub memory_budget_bytes: Cell<Option<usize>>,
@@ -71,7 +116,9 @@ pub struct ScoreOut {
     pub mass: Option<Vec<f32>>,
 }
 
-/// Output of a generate (greedy decode) call.
+/// Output of a generate (greedy decode) call. `k`/`v` hold the full device
+/// state image `[L, H, C, Dh]`; [`Runtime::absorb_generated`] takes them to
+/// seed the next call's upload, leaving empty vectors behind.
 pub struct GenOut {
     pub tokens: Vec<i32>,
     pub last_logits: Vec<f32>,
@@ -126,6 +173,8 @@ impl Runtime {
             man,
             models,
             stats: RefCell::new(RuntimeStats::default()),
+            scratch: RefCell::new(ScratchPool::new(SCRATCH_POOL_ENTRIES)),
+            call_buf: RefCell::new(CallBuf::default()),
             memory_budget_bytes: Cell::new(None),
         })
     }
@@ -134,8 +183,24 @@ impl Runtime {
         self.models.get(name).with_context(|| format!("model `{name}` not loaded"))
     }
 
+    /// Runtime counters with the transfer-layer stats folded in.
     pub fn stats(&self) -> RuntimeStats {
-        self.stats.borrow().clone()
+        let mut st = self.stats.borrow().clone();
+        let pool = self.scratch.borrow();
+        let ts = pool.stats();
+        st.gather_s = ts.gather_s;
+        st.gathered_bytes = ts.gathered_bytes + ts.zeroed_bytes;
+        st.gathers_full = ts.gathers_full;
+        st.gathers_incremental = ts.gathers_incremental;
+        st.gathers_noop = ts.gathers_noop;
+        st.dense_scratch_allocs = ts.dense_allocs;
+        st.scratch_resident_bytes = pool.resident_bytes() as u64;
+        st
+    }
+
+    /// Raw transfer-layer counters (bench/diagnostic use).
+    pub fn transfer_stats(&self) -> TransferStats {
+        self.scratch.borrow().stats()
     }
 
     /// Pre-compile a set of programs (avoids first-call latency in serving).
@@ -177,6 +242,8 @@ impl Runtime {
     /// Teacher-forced scoring of `tokens` (with next-token `targets`) over
     /// the resident cache. `tokens.len()` may be shorter than the program
     /// window; inputs are padded and only valid logprobs are meaningful.
+    /// Takes the cache mutably to advance its dirty-range sync point.
+    #[allow(clippy::too_many_arguments)]
     pub fn score(
         &self,
         model: &str,
@@ -185,7 +252,7 @@ impl Runtime {
         scored: bool,
         tokens: &[i32],
         targets: &[i32],
-        cache: &KvCache,
+        cache: &mut KvCache,
     ) -> Result<ScoreOut> {
         let prog = self.man.score_prog(model, w, c, scored)?.clone();
         let exe = self.exe(model, &prog)?;
@@ -197,20 +264,29 @@ impl Runtime {
         if cache.c != c || cache.l != cfg.n_layers {
             bail!("score: cache shape mismatch (cache c={} prog c={c})", cache.c);
         }
-        let mut tok = tokens.to_vec();
-        let mut tgt = targets.to_vec();
-        tok.resize(w, 0);
-        tgt.resize(w, 0);
-
-        let t0 = Instant::now();
         let (l, h, dh) = (cache.l, cache.h, cache.dh);
-        let tok_b = self.upload_i32(&tok, &[w])?;
-        let tgt_b = self.upload_i32(&tgt, &[w])?;
-        // gather the paged store into the device-contiguous layout
-        let (kd, vd) = cache.gather_dense();
-        let kc_b = self.upload_f32(&kd, &[l, h, c, dh])?;
-        let vc_b = self.upload_f32(&vd, &[l, h, c, dh])?;
-        let lens_b = self.upload_i32(&cache.lens_i32(), &[l])?;
+        let t0 = Instant::now();
+        let (tok_b, tgt_b, lens_b, kc_b, vc_b) = {
+            // pad the token windows into the reusable call buffers
+            let mut bufs = self.call_buf.borrow_mut();
+            bufs.tok.clear();
+            bufs.tok.extend_from_slice(tokens);
+            bufs.tok.resize(w, 0);
+            bufs.tgt.clear();
+            bufs.tgt.extend_from_slice(targets);
+            bufs.tgt.resize(w, 0);
+            bufs.lens.clear();
+            bufs.lens.extend(cache.lens.iter().map(|&x| x as i32));
+            let tok_b = self.upload_i32(&bufs.tok, &[w])?;
+            let tgt_b = self.upload_i32(&bufs.tgt, &[w])?;
+            let lens_b = self.upload_i32(&bufs.lens, &[l])?;
+            // incremental gather of the paged store into the reusable image
+            let mut pool = self.scratch.borrow_mut();
+            let image = pool.gather(cache);
+            let kc_b = self.upload_f32(&image.k, &[l, h, c, dh])?;
+            let vc_b = self.upload_f32(&image.v, &[l, h, c, dh])?;
+            (tok_b, tgt_b, lens_b, kc_b, vc_b)
+        };
         let arg_refs: Vec<&xla::PjRtBuffer> =
             vec![&lm.weights, &tok_b, &tgt_b, &kc_b, &vc_b, &lens_b];
         let t1 = Instant::now();
@@ -219,13 +295,6 @@ impl Runtime {
         let lit = out[0][0].to_literal_sync()?;
         let mut parts = lit.to_tuple()?;
         let t3 = Instant::now();
-        {
-            let mut st = self.stats.borrow_mut();
-            st.calls += 1;
-            st.upload_s += (t1 - t0).as_secs_f64();
-            st.execute_s += (t2 - t1).as_secs_f64();
-            st.download_s += (t3 - t2).as_secs_f64();
-        }
         let mass = if scored {
             Some(parts.pop().context("missing mass output")?.to_vec::<f32>()?)
         } else {
@@ -234,18 +303,32 @@ impl Runtime {
         let win_v = parts.pop().context("win_v")?.to_vec::<f32>()?;
         let win_k = parts.pop().context("win_k")?.to_vec::<f32>()?;
         let logprobs = parts.pop().context("logprobs")?.to_vec::<f32>()?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.calls += 1;
+            st.upload_s += (t1 - t0).as_secs_f64();
+            st.execute_s += (t2 - t1).as_secs_f64();
+            st.download_s += (t3 - t2).as_secs_f64();
+            st.bytes_h2d += 4 * (2 * cache.dense_elems() + 2 * w + l) as u64;
+            let d2h = logprobs.len()
+                + win_k.len()
+                + win_v.len()
+                + mass.as_ref().map_or(0, |m| m.len());
+            st.bytes_d2h += 4 * d2h as u64;
+        }
         Ok(ScoreOut { logprobs, win_k, win_v, mass })
     }
 
     /// Greedy decode of `k_steps` tokens; the device appends K/V in-graph,
-    /// and the returned state replaces the host cache via
-    /// [`KvCache::replace_from_device`].
+    /// and the returned state merges back into the host cache via
+    /// [`Runtime::absorb_generated`] (which also adopts it as the next
+    /// upload's scratch image).
     pub fn generate(
         &self,
         model: &str,
         k_steps: usize,
         scored: bool,
-        cache: &KvCache,
+        cache: &mut KvCache,
         last_token: i32,
     ) -> Result<GenOut> {
         self.generate_variant(model, k_steps, scored, false, cache, last_token)
@@ -253,14 +336,14 @@ impl Runtime {
 
     /// Decode with explicit program-variant selection (`pallas = true` runs
     /// the interpret-mode Pallas-kernel artifact — numerics-identical to the
-    /// fast path, used for kernel validation and the §Perf comparison).
+    /// fast path, used for kernel validation and the PERF.md comparison).
     pub fn generate_variant(
         &self,
         model: &str,
         k_steps: usize,
         scored: bool,
         pallas: bool,
-        cache: &KvCache,
+        cache: &mut KvCache,
         last_token: i32,
     ) -> Result<GenOut> {
         let c = cache.c;
@@ -279,14 +362,21 @@ impl Runtime {
                 c
             );
         }
-        let t0 = Instant::now();
         let (l, h, dh) = (cache.l, cache.h, cache.dh);
-        // gather the paged store into the device-contiguous layout
-        let (kd, vd) = cache.gather_dense();
-        let kc_b = self.upload_f32(&kd, &[l, h, c, dh])?;
-        let vc_b = self.upload_f32(&vd, &[l, h, c, dh])?;
-        let lens_b = self.upload_i32(&cache.lens_i32(), &[l])?;
-        let tok_b = self.upload_i32(&[last_token], &[])?;
+        let t0 = Instant::now();
+        let (lens_b, tok_b, kc_b, vc_b) = {
+            let mut bufs = self.call_buf.borrow_mut();
+            bufs.lens.clear();
+            bufs.lens.extend(cache.lens.iter().map(|&x| x as i32));
+            let lens_b = self.upload_i32(&bufs.lens, &[l])?;
+            let tok_b = self.upload_i32(&[last_token], &[])?;
+            // incremental gather of the paged store into the reusable image
+            let mut pool = self.scratch.borrow_mut();
+            let image = pool.gather(cache);
+            let kc_b = self.upload_f32(&image.k, &[l, h, c, dh])?;
+            let vc_b = self.upload_f32(&image.v, &[l, h, c, dh])?;
+            (lens_b, tok_b, kc_b, vc_b)
+        };
         let arg_refs: Vec<&xla::PjRtBuffer> = vec![&lm.weights, &kc_b, &vc_b, &lens_b, &tok_b];
         let t1 = Instant::now();
         let out = exe.execute_b(&arg_refs)?;
@@ -294,13 +384,6 @@ impl Runtime {
         let lit = out[0][0].to_literal_sync()?;
         let mut parts = lit.to_tuple()?;
         let t3 = Instant::now();
-        {
-            let mut st = self.stats.borrow_mut();
-            st.calls += 1;
-            st.upload_s += (t1 - t0).as_secs_f64();
-            st.execute_s += (t2 - t1).as_secs_f64();
-            st.download_s += (t3 - t2).as_secs_f64();
-        }
         let mass = if scored {
             Some(parts.pop().context("mass")?.to_vec::<f32>()?)
         } else {
@@ -311,6 +394,40 @@ impl Runtime {
         let k = parts.pop().context("kcache")?.to_vec::<f32>()?;
         let last_logits = parts.pop().context("last_logits")?.to_vec::<f32>()?;
         let tokens = parts.pop().context("tokens")?.to_vec::<i32>()?;
+        {
+            let mut st = self.stats.borrow_mut();
+            st.calls += 1;
+            st.upload_s += (t1 - t0).as_secs_f64();
+            st.execute_s += (t2 - t1).as_secs_f64();
+            st.download_s += (t3 - t2).as_secs_f64();
+            st.bytes_h2d += 4 * (2 * cache.dense_elems() + l + 1) as u64;
+            let d2h = last_logits.len()
+                + k.len()
+                + v.len()
+                + mass.as_ref().map_or(0, |m| m.len());
+            st.bytes_d2h += 4 * (d2h + tokens.len() + lens.len()) as u64;
+        }
         Ok(GenOut { tokens, last_logits, k, v, lens, mass })
+    }
+
+    /// Merge a generate call's device state into `cache` and adopt the
+    /// downloaded buffers as the cache's synced dense image: resident rows
+    /// were uploaded from this cache and pass through the program unchanged,
+    /// the appended rows are merged here, and padding beyond `lens` stays
+    /// zero — so the buffers *are* a full dense gather of the post-merge
+    /// cache, and the next upload for it re-gathers nothing. Takes `go.k` /
+    /// `go.v` (leaving them empty); the rest of `go` is untouched.
+    pub fn absorb_generated(
+        &self,
+        cache: &mut KvCache,
+        go: &mut GenOut,
+        appended: usize,
+        first_pos: u64,
+    ) -> Result<()> {
+        cache.replace_from_device(&go.k, &go.v, &go.lens, appended, first_pos)?;
+        let k = std::mem::take(&mut go.k);
+        let v = std::mem::take(&mut go.v);
+        self.scratch.borrow_mut().absorb(cache, k, v);
+        Ok(())
     }
 }

@@ -1,0 +1,461 @@
+//! Reusable host-transfer scratch: dense `[L, H, C, Dh]` K/V images kept in
+//! sync with their source [`KvCache`] through dirty-range tracking, so the
+//! program-call data path is incremental and allocation-free in steady state.
+//!
+//! Before this layer existed, every `score`/`generate` call allocated two
+//! fresh dense buffers and re-copied the entire cache slot-by-slot (O(L·H·C·Dh)
+//! per decode step). Now a [`ScratchPool`] owns a small LRU set of
+//! [`DenseImage`]s, each stamped with the `(cache id, sync generation)` it
+//! was materialized from:
+//!
+//! - **no-op**: the cache is unchanged since the image was made — upload it
+//!   as-is, zero copies;
+//! - **incremental**: only the dirty slot ranges are re-copied (appended rows
+//!   after a decode step, moved rows after a compaction) and shrunk tails are
+//!   zero-filled;
+//! - **full**: no image matches (first call, pool eviction, cross-scratch
+//!   staleness) — gather everything into a recycled buffer.
+//!
+//! [`ScratchPool::absorb`] closes the loop on the generate path: the device
+//! output state the runtime just downloaded *is* the current dense image
+//! (resident rows passed through the program unchanged, appended rows were
+//! just merged via [`KvCache::replace_from_device`], padding stays zero), so
+//! the downloaded buffers become the cache's synced image and the next
+//! gather is a no-op. Invariants and the bench methodology live in PERF.md.
+
+use std::time::Instant;
+
+use super::kv::KvCache;
+
+/// One dense `[L, H, C, Dh]` K/V image, synced to a specific cache state.
+pub struct DenseImage {
+    pub k: Vec<f32>,
+    pub v: Vec<f32>,
+    cache_id: u64,
+    sync_gen: u64,
+}
+
+/// Cumulative transfer-layer counters (merged into
+/// [`super::RuntimeStats`] by the runtime).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct TransferStats {
+    /// Gathers that re-copied the whole image.
+    pub gathers_full: u64,
+    /// Gathers that re-copied only dirty ranges.
+    pub gathers_incremental: u64,
+    /// Gathers that copied nothing (image already current).
+    pub gathers_noop: u64,
+    /// Bytes copied pages→image (K + V, incl. full gathers).
+    pub gathered_bytes: u64,
+    /// Bytes zero-filled over shrunk regions (K + V).
+    pub zeroed_bytes: u64,
+    /// Wall-clock seconds spent gathering.
+    pub gather_s: f64,
+    /// Dense-buffer allocations (or regrowths) performed by the pool — zero
+    /// in steady state.
+    pub dense_allocs: u64,
+    /// Device images adopted wholesale via [`ScratchPool::absorb`].
+    pub absorbs: u64,
+}
+
+/// A bounded LRU pool of [`DenseImage`] scratches, one live entry per cache
+/// in the hot set. Entries for dropped caches age out; a cache whose entry
+/// was evicted simply pays one full gather.
+pub struct ScratchPool {
+    /// LRU order: most recently used last.
+    entries: Vec<DenseImage>,
+    max_entries: usize,
+    stats: TransferStats,
+}
+
+impl ScratchPool {
+    pub fn new(max_entries: usize) -> Self {
+        Self {
+            entries: Vec::new(),
+            max_entries: max_entries.max(1),
+            stats: TransferStats::default(),
+        }
+    }
+
+    pub fn stats(&self) -> TransferStats {
+        self.stats
+    }
+
+    /// Host bytes currently held by pooled images (K + V). This is staging
+    /// memory *outside* the arena's `kv_pool_bytes` device budget — bounded
+    /// by `max_entries` full images; exported so deployments can watch it.
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.iter().map(|e| 4 * (e.k.len() + e.v.len())).sum()
+    }
+
+    /// Entries currently held (diagnostics).
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Materialize `cache`'s dense image, re-copying as little as possible,
+    /// and return it ready for upload. Marks the cache synced.
+    pub fn gather(&mut self, cache: &mut KvCache) -> &DenseImage {
+        let t0 = Instant::now();
+        let n = cache.dense_elems();
+        let matched = self.entries.iter().position(|e| {
+            e.cache_id == cache.id() && e.sync_gen == cache.sync_gen() && e.k.len() == n
+        });
+        let idx = match matched {
+            Some(i) => {
+                if cache.is_clean() {
+                    self.stats.gathers_noop += 1;
+                } else {
+                    let e = &mut self.entries[i];
+                    let gb = cache.gather_dirty_into(&mut e.k, &mut e.v);
+                    cache.mark_synced();
+                    e.sync_gen = cache.sync_gen();
+                    self.stats.gathers_incremental += 1;
+                    self.stats.gathered_bytes += gb.copied;
+                    self.stats.zeroed_bytes += gb.zeroed;
+                }
+                i
+            }
+            None => {
+                let i = self.take_slot(cache.id(), n);
+                let e = &mut self.entries[i];
+                let gb = cache.gather_full_into(&mut e.k, &mut e.v);
+                cache.mark_synced();
+                e.cache_id = cache.id();
+                e.sync_gen = cache.sync_gen();
+                self.stats.gathers_full += 1;
+                self.stats.gathered_bytes += gb.copied;
+                self.stats.zeroed_bytes += gb.zeroed;
+                i
+            }
+        };
+        // LRU: move the touched entry to the back
+        if idx != self.entries.len() - 1 {
+            let e = self.entries.remove(idx);
+            self.entries.push(e);
+        }
+        self.stats.gather_s += t0.elapsed().as_secs_f64();
+        self.entries.last().unwrap()
+    }
+
+    /// Adopt device-output buffers as `cache`'s current dense image. The
+    /// caller guarantees the image equality invariant: the buffers came from
+    /// a generate program whose input state was uploaded from this cache's
+    /// synced image, and [`KvCache::replace_from_device`] already merged the
+    /// appended rows, so buffers == full dense gather of the cache right now
+    /// (padding beyond `lens` passes through the program as zeros). On shape
+    /// mismatch the buffers are dropped and the cache stays dirty — the next
+    /// gather falls back to a full copy, so this is never unsound.
+    pub fn absorb(&mut self, cache: &mut KvCache, k: Vec<f32>, v: Vec<f32>) {
+        let n = cache.dense_elems();
+        if k.len() != n || v.len() != n {
+            return;
+        }
+        cache.mark_synced();
+        self.stats.absorbs += 1;
+        if let Some(i) = self.entries.iter().position(|e| e.cache_id == cache.id()) {
+            {
+                let e = &mut self.entries[i];
+                e.k = k;
+                e.v = v;
+                e.sync_gen = cache.sync_gen();
+            }
+            if i != self.entries.len() - 1 {
+                let e = self.entries.remove(i);
+                self.entries.push(e);
+            }
+            return;
+        }
+        if self.entries.len() >= self.max_entries {
+            self.entries.remove(0);
+        }
+        self.entries.push(DenseImage {
+            k,
+            v,
+            cache_id: cache.id(),
+            sync_gen: cache.sync_gen(),
+        });
+    }
+
+    /// Pick an entry slot for a full gather: recycle this cache's stale
+    /// entry, then grow the pool, then evict the least-recently-used entry
+    /// and reuse its buffers.
+    fn take_slot(&mut self, cache_id: u64, n: usize) -> usize {
+        if let Some(i) = self.entries.iter().position(|e| e.cache_id == cache_id) {
+            self.resize_entry(i, n);
+            return i;
+        }
+        if self.entries.len() < self.max_entries {
+            self.stats.dense_allocs += 1;
+            self.entries.push(DenseImage {
+                k: vec![0.0; n],
+                v: vec![0.0; n],
+                cache_id,
+                sync_gen: 0,
+            });
+            return self.entries.len() - 1;
+        }
+        self.resize_entry(0, n);
+        0
+    }
+
+    fn resize_entry(&mut self, i: usize, n: usize) {
+        let e = &mut self.entries[i];
+        if e.k.capacity() < n || e.v.capacity() < n {
+            self.stats.dense_allocs += 1;
+        }
+        e.k.resize(n, 0.0);
+        e.v.resize(n, 0.0);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::runtime::arena::KvArena;
+    use crate::util::prop::PropRunner;
+    use crate::util::rng::Xoshiro256;
+
+    fn mk_cache(l: usize, h: usize, c: usize, dh: usize) -> KvCache {
+        KvCache::with_arena(KvArena::new(), l, h, c, dh)
+    }
+
+    fn append_random(kv: &mut KvCache, n: usize, next_pos: &mut u64, rng: &mut Xoshiro256) {
+        let (l, h, dh) = (kv.l, kv.h, kv.dh);
+        for layer in 0..l {
+            let wk: Vec<f32> = (0..h * n * dh).map(|_| rng.below(1000) as f32 * 0.5).collect();
+            let wv: Vec<f32> = (0..h * n * dh).map(|_| rng.below(1000) as f32 * -0.5).collect();
+            kv.append_layer(layer, &wk, &wv, n, n, *next_pos).unwrap();
+        }
+        *next_pos += n as u64;
+    }
+
+    /// The image the pool holds must equal a from-scratch dense gather.
+    fn assert_image_current(pool: &mut ScratchPool, kv: &mut KvCache) -> Result<(), String> {
+        let (fk, fv) = kv.gather_dense();
+        let img = pool.gather(kv);
+        prop_assert!(img.k == fk, "K image diverged from full gather");
+        prop_assert!(img.v == fv, "V image diverged from full gather");
+        Ok(())
+    }
+
+    #[test]
+    fn second_gather_of_unchanged_cache_is_noop() {
+        let mut kv = mk_cache(2, 2, 32, 4);
+        let mut pos = 0;
+        let mut rng = Xoshiro256::new(7);
+        append_random(&mut kv, 10, &mut pos, &mut rng);
+        let mut pool = ScratchPool::new(2);
+        pool.gather(&mut kv);
+        assert_eq!(pool.stats().gathers_full, 1);
+        pool.gather(&mut kv);
+        let st = pool.stats();
+        assert_eq!(st.gathers_noop, 1);
+        assert_eq!(st.gathers_full, 1);
+    }
+
+    #[test]
+    fn append_only_step_gathers_only_appended_rows() {
+        let (l, h, c, dh) = (3usize, 2usize, 64usize, 4usize);
+        let mut kv = mk_cache(l, h, c, dh);
+        let mut pos = 0;
+        let mut rng = Xoshiro256::new(11);
+        append_random(&mut kv, 20, &mut pos, &mut rng);
+        let mut pool = ScratchPool::new(2);
+        pool.gather(&mut kv);
+        let before = pool.stats();
+
+        // one decode-like step: a single appended row per layer
+        append_random(&mut kv, 1, &mut pos, &mut rng);
+        pool.gather(&mut kv);
+        let st = pool.stats();
+        assert_eq!(st.gathers_incremental, before.gathers_incremental + 1);
+        let row_bytes = (2 * 4 * l * h * dh) as u64; // K+V, f32, one slot/layer
+        assert_eq!(st.gathered_bytes - before.gathered_bytes, row_bytes);
+        assert_eq!(st.zeroed_bytes, before.zeroed_bytes);
+        assert_eq!(st.dense_allocs, before.dense_allocs, "steady state must not allocate");
+    }
+
+    #[test]
+    fn absorb_makes_next_gather_noop() {
+        let (l, h, c, dh) = (2usize, 2usize, 16usize, 3usize);
+        let mut kv = mk_cache(l, h, c, dh);
+        let mut pos = 0;
+        let mut rng = Xoshiro256::new(13);
+        append_random(&mut kv, 5, &mut pos, &mut rng);
+        let mut pool = ScratchPool::new(2);
+        let (mut dk, mut dv) = {
+            let img = pool.gather(&mut kv);
+            (img.k.clone(), img.v.clone())
+        };
+        // simulate the device appending one slot per layer
+        let lens: Vec<i32> = kv.lens.iter().map(|&x| x as i32 + 1).collect();
+        for layer in 0..l {
+            let slot = kv.lens[layer];
+            for hh in 0..h {
+                let off = ((layer * h + hh) * c + slot) * dh;
+                for d in 0..dh {
+                    dk[off + d] = 9.0 + d as f32;
+                    dv[off + d] = -(9.0 + d as f32);
+                }
+            }
+        }
+        kv.replace_from_device(&dk, &dv, &lens, 1, pos).unwrap();
+        pool.absorb(&mut kv, dk, dv);
+        assert!(kv.is_clean());
+        let before = pool.stats();
+        {
+            let img = pool.gather(&mut kv);
+            let (fk, fv) = kv.gather_dense();
+            assert_eq!(img.k, fk);
+            assert_eq!(img.v, fv);
+        }
+        let st = pool.stats();
+        assert_eq!(st.gathers_noop, before.gathers_noop + 1);
+        assert_eq!(st.gathered_bytes, before.gathered_bytes);
+    }
+
+    #[test]
+    fn pool_eviction_falls_back_to_full_gather() {
+        // pool of 1: two caches alternating must thrash (full gathers) but
+        // never leak one cache's rows into the other's image
+        let mut a = mk_cache(1, 1, 16, 2);
+        let mut b = mk_cache(1, 1, 16, 2);
+        let mut pos_a = 0;
+        let mut pos_b = 0;
+        let mut rng = Xoshiro256::new(17);
+        append_random(&mut a, 4, &mut pos_a, &mut rng);
+        append_random(&mut b, 9, &mut pos_b, &mut rng);
+        let mut pool = ScratchPool::new(1);
+        for _ in 0..3 {
+            {
+                let (fk, _) = a.gather_dense();
+                let img = pool.gather(&mut a);
+                assert_eq!(img.k, fk, "cache A image corrupted by scratch reuse");
+            }
+            {
+                let (fk, _) = b.gather_dense();
+                let img = pool.gather(&mut b);
+                assert_eq!(img.k, fk, "cache B image corrupted by scratch reuse");
+            }
+        }
+        let st = pool.stats();
+        assert_eq!(st.gathers_full, 6);
+        assert_eq!(st.gathers_noop, 0);
+        assert!(st.dense_allocs <= 2, "evictions must recycle buffers, not allocate");
+    }
+
+    #[derive(Debug, Clone, Copy)]
+    enum Op {
+        Append { n: usize },
+        Retain { seed: u64 },
+        Truncate { seed: u64 },
+        DeviceStep { absorb: bool },
+    }
+
+    #[test]
+    fn incremental_gather_matches_full_gather_property() {
+        // random append/evict/truncate/device-merge sequences over two caches
+        // sharing one pool: the incrementally-maintained image must stay
+        // byte-identical to a from-scratch full gather after every op,
+        // including zero-fill of shrunk regions and no stale-row leaks when
+        // the scratch is reused across caches
+        PropRunner::new(40).run(
+            |rng: &mut Xoshiro256| {
+                let h = 1 + rng.below(3) as usize;
+                let dh = 1 + rng.below(3) as usize;
+                let pool_cap = 1 + rng.below(2) as usize; // 1 forces reuse
+                let ops: Vec<(usize, Op)> = (0..14)
+                    .map(|_| {
+                        let which = rng.below(2) as usize;
+                        let op = match rng.below(5) {
+                            0 | 1 => Op::Append { n: 1 + rng.below(6) as usize },
+                            2 => Op::Retain { seed: rng.below(u64::MAX) },
+                            3 => Op::Truncate { seed: rng.below(u64::MAX) },
+                            _ => Op::DeviceStep { absorb: rng.below(2) == 0 },
+                        };
+                        (which, op)
+                    })
+                    .collect();
+                (h, dh, pool_cap, ops)
+            },
+            |(h, dh, pool_cap, ops)| {
+                let (h, dh) = (*h, *dh);
+                let c = 48;
+                let l = 2;
+                let mut caches = [mk_cache(l, h, c, dh), mk_cache(l, h, c, dh)];
+                let mut next_pos = [0u64, 0u64];
+                let mut pool = ScratchPool::new(*pool_cap);
+                let mut rng = Xoshiro256::new(0xd1f7);
+                for &(which, op) in ops {
+                    let kv = &mut caches[which];
+                    match op {
+                        Op::Append { n } => {
+                            if kv.max_len() + n > c {
+                                continue;
+                            }
+                            append_random(kv, n, &mut next_pos[which], &mut rng);
+                        }
+                        Op::Retain { seed } => {
+                            let mut krng = Xoshiro256::new(seed);
+                            for layer in 0..l {
+                                let n = kv.lens[layer];
+                                let keep: Vec<usize> =
+                                    (0..n).filter(|_| krng.below(3) > 0).collect();
+                                kv.retain_slots(layer, &keep).unwrap();
+                            }
+                        }
+                        Op::Truncate { seed } => {
+                            let mut trng = Xoshiro256::new(seed);
+                            for layer in 0..l {
+                                let n = kv.lens[layer];
+                                let new_len = trng.below(n as u64 + 1) as usize;
+                                kv.truncate_layer(layer, new_len).unwrap();
+                            }
+                        }
+                        Op::DeviceStep { absorb } => {
+                            // simulate a generate call: upload the gathered
+                            // image, device appends one slot per layer
+                            if kv.max_len() + 1 > c {
+                                continue;
+                            }
+                            let (mut dk, mut dv) = {
+                                let img = pool.gather(kv);
+                                (img.k.clone(), img.v.clone())
+                            };
+                            let lens: Vec<i32> =
+                                kv.lens.iter().map(|&x| x as i32 + 1).collect();
+                            for layer in 0..l {
+                                let slot = kv.lens[layer];
+                                for hh in 0..h {
+                                    let off = ((layer * h + hh) * c + slot) * dh;
+                                    for d in 0..dh {
+                                        dk[off + d] = rng.below(1000) as f32 * 0.25;
+                                        dv[off + d] = rng.below(1000) as f32 * -0.25;
+                                    }
+                                }
+                            }
+                            kv.replace_from_device(&dk, &dv, &lens, 1, next_pos[which])
+                                .unwrap();
+                            next_pos[which] += 1;
+                            if absorb {
+                                pool.absorb(kv, dk, dv);
+                            }
+                        }
+                    }
+                    prop_assert!(kv.check_invariants().is_ok(), "invariants broken");
+                    assert_image_current(&mut pool, &mut caches[which])?;
+                    // the *other* cache's image must also still be consistent
+                    // (catches stale-row leaks through shared scratch slots)
+                    assert_image_current(&mut pool, &mut caches[1 - which])?;
+                }
+                Ok(())
+            },
+        );
+    }
+}

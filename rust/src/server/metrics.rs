@@ -1,8 +1,11 @@
 //! Serving metrics registry: request counters, TTFT / end-to-end latency
-//! distributions, token throughput. Exported over the wire via `op:stats`.
+//! distributions, token throughput, and the runtime transfer counters
+//! (upload/download volume, incremental-gather traffic). Exported over the
+//! wire via `op:stats`.
 
 use std::time::Instant;
 
+use crate::runtime::RuntimeStats;
 use crate::util::json::Json;
 use crate::util::stats::{Meter, Samples};
 
@@ -72,6 +75,28 @@ impl Metrics {
     }
 }
 
+/// Attach the runtime's call/transfer counters to an `op:stats` payload so
+/// serving deployments can watch transfer volume per token: `bytes_h2d` /
+/// `bytes_d2h` are total PJRT upload/download traffic, `gathered_bytes` is
+/// the host-side page->scratch copy volume the dirty-range tracking drives
+/// toward zero (see PERF.md), and the gather counters break calls down into
+/// full / incremental / no-op materializations.
+pub fn export_runtime(j: &mut Json, rs: &RuntimeStats) {
+    j.set("runtime_calls", (rs.calls as i64).into());
+    j.set("runtime_upload_s", rs.upload_s.into());
+    j.set("runtime_execute_s", rs.execute_s.into());
+    j.set("runtime_download_s", rs.download_s.into());
+    j.set("bytes_h2d", (rs.bytes_h2d as i64).into());
+    j.set("bytes_d2h", (rs.bytes_d2h as i64).into());
+    j.set("gather_s", rs.gather_s.into());
+    j.set("gathered_bytes", (rs.gathered_bytes as i64).into());
+    j.set("gathers_full", (rs.gathers_full as i64).into());
+    j.set("gathers_incremental", (rs.gathers_incremental as i64).into());
+    j.set("gathers_noop", (rs.gathers_noop as i64).into());
+    j.set("dense_scratch_allocs", (rs.dense_scratch_allocs as i64).into());
+    j.set("scratch_resident_bytes", (rs.scratch_resident_bytes as i64).into());
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -104,5 +129,33 @@ mod tests {
         assert_eq!(j.usize_of("errored"), Some(1));
         assert_eq!(j.usize_of("gen_tokens"), Some(4));
         assert!(j.f64_of("ttft_ms_p50").unwrap() > 9.0);
+    }
+
+    #[test]
+    fn exports_runtime_transfer_counters() {
+        let m = Metrics::default();
+        let mut j = m.to_json();
+        let rs = RuntimeStats {
+            calls: 3,
+            bytes_h2d: 1024,
+            bytes_d2h: 2048,
+            gather_s: 0.25,
+            gathered_bytes: 96,
+            gathers_full: 1,
+            gathers_incremental: 1,
+            gathers_noop: 1,
+            dense_scratch_allocs: 1,
+            scratch_resident_bytes: 4096,
+            ..Default::default()
+        };
+        export_runtime(&mut j, &rs);
+        assert_eq!(j.usize_of("runtime_calls"), Some(3));
+        assert_eq!(j.usize_of("bytes_h2d"), Some(1024));
+        assert_eq!(j.usize_of("bytes_d2h"), Some(2048));
+        assert_eq!(j.usize_of("gathered_bytes"), Some(96));
+        assert_eq!(j.usize_of("gathers_noop"), Some(1));
+        assert_eq!(j.usize_of("dense_scratch_allocs"), Some(1));
+        assert_eq!(j.usize_of("scratch_resident_bytes"), Some(4096));
+        assert!(j.f64_of("gather_s").unwrap() > 0.2);
     }
 }

@@ -199,9 +199,7 @@ fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::js
                         let (q, a) = sched.depth();
                         j.set("queue_depth", q.into());
                         j.set("active_seqs", a.into());
-                        let rs = rt.stats();
-                        j.set("runtime_calls", (rs.calls as i64).into());
-                        j.set("runtime_execute_s", rs.execute_s.into());
+                        metrics::export_runtime(&mut j, &rt.stats());
                         let ast = KvArena::global().stats();
                         j.set("kv_arena_bytes_in_use", ast.bytes_in_use.into());
                         j.set("kv_arena_bytes_pooled", ast.bytes_pooled.into());

@@ -73,6 +73,29 @@ fn generate_appends_and_respects_capacity() {
 }
 
 #[test]
+fn decode_path_gathers_incrementally_after_warmup() {
+    need_artifacts!();
+    // once a sequence's dense image exists in the transfer scratch, further
+    // calls must never re-gather the full image: decode steps absorb the
+    // downloaded device state or re-copy only dirty ranges
+    let rt = Runtime::load(&lacache::artifacts_dir(), &["mini"]).unwrap();
+    let mut eng = mini_engine(&rt, "streaming:budget=64", 32, 256);
+    let prompt = Stream::default_eval(10).take_n(64);
+    eng.prefill(&prompt).unwrap();
+    let warm = rt.stats();
+    assert!(warm.gathers_full >= 1, "first call pays one full gather");
+    eng.generate(16).unwrap();
+    eng.generate(16).unwrap();
+    let st = rt.stats();
+    assert_eq!(st.calls, warm.calls + 2);
+    assert_eq!(
+        st.gathers_full, warm.gathers_full,
+        "decode must not re-gather the full image"
+    );
+    assert!(st.bytes_h2d > 0 && st.bytes_d2h > 0, "transfer byte counters must move");
+}
+
+#[test]
 fn scored_path_accumulates_mass() {
     need_artifacts!();
     let rt = Runtime::load(&lacache::artifacts_dir(), &["mini"]).unwrap();
@@ -182,7 +205,7 @@ fn pallas_program_matches_fast_path_through_pjrt() {
     let mut cache = KvCache::new(cfg.n_layers, cfg.n_heads, 256, cfg.head_dim);
     // seed the cache with some context via the score program
     let toks = Stream::default_eval(9).take_n(33);
-    let so = rt.score("mini", 32, 256, false, &toks[..32], &toks[1..33], &cache).unwrap();
+    let so = rt.score("mini", 32, 256, false, &toks[..32], &toks[1..33], &mut cache).unwrap();
     for l in 0..cfg.n_layers {
         let base = l * cfg.n_heads * 32 * cfg.head_dim;
         let n = cfg.n_heads * 32 * cfg.head_dim;
@@ -190,8 +213,8 @@ fn pallas_program_matches_fast_path_through_pjrt() {
             .append_layer(l, &so.win_k[base..base + n], &so.win_v[base..base + n], 32, 32, 0)
             .unwrap();
     }
-    let fast = rt.generate_variant("mini", 16, false, false, &cache, 7).unwrap();
-    let pallas = rt.generate_variant("mini", 16, false, true, &cache, 7).unwrap();
+    let fast = rt.generate_variant("mini", 16, false, false, &mut cache, 7).unwrap();
+    let pallas = rt.generate_variant("mini", 16, false, true, &mut cache, 7).unwrap();
     assert_eq!(fast.tokens, pallas.tokens, "pallas kernel diverges from fast path");
     for (a, b) in fast.last_logits.iter().zip(&pallas.last_logits) {
         assert!((a - b).abs() < 3e-3, "logits diverge: {a} vs {b}");
@@ -205,9 +228,9 @@ fn kv_cache_padding_budget_equivalence_through_device() {
     let rt = Runtime::load(&lacache::artifacts_dir(), &["mini"]).unwrap();
     let cfg = rt.model("mini").unwrap().cfg.clone();
     let toks = Stream::default_eval(8).take_n(33);
-    let empty = KvCache::new(cfg.n_layers, cfg.n_heads, 256, cfg.head_dim);
-    let out1 = rt.score("mini", 32, 256, false, &toks[..32], &toks[1..33], &empty).unwrap();
-    let out2 = rt.score("mini", 32, 256, false, &toks[..32], &toks[1..33], &empty).unwrap();
+    let mut empty = KvCache::new(cfg.n_layers, cfg.n_heads, 256, cfg.head_dim);
+    let out1 = rt.score("mini", 32, 256, false, &toks[..32], &toks[1..33], &mut empty).unwrap();
+    let out2 = rt.score("mini", 32, 256, false, &toks[..32], &toks[1..33], &mut empty).unwrap();
     assert_eq!(out1.logprobs, out2.logprobs);
     assert_eq!(out1.win_k.len(), cfg.n_layers * cfg.n_heads * 32 * cfg.head_dim);
 }
