@@ -121,6 +121,6 @@ fn main() -> Result<()> {
     println!("ttft   (ms)        : {}", ttft.summary("ms"));
     println!("e2e    (ms)        : {}", total.summary("ms"));
     println!("needle accuracy    : {:.1}%", scores.mean() * 100.0);
-    println!("server stats       : {}", stats.req("stats").to_string());
+    println!("server stats       : {}", stats.req("stats"));
     Ok(())
 }

@@ -2,37 +2,41 @@
 //! backend, isolating pure L3 cost), wire-protocol encode/decode, JSON parse
 //! throughput for the manifest-sized payloads, the paged-KV arena
 //! memory-pressure scenario (concurrency under a fixed byte budget vs. the
-//! old dense-allocation baseline), and the steady-state decode transfer
+//! old dense-allocation baseline), the steady-state decode transfer
 //! scenario (dirty-range incremental gather; asserts append-only decode
 //! gathers only the appended rows with zero dense-buffer allocations, and
-//! writes machine-readable `BENCH_decode.json` — see PERF.md).
+//! writes machine-readable `BENCH_decode.json`), and the burst-intake
+//! serving scenario (one-round burst admission, post-shutdown rejection,
+//! mid-decode cancellation page release; writes `BENCH_serving.json`) —
+//! see PERF.md.
 //!
 //! Set `LACACHE_BENCH_SMOKE=1` (exactly) for the short CI mode; `BENCH_JSON`
-//! overrides the JSON output path.
+//! / `BENCH_SERVING_JSON` override the JSON output paths.
+
+use std::sync::mpsc;
 
 use lacache::cache::{make_policy, CachePolicy};
 use lacache::runtime::{admission_ok, seq_footprint_bytes, KvArena, KvCache, ScratchPool};
-use lacache::server::batcher::{Scheduler, SeqBackend};
-use lacache::server::protocol::{ok_generate, parse_request};
+use lacache::server::batcher::{CancelToken, Decoded, Scheduler, SeqBackend};
+use lacache::server::protocol::{ok_generate, parse_request, SHUTTING_DOWN};
+use lacache::server::{Reactor, Work};
 use lacache::util::bench::Bench;
 use lacache::util::json::Json;
+use lacache::util::stats::Samples;
 
 struct InstantBackend;
-struct NoSeq {
-    emitted: usize,
-}
+struct NoSeq;
 
 impl SeqBackend for InstantBackend {
     type Seq = NoSeq;
     fn new_seq(&mut self) -> anyhow::Result<NoSeq> {
-        Ok(NoSeq { emitted: 0 })
+        Ok(NoSeq)
     }
     fn prefill_chunk(&mut self, _s: &mut NoSeq, _c: &[i32]) -> anyhow::Result<()> {
         Ok(())
     }
-    fn decode(&mut self, s: &mut NoSeq, n: usize) -> anyhow::Result<Vec<i32>> {
-        s.emitted += n;
-        Ok(vec![17; n])
+    fn decode(&mut self, _s: &mut NoSeq, n: usize) -> anyhow::Result<Decoded> {
+        Ok(Decoded { tokens: vec![17; n], t_first: None })
     }
 }
 
@@ -44,7 +48,7 @@ fn main() -> anyhow::Result<()> {
     b.run_throughput("scheduler/64-requests (instant backend)", 64, "req", || {
         let mut s = Scheduler::new(InstantBackend, 128, 16, 4, 1024);
         for _ in 0..64 {
-            s.submit(vec![1; 300], 32).unwrap();
+            s.submit(vec![1; 300], 32, CancelToken::new()).unwrap();
         }
         while s.has_work() {
             std::hint::black_box(s.step());
@@ -72,6 +76,7 @@ fn main() -> anyhow::Result<()> {
 
     memory_pressure_scenario()?;
     steady_state_decode_scenario(smoke)?;
+    burst_intake_scenario(smoke)?;
     Ok(())
 }
 
@@ -205,6 +210,143 @@ fn steady_state_decode_scenario(smoke: bool) -> anyhow::Result<()> {
     Ok(())
 }
 
+/// Burst-intake serving scenario (device-free, full reactor control path):
+/// the decoupled intake stage must absorb a whole burst in ONE reactor
+/// round, shutdown must admit zero further sequences, and a mid-decode
+/// client disconnect must return the sequence's arena pages before the next
+/// round. Emits machine-readable `BENCH_serving.json` (path override:
+/// `BENCH_SERVING_JSON`) with intake-latency and TTFT-at-first-token stats.
+fn burst_intake_scenario(smoke: bool) -> anyhow::Result<()> {
+    let burst_n = 32usize;
+    let iters = if smoke { 3usize } else { 20 };
+    let no_hook = |_: &mut Json| {};
+    let gen_line = |id: usize| {
+        format!(r#"{{"op":"generate","id":{id},"prompt_tokens":[1,2,3,4],"max_new_tokens":8}}"#)
+    };
+
+    // (a) burst admission: capacity allows the whole burst -> all of it is
+    // active after exactly one reactor round
+    let mut intake_latency = Samples::new();
+    let mut ttft_ms = Samples::new();
+    for _ in 0..iters {
+        let sched = Scheduler::new(InstantBackend, 128, 16, burst_n, 4 * burst_n);
+        let mut reactor = Reactor::new(sched, 64);
+        let (tx, rx) = mpsc::channel();
+        let mut replies = Vec::with_capacity(burst_n);
+        for i in 0..burst_n {
+            let (rtx, rrx) = mpsc::channel();
+            tx.send(Work::Req { line: gen_line(i), reply: rtx, cancel: CancelToken::new() })
+                .unwrap();
+            replies.push(rrx);
+        }
+        let t0 = std::time::Instant::now();
+        reactor.poll(&rx, &no_hook);
+        intake_latency.record(t0.elapsed().as_secs_f64());
+        let (q, a) = reactor.sched().depth();
+        assert_eq!(
+            (q, a),
+            (0, burst_n),
+            "burst of {burst_n} must be fully admitted within one scheduling round"
+        );
+        assert_eq!(reactor.metrics().intake_depth.max(), burst_n as f64);
+        while reactor.sched().has_work() {
+            reactor.poll(&rx, &no_hook);
+        }
+        for rrx in replies {
+            let j = Json::parse(&rrx.recv()?).unwrap();
+            assert_eq!(j.bool_of("ok"), Some(true));
+            ttft_ms.record(j.f64_of("ttft_ms").unwrap());
+        }
+    }
+
+    // (b) post-shutdown: zero admissions, explicit rejection
+    let sched = Scheduler::new(InstantBackend, 128, 16, burst_n, 4 * burst_n);
+    let mut reactor = Reactor::new(sched, 64);
+    let (tx, rx) = mpsc::channel();
+    let (stx, srx) = mpsc::channel();
+    tx.send(Work::Req {
+        line: r#"{"op":"shutdown","id":0}"#.into(),
+        reply: stx,
+        cancel: CancelToken::new(),
+    })
+    .unwrap();
+    let mut late = Vec::new();
+    for i in 0..burst_n {
+        let (rtx, rrx) = mpsc::channel();
+        tx.send(Work::Req { line: gen_line(i), reply: rtx, cancel: CancelToken::new() }).unwrap();
+        late.push(rrx);
+    }
+    reactor.poll(&rx, &no_hook);
+    assert_eq!(reactor.sched().depth(), (0, 0), "zero sequences may be admitted after shutdown");
+    let rejected_shutdown = reactor.metrics().rejected_shutdown;
+    assert_eq!(rejected_shutdown, burst_n as u64);
+    srx.recv()?;
+    for rrx in late {
+        let j = Json::parse(&rrx.recv()?).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(false));
+        assert_eq!(j.str_of("error"), Some(SHUTTING_DOWN));
+    }
+
+    // (c) mid-decode cancellation returns arena pages before the next round
+    let (l, h, c, dh) = (8usize, 4usize, 2048usize, 24usize);
+    let arena = KvArena::new();
+    let policy = make_policy("lacache:budget=128,span=2", l)?;
+    let est_seq_bytes = seq_footprint_bytes(l, h * dh, 256);
+    let backend = ArenaBackend {
+        arena: arena.clone(),
+        policy,
+        l,
+        h,
+        c,
+        dh,
+        est_seq_bytes,
+        budget_bytes: usize::MAX,
+    };
+    let mut s = Scheduler::new(backend, 128, 16, 4, 16);
+    let cancel = CancelToken::new();
+    s.submit(vec![1; 128], 1024, cancel.clone())?;
+    s.step(); // admit + prefill the whole 128-token prompt
+    s.step(); // first decode quantum -> mid-decode
+    let mid_bytes = arena.stats().bytes_in_use;
+    assert!(mid_bytes > 0, "mid-decode sequence must hold arena pages");
+    cancel.cancel();
+    let done = s.step(); // reap happens before any further quantum
+    assert!(done.iter().any(|f| f.cancelled), "cancelled exit record expected");
+    assert_eq!(
+        arena.stats().bytes_in_use,
+        0,
+        "cancelled client's arena pages must be released before the next round"
+    );
+
+    println!(
+        "\nburst-intake: {burst_n}-req burst x{iters} | intake+admit round p50 {:.1} us | \
+         ttft p50 {:.3} ms p95 {:.3} ms | {rejected_shutdown} post-shutdown rejections | \
+         {mid_bytes} B released on mid-decode cancel",
+        intake_latency.p50() * 1e6,
+        ttft_ms.p50(),
+        ttft_ms.p95(),
+    );
+
+    let out = Json::from_pairs(vec![
+        ("bench", "burst_intake".into()),
+        ("smoke", smoke.into()),
+        ("burst_n", burst_n.into()),
+        ("iters", iters.into()),
+        ("rounds_to_admit_burst", 1usize.into()),
+        ("intake_latency_s_p50", intake_latency.p50().into()),
+        ("intake_latency_s_p95", intake_latency.p95().into()),
+        ("ttft_ms_p50", ttft_ms.p50().into()),
+        ("ttft_ms_p95", ttft_ms.p95().into()),
+        ("ttft_ms_max", ttft_ms.max().into()),
+        ("rejected_after_shutdown", (rejected_shutdown as i64).into()),
+        ("cancel_released_bytes", (mid_bytes as i64).into()),
+    ]);
+    let path = std::env::var("BENCH_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
+    std::fs::write(&path, out.to_string() + "\n")?;
+    println!("wrote {path}");
+    Ok(())
+}
+
 /// Device-free sequence backend over a real paged-KV arena: prefill appends
 /// window rows, decode appends one row per token, and the ladder policy
 /// compacts between rounds — the full storage path minus PJRT.
@@ -248,11 +390,11 @@ impl SeqBackend for ArenaBackend {
         self.append_all_layers(s, chunk.len())
     }
 
-    fn decode(&mut self, s: &mut ArenaSeq, n: usize) -> anyhow::Result<Vec<i32>> {
+    fn decode(&mut self, s: &mut ArenaSeq, n: usize) -> anyhow::Result<Decoded> {
         for _ in 0..n {
             self.append_all_layers(s, 1)?;
         }
-        Ok(vec![7; n])
+        Ok(Decoded { tokens: vec![7; n], t_first: None })
     }
 
     fn can_admit(&self, active: usize) -> bool {
@@ -282,7 +424,7 @@ fn memory_pressure_scenario() -> anyhow::Result<()> {
     let n_requests = 64;
     let mut s = Scheduler::new(backend, window, quantum, usize::MAX, n_requests);
     for _ in 0..n_requests {
-        s.submit(vec![1; 384], 32).unwrap();
+        s.submit(vec![1; 384], 32, CancelToken::new()).unwrap();
     }
     let mut peak_active = 0usize;
     let mut finished = 0usize;

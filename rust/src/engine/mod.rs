@@ -3,6 +3,8 @@
 //! ingestion / PPL, greedy generate for decoding), plus the simulated
 //! device-memory accountant that reproduces the paper's OOM axis.
 
+use std::time::Instant;
+
 use anyhow::{bail, Result};
 
 use crate::cache::{CachePolicy, MassUse};
@@ -189,8 +191,17 @@ impl<'rt> Engine<'rt> {
     /// Greedy-decode `n` tokens (chunked through the compiled K-step
     /// programs), applying the policy between chunks.
     pub fn generate(&mut self, n: usize) -> Result<Vec<i32>> {
+        Ok(self.generate_timed(n)?.0)
+    }
+
+    /// [`Self::generate`], also returning the instant the FIRST token of
+    /// this call materialized — stamped right after the first program call
+    /// returns, not after the whole chunk loop, so the serving layer's TTFT
+    /// measures time-to-first-token rather than time-to-first-quantum.
+    pub fn generate_timed(&mut self, n: usize) -> Result<(Vec<i32>, Option<Instant>)> {
         let scored = self.scored();
         let mut out = Vec::with_capacity(n);
+        let mut t_first: Option<Instant> = None;
         let mut remaining = n;
         while remaining > 0 {
             // scored programs are only compiled at K=16; over-generate and
@@ -206,6 +217,11 @@ impl<'rt> Engine<'rt> {
             }
             let mut go =
                 self.rt.generate(&self.opts.model, k, scored, &mut self.cache, self.last_token)?;
+            if t_first.is_none() {
+                // the first token of the call exists as soon as the first
+                // program call returns
+                t_first = Some(Instant::now());
+            }
             // merge the appended rows and adopt the downloaded state as the
             // next upload's scratch image (the steady-state decode path
             // re-gathers nothing)
@@ -233,7 +249,7 @@ impl<'rt> Engine<'rt> {
             remaining -= take;
             self.evict()?;
         }
-        Ok(out)
+        Ok((out, t_first))
     }
 
     /// One decode step returning the *logits* (serving path with host-side

@@ -35,6 +35,6 @@ fn main() -> Result<()> {
     }
     let cfg = ServeConfig::from_args(&args)?;
     let final_stats = run_server(cfg)?;
-    println!("{}", final_stats.to_string());
+    println!("{final_stats}");
     Ok(())
 }

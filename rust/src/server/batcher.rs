@@ -1,16 +1,63 @@
 //! Continuous batcher / prefill-decode scheduler (Orca/vLLM-style
 //! iteration-level scheduling, single-executor variant).
 //!
-//! Sequences move `queued -> prefilling -> decoding -> finished`; each
-//! scheduling round admits new work up to `max_active`, advances every
-//! prefilling sequence by one window and every decoding sequence by one
-//! quantum, interleaving fairly. The backend is abstracted so the scheduler
-//! logic is unit-testable without a PJRT runtime.
+//! Sequences move `queued -> prefilling -> decoding -> finished`, with a
+//! `cancelled` exit from every state. Each scheduling round runs three
+//! explicit phases:
+//!
+//! 1. **reap** — queued requests whose [`CancelToken`] fired are dropped
+//!    before they ever allocate anything;
+//! 2. **admit** — queued requests are admitted FIFO up to `max_active` and
+//!    the backend's memory gate; a `new_seq` failure fails only that request
+//!    (the remaining admissions and the advance phase still run);
+//! 3. **advance** — every active sequence gets exactly one unit of work (one
+//!    prefill window or one decode quantum) in admission order. Finished and
+//!    failed sequences are removed *order-preservingly* (no `swap_remove`
+//!    reshuffling), and a sequence whose token fired is dropped before its
+//!    quantum — dropping the backend sequence returns its paged-KV arena
+//!    pages to the pool immediately.
+//!
+//! The backend is abstracted so the scheduler logic is unit-testable without
+//! a PJRT runtime. TTFT is stamped by the backend at the moment the first
+//! token of a quantum materializes ([`Decoded::t_first`]), not when the
+//! whole quantum returns.
 
 use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::time::Instant;
 
 use anyhow::Result;
+
+/// Shared cancellation flag connecting a connection handler to every
+/// request it has in flight: the handler fires it when the client
+/// disconnects, and the scheduler drops the sequence (releasing its arena
+/// pages) before spending another quantum on it.
+#[derive(Clone, Debug, Default)]
+pub struct CancelToken(Arc<AtomicBool>);
+
+impl CancelToken {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn cancel(&self) {
+        self.0.store(true, Ordering::Release);
+    }
+
+    pub fn is_cancelled(&self) -> bool {
+        self.0.load(Ordering::Acquire)
+    }
+}
+
+/// One decode quantum's output. `t_first` is the instant the FIRST token of
+/// the quantum became available (after the first program call inside the
+/// quantum); `None` means the backend has no finer signal and the scheduler
+/// stamps on receipt.
+pub struct Decoded {
+    pub tokens: Vec<i32>,
+    pub t_first: Option<Instant>,
+}
 
 /// Execution backend for one sequence (real impl wraps [`crate::engine::Engine`]).
 pub trait SeqBackend {
@@ -19,7 +66,7 @@ pub trait SeqBackend {
     /// Ingest a prompt chunk.
     fn prefill_chunk(&mut self, seq: &mut Self::Seq, chunk: &[i32]) -> Result<()>;
     /// Greedy-decode up to `n` tokens.
-    fn decode(&mut self, seq: &mut Self::Seq, n: usize) -> Result<Vec<i32>>;
+    fn decode(&mut self, seq: &mut Self::Seq, n: usize) -> Result<Decoded>;
     /// Admission gate beyond the active-count cap: return false to defer
     /// admitting more sequences this round (real backends report paged-KV
     /// arena pressure; queued work stays queued until pages free up).
@@ -40,6 +87,9 @@ pub struct Finished {
     pub ttft_s: f64,
     pub total_s: f64,
     pub error: Option<String>,
+    /// True when the sequence exited because its [`CancelToken`] fired (the
+    /// client is gone; no response should be written).
+    pub cancelled: bool,
 }
 
 struct Pending {
@@ -47,6 +97,7 @@ struct Pending {
     prompt: Vec<i32>,
     max_new: usize,
     t_submit: Instant,
+    cancel: CancelToken,
 }
 
 struct Active<S> {
@@ -58,7 +109,26 @@ struct Active<S> {
     t_submit: Instant,
     t_admit: Instant,
     t_first: Option<Instant>,
+    cancel: CancelToken,
     seq: S,
+}
+
+impl<S> Active<S> {
+    /// Consume into a `cancelled` record; dropping `self.seq` here is what
+    /// returns the sequence's arena pages.
+    fn into_cancelled(self) -> Finished {
+        let now = Instant::now();
+        Finished {
+            id: self.id,
+            tokens: self.generated,
+            prompt_tokens: self.prompt.len(),
+            queue_s: (self.t_admit - self.t_submit).as_secs_f64(),
+            ttft_s: self.t_first.map(|t| (t - self.t_submit).as_secs_f64()).unwrap_or_default(),
+            total_s: (now - self.t_submit).as_secs_f64(),
+            error: None,
+            cancelled: true,
+        }
+    }
 }
 
 pub struct Scheduler<B: SeqBackend> {
@@ -93,13 +163,13 @@ impl<B: SeqBackend> Scheduler<B> {
     }
 
     /// Admission control: Err when the queue is full (backpressure).
-    pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize) -> Result<u64> {
+    pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize, cancel: CancelToken) -> Result<u64> {
         if self.queue.len() >= self.max_queue {
             anyhow::bail!("queue full ({} pending)", self.queue.len());
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back(Pending { id, prompt, max_new, t_submit: Instant::now() });
+        self.queue.push_back(Pending { id, prompt, max_new, t_submit: Instant::now(), cancel });
         Ok(id)
     }
 
@@ -119,9 +189,49 @@ impl<B: SeqBackend> Scheduler<B> {
         &mut self.backend
     }
 
-    /// One scheduling round. Returns sequences finished this round.
+    /// One scheduling round (reap -> admit -> advance). Returns sequences
+    /// that exited this round: completed, errored, or cancelled.
     pub fn step(&mut self) -> Vec<Finished> {
-        // 1. admit (bounded by the active cap AND the backend's memory gate)
+        let mut done = Vec::new();
+        self.reap_queue(&mut done);
+        self.admit(&mut done);
+        self.advance(&mut done);
+        done
+    }
+
+    /// Phase 1: drop queued requests whose client disconnected before they
+    /// were ever admitted.
+    fn reap_queue(&mut self, done: &mut Vec<Finished>) {
+        // common case (no cancellations) stays allocation- and move-free
+        if !self.queue.iter().any(|p| p.cancel.is_cancelled()) {
+            return;
+        }
+        let mut kept = VecDeque::with_capacity(self.queue.len());
+        for p in self.queue.drain(..) {
+            if p.cancel.is_cancelled() {
+                let now = Instant::now();
+                done.push(Finished {
+                    id: p.id,
+                    tokens: Vec::new(),
+                    prompt_tokens: p.prompt.len(),
+                    queue_s: (now - p.t_submit).as_secs_f64(),
+                    ttft_s: 0.0,
+                    total_s: (now - p.t_submit).as_secs_f64(),
+                    error: None,
+                    cancelled: true,
+                });
+            } else {
+                kept.push_back(p);
+            }
+        }
+        self.queue = kept;
+    }
+
+    /// Phase 2: FIFO admission up to the active cap and the backend's memory
+    /// gate. A `new_seq` failure fails only that request: the remaining
+    /// queue still gets its admission chance and the advance phase still
+    /// runs this round.
+    fn admit(&mut self, done: &mut Vec<Finished>) {
         while self.active.len() < self.max_active && self.backend.can_admit(self.active.len()) {
             let Some(p) = self.queue.pop_front() else { break };
             match self.backend.new_seq() {
@@ -134,39 +244,48 @@ impl<B: SeqBackend> Scheduler<B> {
                     t_submit: p.t_submit,
                     t_admit: Instant::now(),
                     t_first: None,
+                    cancel: p.cancel,
                     seq,
                 }),
                 Err(e) => {
-                    return vec![finished_err(p.id, p.prompt.len(), p.t_submit, e)];
+                    done.push(finished_err(p.id, p.prompt.len(), p.t_submit, None, None, e));
                 }
             }
         }
-        // 2. advance every active sequence by one unit of work
-        let mut done = Vec::new();
+    }
+
+    /// Phase 3: one unit of work per active sequence, in admission order.
+    fn advance(&mut self, done: &mut Vec<Finished>) {
         let window = self.window;
         let quantum = self.quantum;
         let mut i = 0;
         while i < self.active.len() {
+            if self.active[i].cancel.is_cancelled() {
+                // drop between quanta: the seq (and its KvCache pages) is
+                // freed before any more device time is spent on it
+                done.push(self.active.remove(i).into_cancelled());
+                continue;
+            }
             let a = &mut self.active[i];
             let result: Result<bool> = (|| {
                 if a.pos < a.prompt.len() {
                     let end = (a.pos + window).min(a.prompt.len());
-                    self.backend.prefill_chunk(&mut a.seq, &a.prompt[a.pos..end].to_vec())?;
+                    self.backend.prefill_chunk(&mut a.seq, &a.prompt[a.pos..end])?;
                     a.pos = end;
                     Ok(false)
                 } else {
                     let n = quantum.min(a.max_new - a.generated.len());
-                    let toks = self.backend.decode(&mut a.seq, n)?;
+                    let d = self.backend.decode(&mut a.seq, n)?;
                     if a.t_first.is_none() {
-                        a.t_first = Some(Instant::now());
+                        a.t_first = Some(d.t_first.unwrap_or_else(Instant::now));
                     }
-                    a.generated.extend(toks);
+                    a.generated.extend(d.tokens);
                     Ok(a.generated.len() >= a.max_new)
                 }
             })();
             match result {
                 Ok(true) => {
-                    let a = self.active.swap_remove(i);
+                    let a = self.active.remove(i);
                     let now = Instant::now();
                     done.push(Finished {
                         id: a.id,
@@ -179,77 +298,110 @@ impl<B: SeqBackend> Scheduler<B> {
                             .unwrap_or_default(),
                         total_s: (now - a.t_submit).as_secs_f64(),
                         error: None,
+                        cancelled: false,
                     });
                 }
                 Ok(false) => i += 1,
                 Err(e) => {
-                    let a = self.active.swap_remove(i);
-                    done.push(finished_err(a.id, a.prompt.len(), a.t_submit, e));
+                    let a = self.active.remove(i);
+                    done.push(finished_err(
+                        a.id,
+                        a.prompt.len(),
+                        a.t_submit,
+                        Some(a.t_admit),
+                        a.t_first,
+                        e,
+                    ));
                 }
             }
         }
-        done
     }
 }
 
-fn finished_err(id: u64, prompt_tokens: usize, t_submit: Instant, e: anyhow::Error) -> Finished {
+/// Error exit with REAL timings: `queue_s` is the true submit->admit wait
+/// (or the full submit->failure wait when the request never got admitted),
+/// and `ttft_s` survives if a first token had already been emitted.
+fn finished_err(
+    id: u64,
+    prompt_tokens: usize,
+    t_submit: Instant,
+    t_admit: Option<Instant>,
+    t_first: Option<Instant>,
+    e: anyhow::Error,
+) -> Finished {
+    let now = Instant::now();
     Finished {
         id,
         tokens: Vec::new(),
         prompt_tokens,
-        queue_s: 0.0,
-        ttft_s: 0.0,
-        total_s: t_submit.elapsed().as_secs_f64(),
+        queue_s: (t_admit.unwrap_or(now) - t_submit).as_secs_f64(),
+        ttft_s: t_first.map(|t| (t - t_submit).as_secs_f64()).unwrap_or_default(),
+        total_s: (now - t_submit).as_secs_f64(),
         error: Some(format!("{e:#}")),
+        cancelled: false,
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::runtime::{KvArena, KvCache};
 
     /// Mock backend: "generates" token 100+len; fails on prompts containing -1.
     struct Mock {
         prefilled: usize,
         admit: bool,
+        new_seq_calls: usize,
+        new_seq_fails_at: Option<usize>,
     }
 
     struct MockSeq {
-        ingested: Vec<i32>,
         emitted: usize,
     }
 
     impl SeqBackend for Mock {
         type Seq = MockSeq;
         fn new_seq(&mut self) -> Result<MockSeq> {
-            Ok(MockSeq { ingested: vec![], emitted: 0 })
+            let call = self.new_seq_calls;
+            self.new_seq_calls += 1;
+            if self.new_seq_fails_at == Some(call) {
+                anyhow::bail!("no pages");
+            }
+            Ok(MockSeq { emitted: 0 })
         }
         fn can_admit(&self, _active: usize) -> bool {
             self.admit
         }
-        fn prefill_chunk(&mut self, seq: &mut MockSeq, chunk: &[i32]) -> Result<()> {
+        fn prefill_chunk(&mut self, _seq: &mut MockSeq, chunk: &[i32]) -> Result<()> {
             if chunk.contains(&-1) {
                 anyhow::bail!("poison prompt");
             }
             self.prefilled += chunk.len();
-            seq.ingested.extend_from_slice(chunk);
             Ok(())
         }
-        fn decode(&mut self, seq: &mut MockSeq, n: usize) -> Result<Vec<i32>> {
-            let out: Vec<i32> = (0..n).map(|i| 100 + (seq.emitted + i) as i32).collect();
+        fn decode(&mut self, seq: &mut MockSeq, n: usize) -> Result<Decoded> {
+            let tokens: Vec<i32> = (0..n).map(|i| 100 + (seq.emitted + i) as i32).collect();
             seq.emitted += n;
-            Ok(out)
+            Ok(Decoded { tokens, t_first: Some(Instant::now()) })
         }
     }
 
+    fn mock() -> Mock {
+        Mock { prefilled: 0, admit: true, new_seq_calls: 0, new_seq_fails_at: None }
+    }
+
     fn sched() -> Scheduler<Mock> {
-        Scheduler::new(Mock { prefilled: 0, admit: true }, 8, 4, 2, 4)
+        Scheduler::new(mock(), 8, 4, 2, 4)
+    }
+
+    fn submit(s: &mut Scheduler<Mock>, prompt: Vec<i32>, max_new: usize) -> u64 {
+        s.submit(prompt, max_new, CancelToken::new()).unwrap()
     }
 
     #[test]
     fn admission_deferred_while_backend_gates() {
-        let mut s = Scheduler::new(Mock { prefilled: 0, admit: false }, 8, 4, 2, 4);
-        s.submit(vec![1, 2], 1).unwrap();
+        let mut s = Scheduler::new(Mock { admit: false, ..mock() }, 8, 4, 2, 4);
+        submit(&mut s, vec![1, 2], 1);
         s.step();
         assert_eq!(s.depth(), (1, 0), "admitted despite backend pressure");
         s.backend_mut().admit = true;
@@ -266,7 +418,7 @@ mod tests {
     #[test]
     fn single_request_lifecycle() {
         let mut s = sched();
-        let id = s.submit((0..20).collect(), 6).unwrap();
+        let id = submit(&mut s, (0..20).collect(), 6);
         let mut finished = Vec::new();
         let mut rounds = 0;
         while s.has_work() && rounds < 100 {
@@ -279,6 +431,7 @@ mod tests {
         assert_eq!(f.tokens, vec![100, 101, 102, 103, 104, 105]);
         assert_eq!(f.prompt_tokens, 20);
         assert!(f.error.is_none());
+        assert!(!f.cancelled);
         // 20-token prompt at window 8 = 3 prefill rounds; 6 tokens at
         // quantum 4 = 2 decode rounds
         assert_eq!(rounds, 5);
@@ -288,7 +441,7 @@ mod tests {
     fn interleaves_up_to_max_active() {
         let mut s = sched();
         for _ in 0..4 {
-            s.submit((0..8).collect(), 4).unwrap();
+            submit(&mut s, (0..8).collect(), 4);
         }
         let (q, a) = s.depth();
         assert_eq!((q, a), (4, 0));
@@ -308,16 +461,16 @@ mod tests {
     fn admission_control_backpressure() {
         let mut s = sched();
         for _ in 0..4 {
-            s.submit(vec![1], 1).unwrap();
+            submit(&mut s, vec![1], 1);
         }
-        assert!(s.submit(vec![1], 1).is_err(), "queue should be full");
+        assert!(s.submit(vec![1], 1, CancelToken::new()).is_err(), "queue should be full");
     }
 
     #[test]
     fn backend_error_fails_only_that_sequence() {
         let mut s = sched();
-        s.submit(vec![1, 2, 3], 2).unwrap();
-        s.submit(vec![-1], 2).unwrap(); // poison
+        submit(&mut s, vec![1, 2, 3], 2);
+        submit(&mut s, vec![-1], 2); // poison
         let mut oks = 0;
         let mut errs = 0;
         for _ in 0..20 {
@@ -338,7 +491,7 @@ mod tests {
     #[test]
     fn timings_populated() {
         let mut s = sched();
-        s.submit(vec![1, 2], 1).unwrap();
+        submit(&mut s, vec![1, 2], 1);
         let mut out = Vec::new();
         while s.has_work() {
             out.extend(s.step());
@@ -346,5 +499,200 @@ mod tests {
         let f = &out[0];
         assert!(f.total_s >= f.ttft_s);
         assert!(f.ttft_s > 0.0);
+    }
+
+    #[test]
+    fn new_seq_failure_is_isolated_from_the_round() {
+        // regression: a new_seq failure used to abort the whole round,
+        // skipping the remaining admissions AND the advance phase
+        let mut s = Scheduler::new(Mock { new_seq_fails_at: Some(1), ..mock() }, 8, 4, 3, 8);
+        let a = submit(&mut s, vec![1; 4], 2);
+        let b = submit(&mut s, vec![2; 4], 2); // this one's new_seq fails
+        let c = submit(&mut s, vec![3; 4], 2);
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let first_round = s.step();
+        // the failure surfaced immediately, the other two were admitted AND
+        // advanced (prefill ran) in the same round
+        assert_eq!(first_round.len(), 1);
+        let f = &first_round[0];
+        assert_eq!(f.id, b);
+        assert!(f.error.is_some());
+        assert!(f.queue_s >= 0.002, "errored request must keep its real queue time");
+        assert!(f.total_s >= f.queue_s);
+        assert_eq!(s.depth(), (0, 2), "remaining admissions must not be skipped");
+        assert_eq!(s.backend().prefilled, 8, "advance phase must still run");
+        let mut done = Vec::new();
+        while s.has_work() {
+            done.extend(s.step());
+        }
+        let mut ok_ids: Vec<u64> =
+            done.iter().filter(|f| f.error.is_none()).map(|f| f.id).collect();
+        ok_ids.sort_unstable();
+        assert_eq!(ok_ids, vec![a, c]);
+    }
+
+    #[test]
+    fn fairness_no_starvation_across_eight_sequences() {
+        // 8 sequences with mixed prefill/decode workloads, all admitted in
+        // round 1: every sequence must advance one unit EVERY round, so each
+        // finishes exactly at its workload's round count — order-preserving
+        // removal must not starve or reorder anyone.
+        let window = 8;
+        let quantum = 4;
+        let mut s = Scheduler::new(mock(), window, quantum, 8, 16);
+        let loads: Vec<(usize, usize)> = vec![
+            (4, 4),   // 1 prefill + 1 decode round
+            (20, 4),  // 3 + 1
+            (8, 12),  // 1 + 3
+            (16, 8),  // 2 + 2
+            (4, 16),  // 1 + 4
+            (24, 4),  // 3 + 1
+            (8, 4),   // 1 + 1
+            (12, 20), // 2 + 5
+        ];
+        let mut expected = std::collections::BTreeMap::new();
+        for &(p, m) in &loads {
+            let id = submit(&mut s, vec![1; p], m);
+            expected.insert(id, p.div_ceil(window) + m.div_ceil(quantum));
+        }
+        let mut finish_round = std::collections::BTreeMap::new();
+        for round in 1usize..=20 {
+            for f in s.step() {
+                assert!(f.error.is_none());
+                finish_round.insert(f.id, round);
+            }
+            if !s.has_work() {
+                break;
+            }
+        }
+        assert_eq!(finish_round.len(), loads.len());
+        for (id, rounds) in &expected {
+            assert_eq!(
+                finish_round.get(id),
+                Some(rounds),
+                "sequence {id} was starved or served out of turn"
+            );
+        }
+    }
+
+    /// Backend whose sequences hold real paged-KV arena pages, so tests can
+    /// observe cancellation returning bytes to the pool.
+    struct ArenaMock {
+        arena: KvArena,
+    }
+
+    struct ArenaMockSeq {
+        kv: KvCache,
+        pos: u64,
+    }
+
+    impl ArenaMock {
+        fn append(&self, s: &mut ArenaMockSeq, n: usize) -> Result<()> {
+            let row = vec![0.5f32; 2 * n * 4];
+            for layer in 0..2 {
+                s.kv.append_layer(layer, &row, &row, n, n, s.pos)?;
+            }
+            s.pos += n as u64;
+            Ok(())
+        }
+    }
+
+    impl SeqBackend for ArenaMock {
+        type Seq = ArenaMockSeq;
+        fn new_seq(&mut self) -> Result<ArenaMockSeq> {
+            Ok(ArenaMockSeq { kv: KvCache::with_arena(self.arena.clone(), 2, 2, 256, 4), pos: 0 })
+        }
+        fn prefill_chunk(&mut self, seq: &mut ArenaMockSeq, chunk: &[i32]) -> Result<()> {
+            self.append(seq, chunk.len())
+        }
+        fn decode(&mut self, seq: &mut ArenaMockSeq, n: usize) -> Result<Decoded> {
+            self.append(seq, n)?;
+            Ok(Decoded { tokens: vec![7; n], t_first: None })
+        }
+    }
+
+    #[test]
+    fn cancel_mid_prefill_releases_arena_bytes() {
+        let arena = KvArena::new();
+        let mut s = Scheduler::new(ArenaMock { arena: arena.clone() }, 8, 4, 2, 4);
+        let cancel = CancelToken::new();
+        s.submit(vec![1; 32], 8, cancel.clone()).unwrap();
+        s.step(); // admit + first prefill window (8 of 32 tokens)
+        assert_eq!(s.depth(), (0, 1));
+        assert!(arena.stats().bytes_in_use > 0, "prefill must occupy pages");
+        cancel.cancel();
+        let done = s.step();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].cancelled);
+        assert!(done[0].error.is_none());
+        assert_eq!(
+            arena.stats().bytes_in_use,
+            0,
+            "cancelled mid-prefill sequence must return its pages immediately"
+        );
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn cancel_mid_decode_releases_arena_bytes() {
+        let arena = KvArena::new();
+        let mut s = Scheduler::new(ArenaMock { arena: arena.clone() }, 8, 4, 2, 4);
+        let cancel = CancelToken::new();
+        s.submit(vec![1; 8], 64, cancel.clone()).unwrap();
+        s.step(); // admit + full prefill
+        s.step(); // first decode quantum (4 of 64 tokens)
+        let mid = arena.stats().bytes_in_use;
+        assert!(mid > 0, "decoding sequence must occupy pages");
+        cancel.cancel();
+        let done = s.step();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].cancelled);
+        assert_eq!(done[0].tokens.len(), 4, "tokens decoded before the cancel are reported");
+        assert!(done[0].ttft_s > 0.0, "cancelled-after-first-token keeps its TTFT");
+        assert_eq!(
+            arena.stats().bytes_in_use,
+            0,
+            "cancelled mid-decode sequence must return its pages before the next round"
+        );
+    }
+
+    #[test]
+    fn cancel_while_queued_never_admits() {
+        let mut s = sched();
+        let cancel = CancelToken::new();
+        s.submit(vec![1; 4], 2, cancel.clone()).unwrap();
+        cancel.cancel();
+        let done = s.step();
+        assert_eq!(done.len(), 1);
+        assert!(done[0].cancelled);
+        assert_eq!(done[0].tokens.len(), 0);
+        assert!(done[0].queue_s >= 0.0);
+        assert_eq!(s.backend().new_seq_calls, 0, "cancelled queued request must not admit");
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn cancellation_does_not_stall_other_sequences() {
+        let mut s = Scheduler::new(mock(), 8, 4, 4, 8);
+        let cancel = CancelToken::new();
+        submit(&mut s, vec![1; 8], 8);
+        s.submit(vec![2; 8], 8, cancel.clone()).unwrap();
+        submit(&mut s, vec![3; 8], 8);
+        s.step(); // all admitted + prefilled
+        cancel.cancel();
+        let mut done = Vec::new();
+        for _ in 0..10 {
+            done.extend(s.step());
+            if !s.has_work() {
+                break;
+            }
+        }
+        assert_eq!(done.len(), 3);
+        assert_eq!(done.iter().filter(|f| f.cancelled).count(), 1);
+        assert_eq!(
+            done.iter().filter(|f| !f.cancelled && f.error.is_none()).count(),
+            2,
+            "survivors must complete normally"
+        );
     }
 }

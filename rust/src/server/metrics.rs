@@ -1,5 +1,6 @@
 //! Serving metrics registry: request counters, TTFT / end-to-end latency
-//! distributions, token throughput, and the runtime transfer counters
+//! distributions, token throughput, reactor intake depth, cancellation and
+//! post-shutdown rejection counters, and the runtime transfer counters
 //! (upload/download volume, incremental-gather traffic). Exported over the
 //! wire via `op:stats`.
 
@@ -15,7 +16,18 @@ pub struct Metrics {
     pub submitted: u64,
     pub completed: u64,
     pub rejected: u64,
+    /// Generate requests refused because `op:shutdown` had already been
+    /// accepted (distinct from backpressure rejections).
+    pub rejected_shutdown: u64,
     pub errored: u64,
+    /// Sequences dropped because their client disconnected.
+    pub cancelled: u64,
+    /// Reactor rounds observed (each round fully drains the intake channel).
+    pub intake_rounds: u64,
+    /// Generate requests drained per non-empty intake round (the burst
+    /// depth the decoupled intake absorbs in one round; control ops like
+    /// stats polls are excluded so they don't dilute the statistic).
+    pub intake_depth: Samples,
     pub queue_s: Samples,
     pub ttft_s: Samples,
     pub total_s: Samples,
@@ -30,7 +42,11 @@ impl Default for Metrics {
             submitted: 0,
             completed: 0,
             rejected: 0,
+            rejected_shutdown: 0,
             errored: 0,
+            cancelled: 0,
+            intake_rounds: 0,
+            intake_depth: Samples::new(),
             queue_s: Samples::new(),
             ttft_s: Samples::new(),
             total_s: Samples::new(),
@@ -41,9 +57,26 @@ impl Default for Metrics {
 }
 
 impl Metrics {
+    /// One reactor round drained `drained` generate requests from the
+    /// channel.
+    pub fn record_intake(&mut self, drained: u64) {
+        self.intake_rounds += 1;
+        if drained > 0 {
+            self.intake_depth.record(drained as f64);
+        }
+    }
+
     pub fn record_finished(&mut self, f: &crate::server::batcher::Finished) {
+        if f.cancelled {
+            self.cancelled += 1;
+            return;
+        }
         if f.error.is_some() {
             self.errored += 1;
+            // queue time is a scheduler property, real even for errored
+            // sequences — record it so admission latency is not skewed by
+            // dropping failures (ttft/total stay success-only)
+            self.queue_s.record(f.queue_s);
             return;
         }
         self.completed += 1;
@@ -56,12 +89,19 @@ impl Metrics {
 
     pub fn to_json(&self) -> Json {
         let uptime = self.started.elapsed().as_secs_f64();
+        let intake_max = if self.intake_depth.is_empty() { 0.0 } else { self.intake_depth.max() };
         Json::from_pairs(vec![
             ("uptime_s", uptime.into()),
             ("submitted", (self.submitted as i64).into()),
             ("completed", (self.completed as i64).into()),
             ("rejected", (self.rejected as i64).into()),
+            ("rejected_shutdown", (self.rejected_shutdown as i64).into()),
             ("errored", (self.errored as i64).into()),
+            ("cancelled", (self.cancelled as i64).into()),
+            ("intake_rounds", (self.intake_rounds as i64).into()),
+            ("intake_depth_p50", self.intake_depth.p50().into()),
+            ("intake_depth_p95", self.intake_depth.p95().into()),
+            ("intake_depth_max", intake_max.into()),
             ("prompt_tokens", (self.prompt_tokens as i64).into()),
             ("gen_tokens", (self.gen_tokens.count as i64).into()),
             ("gen_tokens_per_s", self.gen_tokens.rate().into()),
@@ -102,33 +142,71 @@ mod tests {
     use super::*;
     use crate::server::batcher::Finished;
 
-    #[test]
-    fn records_and_exports() {
-        let mut m = Metrics::default();
-        m.submitted = 2;
-        m.record_finished(&Finished {
-            id: 1,
+    fn fin(id: u64) -> Finished {
+        Finished {
+            id,
             tokens: vec![1, 2, 3, 4],
             prompt_tokens: 10,
             queue_s: 0.001,
             ttft_s: 0.01,
             total_s: 0.05,
             error: None,
-        });
+            cancelled: false,
+        }
+    }
+
+    #[test]
+    fn records_and_exports() {
+        let mut m = Metrics::default();
+        m.submitted = 2;
+        m.record_finished(&fin(1));
         m.record_finished(&Finished {
             id: 2,
             tokens: vec![],
             prompt_tokens: 5,
-            queue_s: 0.0,
+            queue_s: 0.002,
             ttft_s: 0.0,
             total_s: 0.01,
             error: Some("boom".into()),
+            cancelled: false,
         });
         let j = m.to_json();
         assert_eq!(j.usize_of("completed"), Some(1));
         assert_eq!(j.usize_of("errored"), Some(1));
         assert_eq!(j.usize_of("gen_tokens"), Some(4));
         assert!(j.f64_of("ttft_ms_p50").unwrap() > 9.0);
+        // errored sequence's REAL queue time entered the queue distribution
+        assert_eq!(m.queue_s.len(), 2);
+        assert!(j.f64_of("queue_ms_p95").unwrap() >= 1.0);
+    }
+
+    #[test]
+    fn cancelled_counts_separately_from_errors() {
+        let mut m = Metrics::default();
+        m.record_finished(&Finished { cancelled: true, error: None, ..fin(1) });
+        m.record_finished(&fin(2));
+        let j = m.to_json();
+        assert_eq!(j.usize_of("cancelled"), Some(1));
+        assert_eq!(j.usize_of("completed"), Some(1));
+        assert_eq!(j.usize_of("errored"), Some(0));
+        // cancellations do not pollute the success latency distributions
+        assert_eq!(m.ttft_s.len(), 1);
+    }
+
+    #[test]
+    fn intake_depth_tracks_nonempty_rounds() {
+        let mut m = Metrics::default();
+        m.record_intake(0);
+        m.record_intake(8);
+        m.record_intake(0);
+        m.record_intake(2);
+        let j = m.to_json();
+        assert_eq!(j.usize_of("intake_rounds"), Some(4));
+        assert_eq!(j.f64_of("intake_depth_max"), Some(8.0));
+        assert!(j.f64_of("intake_depth_p50").unwrap() >= 2.0);
+        // empty registry exports 0, not -inf
+        let j0 = Metrics::default().to_json();
+        assert_eq!(j0.f64_of("intake_depth_max"), Some(0.0));
     }
 
     #[test]

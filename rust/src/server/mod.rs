@@ -1,26 +1,36 @@
 //! The serving front-end: JSON-lines TCP listener + single-executor
-//! continuous-batching loop (the PJRT client is single-device; concurrency
-//! is iteration-level interleaving, vLLM-style).
+//! reactor (the PJRT client is single-device; concurrency is
+//! iteration-level interleaving, vLLM-style).
 //!
-//! Threads: N connection readers/writers + 1 executor that owns the
-//! `Runtime` (PJRT handles are not `Send`; the executor constructs it on its
-//! own thread and everything device-related stays there).
+//! Control path: each connection runs a reader thread (parses lines,
+//! forwards [`Work`] to the executor, observes EOF = client disconnect) and
+//! a writer thread (serializes responses), so requests pipeline and a
+//! disconnect is seen *while* the request is in flight — the reader fires
+//! the connection's [`CancelToken`] and the scheduler drops the sequence,
+//! returning its paged-KV arena pages between quanta. The executor itself
+//! is a [`Reactor`]: every round it drains the intake channel to empty
+//! (burst admission no longer waits on device steps), rejects generate
+//! requests once `op:shutdown` was accepted, then takes one scheduler step
+//! (reap cancelled / admit / advance — see [`batcher`]).
+//!
+//! Threads: N connection reader/writer pairs + 1 executor that owns the
+//! `Runtime` (PJRT handles are not `Send`; the executor constructs it on
+//! its own thread and everything device-related stays there).
 
 pub mod batcher;
 pub mod metrics;
 pub mod protocol;
+pub mod reactor;
 pub mod text;
 
-use std::collections::BTreeMap;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::sync::mpsc::{self, Receiver, Sender};
-use std::time::Duration;
 
 use anyhow::Result;
 
-use batcher::{Finished, Scheduler, SeqBackend};
-use protocol::{err_response, ok_generate, ok_stats, parse_request, Op};
+use batcher::{CancelToken, Decoded, Scheduler, SeqBackend};
+pub use reactor::{Reactor, Work};
 
 use crate::cache::make_policy;
 use crate::config::ServeConfig;
@@ -82,8 +92,9 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
         seq.prefill(chunk)
     }
 
-    fn decode(&mut self, seq: &mut Engine<'rt>, n: usize) -> Result<Vec<i32>> {
-        seq.generate(n)
+    fn decode(&mut self, seq: &mut Engine<'rt>, n: usize) -> Result<Decoded> {
+        let (tokens, t_first) = seq.generate_timed(n)?;
+        Ok(Decoded { tokens, t_first })
     }
 
     /// Admission control by real arena pressure: see
@@ -94,10 +105,6 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
             Some(limit) => admission_ok(&self.arena.stats(), active, self.est_seq_bytes, limit),
         }
     }
-}
-
-enum Work {
-    Req { line: String, reply: Sender<String> },
 }
 
 /// Run the server until an `op:shutdown` request arrives. Returns the final
@@ -122,34 +129,54 @@ pub fn run_server(cfg: ServeConfig) -> Result<crate::util::json::Json> {
     executor_loop(cfg, rx)
 }
 
+/// Per-connection pump: the calling thread reads request lines and forwards
+/// them to the executor; a writer thread serializes responses back. Reads
+/// and writes are decoupled so (a) a client can pipeline requests and (b)
+/// the reader observes EOF the moment the client disconnects — even with a
+/// request still running — and fires the connection's [`CancelToken`] so
+/// the scheduler can reclaim the sequence's arena pages immediately.
+///
+/// Read-side EOF is deliberately treated as "client gone": TCP cannot
+/// distinguish a vanished client from one that half-closed and still
+/// reads, and waiting for a write failure would burn device time on
+/// every real disconnect — the exact leak this path exists to stop. The
+/// protocol therefore requires clients to hold their write side open
+/// while awaiting replies (documented in [`protocol`]).
 fn handle_conn(conn: TcpStream, tx: Sender<Work>) -> Result<()> {
-    let peer = conn.peer_addr()?;
     let reader = BufReader::new(conn.try_clone()?);
     let mut writer = conn;
+    let (wtx, wrx) = mpsc::channel::<String>();
+    let writer_thread = std::thread::spawn(move || {
+        for resp in wrx {
+            if writer.write_all(resp.as_bytes()).is_err()
+                || writer.write_all(b"\n").is_err()
+                || writer.flush().is_err()
+            {
+                break;
+            }
+        }
+    });
+    let cancel = CancelToken::new();
     for line in reader.lines() {
         let line = match line {
             Ok(l) if !l.trim().is_empty() => l,
             Ok(_) => continue,
             Err(_) => break,
         };
-        let (rtx, rrx) = mpsc::channel();
-        if tx.send(Work::Req { line, reply: rtx }).is_err() {
+        if tx.send(Work::Req { line, reply: wtx.clone(), cancel: cancel.clone() }).is_err() {
             break; // executor gone
         }
-        match rrx.recv() {
-            Ok(resp) => {
-                writer.write_all(resp.as_bytes())?;
-                writer.write_all(b"\n")?;
-                writer.flush()?;
-            }
-            Err(_) => break,
-        }
     }
-    let _ = peer;
+    // EOF or read error: the client is gone. Flag every request this
+    // connection still has in flight; the scheduler drops the sequences
+    // between quanta and their arena pages return to the pool.
+    cancel.cancel();
+    drop(wtx);
+    let _ = writer_thread.join();
     Ok(())
 }
 
-/// The executor: owns the Runtime, the scheduler and the metrics registry.
+/// The executor: owns the Runtime and drives the reactor.
 fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::json::Json> {
     let rt = Runtime::load(&crate::artifacts_dir(), &[cfg.model.as_str()])?;
     // pre-compile the serving programs so the first request isn't slow
@@ -165,81 +192,14 @@ fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::js
     // the same process when the new config says unlimited (0)
     KvArena::global().set_budget((cfg.kv_pool_bytes > 0).then_some(cfg.kv_pool_bytes));
     let backend = EngineBackend::new(&rt, cfg.clone())?;
-    let mut sched =
+    let sched =
         Scheduler::new(backend, cfg.window, cfg.decode_quantum, cfg.max_active, cfg.max_queue);
-    let mut metrics = metrics::Metrics::default();
-    let mut waiting: BTreeMap<u64, (i64, Sender<String>)> = BTreeMap::new();
-    let mut shutdown = false;
-
-    while !shutdown || sched.has_work() {
-        // drain incoming work (block briefly when idle)
-        let work = if sched.has_work() {
-            rx.try_recv().ok()
-        } else {
-            rx.recv_timeout(Duration::from_millis(50)).ok()
-        };
-        if let Some(Work::Req { line, reply }) = work {
-            match parse_request(&line) {
-                Ok(req) => match req.op {
-                    Op::Generate { prompt, max_new_tokens } => {
-                        let max_new = max_new_tokens.min(cfg.max_new_tokens);
-                        metrics.submitted += 1;
-                        match sched.submit(prompt, max_new) {
-                            Ok(sid) => {
-                                waiting.insert(sid, (req.id, reply));
-                            }
-                            Err(e) => {
-                                metrics.rejected += 1;
-                                let _ = reply.send(err_response(req.id, &format!("{e:#}")));
-                            }
-                        }
-                    }
-                    Op::Stats => {
-                        let mut j = metrics.to_json();
-                        let (q, a) = sched.depth();
-                        j.set("queue_depth", q.into());
-                        j.set("active_seqs", a.into());
-                        metrics::export_runtime(&mut j, &rt.stats());
-                        let ast = KvArena::global().stats();
-                        j.set("kv_arena_bytes_in_use", ast.bytes_in_use.into());
-                        j.set("kv_arena_bytes_pooled", ast.bytes_pooled.into());
-                        j.set("kv_arena_high_water", ast.high_water.into());
-                        let _ = reply.send(ok_stats(req.id, j));
-                    }
-                    Op::Shutdown => {
-                        shutdown = true;
-                        let _ = reply.send(ok_stats(req.id, metrics.to_json()));
-                    }
-                },
-                Err(e) => {
-                    let _ = reply.send(err_response(0, &format!("{e:#}")));
-                }
-            }
-        }
-        for f in sched.step() {
-            deliver(&mut waiting, &mut metrics, f);
-        }
-    }
-    Ok(metrics.to_json())
-}
-
-fn deliver(
-    waiting: &mut BTreeMap<u64, (i64, Sender<String>)>,
-    metrics: &mut metrics::Metrics,
-    f: Finished,
-) {
-    metrics.record_finished(&f);
-    if let Some((req_id, reply)) = waiting.remove(&f.id) {
-        let resp = match &f.error {
-            Some(e) => err_response(req_id, e),
-            None => ok_generate(
-                req_id,
-                &f.tokens,
-                f.prompt_tokens,
-                f.ttft_s * 1e3,
-                f.total_s * 1e3,
-            ),
-        };
-        let _ = reply.send(resp);
-    }
+    let reactor = Reactor::new(sched, cfg.max_new_tokens);
+    Ok(reactor.run(&rx, |j| {
+        metrics::export_runtime(j, &rt.stats());
+        let ast = KvArena::global().stats();
+        j.set("kv_arena_bytes_in_use", ast.bytes_in_use.into());
+        j.set("kv_arena_bytes_pooled", ast.bytes_pooled.into());
+        j.set("kv_arena_high_water", ast.high_water.into());
+    }))
 }

@@ -11,10 +11,21 @@
 //!    "total_ms":..,"prompt_tokens":N,"gen_tokens":M}
 //!   {"id":3,"ok":true,"stats":{...}}
 //!   {"id":2,"ok":false,"error":"..."}
+//!
+//! Connection semantics: closing (or half-closing) the connection's write
+//! side ABANDONS all of that connection's in-flight requests — the server
+//! cancels the sequences and frees their KV pages immediately rather than
+//! finishing work nobody acknowledged they still want. Clients must keep
+//! the write side open while awaiting replies.
 
 use anyhow::{bail, Result};
 
 use crate::util::json::Json;
+
+/// Error message for generate requests that arrive after `op:shutdown` has
+/// been accepted: the reactor rejects them instead of admitting work no one
+/// will wait for. String-matched by clients and tests.
+pub const SHUTTING_DOWN: &str = "shutting-down";
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Op {

@@ -133,16 +133,11 @@ impl Json {
     pub fn parse_file(path: &std::path::Path) -> anyhow::Result<Json> {
         let text = std::fs::read_to_string(path)
             .map_err(|e| anyhow::anyhow!("reading {}: {e}", path.display()))?;
-        Ok(Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))?)
+        Json::parse(&text).map_err(|e| anyhow::anyhow!("parsing {}: {e}", path.display()))
     }
 
-    // ----- serialization ----------------------------------------------------
-    pub fn to_string(&self) -> String {
-        let mut s = String::new();
-        self.write(&mut s);
-        s
-    }
-
+    // ----- serialization (via `Display`; `to_string()` comes from the
+    // blanket `ToString` impl) -----------------------------------------------
     fn write(&self, out: &mut String) {
         match self {
             Json::Null => out.push_str("null"),
@@ -179,6 +174,14 @@ impl Json {
                 out.push('}');
             }
         }
+    }
+}
+
+impl fmt::Display for Json {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let mut s = String::new();
+        self.write(&mut s);
+        f.write_str(&s)
     }
 }
 

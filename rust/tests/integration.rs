@@ -236,6 +236,68 @@ fn kv_cache_padding_budget_equivalence_through_device() {
 }
 
 #[test]
+fn server_cancels_disconnected_client() {
+    need_artifacts!();
+    // a client that submits a long generation and drops the connection must
+    // have its sequence cancelled (not decoded to completion), observable in
+    // `op:stats` from another connection
+    use std::io::{BufRead, BufReader, Write};
+    use std::net::TcpStream;
+    let listen = "127.0.0.1:7912".to_string();
+    let cfg = lacache::config::ServeConfig {
+        listen: listen.clone(),
+        model: "mini".into(),
+        policy: "lacache:budget=64,span=1".into(),
+        window: 32,
+        capacity: 256,
+        max_new_tokens: 512,
+        ..Default::default()
+    };
+    let server = std::thread::spawn(move || lacache::server::run_server(cfg));
+    let mut victim = None;
+    for _ in 0..200 {
+        if let Ok(s) = TcpStream::connect(&listen) {
+            victim = Some(s);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(100));
+    }
+    let mut victim = victim.expect("server did not start");
+    victim
+        .write_all(
+            b"{\"op\":\"generate\",\"id\":1,\"prompt\":\"<bos> w1 w2 w3 w4 w5 w6 w7 w8\",\
+              \"max_new_tokens\":512}\n",
+        )
+        .unwrap();
+    victim.flush().unwrap();
+    drop(victim); // disconnect with the request in flight
+
+    let obs = TcpStream::connect(&listen).unwrap();
+    let mut reader = BufReader::new(obs.try_clone().unwrap());
+    let mut writer = obs;
+    let mut cancelled = 0usize;
+    for attempt in 0..200 {
+        let req = format!("{{\"op\":\"stats\",\"id\":{}}}\n", 100 + attempt);
+        writer.write_all(req.as_bytes()).unwrap();
+        writer.flush().unwrap();
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = lacache::util::json::Json::parse(&line).unwrap();
+        cancelled = j.req("stats").usize_of("cancelled").unwrap();
+        if cancelled >= 1 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    assert_eq!(cancelled, 1, "disconnected client's sequence was not cancelled");
+    writer.write_all(b"{\"op\":\"shutdown\",\"id\":999}\n").unwrap();
+    writer.flush().unwrap();
+    let fin = server.join().unwrap().unwrap();
+    assert_eq!(fin.usize_of("cancelled"), Some(1));
+    assert_eq!(fin.usize_of("completed"), Some(0));
+}
+
+#[test]
 fn server_end_to_end_over_tcp() {
     need_artifacts!();
     use std::io::{BufRead, BufReader, Write};
