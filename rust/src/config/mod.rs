@@ -28,9 +28,19 @@ pub struct ServeConfig {
     /// Max concurrently active sequences in the scheduler.
     pub max_active: usize,
     /// Shared paged-KV arena byte budget (0 = unlimited). Drives admission
-    /// control: new sequences wait while projected arena occupancy would
-    /// exceed this, and page allocations beyond it fail.
+    /// control: new sequences wait while projected arena occupancy — plus
+    /// the staging tiers below — would exceed this, and page allocations
+    /// beyond it fail.
     pub kv_pool_bytes: usize,
+    /// Dense host scratch images the transfer layer keeps warm (LRU
+    /// entries, one per hot sequence; clamped to >= 1 — the gather path
+    /// always needs one staging image). Their bytes are exported as
+    /// `scratch_resident_bytes` and counted by admission control.
+    pub scratch_pool_entries: usize,
+    /// Device-residency tier byte capacity (resident K/V images; LRU
+    /// spill-to-scratch beyond it). 0 disables residency — every call
+    /// re-uploads its dense image.
+    pub device_pool_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -46,6 +56,8 @@ impl Default for ServeConfig {
             decode_quantum: 16,
             max_active: 4,
             kv_pool_bytes: 0,
+            scratch_pool_entries: 16,
+            device_pool_bytes: 256 << 20,
         }
     }
 }
@@ -64,6 +76,10 @@ impl ServeConfig {
             decode_quantum: j.usize_of("decode_quantum").unwrap_or(d.decode_quantum),
             max_active: j.usize_of("max_active").unwrap_or(d.max_active),
             kv_pool_bytes: j.usize_of("kv_pool_bytes").unwrap_or(d.kv_pool_bytes),
+            scratch_pool_entries: j
+                .usize_of("scratch_pool_entries")
+                .unwrap_or(d.scratch_pool_entries),
+            device_pool_bytes: j.usize_of("device_pool_bytes").unwrap_or(d.device_pool_bytes),
         })
     }
 
@@ -93,6 +109,8 @@ impl ServeConfig {
         cfg.decode_quantum = args.usize_or("decode-quantum", cfg.decode_quantum);
         cfg.max_active = args.usize_or("max-active", cfg.max_active);
         cfg.kv_pool_bytes = args.usize_or("kv-pool-bytes", cfg.kv_pool_bytes);
+        cfg.scratch_pool_entries = args.usize_or("scratch-pool-entries", cfg.scratch_pool_entries);
+        cfg.device_pool_bytes = args.usize_or("device-pool-bytes", cfg.device_pool_bytes);
         Ok(cfg)
     }
 
@@ -108,6 +126,8 @@ impl ServeConfig {
             ("decode_quantum", self.decode_quantum.into()),
             ("max_active", self.max_active.into()),
             ("kv_pool_bytes", self.kv_pool_bytes.into()),
+            ("scratch_pool_entries", self.scratch_pool_entries.into()),
+            ("device_pool_bytes", self.device_pool_bytes.into()),
         ])
     }
 }
@@ -166,6 +186,8 @@ mod tests {
         assert_eq!(back.capacity, d.capacity);
         assert_eq!(back.max_active, 4);
         assert_eq!(back.kv_pool_bytes, 0);
+        assert_eq!(back.scratch_pool_entries, 16);
+        assert_eq!(back.device_pool_bytes, 256 << 20);
     }
 
     #[test]
@@ -182,6 +204,10 @@ mod tests {
                 "9",
                 "--kv-pool-bytes",
                 "1048576",
+                "--scratch-pool-entries",
+                "5",
+                "--device-pool-bytes",
+                "2097152",
             ]
             .iter()
             .map(|s| s.to_string())
@@ -194,15 +220,26 @@ mod tests {
         assert_eq!(cfg.window, 128); // default preserved
         assert_eq!(cfg.max_active, 9);
         assert_eq!(cfg.kv_pool_bytes, 1 << 20);
+        assert_eq!(cfg.scratch_pool_entries, 5);
+        assert_eq!(cfg.device_pool_bytes, 2 << 20);
     }
 
     #[test]
     fn serve_config_scheduler_fields_roundtrip_json() {
-        // regression: max_active used to be hardcoded in the executor loop
-        let cfg = ServeConfig { max_active: 7, kv_pool_bytes: 4096, ..Default::default() };
+        // regression: max_active used to be hardcoded in the executor loop,
+        // scratch_pool_entries in the runtime
+        let cfg = ServeConfig {
+            max_active: 7,
+            kv_pool_bytes: 4096,
+            scratch_pool_entries: 3,
+            device_pool_bytes: 0,
+            ..Default::default()
+        };
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
         assert_eq!(back.max_active, 7);
         assert_eq!(back.kv_pool_bytes, 4096);
+        assert_eq!(back.scratch_pool_entries, 3);
+        assert_eq!(back.device_pool_bytes, 0, "0 (residency disabled) must round-trip");
     }
 
     #[test]

@@ -65,6 +65,11 @@ impl<'rt> Engine<'rt> {
 
     pub fn reset(&mut self) {
         let (l, h, c, dh) = (self.cache.l, self.cache.h, self.cache.c, self.cache.dh);
+        // release the old cache's device-tier buffers and scratch image
+        // deterministically (mirrors the KvCache Drop -> arena page return
+        // path; dropped caches are also swept lazily, but reset should not
+        // leave stale staging bytes until the next sweep point)
+        self.rt.release_cache_state(self.cache.id());
         self.cache = KvCache::new(l, h, c, dh);
         self.n_tokens = 0;
         self.last_token = crate::data::corpus::BOS;

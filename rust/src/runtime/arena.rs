@@ -148,12 +148,20 @@ pub fn seq_footprint_bytes(n_layers: usize, row_width: usize, slots: usize) -> u
 }
 
 /// Shared admission gate (server + benches): measured arena pressure plus
-/// one projected footprint must fit the budget, AND reserving the peak
-/// footprint for every already-admitted sequence (which may not have
-/// allocated its pages yet) must still fit.
-pub fn admission_ok(stats: &ArenaStats, active: usize, est_seq_bytes: usize, limit: usize) -> bool {
+/// staging-tier bytes (device-resident K/V images + host scratch images,
+/// which exist per hot sequence and back-pressure intake instead of OOMing
+/// the device) plus one projected footprint must fit the budget, AND
+/// reserving the peak footprint for every already-admitted sequence (which
+/// may not have allocated its pages yet) must still fit.
+pub fn admission_ok(
+    stats: &ArenaStats,
+    active: usize,
+    est_seq_bytes: usize,
+    limit: usize,
+    staging_bytes: usize,
+) -> bool {
     let reserved = (active + 1).saturating_mul(est_seq_bytes);
-    stats.bytes_in_use + est_seq_bytes <= limit && reserved <= limit
+    stats.bytes_in_use + staging_bytes + est_seq_bytes <= limit && reserved <= limit
 }
 
 #[cfg(test)]
@@ -200,12 +208,16 @@ mod tests {
         let est = seq_footprint_bytes(2, 8, 17); // 17 slots -> 2 pages, x2 layers
         assert_eq!(est, 2 * 2 * Page::bytes(8));
         let empty = ArenaStats::default();
-        assert!(admission_ok(&empty, 0, est, est));
+        assert!(admission_ok(&empty, 0, est, est, 0));
         // one active sequence reserves its footprint even before allocating
-        assert!(!admission_ok(&empty, 1, est, est));
-        assert!(admission_ok(&empty, 1, est, 2 * est));
+        assert!(!admission_ok(&empty, 1, est, est, 0));
+        assert!(admission_ok(&empty, 1, est, 2 * est, 0));
         let loaded = ArenaStats { bytes_in_use: est, ..Default::default() };
-        assert!(!admission_ok(&loaded, 0, est, est));
+        assert!(!admission_ok(&loaded, 0, est, est, 0));
+        // staging bytes (device-resident images + scratch pool) count like
+        // arena pressure: a full device tier back-pressures intake
+        assert!(admission_ok(&empty, 0, est, 2 * est, est));
+        assert!(!admission_ok(&empty, 0, est, 2 * est, est + 1));
     }
 
     #[test]

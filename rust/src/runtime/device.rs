@@ -1,0 +1,816 @@
+//! Device-residency tier: keeps each hot sequence's dense K/V image alive
+//! ON THE DEVICE across program calls, so steady-state serving uploads
+//! tokens and lens — not the `O(L·H·C·Dh)` cache image — per call.
+//!
+//! The storage stack now has three tiers, consulted in order by
+//! [`super::Runtime::score`] / [`super::Runtime::generate`]:
+//!
+//! 1. **Device-hit** (this module): the cache's `(id, sync_gen)`-stamped
+//!    [`DeviceKvState`] is resident. Host-side mutations since the stamp
+//!    (ladder compaction, eviction, truncation, window appends) are
+//!    reconciled by uploading ONLY the dirty slot ranges over the resident
+//!    buffers ([`KvCache::stage_rows`] → partial overwrite, one contiguous
+//!    run per (layer, head)); an unchanged cache uploads nothing. Generate
+//!    calls donate the resident buffers to the program
+//!    (`execute_with_donation`), which appends KV in place — the output
+//!    buffers become the new resident state and only the appended rows are
+//!    downloaded.
+//! 2. **Host-hit** (the [`ScratchPool`] spill tier): no resident buffers,
+//!    but a stamped host image exists — incremental gather, full upload,
+//!    then promotion into this tier.
+//! 3. **Cold**: full gather, full upload, promotion.
+//!
+//! Residency is capacity-bounded ([`DeviceTier::new`]) with LRU
+//! **spill-to-scratch**: the least-recently-used entry's image is read back
+//! (`copy_to_host_partial`) and handed to the scratch pool with its stamp
+//! ([`ScratchPool::adopt`]), so a spilled sequence re-promotes through an
+//! incremental gather instead of a full one. Entries hold a liveness token
+//! ([`KvCache::residency_token`]); [`DeviceTier::sweep`] releases buffers
+//! whose cache was dropped — the Drop → arena-page-return lifecycle extended
+//! to device state, which is what frees a cancelled sequence's
+//! `device_resident_bytes` before the next reactor round admits anyone.
+//!
+//! Invariants, the tier diagram, and the bench methodology live in PERF.md
+//! ("Device residency").
+
+use std::sync::Weak;
+
+use anyhow::Result;
+
+use super::kv::KvCache;
+use super::transfer::ScratchPool;
+
+/// One sequence's resident device K/V image (`[L, H, C, Dh]` f32 each side),
+/// stamped with the cache state it equals.
+pub struct DeviceKvState {
+    pub k: xla::PjRtBuffer,
+    pub v: xla::PjRtBuffer,
+    cache_id: u64,
+    /// The image equals the cache's dense gather at this sync generation;
+    /// pending dirty ranges are the exact divergence (invariant I2 of
+    /// PERF.md, shared with the scratch pool).
+    sync_gen: u64,
+    /// f32 elements per buffer side.
+    elems: usize,
+    /// On-device bytes (K + V) — the tier's capacity accounting unit.
+    bytes: usize,
+    /// Source-cache liveness ([`KvCache::residency_token`]).
+    alive: Weak<()>,
+}
+
+/// Cumulative residency-tier counters (folded into
+/// [`super::RuntimeStats`] by the runtime).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct DeviceStats {
+    /// Calls served by a resident image (at most a dirty-range reconcile).
+    pub hits: u64,
+    /// Calls that had to upload a full image (cold, post-spill, or stale).
+    pub misses: u64,
+    /// Full images installed into the tier.
+    pub promotions: u64,
+    /// LRU evictions (image read back and handed to the scratch pool).
+    pub spills: u64,
+    /// Generate calls whose resident buffers were donated to the program
+    /// and whose outputs were re-installed as the new resident state.
+    pub donations: u64,
+    /// Entries released because their cache was dropped or reset.
+    pub released: u64,
+    /// Bytes uploaded by dirty-range reconciliation (subset of
+    /// `uploaded_bytes`) — the number the device-hit path drives toward
+    /// zero per decode step.
+    pub reconciled_bytes: u64,
+    /// Total host→device bytes moved by this tier (full uploads +
+    /// reconciles).
+    pub uploaded_bytes: u64,
+    /// Device→host bytes moved by spills.
+    pub spill_bytes_d2h: u64,
+}
+
+/// Outcome of [`DeviceTier::acquire`]: where the call's K/V image lives.
+pub enum Acquired {
+    /// The image is resident in the tier (entry stamped current); look it up
+    /// with [`DeviceTier::resident`] or consume it with
+    /// [`DeviceTier::take`] for donation.
+    Resident,
+    /// The image was uploaded for this call only (tier disabled, or one
+    /// image exceeds the tier capacity); the buffers die with the call.
+    Transient(xla::PjRtBuffer, xla::PjRtBuffer),
+}
+
+/// Capacity-bounded LRU pool of resident device images.
+pub struct DeviceTier {
+    /// LRU order: most recently used last.
+    entries: Vec<DeviceKvState>,
+    /// Byte capacity (K + V, all entries); 0 disables residency entirely —
+    /// every call uploads transiently, the pre-residency behavior.
+    capacity_bytes: usize,
+    stats: DeviceStats,
+    /// Reusable reconcile staging (one (layer, head) run at a time); no
+    /// allocations in steady state.
+    stage_k: Vec<f32>,
+    stage_v: Vec<f32>,
+}
+
+impl DeviceTier {
+    pub fn new(capacity_bytes: usize) -> Self {
+        Self {
+            entries: Vec::new(),
+            capacity_bytes,
+            stats: DeviceStats::default(),
+            stage_k: Vec::new(),
+            stage_v: Vec::new(),
+        }
+    }
+
+    pub fn stats(&self) -> DeviceStats {
+        self.stats
+    }
+
+    /// Bytes currently resident (K + V across all entries) — the gauge the
+    /// admission gate counts alongside arena pages and scratch staging.
+    pub fn resident_bytes(&self) -> usize {
+        self.entries.iter().map(|e| e.bytes).sum()
+    }
+
+    pub fn capacity_bytes(&self) -> usize {
+        self.capacity_bytes
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Resident entry for a cache, if any (no LRU side effects).
+    pub fn resident(&self, cache_id: u64) -> Option<&DeviceKvState> {
+        self.entries.iter().find(|e| e.cache_id == cache_id)
+    }
+
+    /// Release buffers whose source cache was dropped. Mirrors the
+    /// `KvCache` Drop → arena page return path for device state: a
+    /// cancelled sequence's entry is gone the next time anything consults
+    /// the tier (the admission gate sweeps before counting).
+    pub fn sweep(&mut self) {
+        let before = self.entries.len();
+        self.entries.retain(|e| e.alive.strong_count() > 0);
+        self.stats.released += (before - self.entries.len()) as u64;
+    }
+
+    /// Deterministically release one cache's entry (engine reset path).
+    pub fn release(&mut self, cache_id: u64) {
+        let before = self.entries.len();
+        self.entries.retain(|e| e.cache_id != cache_id);
+        self.stats.released += (before - self.entries.len()) as u64;
+    }
+
+    /// Remove and return a cache's resident buffers — the donation path:
+    /// the caller passes them to `execute_with_donation` (which consumes
+    /// them) and re-installs the outputs via [`Self::install_absorbed`].
+    pub fn take(&mut self, cache_id: u64) -> Option<(xla::PjRtBuffer, xla::PjRtBuffer)> {
+        let i = self.entries.iter().position(|e| e.cache_id == cache_id)?;
+        let e = self.entries.remove(i);
+        Some((e.k, e.v))
+    }
+
+    /// Make the call's K/V image available on the device, moving as few
+    /// bytes as possible:
+    ///
+    /// - resident + stamp current → reconcile dirty slot ranges only
+    ///   (possibly nothing);
+    /// - resident + stamp stale → overwrite the resident buffers with a
+    ///   fresh gather (buffers are reused, no allocation);
+    /// - not resident → gather through the scratch pool (incremental when
+    ///   its stamp matches), upload, and promote — spilling LRU entries to
+    ///   the scratch pool until the image fits.
+    ///
+    /// On return the cache is synced: either the entry is stamped with the
+    /// cache's current generation ([`Acquired::Resident`]) or the uploaded
+    /// buffers equal its dense image ([`Acquired::Transient`]).
+    pub fn acquire(
+        &mut self,
+        client: &xla::PjRtClient,
+        cache: &mut KvCache,
+        pool: &mut ScratchPool,
+    ) -> Result<Acquired> {
+        let elems = cache.dense_elems();
+        let image_bytes = 2 * 4 * elems;
+        let dims = [cache.l, cache.h, cache.c, cache.dh];
+        if let Some(i) = self.entries.iter().position(|e| e.cache_id == cache.id()) {
+            if self.entries[i].elems != elems {
+                // shape drift (cannot happen for a live cache; be safe)
+                self.entries.remove(i);
+            } else if self.entries[i].sync_gen == cache.sync_gen() {
+                // device-hit: reconcile the dirty ranges in place (a clean
+                // cache moves nothing and — like a no-op gather — keeps its
+                // sync generation, so any scratch image stays valid too)
+                let uploaded = if cache.is_clean() {
+                    0
+                } else {
+                    let e = &self.entries[i];
+                    let up = reconcile_dirty(e, cache, &mut self.stage_k, &mut self.stage_v)?;
+                    cache.mark_synced();
+                    self.entries[i].sync_gen = cache.sync_gen();
+                    up
+                };
+                self.stats.hits += 1;
+                self.stats.reconciled_bytes += uploaded;
+                self.stats.uploaded_bytes += uploaded;
+                self.touch(i);
+                return Ok(Acquired::Resident);
+            } else {
+                // stale stamp (another tier synced this cache since the
+                // entry was made): refresh the resident buffers wholesale
+                {
+                    let img = pool.gather(cache);
+                    let e = &self.entries[i];
+                    e.k.overwrite_from_host_partial(&img.k, 0)?;
+                    e.v.overwrite_from_host_partial(&img.v, 0)?;
+                }
+                self.entries[i].sync_gen = cache.sync_gen();
+                self.stats.misses += 1;
+                self.stats.uploaded_bytes += image_bytes as u64;
+                self.touch(i);
+                // resident again: the scratch copy is redundant staging
+                pool.release(cache.id());
+                return Ok(Acquired::Resident);
+            }
+        }
+        // host-hit or cold: gather (incremental when the scratch stamp
+        // matches — e.g. right after a spill), upload, promote
+        self.stats.misses += 1;
+        let retain = self.capacity_bytes > 0 && image_bytes <= self.capacity_bytes;
+        if retain {
+            // free room BEFORE the upload, so peak device occupancy stays
+            // within capacity (plus any backend padding slack) instead of
+            // capacity + one full image at upload time
+            self.make_room(image_bytes, pool)?;
+        }
+        let (k_b, v_b) = {
+            let img = pool.gather(cache);
+            (
+                client.buffer_from_host_buffer(&img.k, &dims, None)?,
+                client.buffer_from_host_buffer(&img.v, &dims, None)?,
+            )
+        };
+        self.stats.uploaded_bytes += image_bytes as u64;
+        // capacity accounting uses the ACTUAL on-device size (real backends
+        // may pad); the stub reports the logical size
+        let device_bytes = k_b.on_device_size_bytes() + v_b.on_device_size_bytes();
+        if !retain || device_bytes > self.capacity_bytes {
+            return Ok(Acquired::Transient(k_b, v_b));
+        }
+        if device_bytes > image_bytes {
+            // backend padding exceeded the pre-upload estimate
+            self.make_room(device_bytes, pool)?;
+        }
+        self.entries.push(DeviceKvState {
+            k: k_b,
+            v: v_b,
+            cache_id: cache.id(),
+            sync_gen: cache.sync_gen(),
+            elems,
+            bytes: device_bytes,
+            alive: cache.residency_token(),
+        });
+        self.stats.promotions += 1;
+        // the scratch image this promotion gathered from is now redundant:
+        // device-resident sequences bypass the pool, and the copy's stamp
+        // goes stale on the first reconcile — keep staging at ONE image per
+        // hot sequence (a later spill re-adopts into the pool)
+        pool.release(cache.id());
+        Ok(Acquired::Resident)
+    }
+
+    /// Install a donated generate call's output buffers as the cache's new
+    /// resident state. The caller guarantees the image-equality invariant
+    /// (I4 in PERF.md, extended to the device): the inputs were this
+    /// cache's synced image, the program appended in place, and the
+    /// appended rows were just merged into the host pages — so the buffers
+    /// equal a dense gather of the cache right now. On a shape mismatch the
+    /// buffers are dropped and the cache stays dirty (degraded to a future
+    /// full upload, never corrupt).
+    pub fn install_absorbed(
+        &mut self,
+        cache: &mut KvCache,
+        k: xla::PjRtBuffer,
+        v: xla::PjRtBuffer,
+        pool: &mut ScratchPool,
+    ) -> Result<()> {
+        let elems = cache.dense_elems();
+        // shape check by ELEMENT count: real backends may report a padded
+        // on-device size, which only affects capacity accounting below
+        if k.element_count() != elems || v.element_count() != elems {
+            return Ok(());
+        }
+        cache.mark_synced();
+        self.stats.donations += 1;
+        self.release_quietly(cache.id());
+        let bytes = k.on_device_size_bytes() + v.on_device_size_bytes();
+        if self.capacity_bytes == 0 || bytes > self.capacity_bytes {
+            return Ok(());
+        }
+        self.make_room(bytes, pool)?;
+        self.entries.push(DeviceKvState {
+            k,
+            v,
+            cache_id: cache.id(),
+            sync_gen: cache.sync_gen(),
+            elems,
+            bytes,
+            alive: cache.residency_token(),
+        });
+        // once resident, the sequence's scratch image is dead weight (its
+        // stamp goes stale on the first reconcile/donation) — drop it so
+        // staging bytes track one image per hot sequence, not two
+        pool.release(cache.id());
+        Ok(())
+    }
+
+    /// Spill the least-recently-used entry: read its image back and hand it
+    /// to the scratch pool stamped, so the spilled sequence's next call
+    /// gathers incrementally (or not at all) instead of fully. Dead entries
+    /// are simply dropped. Returns the spilled cache id, or None when the
+    /// tier is empty.
+    pub fn spill_lru(&mut self, pool: &mut ScratchPool) -> Result<Option<u64>> {
+        if self.entries.is_empty() {
+            return Ok(None);
+        }
+        let e = self.entries.remove(0);
+        if e.alive.strong_count() == 0 {
+            self.stats.released += 1;
+            return Ok(Some(e.cache_id));
+        }
+        self.stats.spills += 1;
+        self.stats.spill_bytes_d2h += e.bytes as u64;
+        let mut k = vec![0.0f32; e.elems];
+        let mut v = vec![0.0f32; e.elems];
+        e.k.copy_to_host_partial(&mut k, 0)?;
+        e.v.copy_to_host_partial(&mut v, 0)?;
+        pool.adopt(e.cache_id, e.sync_gen, e.alive, k, v);
+        Ok(Some(e.cache_id))
+    }
+
+    /// Read a resident entry's full image back to host vectors (tests,
+    /// benches, diagnostics).
+    pub fn read_back(&self, cache_id: u64) -> Result<Option<(Vec<f32>, Vec<f32>)>> {
+        let Some(e) = self.resident(cache_id) else {
+            return Ok(None);
+        };
+        let mut k = vec![0.0f32; e.elems];
+        let mut v = vec![0.0f32; e.elems];
+        e.k.copy_to_host_partial(&mut k, 0)?;
+        e.v.copy_to_host_partial(&mut v, 0)?;
+        Ok(Some((k, v)))
+    }
+
+    fn make_room(&mut self, need: usize, pool: &mut ScratchPool) -> Result<()> {
+        while !self.entries.is_empty() && self.resident_bytes() + need > self.capacity_bytes {
+            self.spill_lru(pool)?;
+        }
+        Ok(())
+    }
+
+    fn release_quietly(&mut self, cache_id: u64) {
+        self.entries.retain(|e| e.cache_id != cache_id);
+    }
+
+    fn touch(&mut self, i: usize) {
+        if i != self.entries.len() - 1 {
+            let e = self.entries.remove(i);
+            self.entries.push(e);
+        }
+    }
+}
+
+/// Upload a cache's dirty slot ranges over a resident image: one partial
+/// overwrite per (layer, head) — the dense layout makes each range one
+/// contiguous `(hi-lo)·Dh` run per head. Slots beyond the current length
+/// upload as zeros (the padding invariant). Returns bytes uploaded (K + V).
+fn reconcile_dirty(
+    e: &DeviceKvState,
+    cache: &KvCache,
+    stage_k: &mut Vec<f32>,
+    stage_v: &mut Vec<f32>,
+) -> Result<u64> {
+    let (h, c, dh) = (cache.h, cache.c, cache.dh);
+    let mut uploaded = 0u64;
+    for layer in 0..cache.l {
+        let Some((lo, hi)) = cache.dirty_range(layer) else {
+            continue;
+        };
+        let n = (hi - lo) * dh;
+        if stage_k.len() < n {
+            stage_k.resize(n, 0.0);
+            stage_v.resize(n, 0.0);
+        }
+        for head in 0..h {
+            cache.stage_rows(layer, head, lo, hi, &mut stage_k[..n], &mut stage_v[..n]);
+            let off = ((layer * h + head) * c + lo) * dh;
+            e.k.overwrite_from_host_partial(&stage_k[..n], off)?;
+            e.v.overwrite_from_host_partial(&stage_v[..n], off)?;
+            uploaded += 2 * 4 * n as u64;
+        }
+    }
+    Ok(uploaded)
+}
+
+/// Test/bench support: emulate ONE donated generate step without a compiled
+/// program, exercising the exact tier contract of the runtime's donation
+/// path — acquire (reconcile), take the resident buffers, "device" appends
+/// one slot per layer in place via partial writes (emulated execution, not
+/// transfer traffic), the host merges the same rows, and the buffers are
+/// re-installed ([`DeviceTier::install_absorbed`]). Row element values come
+/// from `value` (K gets `v`, V gets `-v`). Kept here — next to the contract
+/// it emulates — so the device property tests and the bench scenario cannot
+/// drift apart.
+#[doc(hidden)]
+pub fn emulate_donated_step(
+    client: &xla::PjRtClient,
+    tier: &mut DeviceTier,
+    pool: &mut ScratchPool,
+    kv: &mut KvCache,
+    next_pos: &mut u64,
+    mut value: impl FnMut() -> f32,
+) -> Result<()> {
+    let (l, h, c, dh) = (kv.l, kv.h, kv.c, kv.dh);
+    let (kb, vb) = match tier.acquire(client, kv, pool)? {
+        Acquired::Resident => tier.take(kv.id()).expect("resident entry"),
+        Acquired::Transient(k, v) => (k, v),
+    };
+    for layer in 0..l {
+        let slot = kv.lens[layer];
+        let mut wk = vec![0.0f32; h * dh];
+        let mut wv = vec![0.0f32; h * dh];
+        for hh in 0..h {
+            for d in 0..dh {
+                let x = value();
+                wk[hh * dh + d] = x;
+                wv[hh * dh + d] = -x;
+            }
+            let off = ((layer * h + hh) * c + slot) * dh;
+            kb.overwrite_from_host_partial(&wk[hh * dh..(hh + 1) * dh], off)?;
+            vb.overwrite_from_host_partial(&wv[hh * dh..(hh + 1) * dh], off)?;
+        }
+        kv.append_layer(layer, &wk, &wv, 1, 1, *next_pos)?;
+    }
+    *next_pos += 1;
+    tier.install_absorbed(kv, kb, vb, pool)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::runtime::arena::KvArena;
+    use crate::util::prop::PropRunner;
+    use crate::util::rng::Xoshiro256;
+
+    fn mk_cache(l: usize, h: usize, c: usize, dh: usize) -> KvCache {
+        KvCache::with_arena(KvArena::new(), l, h, c, dh)
+    }
+
+    fn append_random(kv: &mut KvCache, n: usize, next_pos: &mut u64, rng: &mut Xoshiro256) {
+        let (l, h, dh) = (kv.l, kv.h, kv.dh);
+        for layer in 0..l {
+            let wk: Vec<f32> = (0..h * n * dh).map(|_| rng.below(1000) as f32 * 0.5).collect();
+            let wv: Vec<f32> = (0..h * n * dh).map(|_| rng.below(1000) as f32 * -0.5).collect();
+            kv.append_layer(layer, &wk, &wv, n, n, *next_pos).unwrap();
+        }
+        *next_pos += n as u64;
+    }
+
+    fn image_bytes(l: usize, h: usize, c: usize, dh: usize) -> usize {
+        2 * 4 * l * h * c * dh
+    }
+
+    /// The resident device image must equal a from-scratch host gather.
+    fn assert_device_current(tier: &DeviceTier, kv: &KvCache) -> Result<(), String> {
+        let (dk, dv) = tier
+            .read_back(kv.id())
+            .map_err(|e| format!("read_back: {e}"))?
+            .ok_or_else(|| "expected a resident entry".to_string())?;
+        let (fk, fv) = kv.gather_dense();
+        prop_assert!(dk == fk, "device K image diverged from host gather");
+        prop_assert!(dv == fv, "device V image diverged from host gather");
+        Ok(())
+    }
+
+    /// One emulated donated step with rng-driven row values.
+    fn donated_step(
+        client: &xla::PjRtClient,
+        tier: &mut DeviceTier,
+        pool: &mut ScratchPool,
+        kv: &mut KvCache,
+        next_pos: &mut u64,
+        rng: &mut Xoshiro256,
+    ) -> anyhow::Result<()> {
+        emulate_donated_step(client, tier, pool, kv, next_pos, || {
+            rng.below(1000) as f32 * 0.25
+        })
+    }
+
+    #[test]
+    fn promote_then_hit_reconciles_only_dirty_rows() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let (l, h, c, dh) = (2usize, 2usize, 64usize, 4usize);
+        let mut kv = mk_cache(l, h, c, dh);
+        let mut pool = ScratchPool::new(2);
+        let mut tier = DeviceTier::new(4 * image_bytes(l, h, c, dh));
+        let mut pos = 0;
+        let mut rng = Xoshiro256::new(31);
+        append_random(&mut kv, 20, &mut pos, &mut rng);
+
+        // cold call: full upload + promotion
+        assert!(matches!(tier.acquire(&client, &mut kv, &mut pool).unwrap(), Acquired::Resident));
+        let st = tier.stats();
+        assert_eq!((st.misses, st.promotions, st.hits), (1, 1, 0));
+        assert_eq!(st.uploaded_bytes, image_bytes(l, h, c, dh) as u64);
+        assert_eq!(tier.resident_bytes(), image_bytes(l, h, c, dh));
+
+        // clean hit: zero bytes move
+        tier.acquire(&client, &mut kv, &mut pool).unwrap();
+        let st = tier.stats();
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.reconciled_bytes, 0);
+
+        // one appended row per layer: reconcile uploads exactly those rows
+        append_random(&mut kv, 1, &mut pos, &mut rng);
+        tier.acquire(&client, &mut kv, &mut pool).unwrap();
+        let st = tier.stats();
+        assert_eq!(st.hits, 2);
+        assert_eq!(st.reconciled_bytes, (2 * 4 * l * h * dh) as u64);
+        assert_device_current(&tier, &kv).unwrap();
+
+        // compaction: reconcile covers the moved rows + vacated tail only
+        let keep: Vec<usize> = (0..kv.lens[0]).step_by(2).collect();
+        for layer in 0..l {
+            kv.retain_slots(layer, &keep).unwrap();
+        }
+        let expect: u64 = (0..l)
+            .map(|layer| {
+                let (lo, hi) = kv.dirty_range(layer).unwrap();
+                (2 * 4 * h * (hi - lo) * dh) as u64
+            })
+            .sum();
+        let before = tier.stats().reconciled_bytes;
+        tier.acquire(&client, &mut kv, &mut pool).unwrap();
+        assert_eq!(tier.stats().reconciled_bytes - before, expect);
+        assert_device_current(&tier, &kv).unwrap();
+        // the hot path never touched the host gather after the cold call
+        assert_eq!(pool.stats().gathers_full, 1);
+    }
+
+    #[test]
+    fn spill_to_scratch_then_repromotion_is_incremental_and_exact() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let (l, h, c, dh) = (2usize, 1usize, 32usize, 3usize);
+        let mut a = mk_cache(l, h, c, dh);
+        let mut b = mk_cache(l, h, c, dh);
+        let mut pool = ScratchPool::new(2);
+        // capacity for exactly ONE image: acquiring the other cache spills
+        let mut tier = DeviceTier::new(image_bytes(l, h, c, dh));
+        let mut rng = Xoshiro256::new(37);
+        let (mut pa, mut pb) = (0, 0);
+        append_random(&mut a, 7, &mut pa, &mut rng);
+        append_random(&mut b, 12, &mut pb, &mut rng);
+
+        tier.acquire(&client, &mut a, &mut pool).unwrap();
+        tier.acquire(&client, &mut b, &mut pool).unwrap(); // spills a
+        let st = tier.stats();
+        assert_eq!(st.spills, 1);
+        assert_eq!(st.spill_bytes_d2h, image_bytes(l, h, c, dh) as u64);
+        assert!(tier.resident(a.id()).is_none());
+        assert_device_current(&tier, &b).unwrap();
+
+        // re-promotion of the spilled cache goes through the adopted scratch
+        // image: NO full host gather, and the device image is byte-exact
+        let full_before = pool.stats().gathers_full;
+        tier.acquire(&client, &mut a, &mut pool).unwrap(); // spills b
+        assert_eq!(
+            pool.stats().gathers_full,
+            full_before,
+            "spill-to-scratch must make re-promotion incremental"
+        );
+        assert_device_current(&tier, &a).unwrap();
+
+        // mutate the twice-spilled cache, re-promote, still byte-exact
+        append_random(&mut b, 2, &mut pb, &mut rng);
+        b.truncate_layer(1, 5).unwrap();
+        tier.acquire(&client, &mut b, &mut pool).unwrap();
+        assert_device_current(&tier, &b).unwrap();
+        b.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn zero_capacity_disables_residency() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let mut kv = mk_cache(1, 1, 16, 2);
+        let mut pool = ScratchPool::new(2);
+        let mut tier = DeviceTier::new(0);
+        let mut pos = 0;
+        let mut rng = Xoshiro256::new(41);
+        append_random(&mut kv, 4, &mut pos, &mut rng);
+        for _ in 0..2 {
+            match tier.acquire(&client, &mut kv, &mut pool).unwrap() {
+                Acquired::Transient(k, _) => {
+                    assert_eq!(k.on_device_size_bytes(), 4 * kv.dense_elems())
+                }
+                Acquired::Resident => panic!("disabled tier must not retain"),
+            }
+        }
+        assert_eq!(tier.resident_bytes(), 0);
+        assert_eq!(tier.stats().promotions, 0);
+    }
+
+    #[test]
+    fn oversized_image_stays_transient() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let (l, h, c, dh) = (1usize, 1usize, 16usize, 2usize);
+        let mut kv = mk_cache(l, h, c, dh);
+        let mut pool = ScratchPool::new(2);
+        let mut tier = DeviceTier::new(image_bytes(l, h, c, dh) / 2);
+        let mut pos = 0;
+        let mut rng = Xoshiro256::new(43);
+        append_random(&mut kv, 4, &mut pos, &mut rng);
+        assert!(matches!(
+            tier.acquire(&client, &mut kv, &mut pool).unwrap(),
+            Acquired::Transient(..)
+        ));
+        assert!(tier.is_empty(), "an image larger than the tier must not evict everyone else");
+    }
+
+    #[test]
+    fn sweep_and_release_free_dead_entries() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let mut pool = ScratchPool::new(2);
+        let mut tier = DeviceTier::new(1 << 20);
+        let mut rng = Xoshiro256::new(47);
+        let mut kv = mk_cache(1, 1, 16, 2);
+        let mut pos = 0;
+        append_random(&mut kv, 3, &mut pos, &mut rng);
+        tier.acquire(&client, &mut kv, &mut pool).unwrap();
+        assert!(tier.resident_bytes() > 0);
+        drop(kv);
+        tier.sweep();
+        assert_eq!(tier.resident_bytes(), 0, "dropped cache's buffers must be released");
+        assert_eq!(tier.stats().released, 1);
+
+        // explicit release (engine reset path)
+        let mut kv2 = mk_cache(1, 1, 16, 2);
+        append_random(&mut kv2, 2, &mut pos, &mut rng);
+        tier.acquire(&client, &mut kv2, &mut pool).unwrap();
+        tier.release(kv2.id());
+        assert!(tier.is_empty());
+    }
+
+    #[test]
+    fn donated_decode_steps_keep_device_exact_with_zero_reconcile() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let (l, h, c, dh) = (2usize, 2usize, 48usize, 3usize);
+        let mut kv = mk_cache(l, h, c, dh);
+        let mut pool = ScratchPool::new(2);
+        let mut tier = DeviceTier::new(2 * image_bytes(l, h, c, dh));
+        let mut pos = 0;
+        let mut rng = Xoshiro256::new(53);
+        append_random(&mut kv, 10, &mut pos, &mut rng);
+        tier.acquire(&client, &mut kv, &mut pool).unwrap();
+        let warm = tier.stats();
+        for _ in 0..8 {
+            donated_step(&client, &mut tier, &mut pool, &mut kv, &mut pos, &mut rng).unwrap();
+            assert_device_current(&tier, &kv).unwrap();
+        }
+        let st = tier.stats();
+        assert_eq!(st.donations, 8);
+        assert_eq!(
+            st.reconciled_bytes, warm.reconciled_bytes,
+            "pure donated decode must upload zero KV bytes"
+        );
+        assert_eq!(
+            st.uploaded_bytes, warm.uploaded_bytes,
+            "pure donated decode must upload zero KV bytes"
+        );
+        // ... and after a host-side eviction, only the dirty rows move
+        let keep: Vec<usize> = (0..kv.lens[0]).filter(|s| s % 3 != 1).collect();
+        for layer in 0..l {
+            kv.retain_slots(layer, &keep).unwrap();
+        }
+        tier.acquire(&client, &mut kv, &mut pool).unwrap();
+        let st2 = tier.stats();
+        assert!(st2.reconciled_bytes > st.reconciled_bytes);
+        assert!(st2.reconciled_bytes - st.reconciled_bytes < image_bytes(l, h, c, dh) as u64);
+        assert_device_current(&tier, &kv).unwrap();
+    }
+
+    #[derive(Debug, Clone, Copy)]
+    enum Op {
+        Append { n: usize },
+        Retain { seed: u64 },
+        Truncate { seed: u64 },
+        DeviceStep,
+        Spill,
+    }
+
+    #[test]
+    fn device_image_matches_host_gather_property() {
+        // random append/compact/evict/spill/absorb sequences over TWO caches
+        // sharing one tier + one scratch pool: after every op, acquiring a
+        // cache must leave a resident device image byte-identical to a
+        // from-scratch host gather — including after LRU spill and
+        // re-promotion, and with the scratch pool small enough to thrash
+        PropRunner::new(25).run(
+            |rng: &mut Xoshiro256| {
+                let h = 1 + rng.below(2) as usize;
+                let dh = 1 + rng.below(3) as usize;
+                let cap_images = 1 + rng.below(2) as usize; // 1 forces spills
+                let ops: Vec<(usize, Op)> = (0..12)
+                    .map(|_| {
+                        let which = rng.below(2) as usize;
+                        let op = match rng.below(6) {
+                            0 | 1 => Op::Append { n: 1 + rng.below(5) as usize },
+                            2 => Op::Retain { seed: rng.below(u64::MAX) },
+                            3 => Op::Truncate { seed: rng.below(u64::MAX) },
+                            4 => Op::DeviceStep,
+                            _ => Op::Spill,
+                        };
+                        (which, op)
+                    })
+                    .collect();
+                (h, dh, cap_images, ops)
+            },
+            |(h, dh, cap_images, ops)| {
+                let (h, dh) = (*h, *dh);
+                let (l, c) = (2usize, 48usize);
+                let client = xla::PjRtClient::cpu().unwrap();
+                let mut caches = [mk_cache(l, h, c, dh), mk_cache(l, h, c, dh)];
+                let mut next_pos = [0u64, 0u64];
+                let mut pool = ScratchPool::new(1); // worst case: thrashing
+                let mut tier = DeviceTier::new(cap_images * image_bytes(l, h, c, dh));
+                let mut rng = Xoshiro256::new(0xca11);
+                for &(which, op) in ops {
+                    let kv = &mut caches[which];
+                    match op {
+                        Op::Append { n } => {
+                            if kv.max_len() + n > c {
+                                continue;
+                            }
+                            append_random(kv, n, &mut next_pos[which], &mut rng);
+                        }
+                        Op::Retain { seed } => {
+                            let mut krng = Xoshiro256::new(seed);
+                            for layer in 0..l {
+                                let n = kv.lens[layer];
+                                let keep: Vec<usize> =
+                                    (0..n).filter(|_| krng.below(3) > 0).collect();
+                                kv.retain_slots(layer, &keep).unwrap();
+                            }
+                        }
+                        Op::Truncate { seed } => {
+                            let mut trng = Xoshiro256::new(seed);
+                            for layer in 0..l {
+                                let n = kv.lens[layer];
+                                let new_len = trng.below(n as u64 + 1) as usize;
+                                kv.truncate_layer(layer, new_len).unwrap();
+                            }
+                        }
+                        Op::DeviceStep => {
+                            if kv.max_len() + 1 > c {
+                                continue;
+                            }
+                            donated_step(
+                                &client,
+                                &mut tier,
+                                &mut pool,
+                                kv,
+                                &mut next_pos[which],
+                                &mut rng,
+                            )
+                            .map_err(|e| format!("donated_step: {e}"))?;
+                        }
+                        Op::Spill => {
+                            tier.spill_lru(&mut pool).map_err(|e| format!("spill: {e}"))?;
+                        }
+                    }
+                    prop_assert!(caches[which].check_invariants().is_ok(), "invariants broken");
+                    // acquiring either cache must yield an exact device image
+                    // (capacity always fits at least one image)
+                    for idx in [which, 1 - which] {
+                        let kv = &mut caches[idx];
+                        match tier
+                            .acquire(&client, kv, &mut pool)
+                            .map_err(|e| format!("acquire: {e}"))?
+                        {
+                            Acquired::Resident => assert_device_current(&tier, kv)?,
+                            Acquired::Transient(..) => {
+                                return Err("image unexpectedly exceeded capacity".into())
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+}

@@ -20,6 +20,7 @@
 //! dirty-tracking invariants.
 
 use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Weak};
 
 use anyhow::{bail, Result};
 
@@ -70,6 +71,11 @@ pub struct KvCache {
     /// appends/evictions/truncations are all tail-heavy, so the union of the
     /// true dirty set stays tight in practice.
     dirty: Vec<Option<(usize, usize)>>,
+    /// Liveness token: staging tiers (scratch pool, device tier) hold a
+    /// [`Weak`] to it and drop their entries once the cache is gone — the
+    /// same lifecycle as the Drop → arena page return path, extended to
+    /// off-cache state keyed by `id`.
+    alive: Arc<()>,
 }
 
 impl KvCache {
@@ -93,6 +99,7 @@ impl KvCache {
             id: NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed),
             sync_gen: 0,
             dirty: vec![None; l],
+            alive: Arc::new(()),
         }
     }
 
@@ -118,6 +125,14 @@ impl KvCache {
     #[inline]
     pub fn sync_gen(&self) -> u64 {
         self.sync_gen
+    }
+
+    /// Liveness handle for staging tiers: the returned [`Weak`] reports zero
+    /// strong counts once this cache is dropped, letting the scratch pool
+    /// and the device-residency tier release entries keyed by [`Self::id`]
+    /// without a back-pointer from the cache to them.
+    pub fn residency_token(&self) -> Weak<()> {
+        Arc::downgrade(&self.alive)
     }
 
     /// True when no slot range diverged since the last sync point.
@@ -444,6 +459,43 @@ impl KvCache {
             v_out[dst..dst + n].fill(0.0);
         }
         (h * (hi - lo) * dh) as u64
+    }
+
+    /// Stage slots `[lo, hi)` of one (layer, head) as a COMPACT contiguous
+    /// run of `(hi - lo) * Dh` floats per side: valid slots come from the
+    /// pages, slots at or beyond `lens[layer]` are zero-filled (matching the
+    /// dense image's padding invariant). The device-residency tier uses this
+    /// to reconcile a dirty slot range onto a resident device image with one
+    /// partial upload per (layer, head) — the dense `[L, H, C, Dh]` layout
+    /// makes exactly that run contiguous on the device side.
+    pub fn stage_rows(
+        &self,
+        layer: usize,
+        head: usize,
+        lo: usize,
+        hi: usize,
+        k_out: &mut [f32],
+        v_out: &mut [f32],
+    ) {
+        let dh = self.dh;
+        debug_assert!(lo <= hi && hi <= self.c);
+        debug_assert_eq!(k_out.len(), (hi - lo) * dh);
+        debug_assert_eq!(v_out.len(), (hi - lo) * dh);
+        let valid_hi = hi.min(self.lens[layer]);
+        let mut slot = lo;
+        while slot < valid_hi {
+            let sp = slot % PAGE_SLOTS;
+            let run = (PAGE_SLOTS - sp).min(valid_hi - slot);
+            let page = &self.pages[layer][slot / PAGE_SLOTS];
+            let src = (head * PAGE_SLOTS + sp) * dh;
+            let dst = (slot - lo) * dh;
+            k_out[dst..dst + run * dh].copy_from_slice(&page.k[src..src + run * dh]);
+            v_out[dst..dst + run * dh].copy_from_slice(&page.v[src..src + run * dh]);
+            slot += run;
+        }
+        let zero_from = (valid_hi.max(lo) - lo) * dh;
+        k_out[zero_from..].fill(0.0);
+        v_out[zero_from..].fill(0.0);
     }
 
     /// Write the complete dense `[L, H, C, Dh]` image (valid rows + zero
@@ -806,6 +858,41 @@ mod tests {
         let (fk, fv) = kv.gather_dense();
         assert_eq!(ik, fk);
         assert_eq!(iv, fv);
+    }
+
+    #[test]
+    fn stage_rows_matches_dense_image_and_zero_fills() {
+        let mut kv = filled(2, 2, 32, 3, 20);
+        kv.truncate_layer(0, 12).unwrap();
+        let (dk, dv) = kv.gather_dense();
+        let (c, dh) = (kv.c, kv.dh);
+        // a range straddling a page boundary AND the valid length (12)
+        let (lo, hi) = (9, 18);
+        for layer in 0..kv.l {
+            for head in 0..kv.h {
+                let n = (hi - lo) * dh;
+                let mut sk = vec![f32::NAN; n];
+                let mut sv = vec![f32::NAN; n];
+                kv.stage_rows(layer, head, lo, hi, &mut sk, &mut sv);
+                let off = ((layer * kv.h + head) * c + lo) * dh;
+                assert_eq!(sk, dk[off..off + n], "layer {layer} head {head} K");
+                assert_eq!(sv, dv[off..off + n], "layer {layer} head {head} V");
+            }
+        }
+        // a range entirely beyond the valid length is all zeros
+        let mut sk = vec![f32::NAN; 2 * dh];
+        let mut sv = vec![f32::NAN; 2 * dh];
+        kv.stage_rows(0, 0, 20, 22, &mut sk, &mut sv);
+        assert!(sk.iter().chain(sv.iter()).all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn residency_token_reports_liveness() {
+        let kv = filled(1, 1, 16, 2, 3);
+        let token = kv.residency_token();
+        assert!(token.strong_count() > 0);
+        drop(kv);
+        assert_eq!(token.strong_count(), 0, "dropped cache must read as dead");
     }
 
     /// Reference model: plain dense per-layer rows, the old storage layout.

@@ -6,16 +6,26 @@
 //! Wiring follows /opt/xla-example/load_hlo: `HloModuleProto::from_text_file`
 //! -> `XlaComputation::from_proto` -> `client.compile` -> `execute_b`.
 //! Weights are uploaded to the device once per model. Per call, the paged KV
-//! store is materialized through the [`transfer::ScratchPool`]: a reusable
-//! dense image per cache that is re-copied only over dirty slot ranges (a
-//! pure-append decode step gathers just the appended rows; an unchanged
-//! cache gathers nothing), and on the generate path the downloaded device
-//! state is absorbed wholesale as the next image
-//! ([`Runtime::absorb_generated`]). Transfer volume is tracked per call in
-//! [`RuntimeStats`] (`bytes_h2d` / `bytes_d2h` / `gather_s`); see PERF.md
-//! for the transfer-layer design, invariants, and bench methodology.
+//! store reaches the device through a three-tier residency path (see
+//! [`device::DeviceTier`] and PERF.md "Device residency"):
+//!
+//! - **device-hit** — the sequence's K/V image is already resident
+//!   ([`DeviceKvState`], stamped `(id, sync_gen)`): only dirty slot ranges
+//!   are uploaded over it, and generate calls donate the buffers to the
+//!   program (`execute_with_donation`), downloading just the appended rows —
+//!   steady-state decode moves tokens and lens, not the cache;
+//! - **host-hit** — no resident buffers, but the [`transfer::ScratchPool`]
+//!   (now the spill tier) holds a stamped host image: incremental gather,
+//!   one full upload, promotion;
+//! - **cold** — full gather, full upload, promotion.
+//!
+//! Residency is capacity-bounded with LRU spill-to-scratch, and everything
+//! is accounted in [`RuntimeStats`] (`bytes_h2d` / `bytes_d2h` /
+//! `device_resident_bytes` / `residency_hits` / `spills` / `donations`),
+//! which the serving admission gate and `op:stats` consume.
 
 pub mod arena;
+pub mod device;
 pub mod kv;
 pub mod manifest;
 pub mod transfer;
@@ -31,17 +41,35 @@ use anyhow::{bail, Context, Result};
 pub use arena::{
     admission_ok, seq_footprint_bytes, ArenaStats, KvArena, Page, ARENA_OOM_MARKER, PAGE_SLOTS,
 };
+pub use device::{Acquired, DeviceKvState, DeviceStats, DeviceTier};
 pub use kv::{GatherBytes, KvCache};
 pub use manifest::{Manifest, ModelCfg, ProgKind, ProgMeta};
 pub use transfer::{DenseImage, ScratchPool, TransferStats};
 
-/// Dense scratch images the runtime keeps warm (LRU) — one per sequence in
-/// the serving hot set. A sequence beyond this pays one full re-gather when
-/// it rotates back in.
-const SCRATCH_POOL_ENTRIES: usize = 16;
+/// Knobs for the runtime's staging tiers (serving exposes them through
+/// `ServeConfig`; the defaults here serve the CLI/eval paths).
+#[derive(Clone, Debug)]
+pub struct RuntimeOpts {
+    /// Dense scratch images the transfer layer keeps warm (LRU) — one per
+    /// sequence in the serving hot set; clamped to >= 1 (the gather path
+    /// always needs one staging image). A sequence beyond this pays one
+    /// full re-gather when it rotates back in.
+    pub scratch_pool_entries: usize,
+    /// Byte capacity of the device-residency tier (K + V across resident
+    /// sequences). 0 disables residency: every call re-uploads its image,
+    /// the pre-residency behavior.
+    pub device_pool_bytes: usize,
+}
+
+impl Default for RuntimeOpts {
+    fn default() -> Self {
+        Self { scratch_pool_entries: 16, device_pool_bytes: 256 << 20 }
+    }
+}
 
 /// Cumulative runtime counters (per process) for the perf log. The transfer
-/// fields are folded in from the scratch pool by [`Runtime::stats`].
+/// and residency fields are folded in from the staging tiers by
+/// [`Runtime::stats`].
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
     pub calls: u64,
@@ -51,9 +79,11 @@ pub struct RuntimeStats {
     pub upload_s: f64,
     pub execute_s: f64,
     pub download_s: f64,
-    /// Bytes uploaded host->device across all calls.
+    /// Bytes uploaded host->device across all calls (call inputs + full
+    /// image uploads + dirty-range reconciles).
     pub bytes_h2d: u64,
-    /// Bytes downloaded device->host across all calls.
+    /// Bytes downloaded device->host across all calls (call outputs +
+    /// residency spills).
     pub bytes_d2h: u64,
     /// Host-side gather wall-clock (pages -> dense scratch image).
     pub gather_s: f64,
@@ -65,18 +95,36 @@ pub struct RuntimeStats {
     pub gathers_noop: u64,
     /// Dense-buffer allocations by the transfer layer (zero after warmup).
     pub dense_scratch_allocs: u64,
-    /// Host bytes currently pooled as scratch images (staging memory outside
-    /// the arena's device budget; bounded by the pool's entry cap).
+    /// Host bytes currently pooled as scratch images (staging memory that
+    /// the admission gate counts; bounded by the pool's entry cap).
     pub scratch_resident_bytes: u64,
+    /// Bytes currently resident in the device tier (K + V across entries) —
+    /// counted by the admission gate alongside arena pages.
+    pub device_resident_bytes: u64,
+    /// Calls served by a resident device image (no full upload).
+    pub residency_hits: u64,
+    /// Calls that uploaded a full image (cold, post-spill, or stale stamp).
+    pub residency_misses: u64,
+    /// LRU evictions from the device tier (image read back to scratch).
+    pub spills: u64,
+    /// Generate calls that donated resident buffers to the program and kept
+    /// the output state on-device.
+    pub donations: u64,
+    /// Bytes uploaded by dirty-range reconciliation over resident images
+    /// (the device-hit path's only KV upload traffic).
+    pub reconciled_bytes: u64,
 }
 
-/// Reusable small per-call buffers (padded token/target windows, i32 lens):
-/// steady-state calls allocate nothing here.
+/// Reusable per-call buffers (padded token/target windows, i32 lens, f32
+/// staging for appended-row downloads): steady-state calls allocate nothing
+/// here.
 #[derive(Default)]
 struct CallBuf {
     tok: Vec<i32>,
     tgt: Vec<i32>,
     lens: Vec<i32>,
+    stage_k: Vec<f32>,
+    stage_v: Vec<f32>,
 }
 
 pub struct LoadedModel {
@@ -94,8 +142,11 @@ pub struct Runtime {
     pub man: Manifest,
     models: BTreeMap<String, LoadedModel>,
     stats: RefCell<RuntimeStats>,
-    /// Reusable dense K/V transfer images (dirty-range incremental gather).
+    /// Reusable dense K/V transfer images (dirty-range incremental gather);
+    /// the spill tier under `device`.
     scratch: RefCell<ScratchPool>,
+    /// Device-resident K/V images (the hot tier).
+    device: RefCell<DeviceTier>,
     /// Reusable small i32 call buffers.
     call_buf: RefCell<CallBuf>,
     /// Simulated device-memory budget in bytes (None = unlimited). The
@@ -116,9 +167,21 @@ pub struct ScoreOut {
     pub mass: Option<Vec<f32>>,
 }
 
-/// Output of a generate (greedy decode) call. `k`/`v` hold the full device
-/// state image `[L, H, C, Dh]`; [`Runtime::absorb_generated`] takes them to
-/// seed the next call's upload, leaving empty vectors behind.
+/// Donated output buffers of a device-resident generate call: the K/V state
+/// never left the device. Consumed by [`Runtime::absorb_generated`], which
+/// downloads only the appended rows and re-installs the buffers as the
+/// cache's resident image.
+pub(crate) struct DeviceGenOut {
+    pub k: xla::PjRtBuffer,
+    pub v: xla::PjRtBuffer,
+}
+
+/// Output of a generate (greedy decode) call. On the host/transient path,
+/// `k`/`v` hold the full downloaded state image `[L, H, C, Dh]`; on the
+/// device-resident path they are EMPTY (the state stayed on the device,
+/// `device` carries the donated output buffers). Either way,
+/// [`Runtime::absorb_generated`] merges the appended rows into the host
+/// cache and seeds the next call's image.
 pub struct GenOut {
     pub tokens: Vec<i32>,
     pub last_logits: Vec<f32>,
@@ -127,12 +190,20 @@ pub struct GenOut {
     pub lens: Vec<i32>,
     /// Per-slot attention mass `[L, C]` (scored programs only).
     pub mass: Option<Vec<f32>>,
+    pub(crate) device: Option<DeviceGenOut>,
 }
 
 impl Runtime {
-    /// Load the manifest and the listed models (weights uploaded eagerly;
-    /// program compilation is lazy, cached per program).
+    /// Load the manifest and the listed models with default staging-tier
+    /// knobs (weights uploaded eagerly; program compilation is lazy, cached
+    /// per program).
     pub fn load(dir: &Path, model_names: &[&str]) -> Result<Runtime> {
+        Self::load_with(dir, model_names, RuntimeOpts::default())
+    }
+
+    /// [`Self::load`] with explicit staging-tier sizing (the serving path
+    /// passes `ServeConfig.scratch_pool_entries` / `device_pool_bytes`).
+    pub fn load_with(dir: &Path, model_names: &[&str], opts: RuntimeOpts) -> Result<Runtime> {
         let man = Manifest::load(dir)?;
         let client = xla::PjRtClient::cpu()?;
         let mut models = BTreeMap::new();
@@ -173,7 +244,8 @@ impl Runtime {
             man,
             models,
             stats: RefCell::new(RuntimeStats::default()),
-            scratch: RefCell::new(ScratchPool::new(SCRATCH_POOL_ENTRIES)),
+            scratch: RefCell::new(ScratchPool::new(opts.scratch_pool_entries)),
+            device: RefCell::new(DeviceTier::new(opts.device_pool_bytes)),
             call_buf: RefCell::new(CallBuf::default()),
             memory_budget_bytes: Cell::new(None),
         })
@@ -183,8 +255,10 @@ impl Runtime {
         self.models.get(name).with_context(|| format!("model `{name}` not loaded"))
     }
 
-    /// Runtime counters with the transfer-layer stats folded in.
+    /// Runtime counters with the staging-tier stats folded in. Sweeps dead
+    /// entries first, so the gauges never count dropped sequences.
     pub fn stats(&self) -> RuntimeStats {
+        self.sweep_staging();
         let mut st = self.stats.borrow().clone();
         let pool = self.scratch.borrow();
         let ts = pool.stats();
@@ -195,12 +269,50 @@ impl Runtime {
         st.gathers_noop = ts.gathers_noop;
         st.dense_scratch_allocs = ts.dense_allocs;
         st.scratch_resident_bytes = pool.resident_bytes() as u64;
+        let dev = self.device.borrow();
+        let ds = dev.stats();
+        st.bytes_h2d += ds.uploaded_bytes;
+        st.bytes_d2h += ds.spill_bytes_d2h;
+        st.device_resident_bytes = dev.resident_bytes() as u64;
+        st.residency_hits = ds.hits;
+        st.residency_misses = ds.misses;
+        st.spills = ds.spills;
+        st.donations = ds.donations;
+        st.reconciled_bytes = ds.reconciled_bytes;
         st
     }
 
     /// Raw transfer-layer counters (bench/diagnostic use).
     pub fn transfer_stats(&self) -> TransferStats {
         self.scratch.borrow().stats()
+    }
+
+    /// Raw residency-tier counters (bench/diagnostic use).
+    pub fn device_stats(&self) -> DeviceStats {
+        self.device.borrow().stats()
+    }
+
+    /// Drop staging entries (device tier + scratch pool) whose cache was
+    /// dropped. Called before every stats read and admission decision, so a
+    /// cancelled sequence's `device_resident_bytes` are gone before the next
+    /// reactor round admits anyone.
+    pub fn sweep_staging(&self) {
+        self.device.borrow_mut().sweep();
+        self.scratch.borrow_mut().sweep();
+    }
+
+    /// Host + device staging bytes currently held for live sequences — the
+    /// footprint the serving admission gate counts alongside arena pages.
+    pub fn staging_bytes(&self) -> usize {
+        self.device.borrow().resident_bytes() + self.scratch.borrow().resident_bytes()
+    }
+
+    /// Deterministically release one cache's staging state (device buffers +
+    /// scratch image) — the engine-reset / teardown path; dropped caches are
+    /// also caught lazily by [`Self::sweep_staging`].
+    pub fn release_cache_state(&self, cache_id: u64) {
+        self.device.borrow_mut().release(cache_id);
+        self.scratch.borrow_mut().release(cache_id);
     }
 
     /// Pre-compile a set of programs (avoids first-call latency in serving).
@@ -231,10 +343,6 @@ impl Runtime {
         Ok(exe)
     }
 
-    fn upload_f32(&self, data: &[f32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
-    }
-
     fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
     }
@@ -242,7 +350,10 @@ impl Runtime {
     /// Teacher-forced scoring of `tokens` (with next-token `targets`) over
     /// the resident cache. `tokens.len()` may be shorter than the program
     /// window; inputs are padded and only valid logprobs are meaningful.
-    /// Takes the cache mutably to advance its dirty-range sync point.
+    /// Takes the cache mutably to advance its dirty-range sync point: on a
+    /// device hit the call uploads only dirty slot ranges (tokens, targets
+    /// and lens aside), otherwise it uploads one full image and promotes it
+    /// into the residency tier.
     #[allow(clippy::too_many_arguments)]
     pub fn score(
         &self,
@@ -264,9 +375,9 @@ impl Runtime {
         if cache.c != c || cache.l != cfg.n_layers {
             bail!("score: cache shape mismatch (cache c={} prog c={c})", cache.c);
         }
-        let (l, h, dh) = (cache.l, cache.h, cache.dh);
+        let l = cache.l;
         let t0 = Instant::now();
-        let (tok_b, tgt_b, lens_b, kc_b, vc_b) = {
+        let (tok_b, tgt_b, lens_b) = {
             // pad the token windows into the reusable call buffers
             let mut bufs = self.call_buf.borrow_mut();
             bufs.tok.clear();
@@ -280,15 +391,26 @@ impl Runtime {
             let tok_b = self.upload_i32(&bufs.tok, &[w])?;
             let tgt_b = self.upload_i32(&bufs.tgt, &[w])?;
             let lens_b = self.upload_i32(&bufs.lens, &[l])?;
-            // incremental gather of the paged store into the reusable image
+            (tok_b, tgt_b, lens_b)
+        };
+        // three-tier K/V path: resident reconcile, or gather + upload +
+        // promote (the tier accounts its own upload bytes)
+        let mut device = self.device.borrow_mut();
+        let acq = {
             let mut pool = self.scratch.borrow_mut();
-            let image = pool.gather(cache);
-            let kc_b = self.upload_f32(&image.k, &[l, h, c, dh])?;
-            let vc_b = self.upload_f32(&image.v, &[l, h, c, dh])?;
-            (tok_b, tgt_b, lens_b, kc_b, vc_b)
+            device.sweep();
+            pool.sweep();
+            device.acquire(&self.client, cache, &mut pool)?
+        };
+        let (kc_b, vc_b): (&xla::PjRtBuffer, &xla::PjRtBuffer) = match &acq {
+            Acquired::Resident => {
+                let e = device.resident(cache.id()).expect("acquired entry present");
+                (&e.k, &e.v)
+            }
+            Acquired::Transient(k, v) => (k, v),
         };
         let arg_refs: Vec<&xla::PjRtBuffer> =
-            vec![&lm.weights, &tok_b, &tgt_b, &kc_b, &vc_b, &lens_b];
+            vec![&lm.weights, &tok_b, &tgt_b, kc_b, vc_b, &lens_b];
         let t1 = Instant::now();
         let out = exe.execute_b(&arg_refs)?;
         let t2 = Instant::now();
@@ -309,7 +431,9 @@ impl Runtime {
             st.upload_s += (t1 - t0).as_secs_f64();
             st.execute_s += (t2 - t1).as_secs_f64();
             st.download_s += (t3 - t2).as_secs_f64();
-            st.bytes_h2d += 4 * (2 * cache.dense_elems() + 2 * w + l) as u64;
+            // KV image bytes are accounted by the residency tier; only the
+            // small call inputs are counted here
+            st.bytes_h2d += 4 * (2 * w + l) as u64;
             let d2h = logprobs.len()
                 + win_k.len()
                 + win_v.len()
@@ -320,9 +444,9 @@ impl Runtime {
     }
 
     /// Greedy decode of `k_steps` tokens; the device appends K/V in-graph,
-    /// and the returned state merges back into the host cache via
-    /// [`Runtime::absorb_generated`] (which also adopts it as the next
-    /// upload's scratch image).
+    /// and the state merges back into the host cache via
+    /// [`Runtime::absorb_generated`]. On a device hit the resident buffers
+    /// are DONATED to the program and the output state stays on the device.
     pub fn generate(
         &self,
         model: &str,
@@ -362,61 +486,136 @@ impl Runtime {
                 c
             );
         }
-        let (l, h, dh) = (cache.l, cache.h, cache.dh);
+        let l = cache.l;
         let t0 = Instant::now();
-        let (lens_b, tok_b, kc_b, vc_b) = {
+        let (lens_b, tok_b) = {
             let mut bufs = self.call_buf.borrow_mut();
             bufs.lens.clear();
             bufs.lens.extend(cache.lens.iter().map(|&x| x as i32));
             let lens_b = self.upload_i32(&bufs.lens, &[l])?;
             let tok_b = self.upload_i32(&[last_token], &[])?;
-            // incremental gather of the paged store into the reusable image
+            (lens_b, tok_b)
+        };
+        let mut device = self.device.borrow_mut();
+        let acq = {
             let mut pool = self.scratch.borrow_mut();
-            let image = pool.gather(cache);
-            let kc_b = self.upload_f32(&image.k, &[l, h, c, dh])?;
-            let vc_b = self.upload_f32(&image.v, &[l, h, c, dh])?;
-            (lens_b, tok_b, kc_b, vc_b)
+            device.sweep();
+            pool.sweep();
+            device.acquire(&self.client, cache, &mut pool)?
         };
-        let arg_refs: Vec<&xla::PjRtBuffer> = vec![&lm.weights, &kc_b, &vc_b, &lens_b, &tok_b];
-        let t1 = Instant::now();
-        let out = exe.execute_b(&arg_refs)?;
-        let t2 = Instant::now();
-        let lit = out[0][0].to_literal_sync()?;
-        let mut parts = lit.to_tuple()?;
-        let t3 = Instant::now();
-        let mass = if scored {
-            Some(parts.pop().context("mass")?.to_vec::<f32>()?)
-        } else {
-            None
-        };
-        let lens = parts.pop().context("lens")?.to_vec::<i32>()?;
-        let v = parts.pop().context("vcache")?.to_vec::<f32>()?;
-        let k = parts.pop().context("kcache")?.to_vec::<f32>()?;
-        let last_logits = parts.pop().context("last_logits")?.to_vec::<f32>()?;
-        let tokens = parts.pop().context("tokens")?.to_vec::<i32>()?;
-        {
-            let mut st = self.stats.borrow_mut();
-            st.calls += 1;
-            st.upload_s += (t1 - t0).as_secs_f64();
-            st.execute_s += (t2 - t1).as_secs_f64();
-            st.download_s += (t3 - t2).as_secs_f64();
-            st.bytes_h2d += 4 * (2 * cache.dense_elems() + l + 1) as u64;
-            let d2h = last_logits.len()
-                + k.len()
-                + v.len()
-                + mass.as_ref().map_or(0, |m| m.len());
-            st.bytes_d2h += 4 * (d2h + tokens.len() + lens.len()) as u64;
+        match acq {
+            Acquired::Resident => {
+                // donation path: the program consumes the resident buffers
+                // and appends in place; the output state never leaves the
+                // device — only tokens/logits/lens (+ mass) come back
+                let (kc_dev, vc_dev) = device.take(cache.id()).expect("acquired entry present");
+                drop(device);
+                let t1 = Instant::now();
+                let out = {
+                    let arg_refs: Vec<&xla::PjRtBuffer> =
+                        vec![&lm.weights, &kc_dev, &vc_dev, &lens_b, &tok_b];
+                    // on error the donated state is lost either way: the
+                    // entry is already out of the tier, host pages stay
+                    // authoritative, and the next call re-promotes
+                    exe.execute_with_donation(&arg_refs, &[1, 2]).map_err(|e| {
+                        anyhow::anyhow!("execute(donated) {model}/{}: {e}", prog.name)
+                    })?
+                };
+                let t2 = Instant::now();
+                let mut leaves = out.into_iter().next().context("empty execution result")?;
+                // leaf order mirrors the tupled path: tokens, last_logits,
+                // kcache, vcache, lens [, mass]
+                let mass = if scored {
+                    let b = leaves.pop().context("mass")?;
+                    Some(b.to_literal_sync()?.to_vec::<f32>()?)
+                } else {
+                    None
+                };
+                let lens_out = leaves.pop().context("lens")?;
+                let vc_out = leaves.pop().context("vcache")?;
+                let kc_out = leaves.pop().context("kcache")?;
+                let logits_out = leaves.pop().context("last_logits")?;
+                let tokens_out = leaves.pop().context("tokens")?;
+                let tokens = tokens_out.to_literal_sync()?.to_vec::<i32>()?;
+                let last_logits = logits_out.to_literal_sync()?.to_vec::<f32>()?;
+                let lens = lens_out.to_literal_sync()?.to_vec::<i32>()?;
+                let t3 = Instant::now();
+                {
+                    let mut st = self.stats.borrow_mut();
+                    st.calls += 1;
+                    st.upload_s += (t1 - t0).as_secs_f64();
+                    st.execute_s += (t2 - t1).as_secs_f64();
+                    st.download_s += (t3 - t2).as_secs_f64();
+                    st.bytes_h2d += 4 * (l + 1) as u64;
+                    let d2h = tokens.len()
+                        + last_logits.len()
+                        + lens.len()
+                        + mass.as_ref().map_or(0, |m| m.len());
+                    st.bytes_d2h += 4 * d2h as u64;
+                }
+                Ok(GenOut {
+                    tokens,
+                    last_logits,
+                    k: Vec::new(),
+                    v: Vec::new(),
+                    lens,
+                    mass,
+                    device: Some(DeviceGenOut { k: kc_out, v: vc_out }),
+                })
+            }
+            Acquired::Transient(kc_b, vc_b) => {
+                drop(device);
+                let arg_refs: Vec<&xla::PjRtBuffer> =
+                    vec![&lm.weights, &kc_b, &vc_b, &lens_b, &tok_b];
+                let t1 = Instant::now();
+                let out = exe.execute_b(&arg_refs)?;
+                let t2 = Instant::now();
+                let lit = out[0][0].to_literal_sync()?;
+                let mut parts = lit.to_tuple()?;
+                let t3 = Instant::now();
+                let mass = if scored {
+                    Some(parts.pop().context("mass")?.to_vec::<f32>()?)
+                } else {
+                    None
+                };
+                let lens = parts.pop().context("lens")?.to_vec::<i32>()?;
+                let v = parts.pop().context("vcache")?.to_vec::<f32>()?;
+                let k = parts.pop().context("kcache")?.to_vec::<f32>()?;
+                let last_logits = parts.pop().context("last_logits")?.to_vec::<f32>()?;
+                let tokens = parts.pop().context("tokens")?.to_vec::<i32>()?;
+                {
+                    let mut st = self.stats.borrow_mut();
+                    st.calls += 1;
+                    st.upload_s += (t1 - t0).as_secs_f64();
+                    st.execute_s += (t2 - t1).as_secs_f64();
+                    st.download_s += (t3 - t2).as_secs_f64();
+                    st.bytes_h2d += 4 * (l + 1) as u64;
+                    let d2h = last_logits.len()
+                        + k.len()
+                        + v.len()
+                        + mass.as_ref().map_or(0, |m| m.len());
+                    st.bytes_d2h += 4 * (d2h + tokens.len() + lens.len()) as u64;
+                }
+                Ok(GenOut { tokens, last_logits, k, v, lens, mass, device: None })
+            }
         }
-        Ok(GenOut { tokens, last_logits, k, v, lens, mass })
     }
 
-    /// Merge a generate call's device state into `cache` and adopt the
-    /// downloaded buffers as the cache's synced dense image: resident rows
-    /// were uploaded from this cache and pass through the program unchanged,
-    /// the appended rows are merged here, and padding beyond `lens` stays
-    /// zero — so the buffers *are* a full dense gather of the post-merge
-    /// cache, and the next upload for it re-gathers nothing. Takes `go.k` /
-    /// `go.v` (leaving them empty); the rest of `go` is untouched.
+    /// Merge a generate call's output state into `cache` and seed the next
+    /// call's image.
+    ///
+    /// **Device-resident path** (`go.device` set): only the `appended` rows
+    /// are downloaded from the donated output buffers (one contiguous run
+    /// per (layer, head)) and appended to the host pages; the buffers are
+    /// then re-installed as the cache's resident image
+    /// ([`DeviceTier::install_absorbed`]) — resident rows passed through the
+    /// program unchanged, the appended rows were just merged, padding stays
+    /// zero, so the buffers *are* a dense gather of the post-merge cache and
+    /// the next device-hit call reconciles nothing.
+    ///
+    /// **Host path**: the downloaded buffers are merged via
+    /// [`KvCache::replace_from_device`] and adopted as the synced scratch
+    /// image (taking `go.k` / `go.v`, leaving them empty).
     pub fn absorb_generated(
         &self,
         cache: &mut KvCache,
@@ -424,6 +623,59 @@ impl Runtime {
         appended: usize,
         first_pos: u64,
     ) -> Result<()> {
+        if let Some(dev) = go.device.take() {
+            let (l, h, c, dh) = (cache.l, cache.h, cache.c, cache.dh);
+            for layer in 0..l {
+                let new_len = go.lens[layer] as usize;
+                if new_len != cache.lens[layer] + appended {
+                    bail!(
+                        "absorb(device): layer {layer} len {new_len} != {} + {appended}",
+                        cache.lens[layer]
+                    );
+                }
+                if let Some(&last) = cache.positions[layer].last() {
+                    if first_pos <= last {
+                        bail!("absorb(device): first_pos {first_pos} <= resident tail {last}");
+                    }
+                }
+            }
+            let t0 = Instant::now();
+            // download the appended rows, staged [H, appended, Dh] per layer
+            // (exactly append_layer's window layout) into the reusable call
+            // buffers — the donated decode path allocates nothing
+            let n = appended * dh;
+            let mut bufs = self.call_buf.borrow_mut();
+            bufs.stage_k.clear();
+            bufs.stage_k.resize(h * n, 0.0);
+            bufs.stage_v.clear();
+            bufs.stage_v.resize(h * n, 0.0);
+            for layer in 0..l {
+                let old_len = cache.lens[layer];
+                for hh in 0..h {
+                    let off = ((layer * h + hh) * c + old_len) * dh;
+                    dev.k.copy_to_host_partial(&mut bufs.stage_k[hh * n..(hh + 1) * n], off)?;
+                    dev.v.copy_to_host_partial(&mut bufs.stage_v[hh * n..(hh + 1) * n], off)?;
+                }
+                cache.append_layer(
+                    layer,
+                    &bufs.stage_k,
+                    &bufs.stage_v,
+                    appended,
+                    appended,
+                    first_pos,
+                )?;
+            }
+            drop(bufs);
+            {
+                let mut st = self.stats.borrow_mut();
+                st.bytes_d2h += (2 * 4 * l * h * appended * dh) as u64;
+                st.download_s += t0.elapsed().as_secs_f64();
+            }
+            let mut device = self.device.borrow_mut();
+            let mut pool = self.scratch.borrow_mut();
+            device.install_absorbed(cache, dev.k, dev.v, &mut pool)?;
+            return Ok(());
+        }
         cache.replace_from_device(&go.k, &go.v, &go.lens, appended, first_pos)?;
         let k = std::mem::take(&mut go.k);
         let v = std::mem::take(&mut go.v);

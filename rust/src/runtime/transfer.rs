@@ -16,13 +16,21 @@
 //! - **full**: no image matches (first call, pool eviction, cross-scratch
 //!   staleness) — gather everything into a recycled buffer.
 //!
-//! [`ScratchPool::absorb`] closes the loop on the generate path: the device
-//! output state the runtime just downloaded *is* the current dense image
-//! (resident rows passed through the program unchanged, appended rows were
-//! just merged via [`KvCache::replace_from_device`], padding stays zero), so
-//! the downloaded buffers become the cache's synced image and the next
-//! gather is a no-op. Invariants and the bench methodology live in PERF.md.
+//! [`ScratchPool::absorb`] closes the loop on the host-path generate: the
+//! device output state the runtime just downloaded *is* the current dense
+//! image (resident rows passed through the program unchanged, appended rows
+//! were just merged via [`KvCache::replace_from_device`], padding stays
+//! zero), so the downloaded buffers become the cache's synced image and the
+//! next gather is a no-op.
+//!
+//! Since the device-residency tier ([`super::device`]) landed, this pool is
+//! the SPILL tier: device-resident sequences bypass it entirely, a spilled
+//! entry's image is parked here with its stamp ([`ScratchPool::adopt`]) so
+//! re-promotion gathers incrementally, and [`ScratchPool::sweep`] releases
+//! images of dropped caches so staging bytes track live sequences.
+//! Invariants and the bench methodology live in PERF.md.
 
+use std::sync::Weak;
 use std::time::Instant;
 
 use super::kv::KvCache;
@@ -33,6 +41,10 @@ pub struct DenseImage {
     pub v: Vec<f32>,
     cache_id: u64,
     sync_gen: u64,
+    /// Liveness of the source cache ([`KvCache::residency_token`]);
+    /// [`ScratchPool::sweep`] drops entries whose cache is gone so pooled
+    /// staging bytes do not outlive the sequences they cached.
+    alive: Weak<()>,
 }
 
 /// Cumulative transfer-layer counters (merged into
@@ -82,8 +94,9 @@ impl ScratchPool {
     }
 
     /// Host bytes currently held by pooled images (K + V). This is staging
-    /// memory *outside* the arena's `kv_pool_bytes` device budget — bounded
-    /// by `max_entries` full images; exported so deployments can watch it.
+    /// memory bounded by `max_entries` full images — exported as
+    /// `scratch_resident_bytes` and counted (with the device tier) against
+    /// the serving budget by the admission gate.
     pub fn resident_bytes(&self) -> usize {
         self.entries.iter().map(|e| 4 * (e.k.len() + e.v.len())).sum()
     }
@@ -127,6 +140,7 @@ impl ScratchPool {
                 cache.mark_synced();
                 e.cache_id = cache.id();
                 e.sync_gen = cache.sync_gen();
+                e.alive = cache.residency_token();
                 self.stats.gathers_full += 1;
                 self.stats.gathered_bytes += gb.copied;
                 self.stats.zeroed_bytes += gb.zeroed;
@@ -157,13 +171,31 @@ impl ScratchPool {
         }
         cache.mark_synced();
         self.stats.absorbs += 1;
-        if let Some(i) = self.entries.iter().position(|e| e.cache_id == cache.id()) {
-            {
-                let e = &mut self.entries[i];
-                e.k = k;
-                e.v = v;
-                e.sync_gen = cache.sync_gen();
-            }
+        self.adopt(cache.id(), cache.sync_gen(), cache.residency_token(), k, v);
+    }
+
+    /// Install a dense image for a cache WITHOUT access to the cache itself —
+    /// the device tier's spill path (the image was read back from a resident
+    /// device buffer stamped `(cache_id, sync_gen)`, which is exactly the
+    /// dense image of that cache's last sync point). Does not touch dirty
+    /// state: if the cache mutated since that stamp, the next gather repairs
+    /// the image incrementally via the normal dirty-range path; if the stamp
+    /// went stale (another image was synced meanwhile), the next gather falls
+    /// back to a full copy — degraded, never corrupt.
+    pub fn adopt(
+        &mut self,
+        cache_id: u64,
+        sync_gen: u64,
+        alive: Weak<()>,
+        k: Vec<f32>,
+        v: Vec<f32>,
+    ) {
+        if let Some(i) = self.entries.iter().position(|e| e.cache_id == cache_id) {
+            let e = &mut self.entries[i];
+            e.k = k;
+            e.v = v;
+            e.sync_gen = sync_gen;
+            e.alive = alive;
             if i != self.entries.len() - 1 {
                 let e = self.entries.remove(i);
                 self.entries.push(e);
@@ -173,12 +205,19 @@ impl ScratchPool {
         if self.entries.len() >= self.max_entries {
             self.entries.remove(0);
         }
-        self.entries.push(DenseImage {
-            k,
-            v,
-            cache_id: cache.id(),
-            sync_gen: cache.sync_gen(),
-        });
+        self.entries.push(DenseImage { k, v, cache_id, sync_gen, alive });
+    }
+
+    /// Drop entries whose source cache no longer exists, so pooled staging
+    /// bytes (which count against serving admission) do not outlive their
+    /// sequences. Called by the runtime alongside the device tier's sweep.
+    pub fn sweep(&mut self) {
+        self.entries.retain(|e| e.alive.strong_count() > 0);
+    }
+
+    /// Drop this cache's entry (deterministic release on engine reset).
+    pub fn release(&mut self, cache_id: u64) {
+        self.entries.retain(|e| e.cache_id != cache_id);
     }
 
     /// Pick an entry slot for a full gather: recycle this cache's stale
@@ -196,6 +235,7 @@ impl ScratchPool {
                 v: vec![0.0; n],
                 cache_id,
                 sync_gen: 0,
+                alive: Weak::new(),
             });
             return self.entries.len() - 1;
         }
@@ -348,6 +388,53 @@ mod tests {
         assert_eq!(st.gathers_full, 6);
         assert_eq!(st.gathers_noop, 0);
         assert!(st.dense_allocs <= 2, "evictions must recycle buffers, not allocate");
+    }
+
+    #[test]
+    fn sweep_drops_entries_of_dead_caches() {
+        let mut pool = ScratchPool::new(4);
+        let mut a = mk_cache(1, 1, 16, 2);
+        let mut b = mk_cache(1, 1, 16, 2);
+        let mut rng = Xoshiro256::new(23);
+        let (mut pa, mut pb) = (0, 0);
+        append_random(&mut a, 3, &mut pa, &mut rng);
+        append_random(&mut b, 5, &mut pb, &mut rng);
+        pool.gather(&mut a);
+        pool.gather(&mut b);
+        assert_eq!(pool.len(), 2);
+        let bytes_both = pool.resident_bytes();
+        drop(a);
+        pool.sweep();
+        assert_eq!(pool.len(), 1, "dead cache's image must be swept");
+        assert!(pool.resident_bytes() < bytes_both);
+        // the survivor still serves incremental gathers
+        let before = pool.stats();
+        pool.gather(&mut b);
+        assert_eq!(pool.stats().gathers_noop, before.gathers_noop + 1);
+    }
+
+    #[test]
+    fn adopt_installs_an_incrementally_valid_image() {
+        // adopt (the device tier's spill path) hands the pool an image with
+        // an explicit stamp; a next gather with a matching stamp is a no-op,
+        // and pending dirty ranges repair it incrementally
+        let mut kv = mk_cache(2, 1, 32, 2);
+        let mut pos = 0;
+        let mut rng = Xoshiro256::new(29);
+        append_random(&mut kv, 6, &mut pos, &mut rng);
+        let (fk, fv) = kv.gather_dense();
+        kv.mark_synced();
+        let mut pool = ScratchPool::new(2);
+        pool.adopt(kv.id(), kv.sync_gen(), kv.residency_token(), fk, fv);
+        let before = pool.stats();
+        assert_image_current(&mut pool, &mut kv).unwrap();
+        assert_eq!(pool.stats().gathers_noop, before.gathers_noop + 1);
+        // mutate after the adopt stamp: the image repairs incrementally
+        append_random(&mut kv, 2, &mut pos, &mut rng);
+        assert_image_current(&mut pool, &mut kv).unwrap();
+        let st = pool.stats();
+        assert_eq!(st.gathers_incremental, before.gathers_incremental + 1);
+        assert_eq!(st.gathers_full, before.gathers_full, "adopted image must avoid full gathers");
     }
 
     #[derive(Debug, Clone, Copy)]

@@ -69,7 +69,13 @@ pub trait SeqBackend {
     fn decode(&mut self, seq: &mut Self::Seq, n: usize) -> Result<Decoded>;
     /// Admission gate beyond the active-count cap: return false to defer
     /// admitting more sequences this round (real backends report paged-KV
-    /// arena pressure; queued work stays queued until pages free up).
+    /// arena pressure plus the runtime's staging tiers — device-resident
+    /// K/V images and host scratch images; queued work stays queued until
+    /// bytes free up). Called in every round's admit phase while the active
+    /// set has headroom — even with an empty queue — so backends use it to
+    /// sweep staging state of sequences dropped last round (cancellation
+    /// teardown; a saturated active set is covered by the sweeps inside the
+    /// runtime calls the advance phase makes).
     /// `active` is the number of already-admitted sequences, so backends can
     /// reserve headroom for sequences that have not allocated pages yet.
     fn can_admit(&self, active: usize) -> bool {
@@ -669,6 +675,90 @@ mod tests {
         assert!(done[0].queue_s >= 0.0);
         assert_eq!(s.backend().new_seq_calls, 0, "cancelled queued request must not admit");
         assert!(!s.has_work());
+    }
+
+    /// Backend whose sequences are ALSO resident in a device tier (the
+    /// serving shape after the residency refactor): decode promotes the
+    /// sequence's KV image onto the device, `can_admit` sweeps the tier.
+    struct DeviceTierMock {
+        arena: KvArena,
+        client: xla::PjRtClient,
+        tier: std::cell::RefCell<crate::runtime::DeviceTier>,
+        pool: std::cell::RefCell<crate::runtime::ScratchPool>,
+    }
+
+    impl DeviceTierMock {
+        fn new() -> Self {
+            Self {
+                arena: KvArena::new(),
+                client: xla::PjRtClient::cpu().unwrap(),
+                tier: std::cell::RefCell::new(crate::runtime::DeviceTier::new(1 << 24)),
+                pool: std::cell::RefCell::new(crate::runtime::ScratchPool::new(4)),
+            }
+        }
+
+        fn staging_bytes(&self) -> usize {
+            self.tier.borrow().resident_bytes() + self.pool.borrow().resident_bytes()
+        }
+
+        fn append_and_acquire(&self, s: &mut ArenaMockSeq, n: usize) -> Result<()> {
+            let row = vec![0.5f32; 2 * n * 4];
+            for layer in 0..2 {
+                s.kv.append_layer(layer, &row, &row, n, n, s.pos)?;
+            }
+            s.pos += n as u64;
+            let mut tier = self.tier.borrow_mut();
+            let mut pool = self.pool.borrow_mut();
+            tier.acquire(&self.client, &mut s.kv, &mut pool)?;
+            Ok(())
+        }
+    }
+
+    impl SeqBackend for DeviceTierMock {
+        type Seq = ArenaMockSeq;
+        fn new_seq(&mut self) -> Result<ArenaMockSeq> {
+            Ok(ArenaMockSeq { kv: KvCache::with_arena(self.arena.clone(), 2, 2, 256, 4), pos: 0 })
+        }
+        fn prefill_chunk(&mut self, seq: &mut ArenaMockSeq, chunk: &[i32]) -> Result<()> {
+            self.append_and_acquire(seq, chunk.len())
+        }
+        fn decode(&mut self, seq: &mut ArenaMockSeq, n: usize) -> Result<Decoded> {
+            self.append_and_acquire(seq, n)?;
+            Ok(Decoded { tokens: vec![7; n], t_first: None })
+        }
+        fn can_admit(&self, _active: usize) -> bool {
+            // the real backend's shape: sweep dead staging state before
+            // counting it against the admission budget
+            self.tier.borrow_mut().sweep();
+            self.pool.borrow_mut().sweep();
+            true
+        }
+    }
+
+    #[test]
+    fn cancelled_sequence_frees_device_tier_before_next_round_admits() {
+        // regression: cancellation teardown must release the sequence's
+        // device-tier buffers (and scratch image) like the KvCache Drop ->
+        // arena page return path, BEFORE the next round's admission counts
+        // staging bytes
+        let mut s = Scheduler::new(DeviceTierMock::new(), 8, 4, 2, 4);
+        let cancel = CancelToken::new();
+        s.submit(vec![1; 8], 64, cancel.clone()).unwrap();
+        s.step(); // admit + prefill (promotes the KV image into the tier)
+        s.step(); // first decode quantum
+        assert!(s.backend().staging_bytes() > 0, "decoding sequence must be device-resident");
+        assert!(s.backend().arena.stats().bytes_in_use > 0);
+        cancel.cancel();
+        let done = s.step(); // reap: the seq (and its KvCache) is dropped
+        assert!(done.iter().any(|f| f.cancelled));
+        assert_eq!(s.backend().arena.stats().bytes_in_use, 0, "arena pages returned");
+        s.step(); // next round: the admit phase's can_admit sweeps staging
+        assert_eq!(
+            s.backend().staging_bytes(),
+            0,
+            "cancelled sequence's device-resident bytes must be freed before \
+             the next round admits"
+        );
     }
 
     #[test]

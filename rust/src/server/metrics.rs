@@ -115,12 +115,16 @@ impl Metrics {
     }
 }
 
-/// Attach the runtime's call/transfer counters to an `op:stats` payload so
-/// serving deployments can watch transfer volume per token: `bytes_h2d` /
-/// `bytes_d2h` are total PJRT upload/download traffic, `gathered_bytes` is
-/// the host-side page->scratch copy volume the dirty-range tracking drives
-/// toward zero (see PERF.md), and the gather counters break calls down into
-/// full / incremental / no-op materializations.
+/// Attach the runtime's call/transfer/residency counters to an `op:stats`
+/// payload so serving deployments can watch transfer volume per token:
+/// `bytes_h2d` / `bytes_d2h` are total PJRT upload/download traffic,
+/// `gathered_bytes` is the host-side page->scratch copy volume the
+/// dirty-range tracking drives toward zero (see PERF.md), the gather
+/// counters break calls down into full / incremental / no-op
+/// materializations, and the residency gauges/counters
+/// (`device_resident_bytes`, `residency_hits`/`misses`, `spills`,
+/// `donations`, `reconciled_bytes`) describe the device tier that keeps
+/// steady-state decode's per-call upload at tokens + lens.
 pub fn export_runtime(j: &mut Json, rs: &RuntimeStats) {
     j.set("runtime_calls", (rs.calls as i64).into());
     j.set("runtime_upload_s", rs.upload_s.into());
@@ -135,6 +139,12 @@ pub fn export_runtime(j: &mut Json, rs: &RuntimeStats) {
     j.set("gathers_noop", (rs.gathers_noop as i64).into());
     j.set("dense_scratch_allocs", (rs.dense_scratch_allocs as i64).into());
     j.set("scratch_resident_bytes", (rs.scratch_resident_bytes as i64).into());
+    j.set("device_resident_bytes", (rs.device_resident_bytes as i64).into());
+    j.set("residency_hits", (rs.residency_hits as i64).into());
+    j.set("residency_misses", (rs.residency_misses as i64).into());
+    j.set("spills", (rs.spills as i64).into());
+    j.set("donations", (rs.donations as i64).into());
+    j.set("reconciled_bytes", (rs.reconciled_bytes as i64).into());
 }
 
 #[cfg(test)]
@@ -224,6 +234,12 @@ mod tests {
             gathers_noop: 1,
             dense_scratch_allocs: 1,
             scratch_resident_bytes: 4096,
+            device_resident_bytes: 1 << 16,
+            residency_hits: 9,
+            residency_misses: 2,
+            spills: 1,
+            donations: 7,
+            reconciled_bytes: 320,
             ..Default::default()
         };
         export_runtime(&mut j, &rs);
@@ -234,6 +250,12 @@ mod tests {
         assert_eq!(j.usize_of("gathers_noop"), Some(1));
         assert_eq!(j.usize_of("dense_scratch_allocs"), Some(1));
         assert_eq!(j.usize_of("scratch_resident_bytes"), Some(4096));
+        assert_eq!(j.usize_of("device_resident_bytes"), Some(1 << 16));
+        assert_eq!(j.usize_of("residency_hits"), Some(9));
+        assert_eq!(j.usize_of("residency_misses"), Some(2));
+        assert_eq!(j.usize_of("spills"), Some(1));
+        assert_eq!(j.usize_of("donations"), Some(7));
+        assert_eq!(j.usize_of("reconciled_bytes"), Some(320));
         assert!(j.f64_of("gather_s").unwrap() > 0.2);
     }
 }

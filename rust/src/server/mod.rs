@@ -35,7 +35,7 @@ pub use reactor::{Reactor, Work};
 use crate::cache::make_policy;
 use crate::config::ServeConfig;
 use crate::engine::{Engine, EngineOpts};
-use crate::runtime::{admission_ok, seq_footprint_bytes, KvArena, Runtime};
+use crate::runtime::{admission_ok, seq_footprint_bytes, KvArena, Runtime, RuntimeOpts};
 
 /// Real backend: each sequence is an [`Engine`] with its own page tables in
 /// the shared paged-KV arena and a fresh policy instance; the `Runtime`
@@ -47,6 +47,14 @@ pub struct EngineBackend<'rt> {
     /// Worst-case steady-state arena bytes for one sequence: policy budget
     /// plus one ingest window, clamped to capacity, in whole pages.
     est_seq_bytes: usize,
+    /// One dense `[L, H, C, Dh]` K/V staging image — what a hot sequence
+    /// holds in the device tier (or, spilled, in the scratch pool).
+    image_bytes: usize,
+    /// Global staging ceiling: the device tier's byte capacity plus the
+    /// scratch pool's worst case. Admission projects per-sequence staging
+    /// but never reserves beyond what the tiers can physically hold (LRU
+    /// evicts the rest).
+    staging_cap: usize,
     pool_budget: Option<usize>,
 }
 
@@ -57,16 +65,32 @@ impl<'rt> EngineBackend<'rt> {
         let policy = make_policy(&cfg.policy, l)?;
         let slots = policy.budget().saturating_add(cfg.window).min(cfg.capacity);
         let est_seq_bytes = seq_footprint_bytes(l, h * dh, slots);
+        let image_bytes = 2 * 4 * l * h * cfg.capacity * dh;
+        let staging_cap = cfg
+            .device_pool_bytes
+            .saturating_add(cfg.scratch_pool_entries.max(1).saturating_mul(image_bytes));
         let pool_budget = (cfg.kv_pool_bytes > 0).then_some(cfg.kv_pool_bytes);
         if let Some(limit) = pool_budget {
-            if limit < est_seq_bytes {
+            // kv_pool_bytes is the TOTAL serving budget: arena pages plus
+            // staging. One sequence needs its pages and one image.
+            let min_budget = est_seq_bytes + image_bytes.min(staging_cap);
+            if limit < min_budget {
                 anyhow::bail!(
                     "kv_pool_bytes {limit} is smaller than one sequence's footprint \
-                     ({est_seq_bytes} B); no request could ever be admitted"
+                     ({min_budget} B = {est_seq_bytes} B pages + one dense staging \
+                     image); no request could ever be admitted"
                 );
             }
         }
-        Ok(Self { rt, cfg, arena: KvArena::global().clone(), est_seq_bytes, pool_budget })
+        Ok(Self {
+            rt,
+            cfg,
+            arena: KvArena::global().clone(),
+            est_seq_bytes,
+            image_bytes,
+            staging_cap,
+            pool_budget,
+        })
     }
 }
 
@@ -97,12 +121,29 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
         Ok(Decoded { tokens, t_first })
     }
 
-    /// Admission control by real arena pressure: see
-    /// [`crate::runtime::admission_ok`].
+    /// Admission control by real memory pressure: arena pages PLUS the
+    /// runtime's staging tiers (device-resident K/V images and host scratch
+    /// images, which exist per hot sequence) — a full device tier
+    /// back-pressures intake instead of OOMing. Sweeps dead staging entries
+    /// first, so a sequence cancelled last round has already released its
+    /// `device_resident_bytes` by the time this round admits.
     fn can_admit(&self, active: usize) -> bool {
+        // sweep regardless of budget: a cancelled sequence's staging bytes
+        // must not outlive it just because admission is unlimited (calls
+        // themselves also sweep, covering the saturated-active case)
+        self.rt.sweep_staging();
         match self.pool_budget {
             None => true,
-            Some(limit) => admission_ok(&self.arena.stats(), active, self.est_seq_bytes, limit),
+            Some(limit) => {
+                // staging pressure is the measured bytes, or — if larger —
+                // the projection for every hot sequence ((active+1) images,
+                // admitted sequences may not have promoted yet), clamped to
+                // what the tiers can physically hold (LRU evicts beyond it)
+                let projected =
+                    (active + 1).saturating_mul(self.image_bytes).min(self.staging_cap);
+                let staging = self.rt.staging_bytes().max(projected);
+                admission_ok(&self.arena.stats(), active, self.est_seq_bytes, limit, staging)
+            }
         }
     }
 }
@@ -178,7 +219,14 @@ fn handle_conn(conn: TcpStream, tx: Sender<Work>) -> Result<()> {
 
 /// The executor: owns the Runtime and drives the reactor.
 fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::json::Json> {
-    let rt = Runtime::load(&crate::artifacts_dir(), &[cfg.model.as_str()])?;
+    let rt = Runtime::load_with(
+        &crate::artifacts_dir(),
+        &[cfg.model.as_str()],
+        RuntimeOpts {
+            scratch_pool_entries: cfg.scratch_pool_entries,
+            device_pool_bytes: cfg.device_pool_bytes,
+        },
+    )?;
     // pre-compile the serving programs so the first request isn't slow
     let _ = rt.warmup(
         &cfg.model,

@@ -8,6 +8,13 @@
 //! serving control path — including shutdown and cancellation semantics —
 //! is testable and benchable without a PJRT runtime.
 //!
+//! Admission back-pressure is the backend's: the admit phase consults
+//! [`SeqBackend::can_admit`] whenever the active set has headroom, where
+//! the real backend counts paged-KV arena pressure PLUS the runtime's
+//! staging tiers (device-resident K/V images, host scratch images) — and
+//! sweeps entries of sequences reaped in earlier rounds, so a cancelled
+//! client's `device_resident_bytes` never gate the next admission.
+//!
 //! Shutdown semantics: after an `op:shutdown` is accepted, already-admitted
 //! and already-queued work drains to completion, but NEW generate requests
 //! are rejected with [`SHUTTING_DOWN`] and counted in

@@ -96,6 +96,42 @@ fn decode_path_gathers_incrementally_after_warmup() {
 }
 
 #[test]
+fn device_resident_decode_uploads_tokens_not_kv() {
+    need_artifacts!();
+    // with the residency tier on (the default), steady-state decode keeps
+    // the KV state on the device: calls donate the resident buffers, upload
+    // only call inputs (+ dirty-range reconciles after evictions), and
+    // never re-gather or re-upload the dense image
+    let rt = Runtime::load(&lacache::artifacts_dir(), &["mini"]).unwrap();
+    let mut eng = mini_engine(&rt, "streaming:budget=64", 32, 256);
+    eng.prefill(&Stream::default_eval(13).take_n(64)).unwrap();
+    eng.generate(16).unwrap(); // warm: state resident after this call
+    let warm = rt.stats();
+    assert!(warm.device_resident_bytes > 0, "decoding sequence must be device-resident");
+    eng.generate(16).unwrap();
+    let st = rt.stats();
+    assert_eq!(st.calls, warm.calls + 1);
+    assert!(st.donations > warm.donations, "device-hit decode must donate, not re-upload");
+    assert_eq!(st.gathers_full, warm.gathers_full, "no full host gather on the hot path");
+    assert_eq!(
+        st.residency_misses, warm.residency_misses,
+        "device-hit decode must not pay a full image upload"
+    );
+    // upload = tokens + lens + the eviction's dirty-range reconcile, which
+    // is strictly less than re-uploading the dense image
+    let image_bytes = (2 * 4 * eng.cache.dense_elems()) as u64;
+    let h2d_delta = st.bytes_h2d - warm.bytes_h2d;
+    assert!(
+        h2d_delta < image_bytes / 2,
+        "device-hit decode must reconcile, not re-upload ({h2d_delta} B h2d)"
+    );
+    // reset must release the sequence's device-tier buffers immediately
+    eng.reset();
+    let st = rt.stats();
+    assert_eq!(st.device_resident_bytes, 0, "reset must free device-resident bytes");
+}
+
+#[test]
 fn scored_path_accumulates_mass() {
     need_artifacts!();
     let rt = Runtime::load(&lacache::artifacts_dir(), &["mini"]).unwrap();

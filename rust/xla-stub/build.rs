@@ -1,0 +1,37 @@
+//! With the `real-pjrt` feature, generate `$OUT_DIR/real_pjrt.rs`: an
+//! `include!` of the bindings file named by `LACACHE_XLA_BINDINGS`, or a
+//! fallback re-export of the vendored stub when the env var is unset (so the
+//! feature set still builds in environments without the native runtime).
+
+use std::env;
+use std::path::PathBuf;
+
+fn main() {
+    println!("cargo:rerun-if-env-changed=LACACHE_XLA_BINDINGS");
+    let out_dir = PathBuf::from(env::var("OUT_DIR").expect("OUT_DIR set by cargo"));
+    let out = out_dir.join("real_pjrt.rs");
+    let body = match env::var("LACACHE_XLA_BINDINGS") {
+        Ok(path) if !path.is_empty() => {
+            // canonicalize so include! (resolved relative to OUT_DIR) and
+            // rerun-if-changed (resolved relative to the manifest dir) agree
+            // even when the operator passes a relative path
+            let path = std::fs::canonicalize(&path)
+                .map(|p| p.display().to_string())
+                .unwrap_or(path);
+            println!("cargo:rerun-if-changed={path}");
+            format!("include!({path:?});\n")
+        }
+        _ => {
+            if env::var_os("CARGO_FEATURE_REAL_PJRT").is_some() {
+                println!(
+                    "cargo:warning=real-pjrt enabled but LACACHE_XLA_BINDINGS is unset; \
+                     falling back to the vendored stub backend"
+                );
+            }
+            "// LACACHE_XLA_BINDINGS unset: fall back to the vendored stub backend.\n\
+             pub use crate::stub::*;\n"
+                .to_string()
+        }
+    };
+    std::fs::write(&out, body).expect("writing real_pjrt.rs");
+}

@@ -1,0 +1,308 @@
+//! The vendored stub backend (see the crate docs in `lib.rs`).
+//!
+//! Buffers RETAIN their host-sourced bytes so the runtime's device-residency
+//! tier is fully exercisable without the native backend: `PjRtBuffer`s
+//! survive across calls, support partial host↔device copies
+//! ([`PjRtBuffer::overwrite_from_host_partial`] /
+//! [`PjRtBuffer::copy_to_host_partial`]) and full readback
+//! ([`PjRtBuffer::to_literal_sync`]). Only program parsing, compilation, and
+//! execution report "backend unavailable" — integration tests gate on
+//! artifacts and skip cleanly in stub builds.
+
+use std::cell::RefCell;
+use std::fmt;
+use std::path::Path;
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+const UNAVAILABLE: &str =
+    "xla backend unavailable (stub build: native PJRT bindings are not linked)";
+
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    fn unavailable() -> Self {
+        Error { msg: UNAVAILABLE.to_string() }
+    }
+
+    fn msg(msg: impl Into<String>) -> Self {
+        Error { msg: msg.into() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)
+    }
+}
+
+impl std::error::Error for Error {}
+
+/// Element types a buffer or [`Literal`] can be read back as. The stub stores
+/// raw little-endian bytes, so each type carries its own (de)serialization.
+pub trait NativeType: Copy {
+    const SIZE: usize;
+    fn from_le(b: &[u8]) -> Self;
+    fn write_le(&self, out: &mut [u8]);
+}
+
+macro_rules! native_type {
+    ($t:ty, $n:expr) => {
+        impl NativeType for $t {
+            const SIZE: usize = $n;
+            fn from_le(b: &[u8]) -> Self {
+                let mut a = [0u8; $n];
+                a.copy_from_slice(b);
+                <$t>::from_le_bytes(a)
+            }
+            fn write_le(&self, out: &mut [u8]) {
+                out.copy_from_slice(&self.to_le_bytes());
+            }
+        }
+    };
+}
+
+native_type!(f32, 4);
+native_type!(f64, 8);
+native_type!(i32, 4);
+native_type!(i64, 8);
+native_type!(u8, 1);
+
+pub struct PjRtClient;
+
+/// A "device" buffer: host-sourced bytes retained for the buffer's lifetime,
+/// so the residency tier can keep K/V state alive across program calls. The
+/// partial-update surface models the real bindings' aliased update path.
+pub struct PjRtBuffer {
+    data: RefCell<Vec<u8>>,
+    dims: Vec<usize>,
+    elem_size: usize,
+}
+
+pub struct PjRtLoadedExecutable;
+
+pub struct HloModuleProto;
+
+pub struct XlaComputation;
+
+/// Host-side copy of a buffer's bytes (produced by
+/// [`PjRtBuffer::to_literal_sync`]).
+pub struct Literal {
+    data: Vec<u8>,
+    elem_size: usize,
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Ok(PjRtClient)
+    }
+
+    pub fn buffer_from_host_buffer<T: NativeType>(
+        &self,
+        data: &[T],
+        dims: &[usize],
+        _device: Option<usize>,
+    ) -> Result<PjRtBuffer> {
+        let mut bytes = vec![0u8; data.len() * T::SIZE];
+        for (x, chunk) in data.iter().zip(bytes.chunks_exact_mut(T::SIZE)) {
+            x.write_le(chunk);
+        }
+        Ok(PjRtBuffer { data: RefCell::new(bytes), dims: dims.to_vec(), elem_size: T::SIZE })
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(Error::unavailable())
+    }
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(_path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(Error::unavailable())
+    }
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation
+    }
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+
+    /// Execute with the input buffers at `donated` indices aliased to the
+    /// program's outputs: donated inputs are CONSUMED (invalid after the
+    /// call) and the matching output leaves reuse their device memory, so a
+    /// decode step updates the resident KV state in place instead of
+    /// round-tripping it. Outputs are returned untupled, one buffer per
+    /// leaf. The stub cannot execute programs, so this always reports
+    /// unavailable — callers must treat donated buffers as lost either way.
+    pub fn execute_with_donation(
+        &self,
+        _args: &[&PjRtBuffer],
+        _donated: &[usize],
+    ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(Error::unavailable())
+    }
+}
+
+impl PjRtBuffer {
+    /// Bytes this buffer occupies on the (stub) device.
+    pub fn on_device_size_bytes(&self) -> usize {
+        self.data.borrow().len()
+    }
+
+    /// Element count (device size / element size).
+    pub fn element_count(&self) -> usize {
+        self.data.borrow().len() / self.elem_size.max(1)
+    }
+
+    pub fn dims(&self) -> &[usize] {
+        &self.dims
+    }
+
+    /// Partial device→host read: fill `out` from `out.len()` elements
+    /// starting at `elem_offset`. The residency tier uses this to download
+    /// only appended decode rows and to spill a resident image back to host
+    /// staging without a full-tuple literal transfer.
+    pub fn copy_to_host_partial<T: NativeType>(
+        &self,
+        out: &mut [T],
+        elem_offset: usize,
+    ) -> Result<()> {
+        if T::SIZE != self.elem_size {
+            return Err(Error::msg(format!(
+                "copy_to_host_partial: element size {} != buffer element size {}",
+                T::SIZE,
+                self.elem_size
+            )));
+        }
+        let data = self.data.borrow();
+        let lo = elem_offset * T::SIZE;
+        let hi = lo + out.len() * T::SIZE;
+        if hi > data.len() {
+            return Err(Error::msg(format!(
+                "copy_to_host_partial: range [{lo}, {hi}) exceeds buffer ({} B)",
+                data.len()
+            )));
+        }
+        for (x, chunk) in out.iter_mut().zip(data[lo..hi].chunks_exact(T::SIZE)) {
+            *x = T::from_le(chunk);
+        }
+        Ok(())
+    }
+
+    /// Partial host→device update: overwrite `src.len()` elements starting
+    /// at `elem_offset`, leaving the rest of the buffer untouched. This is
+    /// the dirty-range reconciliation primitive of the residency tier; real
+    /// bindings lower it to a small input-aliased update program.
+    pub fn overwrite_from_host_partial<T: NativeType>(
+        &self,
+        src: &[T],
+        elem_offset: usize,
+    ) -> Result<()> {
+        if T::SIZE != self.elem_size {
+            return Err(Error::msg(format!(
+                "overwrite_from_host_partial: element size {} != buffer element size {}",
+                T::SIZE,
+                self.elem_size
+            )));
+        }
+        let mut data = self.data.borrow_mut();
+        let lo = elem_offset * T::SIZE;
+        let hi = lo + src.len() * T::SIZE;
+        if hi > data.len() {
+            return Err(Error::msg(format!(
+                "overwrite_from_host_partial: range [{lo}, {hi}) exceeds buffer ({} B)",
+                data.len()
+            )));
+        }
+        for (x, chunk) in src.iter().zip(data[lo..hi].chunks_exact_mut(T::SIZE)) {
+            x.write_le(chunk);
+        }
+        Ok(())
+    }
+
+    /// Full device→host readback of a retained buffer. (Program execution is
+    /// unavailable in the stub, so execution *outputs* never exist here;
+    /// host-sourced buffers read back fine.)
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Ok(Literal { data: self.data.borrow().clone(), elem_size: self.elem_size })
+    }
+}
+
+impl Literal {
+    /// Tuple decomposition needs the native runtime's shape metadata.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        Err(Error::unavailable())
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        if T::SIZE != self.elem_size {
+            return Err(Error::msg(format!(
+                "to_vec: element size {} != literal element size {}",
+                T::SIZE,
+                self.elem_size
+            )));
+        }
+        Ok(self.data.chunks_exact(T::SIZE).map(T::from_le).collect())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construction_succeeds_execution_reports_unavailable() {
+        let client = PjRtClient::cpu().unwrap();
+        let buf = client.buffer_from_host_buffer(&[1.0f32], &[1], None).unwrap();
+        assert_eq!(buf.on_device_size_bytes(), 4);
+        assert!(HloModuleProto::from_text_file("/nonexistent.hlo").is_err());
+        let err = PjRtLoadedExecutable.execute_b(&[]).unwrap_err();
+        assert!(format!("{err}").contains("unavailable"));
+        let err = PjRtLoadedExecutable.execute_with_donation(&[&buf], &[0]).unwrap_err();
+        assert!(format!("{err}").contains("unavailable"));
+    }
+
+    #[test]
+    fn buffers_retain_data_and_read_back() {
+        let client = PjRtClient::cpu().unwrap();
+        let data = vec![1.5f32, -2.0, 3.25, 0.0];
+        let buf = client.buffer_from_host_buffer(&data, &[2, 2], None).unwrap();
+        assert_eq!(buf.dims(), &[2, 2]);
+        assert_eq!(buf.element_count(), 4);
+        let lit = buf.to_literal_sync().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), data);
+        assert!(lit.to_tuple().is_err(), "tuple decomposition needs the native runtime");
+    }
+
+    #[test]
+    fn partial_read_and_overwrite_round_trip() {
+        let client = PjRtClient::cpu().unwrap();
+        let buf = client.buffer_from_host_buffer(&[0.0f32; 8], &[8], None).unwrap();
+        buf.overwrite_from_host_partial(&[7.0f32, 8.0], 3).unwrap();
+        let mut out = [0.0f32; 4];
+        buf.copy_to_host_partial(&mut out, 2).unwrap();
+        assert_eq!(out, [0.0, 7.0, 8.0, 0.0]);
+        // whole-buffer view agrees
+        let all = buf.to_literal_sync().unwrap().to_vec::<f32>().unwrap();
+        assert_eq!(all, vec![0.0, 0.0, 0.0, 7.0, 8.0, 0.0, 0.0, 0.0]);
+        // out-of-bounds and type mismatches are rejected
+        assert!(buf.overwrite_from_host_partial(&[1.0f32; 4], 6).is_err());
+        assert!(buf.copy_to_host_partial(&mut [0u8; 2], 0).is_err());
+    }
+
+    #[test]
+    fn i32_buffers_round_trip() {
+        let client = PjRtClient::cpu().unwrap();
+        let buf = client.buffer_from_host_buffer(&[-5i32, 17, 1 << 20], &[3], None).unwrap();
+        let v = buf.to_literal_sync().unwrap().to_vec::<i32>().unwrap();
+        assert_eq!(v, vec![-5, 17, 1 << 20]);
+    }
+}
