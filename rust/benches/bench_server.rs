@@ -17,7 +17,8 @@ use std::sync::mpsc;
 
 use lacache::cache::{make_policy, CachePolicy};
 use lacache::runtime::{
-    admission_ok, seq_footprint_bytes, Acquired, DeviceTier, KvArena, KvCache, ScratchPool,
+    admission_ok, seq_footprint_bytes, Acquired, DeviceTier, KvArena, KvCache, PrefixCache,
+    PrefixSnapshot, ScratchPool,
 };
 use lacache::server::batcher::{CancelToken, Decoded, Scheduler, SeqBackend};
 use lacache::server::protocol::{ok_generate, parse_request, SHUTTING_DOWN};
@@ -64,7 +65,7 @@ fn main() -> anyhow::Result<()> {
     });
     let toks: Vec<i32> = (16..80).collect();
     b.run_throughput("protocol/ok_generate(64 tokens)", 1, "resp", || {
-        std::hint::black_box(ok_generate(1, &toks, 300, 1.0, 2.0));
+        std::hint::black_box(ok_generate(1, &toks, 300, 0, 1.0, 2.0));
     });
 
     // json: manifest-scale parse
@@ -80,6 +81,7 @@ fn main() -> anyhow::Result<()> {
     steady_state_decode_scenario(smoke)?;
     device_residency_scenario(smoke)?;
     burst_intake_scenario(smoke)?;
+    shared_prefix_scenario(smoke)?;
     Ok(())
 }
 
@@ -181,7 +183,7 @@ fn device_residency_scenario(smoke: bool) -> anyhow::Result<()> {
     assert!(reconciled_compaction < image_bytes as u64);
 
     // (3b) LRU spill + re-promotion: incremental re-gather, byte-identical
-    tier.spill_lru(&mut pool)?;
+    tier.spill_one(&mut pool)?;
     let full_before = pool.stats().gathers_full;
     tier.acquire(&client, &mut kv, &mut pool)?;
     assert_eq!(
@@ -543,7 +545,7 @@ impl SeqBackend for ArenaBackend {
     fn can_admit(&self, active: usize) -> bool {
         // the same gate the serving path uses (no staging tiers here: this
         // backend never promotes images, so staging_bytes is 0)
-        admission_ok(&self.arena.stats(), active, self.est_seq_bytes, self.budget_bytes, 0)
+        admission_ok(&self.arena.stats(), active, self.est_seq_bytes, self.budget_bytes, 0, 0)
     }
 }
 
@@ -596,5 +598,251 @@ fn memory_pressure_scenario() -> anyhow::Result<()> {
         "paged arena should fit >=4x the dense baseline's concurrency \
          (got {peak_active} vs dense {dense_concurrent})"
     );
+    Ok(())
+}
+
+/// Device-free cross-request prefix backend: prefill appends real rows into
+/// the arena (so prefill cost and occupancy are real) and the ladder policy
+/// compacts after every chunk; full-window boundaries publish frozen
+/// snapshots into a [`PrefixCache`], and admission-time adoption installs
+/// them into fresh sequences — the scheduler then never hands the matched
+/// span to prefill. Decode appends one row per token and compacts once per
+/// quantum (the engine's cadence).
+struct PrefixBackend {
+    arena: KvArena,
+    prefix: PrefixCache,
+    policy: Box<dyn CachePolicy>,
+    l: usize,
+    h: usize,
+    c: usize,
+    dh: usize,
+    window: usize,
+    /// Tokens actually prefilled — the on-device prefill-call proxy the
+    /// scenario asserts on ("the shared span is prefilled exactly once").
+    prefill_tokens: u64,
+}
+
+struct PrefixSeq {
+    kv: KvCache,
+    ingested: Vec<i32>,
+    next_pos: u64,
+}
+
+impl PrefixBackend {
+    fn fill_row(&self, row: &mut [f32], n: usize, i: usize, tok: i32, pos: u64) {
+        let v = tok as f32 * 1e-3 + pos as f32 * 1e-6;
+        for hh in 0..self.h {
+            for d in 0..self.dh {
+                row[(hh * n + i) * self.dh + d] = v;
+            }
+        }
+    }
+}
+
+impl SeqBackend for PrefixBackend {
+    type Seq = PrefixSeq;
+
+    fn new_seq(&mut self) -> anyhow::Result<PrefixSeq> {
+        let kv = KvCache::with_arena(self.arena.clone(), self.l, self.h, self.c, self.dh);
+        Ok(PrefixSeq { kv, ingested: Vec::new(), next_pos: 0 })
+    }
+
+    fn adopt_prefix(&mut self, seq: &mut PrefixSeq, prompt: &[i32]) -> usize {
+        let Some((matched, snap)) = self.prefix.lookup(prompt) else {
+            return 0;
+        };
+        if snap.apply(&mut seq.kv).is_err() {
+            return 0;
+        }
+        seq.ingested.extend_from_slice(&prompt[..matched]);
+        seq.next_pos = matched as u64;
+        matched
+    }
+
+    fn prefill_chunk(&mut self, seq: &mut PrefixSeq, chunk: &[i32]) -> anyhow::Result<()> {
+        let n = chunk.len();
+        let mut row = vec![0.0f32; self.h * n * self.dh];
+        for (i, &tok) in chunk.iter().enumerate() {
+            self.fill_row(&mut row, n, i, tok, seq.next_pos + i as u64);
+        }
+        for layer in 0..self.l {
+            seq.kv.append_layer(layer, &row, &row, n, n, seq.next_pos)?;
+        }
+        seq.next_pos += n as u64;
+        self.policy.evict(&mut seq.kv)?;
+        self.prefill_tokens += n as u64;
+        seq.ingested.extend_from_slice(chunk);
+        let w = self.window;
+        if !seq.ingested.is_empty() && seq.ingested.len() % w == 0 {
+            let kv = &mut seq.kv;
+            self.prefix.insert_with(&seq.ingested, w, || PrefixSnapshot::freeze(kv));
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, seq: &mut PrefixSeq, n: usize) -> anyhow::Result<Decoded> {
+        let mut row = vec![0.0f32; self.h * self.dh];
+        for _ in 0..n {
+            let tok = 1000 + seq.next_pos as i32;
+            self.fill_row(&mut row, 1, 0, tok, seq.next_pos);
+            for layer in 0..self.l {
+                seq.kv.append_layer(layer, &row, &row, 1, 1, seq.next_pos)?;
+            }
+            seq.next_pos += 1;
+        }
+        self.policy.evict(&mut seq.kv)?;
+        Ok(Decoded { tokens: vec![7; n], t_first: None })
+    }
+}
+
+/// Cross-request shared-prefix scenario (device-free, full scheduler
+/// path): one cold leader prefills an 8-window system prompt, publishing a
+/// frozen snapshot at every window boundary; 7 followers submit the same
+/// prompt, adopt the deepest snapshot at admission, and skip prefill
+/// entirely. Asserts the subsystem's serving guarantees:
+///
+/// 1. the shared span is prefilled exactly once across all 8 sequences
+///    (`prefix_hits == 7`, total prefilled tokens == one prompt);
+/// 2. follower TTFT (p50) beats the cold leader's TTFT;
+/// 3. the shared span's arena bytes are charged once however many forks
+///    pin it, CoW charges only privately-written pages, and refcounts
+///    return everything on drop (direct 8-fork segment).
+///
+/// Emits machine-readable `BENCH_prefix.json` (path override:
+/// `BENCH_PREFIX_JSON`) for the CI perf trajectory.
+fn shared_prefix_scenario(smoke: bool) -> anyhow::Result<()> {
+    let (l, h, c, dh) = (8usize, 4usize, 2048usize, 24usize);
+    let (window, quantum) = (128usize, 16usize);
+    let shared_windows = 8usize; // acceptance floor is >= 4
+    let prompt: Vec<i32> = (0..(shared_windows * window) as i32).map(|t| t % 251).collect();
+    let arena = KvArena::new();
+    let policy = make_policy("lacache:budget=128,span=2", l)?;
+    let backend = PrefixBackend {
+        arena: arena.clone(),
+        prefix: PrefixCache::new("bench".into(), 256 << 20),
+        policy,
+        l,
+        h,
+        c,
+        dh,
+        window,
+        prefill_tokens: 0,
+    };
+    let mut s = Scheduler::new(backend, window, quantum, 8, 16);
+
+    // cold leader: pays the full prefill and publishes the snapshots
+    s.submit(prompt.clone(), quantum, CancelToken::new())?;
+    let mut cold = Vec::new();
+    while s.has_work() {
+        cold.extend(s.step());
+    }
+    assert_eq!(cold.len(), 1);
+    assert!(cold[0].error.is_none());
+    assert_eq!(cold[0].prefix_tokens, 0, "leader must start cold");
+    let cold_ttft = cold[0].ttft_s;
+    assert_eq!(s.backend().prefill_tokens, prompt.len() as u64);
+
+    // 7 followers share the full prompt: admission adopts, prefill skipped
+    for _ in 0..7 {
+        s.submit(prompt.clone(), quantum, CancelToken::new())?;
+    }
+    let mut done = Vec::new();
+    while s.has_work() {
+        done.extend(s.step());
+    }
+    assert_eq!(done.len(), 7);
+    let mut follower_ttft = Samples::new();
+    for f in &done {
+        assert!(f.error.is_none(), "follower failed: {:?}", f.error);
+        assert_eq!(f.prefix_tokens, prompt.len(), "follower must adopt the full shared span");
+        follower_ttft.record(f.ttft_s);
+    }
+    let st = s.backend().prefix.stats();
+    assert_eq!(st.hits, 7, "prefix_hits must count one hit per follower");
+    assert_eq!(st.tokens_reused, 7 * prompt.len() as u64);
+    assert_eq!(
+        s.backend().prefill_tokens,
+        prompt.len() as u64,
+        "the shared span must be prefilled on-device exactly once across all 8 sequences"
+    );
+    let follower_p50 = follower_ttft.p50();
+    assert!(
+        follower_p50 < cold_ttft,
+        "adopting followers must beat the cold TTFT ({follower_p50:.6}s vs {cold_ttft:.6}s)"
+    );
+
+    // charged-once + leak check, direct (no scheduler): 8 forks off one
+    // frozen prefix pin ZERO extra arena bytes until they mutate
+    let arena2 = KvArena::new();
+    let mut donor = KvCache::with_arena(arena2.clone(), l, h, c, dh);
+    // NOT a multiple of PAGE_SLOTS: the forks' first append lands in the
+    // shared partial tail page, so it must CoW (a full tail would just
+    // allocate a fresh private page)
+    let n_prefix = 250usize;
+    let row = vec![0.5f32; h * n_prefix * dh];
+    for layer in 0..l {
+        donor.append_layer(layer, &row, &row, n_prefix, n_prefix, 0)?;
+    }
+    let snap = PrefixSnapshot::freeze(&mut donor);
+    let shared_span_bytes = arena2.stats().bytes_in_use;
+    let mut forks = Vec::new();
+    for _ in 0..8 {
+        let mut kv = KvCache::with_arena(arena2.clone(), l, h, c, dh);
+        snap.apply(&mut kv)?;
+        forks.push(kv);
+    }
+    assert_eq!(
+        arena2.stats().bytes_in_use,
+        shared_span_bytes,
+        "8 forks of the shared span must charge its arena bytes exactly once"
+    );
+    let one = vec![0.25f32; h * dh];
+    for layer in 0..l {
+        forks[0].append_layer(layer, &one, &one, 1, 1, n_prefix as u64)?;
+    }
+    let after_write = arena2.stats();
+    assert!(after_write.cow_copies > 0, "appending into the shared tail must CoW");
+    assert!(after_write.bytes_in_use > shared_span_bytes);
+    assert!(after_write.bytes_in_use < 2 * shared_span_bytes, "CoW must copy pages, not spans");
+    drop(forks);
+    drop(donor);
+    drop(snap);
+    assert_eq!(arena2.stats().bytes_in_use, 0, "refcounts must return every page on drop");
+
+    let ast = arena.stats();
+    let speedup = cold_ttft / follower_p50.max(1e-9);
+    println!(
+        "\nshared-prefix: {} seqs x {}-token shared prompt | prefill once ({} tokens total) | \
+         {} prefix hits | cold ttft {:.3} ms vs follower p50 {:.3} ms ({speedup:.1}x) | \
+         {} CoW copies | shared span charged once ({shared_span_bytes} B)",
+        8,
+        prompt.len(),
+        s.backend().prefill_tokens,
+        st.hits,
+        cold_ttft * 1e3,
+        follower_p50 * 1e3,
+        ast.cow_copies,
+    );
+
+    let out = Json::from_pairs(vec![
+        ("bench", "shared_prefix".into()),
+        ("smoke", smoke.into()),
+        ("shape_lhcd", vec![l, h, c, dh].into()),
+        ("shared_windows", shared_windows.into()),
+        ("prompt_tokens", prompt.len().into()),
+        ("sequences", 8usize.into()),
+        ("prefix_hits", (st.hits as i64).into()),
+        ("prefix_tokens_reused", (st.tokens_reused as i64).into()),
+        ("prefill_tokens_total", (s.backend().prefill_tokens as i64).into()),
+        ("cold_ttft_ms", (cold_ttft * 1e3).into()),
+        ("follower_ttft_ms_p50", (follower_p50 * 1e3).into()),
+        ("ttft_speedup", speedup.into()),
+        ("cow_copies", (ast.cow_copies as i64).into()),
+        ("shared_span_bytes", (shared_span_bytes as i64).into()),
+        ("shared_span_charged_once", true.into()),
+    ]);
+    let path = std::env::var("BENCH_PREFIX_JSON").unwrap_or_else(|_| "BENCH_prefix.json".into());
+    std::fs::write(&path, out.to_string() + "\n")?;
+    println!("wrote {path}");
     Ok(())
 }

@@ -37,10 +37,15 @@ pub struct ServeConfig {
     /// always needs one staging image). Their bytes are exported as
     /// `scratch_resident_bytes` and counted by admission control.
     pub scratch_pool_entries: usize,
-    /// Device-residency tier byte capacity (resident K/V images; LRU
-    /// spill-to-scratch beyond it). 0 disables residency — every call
-    /// re-uploads its dense image.
+    /// Device-residency tier byte capacity (resident K/V images;
+    /// cost-aware spill-to-scratch beyond it). 0 disables residency —
+    /// every call re-uploads its dense image.
     pub device_pool_bytes: usize,
+    /// Cross-request prefix cache byte capacity: arena pages pinned by the
+    /// radix tree of frozen prompt-prefix KV states (LRU leaf eviction
+    /// beyond it; counted by admission control since pinned pages belong
+    /// to no sequence). 0 disables cross-request prefix reuse.
+    pub prefix_pool_bytes: usize,
 }
 
 impl Default for ServeConfig {
@@ -58,6 +63,7 @@ impl Default for ServeConfig {
             kv_pool_bytes: 0,
             scratch_pool_entries: 16,
             device_pool_bytes: 256 << 20,
+            prefix_pool_bytes: 64 << 20,
         }
     }
 }
@@ -80,6 +86,7 @@ impl ServeConfig {
                 .usize_of("scratch_pool_entries")
                 .unwrap_or(d.scratch_pool_entries),
             device_pool_bytes: j.usize_of("device_pool_bytes").unwrap_or(d.device_pool_bytes),
+            prefix_pool_bytes: j.usize_of("prefix_pool_bytes").unwrap_or(d.prefix_pool_bytes),
         })
     }
 
@@ -111,6 +118,7 @@ impl ServeConfig {
         cfg.kv_pool_bytes = args.usize_or("kv-pool-bytes", cfg.kv_pool_bytes);
         cfg.scratch_pool_entries = args.usize_or("scratch-pool-entries", cfg.scratch_pool_entries);
         cfg.device_pool_bytes = args.usize_or("device-pool-bytes", cfg.device_pool_bytes);
+        cfg.prefix_pool_bytes = args.usize_or("prefix-pool-bytes", cfg.prefix_pool_bytes);
         Ok(cfg)
     }
 
@@ -128,6 +136,7 @@ impl ServeConfig {
             ("kv_pool_bytes", self.kv_pool_bytes.into()),
             ("scratch_pool_entries", self.scratch_pool_entries.into()),
             ("device_pool_bytes", self.device_pool_bytes.into()),
+            ("prefix_pool_bytes", self.prefix_pool_bytes.into()),
         ])
     }
 }
@@ -188,6 +197,7 @@ mod tests {
         assert_eq!(back.kv_pool_bytes, 0);
         assert_eq!(back.scratch_pool_entries, 16);
         assert_eq!(back.device_pool_bytes, 256 << 20);
+        assert_eq!(back.prefix_pool_bytes, 64 << 20);
     }
 
     #[test]
@@ -208,6 +218,8 @@ mod tests {
                 "5",
                 "--device-pool-bytes",
                 "2097152",
+                "--prefix-pool-bytes",
+                "4194304",
             ]
             .iter()
             .map(|s| s.to_string())
@@ -222,6 +234,7 @@ mod tests {
         assert_eq!(cfg.kv_pool_bytes, 1 << 20);
         assert_eq!(cfg.scratch_pool_entries, 5);
         assert_eq!(cfg.device_pool_bytes, 2 << 20);
+        assert_eq!(cfg.prefix_pool_bytes, 4 << 20);
     }
 
     #[test]
@@ -233,6 +246,7 @@ mod tests {
             kv_pool_bytes: 4096,
             scratch_pool_entries: 3,
             device_pool_bytes: 0,
+            prefix_pool_bytes: 0,
             ..Default::default()
         };
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
@@ -240,6 +254,7 @@ mod tests {
         assert_eq!(back.kv_pool_bytes, 4096);
         assert_eq!(back.scratch_pool_entries, 3);
         assert_eq!(back.device_pool_bytes, 0, "0 (residency disabled) must round-trip");
+        assert_eq!(back.prefix_pool_bytes, 0, "0 (prefix cache disabled) must round-trip");
     }
 
     #[test]

@@ -77,6 +77,28 @@ impl<'rt> Engine<'rt> {
         self.n_compactions = 0;
     }
 
+    /// Resume from a frozen cross-request prefix: install the snapshot's
+    /// shared pages into this engine's empty cache (no copying — mutation
+    /// goes through the arena's CoW) and fast-forward the stream counter
+    /// past the matched tokens. Only valid on a fresh engine; the caller
+    /// guarantees the snapshot came from the same `(model, policy, window,
+    /// capacity)` signature, which is what makes the adopted state equal a
+    /// from-scratch prefill of those tokens.
+    pub fn adopt_prefix(
+        &mut self,
+        snap: &crate::runtime::PrefixSnapshot,
+        n_tokens: u64,
+        last_token: i32,
+    ) -> Result<()> {
+        if self.n_tokens != 0 {
+            bail!("adopt_prefix: engine already ingested {} tokens", self.n_tokens);
+        }
+        snap.apply(&mut self.cache)?;
+        self.n_tokens = n_tokens;
+        self.last_token = last_token;
+        Ok(())
+    }
+
     fn scored(&self) -> bool {
         self.policy.needs_scores()
     }

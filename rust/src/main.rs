@@ -28,7 +28,10 @@ fn main() -> Result<()> {
         .describe("max-queue", "admission-control queue bound", Some("64"))
         .describe("decode-quantum", "decode steps per scheduling round", Some("16"))
         .describe("max-active", "max concurrently active sequences", Some("4"))
-        .describe("kv-pool-bytes", "paged-KV arena byte budget (0 = unlimited)", Some("0"));
+        .describe("kv-pool-bytes", "paged-KV arena byte budget (0 = unlimited)", Some("0"))
+        .describe("scratch-pool-entries", "warm dense host scratch images (LRU)", Some("16"))
+        .describe("device-pool-bytes", "device-residency tier bytes (0 = off)", Some("268435456"))
+        .describe("prefix-pool-bytes", "prefix-cache byte capacity (0 = off)", Some("67108864"));
     if args.flag("help") {
         print!("{}", args.usage("lacache-serve"));
         return Ok(());

@@ -13,6 +13,13 @@
 //! arena into the serving-path admission signal: allocations that would
 //! exceed it fail with [`ARENA_OOM_MARKER`], and the scheduler consults
 //! [`KvArena::stats`] before admitting new sequences.
+//!
+//! Pages can also be **frozen** into refcounted [`SharedPage`]s (the
+//! cross-request prefix cache pins them, and every cache that adopts a
+//! prefix holds handles to the same pages): the bytes stay charged exactly
+//! once and return to the pool only when the LAST reader drops. Mutation of
+//! a shared page is copy-on-write, performed by [`super::KvCache`] and
+//! counted in [`ArenaStats::cow_copies`].
 
 use std::collections::BTreeMap;
 use std::sync::{Arc, Mutex, OnceLock};
@@ -57,6 +64,10 @@ struct Pool {
     bytes_pooled: usize,
     high_water: usize,
     budget: Option<usize>,
+    pages_allocated: u64,
+    pool_hits: u64,
+    pages_freed: u64,
+    cow_copies: u64,
 }
 
 /// Cheaply cloneable handle to a shared page pool.
@@ -65,10 +76,13 @@ pub struct KvArena {
     pool: Arc<Mutex<Pool>>,
 }
 
-/// Point-in-time arena occupancy (the admission-control signal).
+/// Point-in-time arena occupancy (the admission-control signal) plus
+/// cumulative pool-churn counters (exported in `op:stats` so bench records
+/// can correlate prefix reuse with real page traffic).
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ArenaStats {
-    /// Bytes currently held by live caches.
+    /// Bytes currently held by live caches (shared pages count once,
+    /// however many readers pin them).
     pub bytes_in_use: usize,
     /// Bytes parked on the free lists, ready for reuse.
     pub bytes_pooled: usize,
@@ -76,6 +90,19 @@ pub struct ArenaStats {
     pub high_water: usize,
     /// Configured pool budget (None = unlimited).
     pub budget: Option<usize>,
+    /// Pages currently parked on the free lists (gauge form of
+    /// `bytes_pooled`, across row widths).
+    pub pages_pooled: usize,
+    /// Total page allocations served (pool recycles + fresh constructions).
+    pub pages_allocated: u64,
+    /// Allocations served by recycling a pooled page instead of
+    /// constructing a fresh one.
+    pub pool_hits: u64,
+    /// Pages returned to the free lists.
+    pub pages_freed: u64,
+    /// Copy-on-write materializations: a shared page was about to be
+    /// mutated and a private copy was allocated instead.
+    pub cow_copies: u64,
 }
 
 impl KvArena {
@@ -102,6 +129,11 @@ impl KvArena {
             bytes_pooled: p.bytes_pooled,
             high_water: p.high_water,
             budget: p.budget,
+            pages_pooled: p.free.values().map(|v| v.len()).sum(),
+            pages_allocated: p.pages_allocated,
+            pool_hits: p.pool_hits,
+            pages_freed: p.pages_freed,
+            cow_copies: p.cow_copies,
         }
     }
 
@@ -122,10 +154,12 @@ impl KvArena {
         let page = match p.free.get_mut(&row_width).and_then(|v| v.pop()) {
             Some(page) => {
                 p.bytes_pooled -= bytes;
+                p.pool_hits += 1;
                 page
             }
             None => Page::new(row_width),
         };
+        p.pages_allocated += 1;
         p.bytes_in_use += bytes;
         p.high_water = p.high_water.max(p.bytes_in_use);
         Ok(page)
@@ -137,7 +171,73 @@ impl KvArena {
         let mut p = self.pool.lock().unwrap();
         p.bytes_in_use = p.bytes_in_use.saturating_sub(bytes);
         p.bytes_pooled += bytes;
+        p.pages_freed += 1;
         p.free.entry(row_width).or_default().push(page);
+    }
+
+    /// Record one copy-on-write materialization (a shared page was about to
+    /// be mutated; [`super::KvCache`] allocated a private copy instead).
+    pub fn note_cow(&self) {
+        self.pool.lock().unwrap().cow_copies += 1;
+    }
+}
+
+/// A frozen, immutable arena page shared by multiple readers: the
+/// cross-request prefix tree pins one handle per leaf page, and every
+/// [`super::KvCache`] that adopted the prefix holds handles to the same
+/// pages. The bytes were charged once at allocation and are freed exactly
+/// once — when the LAST handle drops, the page returns to the pool.
+#[derive(Clone)]
+pub struct SharedPage {
+    inner: Arc<SharedInner>,
+}
+
+struct SharedInner {
+    /// `None` only after [`SharedPage::try_unshare`] reclaimed the page.
+    page: Option<Page>,
+    row_width: usize,
+    arena: KvArena,
+}
+
+impl Drop for SharedInner {
+    fn drop(&mut self) {
+        if let Some(page) = self.page.take() {
+            self.arena.free(self.row_width, page);
+        }
+    }
+}
+
+impl SharedPage {
+    /// Freeze an owned page. No bytes move and no accounting changes: the
+    /// page stays `bytes_in_use` until the last handle drops.
+    pub fn freeze(arena: KvArena, row_width: usize, page: Page) -> Self {
+        Self { inner: Arc::new(SharedInner { page: Some(page), row_width, arena }) }
+    }
+
+    /// The frozen page contents (valid until the last handle drops).
+    pub fn page(&self) -> &Page {
+        self.inner.page.as_ref().expect("shared page present until last drop")
+    }
+
+    /// Floats per slot row (`H * Dh`) — the arena pooling key.
+    pub fn row_width(&self) -> usize {
+        self.inner.row_width
+    }
+
+    /// Handles currently pinning this page (prefix-tree leaves + caches).
+    pub fn readers(&self) -> usize {
+        Arc::strong_count(&self.inner)
+    }
+
+    /// Reclaim sole ownership without copying: succeeds iff this handle is
+    /// the last reader, in which case the page moves back out un-shared
+    /// (accounting unchanged — it stays in use). Otherwise the handle is
+    /// returned and the caller must copy (the CoW path).
+    pub fn try_unshare(self) -> Result<Page, SharedPage> {
+        match Arc::try_unwrap(self.inner) {
+            Ok(mut inner) => Ok(inner.page.take().expect("page present until last drop")),
+            Err(inner) => Err(SharedPage { inner }),
+        }
     }
 }
 
@@ -152,16 +252,21 @@ pub fn seq_footprint_bytes(n_layers: usize, row_width: usize, slots: usize) -> u
 /// which exist per hot sequence and back-pressure intake instead of OOMing
 /// the device) plus one projected footprint must fit the budget, AND
 /// reserving the peak footprint for every already-admitted sequence (which
-/// may not have allocated its pages yet) must still fit.
+/// may not have allocated its pages yet) must still fit alongside
+/// `prefix_bytes` — the pages pinned by the cross-request prefix tree,
+/// which belong to no active sequence (they are already inside
+/// `bytes_in_use`, so only the reservation term adds them).
 pub fn admission_ok(
     stats: &ArenaStats,
     active: usize,
     est_seq_bytes: usize,
     limit: usize,
     staging_bytes: usize,
+    prefix_bytes: usize,
 ) -> bool {
     let reserved = (active + 1).saturating_mul(est_seq_bytes);
-    stats.bytes_in_use + staging_bytes + est_seq_bytes <= limit && reserved <= limit
+    stats.bytes_in_use + staging_bytes + est_seq_bytes <= limit
+        && reserved.saturating_add(prefix_bytes) <= limit
 }
 
 #[cfg(test)]
@@ -208,16 +313,93 @@ mod tests {
         let est = seq_footprint_bytes(2, 8, 17); // 17 slots -> 2 pages, x2 layers
         assert_eq!(est, 2 * 2 * Page::bytes(8));
         let empty = ArenaStats::default();
-        assert!(admission_ok(&empty, 0, est, est, 0));
+        assert!(admission_ok(&empty, 0, est, est, 0, 0));
         // one active sequence reserves its footprint even before allocating
-        assert!(!admission_ok(&empty, 1, est, est, 0));
-        assert!(admission_ok(&empty, 1, est, 2 * est, 0));
+        assert!(!admission_ok(&empty, 1, est, est, 0, 0));
+        assert!(admission_ok(&empty, 1, est, 2 * est, 0, 0));
         let loaded = ArenaStats { bytes_in_use: est, ..Default::default() };
-        assert!(!admission_ok(&loaded, 0, est, est, 0));
+        assert!(!admission_ok(&loaded, 0, est, est, 0, 0));
         // staging bytes (device-resident images + scratch pool) count like
         // arena pressure: a full device tier back-pressures intake
-        assert!(admission_ok(&empty, 0, est, 2 * est, est));
-        assert!(!admission_ok(&empty, 0, est, 2 * est, est + 1));
+        assert!(admission_ok(&empty, 0, est, 2 * est, est, 0));
+        assert!(!admission_ok(&empty, 0, est, 2 * est, est + 1, 0));
+        // prefix-pinned pages join the reservation term: worst-case
+        // per-sequence footprints must coexist with the pinned tree
+        assert!(admission_ok(&empty, 1, est, 2 * est, 0, 0));
+        assert!(!admission_ok(&empty, 1, est, 2 * est, 0, 1));
+        assert!(admission_ok(&empty, 1, est, 3 * est, 0, est));
+    }
+
+    #[test]
+    fn shared_page_frees_once_on_last_drop() {
+        let arena = KvArena::new();
+        let rw = 8;
+        let page = arena.alloc(rw).unwrap();
+        let sp = SharedPage::freeze(arena.clone(), rw, page);
+        assert_eq!(sp.row_width(), rw);
+        assert_eq!(arena.stats().bytes_in_use, Page::bytes(rw), "freeze keeps bytes charged");
+        let sp2 = sp.clone();
+        assert_eq!(sp2.readers(), 2);
+        drop(sp);
+        let st = arena.stats();
+        assert_eq!(st.bytes_in_use, Page::bytes(rw), "live reader keeps the page");
+        assert_eq!(st.pages_freed, 0);
+        drop(sp2);
+        let st = arena.stats();
+        assert_eq!(st.bytes_in_use, 0, "last drop returns the page");
+        assert_eq!(st.bytes_pooled, Page::bytes(rw));
+        assert_eq!(st.pages_freed, 1);
+    }
+
+    #[test]
+    fn shared_page_sole_reader_unshares_without_copy() {
+        let arena = KvArena::new();
+        let rw = 4;
+        let mut page = arena.alloc(rw).unwrap();
+        page.k[0] = 7.0;
+        let sp = SharedPage::freeze(arena.clone(), rw, page);
+        let sp2 = sp.clone();
+        // two readers: un-sharing must fail and hand the handle back
+        let sp2 = match sp2.try_unshare() {
+            Err(handle) => handle,
+            Ok(_) => panic!("two readers cannot unshare"),
+        };
+        drop(sp2);
+        // sole reader: the page moves back out, no alloc/free churn
+        let before = arena.stats();
+        let page = match sp.try_unshare() {
+            Ok(page) => page,
+            Err(_) => panic!("sole reader reclaims"),
+        };
+        assert_eq!(page.k[0], 7.0);
+        let st = arena.stats();
+        assert_eq!(st.bytes_in_use, before.bytes_in_use);
+        assert_eq!(st.pages_allocated, before.pages_allocated);
+        assert_eq!(st.pages_freed, before.pages_freed);
+        arena.free(rw, page);
+        assert_eq!(arena.stats().bytes_in_use, 0);
+    }
+
+    #[test]
+    fn pool_counters_track_alloc_free_churn() {
+        let arena = KvArena::new();
+        let rw = 4;
+        let a = arena.alloc(rw).unwrap();
+        let st = arena.stats();
+        assert_eq!((st.pages_allocated, st.pool_hits, st.pages_freed), (1, 0, 0));
+        assert_eq!(st.pages_pooled, 0);
+        arena.free(rw, a);
+        let st = arena.stats();
+        assert_eq!(st.pages_freed, 1);
+        assert_eq!(st.pages_pooled, 1);
+        // the next alloc recycles the pooled page
+        let b = arena.alloc(rw).unwrap();
+        let st = arena.stats();
+        assert_eq!((st.pages_allocated, st.pool_hits), (2, 1));
+        assert_eq!(st.pages_pooled, 0);
+        arena.note_cow();
+        assert_eq!(arena.stats().cow_copies, 1);
+        arena.free(rw, b);
     }
 
     #[test]

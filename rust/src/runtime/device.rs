@@ -20,8 +20,10 @@
 //!    then promotion into this tier.
 //! 3. **Cold**: full gather, full upload, promotion.
 //!
-//! Residency is capacity-bounded ([`DeviceTier::new`]) with LRU
-//! **spill-to-scratch**: the least-recently-used entry's image is read back
+//! Residency is capacity-bounded ([`DeviceTier::new`]) with cost-aware
+//! **spill-to-scratch**: the victim is the entry with the cheapest
+//! re-promotion (smallest `last_sync_bytes / resident bytes` — see
+//! [`DeviceTier::spill_one`]; LRU breaks ties), its image is read back
 //! (`copy_to_host_partial`) and handed to the scratch pool with its stamp
 //! ([`ScratchPool::adopt`]), so a spilled sequence re-promotes through an
 //! incremental gather instead of a full one. Entries hold a liveness token
@@ -54,6 +56,11 @@ pub struct DeviceKvState {
     elems: usize,
     /// On-device bytes (K + V) — the tier's capacity accounting unit.
     bytes: usize,
+    /// Bytes the most recent acquire/install had to move to bring this
+    /// entry current (0 for clean hits and donations, dirty-range size for
+    /// reconciles, the full image for promotions/stale refreshes) — the
+    /// re-promotion-cost proxy the spill policy minimizes.
+    last_sync_bytes: u64,
     /// Source-cache liveness ([`KvCache::residency_token`]).
     alive: Weak<()>,
 }
@@ -68,7 +75,7 @@ pub struct DeviceStats {
     pub misses: u64,
     /// Full images installed into the tier.
     pub promotions: u64,
-    /// LRU evictions (image read back and handed to the scratch pool).
+    /// Spills (image read back and handed to the scratch pool).
     pub spills: u64,
     /// Generate calls whose resident buffers were donated to the program
     /// and whose outputs were re-installed as the new resident state.
@@ -215,6 +222,7 @@ impl DeviceTier {
                     self.entries[i].sync_gen = cache.sync_gen();
                     up
                 };
+                self.entries[i].last_sync_bytes = uploaded;
                 self.stats.hits += 1;
                 self.stats.reconciled_bytes += uploaded;
                 self.stats.uploaded_bytes += uploaded;
@@ -230,6 +238,7 @@ impl DeviceTier {
                     e.v.overwrite_from_host_partial(&img.v, 0)?;
                 }
                 self.entries[i].sync_gen = cache.sync_gen();
+                self.entries[i].last_sync_bytes = image_bytes as u64;
                 self.stats.misses += 1;
                 self.stats.uploaded_bytes += image_bytes as u64;
                 self.touch(i);
@@ -273,6 +282,7 @@ impl DeviceTier {
             sync_gen: cache.sync_gen(),
             elems,
             bytes: device_bytes,
+            last_sync_bytes: image_bytes as u64,
             alive: cache.residency_token(),
         });
         self.stats.promotions += 1;
@@ -320,6 +330,9 @@ impl DeviceTier {
             sync_gen: cache.sync_gen(),
             elems,
             bytes,
+            // the donated output IS the cache's current image: spilling it
+            // costs nothing to repair, making pure decoders cheap victims
+            last_sync_bytes: 0,
             alive: cache.residency_token(),
         });
         // once resident, the sequence's scratch image is dead weight (its
@@ -329,16 +342,46 @@ impl DeviceTier {
         Ok(())
     }
 
-    /// Spill the least-recently-used entry: read its image back and hand it
-    /// to the scratch pool stamped, so the spilled sequence's next call
-    /// gathers incrementally (or not at all) instead of fully. Dead entries
-    /// are simply dropped. Returns the spilled cache id, or None when the
-    /// tier is empty.
-    pub fn spill_lru(&mut self, pool: &mut ScratchPool) -> Result<Option<u64>> {
-        if self.entries.is_empty() {
-            return Ok(None);
+    /// Victim choice for the next spill: cost-aware, not pure LRU. The
+    /// score is the re-promotion cost proxy `last_sync_bytes / bytes` — the
+    /// entry whose spilled image would need the least repair on the way
+    /// back (a clean hit or donated decoder scores 0, a heavy compactor
+    /// scores high, a fresh promotion scores a full image and is protected
+    /// from spill-thrash). Dead entries win outright (spilling them is
+    /// free). The most-recently-used entry is exempt unless it is alone: a
+    /// hot donating decoder always scores 0 and would otherwise be the
+    /// perpetual victim while idle entries pin the tier. Ties fall back to
+    /// LRU (entries are kept in recency order, oldest first).
+    fn victim_index(&self) -> Option<usize> {
+        if let Some(i) = self.entries.iter().position(|e| e.alive.strong_count() == 0) {
+            return Some(i);
         }
-        let e = self.entries.remove(0);
+        let n = self.entries.len();
+        let candidates = if n > 1 { n - 1 } else { n };
+        let mut best: Option<(f64, usize)> = None;
+        for (i, e) in self.entries.iter().take(candidates).enumerate() {
+            let score = e.last_sync_bytes as f64 / e.bytes.max(1) as f64;
+            let better = match best {
+                None => true,
+                Some((s, _)) => score < s,
+            };
+            if better {
+                best = Some((score, i));
+            }
+        }
+        best.map(|(_, i)| i)
+    }
+
+    /// Spill one entry — the cheapest-to-re-promote victim per the cost
+    /// scoring above: read its image back and hand it to the scratch pool
+    /// stamped, so the spilled sequence's next call gathers incrementally
+    /// (or not at all) instead of fully. Dead entries are simply dropped.
+    /// Returns the spilled cache id, or None when the tier is empty.
+    pub fn spill_one(&mut self, pool: &mut ScratchPool) -> Result<Option<u64>> {
+        let Some(i) = self.victim_index() else {
+            return Ok(None);
+        };
+        let e = self.entries.remove(i);
         if e.alive.strong_count() == 0 {
             self.stats.released += 1;
             return Ok(Some(e.cache_id));
@@ -368,7 +411,7 @@ impl DeviceTier {
 
     fn make_room(&mut self, need: usize, pool: &mut ScratchPool) -> Result<()> {
         while !self.entries.is_empty() && self.resident_bytes() + need > self.capacity_bytes {
-            self.spill_lru(pool)?;
+            self.spill_one(pool)?;
         }
         Ok(())
     }
@@ -643,6 +686,64 @@ mod tests {
     }
 
     #[test]
+    fn cost_aware_spill_picks_cheapest_repromotion_victim() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let (l, h, c, dh) = (1usize, 1usize, 32usize, 2usize);
+        let mut pool = ScratchPool::new(4);
+        let mut tier = DeviceTier::new(8 * image_bytes(l, h, c, dh));
+        let mut rng = Xoshiro256::new(59);
+        let mut a = mk_cache(l, h, c, dh);
+        let mut b = mk_cache(l, h, c, dh);
+        let mut third = mk_cache(l, h, c, dh);
+        let (mut pa, mut pb, mut pt) = (0, 0, 0);
+        append_random(&mut a, 4, &mut pa, &mut rng);
+        append_random(&mut b, 4, &mut pb, &mut rng);
+        append_random(&mut third, 4, &mut pt, &mut rng);
+        for kv in [&mut a, &mut b, &mut third] {
+            tier.acquire(&client, kv, &mut pool).unwrap();
+        }
+        // a: clean hit -> zero repair backlog; b: one appended row -> small
+        // reconcile AND most-recently-used (exempt until alone); third:
+        // untouched since promotion -> full-image cost
+        tier.acquire(&client, &mut a, &mut pool).unwrap();
+        append_random(&mut b, 1, &mut pb, &mut rng);
+        tier.acquire(&client, &mut b, &mut pool).unwrap();
+        let order: Vec<u64> = (0..3)
+            .map(|_| tier.spill_one(&mut pool).unwrap().expect("an entry to spill"))
+            .collect();
+        assert_eq!(
+            order,
+            vec![a.id(), third.id(), b.id()],
+            "victims must order by re-promotion cost (cheapest first), with the \
+             most-recently-used entry protected until it is the only one left"
+        );
+        assert!(tier.is_empty());
+    }
+
+    #[test]
+    fn spill_ties_fall_back_to_lru_order() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let (l, h, c, dh) = (1usize, 1usize, 16usize, 2usize);
+        let mut pool = ScratchPool::new(4);
+        let mut tier = DeviceTier::new(4 * image_bytes(l, h, c, dh));
+        let mut rng = Xoshiro256::new(61);
+        let mut a = mk_cache(l, h, c, dh);
+        let mut b = mk_cache(l, h, c, dh);
+        let mut third = mk_cache(l, h, c, dh);
+        let (mut pa, mut pb, mut pt) = (0, 0, 0);
+        append_random(&mut a, 3, &mut pa, &mut rng);
+        append_random(&mut b, 3, &mut pb, &mut rng);
+        append_random(&mut third, 3, &mut pt, &mut rng);
+        for kv in [&mut a, &mut b, &mut third] {
+            tier.acquire(&client, kv, &mut pool).unwrap();
+        }
+        // all three carry the same (full-image) score and `third` is MRU
+        // (exempt): the tie between a and b must break toward a, the older
+        let spilled = tier.spill_one(&mut pool).unwrap();
+        assert_eq!(spilled, Some(a.id()), "equal scores must break ties by LRU");
+    }
+
+    #[test]
     fn sweep_and_release_free_dead_entries() {
         let client = xla::PjRtClient::cpu().unwrap();
         let mut pool = ScratchPool::new(2);
@@ -718,7 +819,7 @@ mod tests {
         // random append/compact/evict/spill/absorb sequences over TWO caches
         // sharing one tier + one scratch pool: after every op, acquiring a
         // cache must leave a resident device image byte-identical to a
-        // from-scratch host gather — including after LRU spill and
+        // from-scratch host gather — including after spill and
         // re-promotion, and with the scratch pool small enough to thrash
         PropRunner::new(25).run(
             |rng: &mut Xoshiro256| {
@@ -790,7 +891,7 @@ mod tests {
                             .map_err(|e| format!("donated_step: {e}"))?;
                         }
                         Op::Spill => {
-                            tier.spill_lru(&mut pool).map_err(|e| format!("spill: {e}"))?;
+                            tier.spill_one(&mut pool).map_err(|e| format!("spill: {e}"))?;
                         }
                     }
                     prop_assert!(caches[which].check_invariants().is_ok(), "invariants broken");

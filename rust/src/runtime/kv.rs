@@ -18,13 +18,24 @@
 //! reusable scratch — a pure-append decode step gathers only the appended
 //! rows, and an unchanged cache gathers nothing. See PERF.md for the
 //! dirty-tracking invariants.
+//!
+//! Page-table entries are either privately **owned** (mutable in place) or
+//! frozen **shared** pages ([`SharedPage`], refcounted): the cross-request
+//! prefix cache freezes a donor's pages at prefill-chunk boundaries
+//! ([`KvCache::freeze_pages`]) and a forked sequence adopts the same pages
+//! ([`KvCache::adopt_shared`]) without copying. The first mutation that
+//! would touch a shared page materializes a private copy first
+//! (copy-on-write; a sole-reader page is reclaimed without copying). CoW is
+//! content-preserving, so it needs no dirty marking of its own — the
+//! triggering mutation marks its ranges exactly as on owned pages, and the
+//! `(id, sync_gen)` stamps stay valid. See PERF.md "Prefix sharing".
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Weak};
 
 use anyhow::{bail, Result};
 
-use super::arena::{KvArena, Page, PAGE_SLOTS};
+use super::arena::{KvArena, Page, SharedPage, PAGE_SLOTS};
 
 /// Unique-per-instance cache ids: the scratch-pool key that makes a dense
 /// image attributable to exactly one cache (clones and resets get fresh ids).
@@ -45,6 +56,91 @@ impl GatherBytes {
     }
 }
 
+/// One page-table slot: a privately owned page (mutable in place) or a
+/// frozen shared page (copy-on-write on the first mutation).
+enum PageEntry {
+    Owned(Page),
+    Shared(SharedPage),
+}
+
+impl PageEntry {
+    /// Read access, whichever variant.
+    #[inline]
+    fn page(&self) -> &Page {
+        match self {
+            PageEntry::Owned(p) => p,
+            PageEntry::Shared(s) => s.page(),
+        }
+    }
+
+    fn is_shared(&self) -> bool {
+        matches!(self, PageEntry::Shared(_))
+    }
+
+    /// Mutable access to an entry the caller has already made owned (via
+    /// [`owned_page`]). Panics on a shared entry — that would be a missed
+    /// CoW, i.e. silent corruption of every other reader.
+    fn owned_mut(&mut self) -> &mut Page {
+        match self {
+            PageEntry::Owned(p) => p,
+            PageEntry::Shared(_) => panic!("mutation of a shared page without CoW"),
+        }
+    }
+
+    /// Freeze in place: convert an owned page to shared (no byte movement,
+    /// accounting unchanged) and hand out a handle; an already-shared page
+    /// just clones one.
+    fn freeze(&mut self, arena: &KvArena, row_width: usize) -> SharedPage {
+        if let PageEntry::Shared(sp) = self {
+            return sp.clone();
+        }
+        let placeholder = PageEntry::Owned(Page { k: Vec::new(), v: Vec::new() });
+        let PageEntry::Owned(page) = std::mem::replace(self, placeholder) else {
+            unreachable!("shared handled above");
+        };
+        let sp = SharedPage::freeze(arena.clone(), row_width, page);
+        *self = PageEntry::Shared(sp.clone());
+        sp
+    }
+}
+
+/// Make `table[pi]` privately owned and return the mutable page. A shared
+/// entry whose other readers all dropped is reclaimed in place (free); one
+/// that is still shared is copied into a freshly allocated page first
+/// (copy-on-write, counted in `ArenaStats::cow_copies`). On allocation
+/// failure the shared entry is restored untouched.
+fn owned_page<'a>(
+    arena: &KvArena,
+    row_width: usize,
+    table: &'a mut [PageEntry],
+    pi: usize,
+) -> Result<&'a mut Page> {
+    if table[pi].is_shared() {
+        let placeholder = PageEntry::Owned(Page { k: Vec::new(), v: Vec::new() });
+        let PageEntry::Shared(shared) = std::mem::replace(&mut table[pi], placeholder) else {
+            unreachable!("checked shared above");
+        };
+        let owned = match shared.try_unshare() {
+            Ok(page) => page,
+            Err(shared) => {
+                let mut copy = match arena.alloc(row_width) {
+                    Ok(copy) => copy,
+                    Err(e) => {
+                        table[pi] = PageEntry::Shared(shared);
+                        return Err(e);
+                    }
+                };
+                copy.k.copy_from_slice(&shared.page().k);
+                copy.v.copy_from_slice(&shared.page().v);
+                arena.note_cow();
+                copy
+            }
+        };
+        table[pi] = PageEntry::Owned(owned);
+    }
+    Ok(table[pi].owned_mut())
+}
+
 pub struct KvCache {
     pub l: usize,
     pub h: usize,
@@ -52,8 +148,9 @@ pub struct KvCache {
     pub dh: usize,
     arena: KvArena,
     /// Per-layer page table: page `i` backs slots
-    /// `[i * PAGE_SLOTS, (i + 1) * PAGE_SLOTS)`.
-    pages: Vec<Vec<Page>>,
+    /// `[i * PAGE_SLOTS, (i + 1) * PAGE_SLOTS)`. Entries are owned pages or
+    /// frozen shared pages (CoW on first mutation).
+    pages: Vec<Vec<PageEntry>>,
     /// Valid slot count per layer.
     pub lens: Vec<usize>,
     /// Original token index of each valid slot, per layer (time-ordered).
@@ -202,20 +299,26 @@ impl KvCache {
     /// One slot's K row for one head (`Dh` floats).
     pub fn row_k(&self, layer: usize, head: usize, slot: usize) -> &[f32] {
         let off = self.page_off(head, slot % PAGE_SLOTS);
-        &self.pages[layer][slot / PAGE_SLOTS].k[off..off + self.dh]
+        &self.pages[layer][slot / PAGE_SLOTS].page().k[off..off + self.dh]
     }
 
     /// One slot's V row for one head (`Dh` floats).
     pub fn row_v(&self, layer: usize, head: usize, slot: usize) -> &[f32] {
         let off = self.page_off(head, slot % PAGE_SLOTS);
-        &self.pages[layer][slot / PAGE_SLOTS].v[off..off + self.dh]
+        &self.pages[layer][slot / PAGE_SLOTS].page().v[off..off + self.dh]
+    }
+
+    /// Pages of one layer currently held as frozen shared pages (tests and
+    /// diagnostics; owned pages make up the rest of [`Self::n_pages`]).
+    pub fn n_shared_pages(&self, layer: usize) -> usize {
+        self.pages[layer].iter().filter(|e| e.is_shared()).count()
     }
 
     fn ensure_pages(&mut self, layer: usize, new_len: usize) -> Result<()> {
         let needed = new_len.div_ceil(PAGE_SLOTS);
         while self.pages[layer].len() < needed {
             let page = self.arena.alloc(self.row_width())?;
-            self.pages[layer].push(page);
+            self.pages[layer].push(PageEntry::Owned(page));
         }
         Ok(())
     }
@@ -224,8 +327,12 @@ impl KvCache {
         let needed = self.lens[layer].div_ceil(PAGE_SLOTS);
         let rw = self.row_width();
         while self.pages[layer].len() > needed {
-            let page = self.pages[layer].pop().unwrap();
-            self.arena.free(rw, page);
+            match self.pages[layer].pop().unwrap() {
+                PageEntry::Owned(page) => self.arena.free(rw, page),
+                // refcount drop: the last reader (possibly the prefix
+                // tree) returns the page
+                PageEntry::Shared(_) => {}
+            }
         }
     }
 
@@ -248,12 +355,13 @@ impl KvCache {
         debug_assert_eq!(win_k.len(), self.h * w * self.dh);
         self.ensure_pages(layer, len + n_valid)?;
         let (h, dh) = (self.h, self.dh);
+        let rw = self.row_width();
         let mut i = 0;
         while i < n_valid {
             let slot = len + i;
             let sp = slot % PAGE_SLOTS;
             let run = (PAGE_SLOTS - sp).min(n_valid - i);
-            let page = &mut self.pages[layer][slot / PAGE_SLOTS];
+            let page = owned_page(&self.arena, rw, &mut self.pages[layer], slot / PAGE_SLOTS)?;
             for hh in 0..h {
                 let src = (hh * w + i) * dh;
                 let dst = (hh * PAGE_SLOTS + sp) * dh;
@@ -299,6 +407,15 @@ impl KvCache {
             .position(|(dst_i, &src_i)| dst_i != src_i)
             .unwrap_or(keep.len());
         let (h, dh) = (self.h, self.dh);
+        let rw = self.row_width();
+        // copy-on-write every page a move will write into, BEFORE moving:
+        // CoW preserves content, so doing it up front (even on alloc
+        // failure partway) never leaves a half-moved layer
+        for (dst_i, &src_i) in keep.iter().enumerate() {
+            if dst_i != src_i {
+                owned_page(&self.arena, rw, &mut self.pages[layer], dst_i / PAGE_SLOTS)?;
+            }
+        }
         for (dst_i, &src_i) in keep.iter().enumerate() {
             if dst_i == src_i {
                 continue; // prefix already in place
@@ -306,7 +423,7 @@ impl KvCache {
             let (spi, so) = (src_i / PAGE_SLOTS, src_i % PAGE_SLOTS);
             let (dpi, dof) = (dst_i / PAGE_SLOTS, dst_i % PAGE_SLOTS);
             if spi == dpi {
-                let page = &mut self.pages[layer][spi];
+                let page = self.pages[layer][spi].owned_mut();
                 for hh in 0..h {
                     let s = (hh * PAGE_SLOTS + so) * dh;
                     let d = (hh * PAGE_SLOTS + dof) * dh;
@@ -316,8 +433,8 @@ impl KvCache {
             } else {
                 // dst_i < src_i for strictly-increasing keep, so dpi < spi
                 let (head_pages, tail_pages) = self.pages[layer].split_at_mut(spi);
-                let spage = &tail_pages[0];
-                let dpage = &mut head_pages[dpi];
+                let spage = tail_pages[0].page();
+                let dpage = head_pages[dpi].owned_mut();
                 for hh in 0..h {
                     let s = (hh * PAGE_SLOTS + so) * dh;
                     let d = (hh * PAGE_SLOTS + dof) * dh;
@@ -384,11 +501,12 @@ impl KvCache {
                 }
             }
             self.ensure_pages(l, new_len)?;
+            let rw = self.row_width();
             let mut slot = old_len;
             while slot < new_len {
                 let sp = slot % PAGE_SLOTS;
                 let run = (PAGE_SLOTS - sp).min(new_len - slot);
-                let page = &mut self.pages[l][slot / PAGE_SLOTS];
+                let page = owned_page(&self.arena, rw, &mut self.pages[l], slot / PAGE_SLOTS)?;
                 for hh in 0..h {
                     let src = ((l * h + hh) * c + slot) * dh;
                     let dst = (hh * PAGE_SLOTS + sp) * dh;
@@ -425,7 +543,7 @@ impl KvCache {
         while slot < hi {
             let sp = slot % PAGE_SLOTS;
             let run = (PAGE_SLOTS - sp).min(hi - slot);
-            let page = &self.pages[layer][slot / PAGE_SLOTS];
+            let page = self.pages[layer][slot / PAGE_SLOTS].page();
             for hh in 0..h {
                 let src = (hh * PAGE_SLOTS + sp) * dh;
                 let dst = ((layer * h + hh) * c + slot) * dh;
@@ -486,7 +604,7 @@ impl KvCache {
         while slot < valid_hi {
             let sp = slot % PAGE_SLOTS;
             let run = (PAGE_SLOTS - sp).min(valid_hi - slot);
-            let page = &self.pages[layer][slot / PAGE_SLOTS];
+            let page = self.pages[layer][slot / PAGE_SLOTS].page();
             let src = (head * PAGE_SLOTS + sp) * dh;
             let dst = (slot - lo) * dh;
             k_out[dst..dst + run * dh].copy_from_slice(&page.k[src..src + run * dh]);
@@ -565,6 +683,72 @@ impl KvCache {
         }
     }
 
+    /// Freeze every page of this cache into refcounted shared pages (in
+    /// place — this cache keeps using them; its next mutation of any frozen
+    /// page goes through CoW) and return per-layer handles for the prefix
+    /// tree. Pages already shared just hand out another handle. No bytes
+    /// move and arena accounting is unchanged.
+    pub fn freeze_pages(&mut self) -> Vec<Vec<SharedPage>> {
+        let rw = self.row_width();
+        let arena = self.arena.clone();
+        self.pages
+            .iter_mut()
+            .map(|table| table.iter_mut().map(|e| e.freeze(&arena, rw)).collect())
+            .collect()
+    }
+
+    /// Install a frozen prefix into this EMPTY cache (the fork path): adopt
+    /// the shared page handles plus occupancy bookkeeping without copying a
+    /// byte — the arena charged these pages once, at the donor's original
+    /// allocation. Everything is validated before anything is installed, so
+    /// a failed adopt leaves the cache untouched. All adopted slots are
+    /// marked dirty (the fork has a fresh id, so its first gather is a full
+    /// one regardless).
+    pub fn adopt_shared(
+        &mut self,
+        pages: &[Vec<SharedPage>],
+        lens: &[usize],
+        positions: &[Vec<u64>],
+        mass: &[Vec<f64>],
+    ) -> Result<()> {
+        if self.lens.iter().any(|&n| n != 0) {
+            bail!("adopt_shared: cache is not empty");
+        }
+        if pages.len() != self.l || lens.len() != self.l {
+            bail!("adopt_shared: layer count mismatch ({} != {})", pages.len(), self.l);
+        }
+        if positions.len() != self.l || mass.len() != self.l {
+            bail!("adopt_shared: bookkeeping layer count mismatch");
+        }
+        let rw = self.row_width();
+        for l in 0..self.l {
+            if lens[l] > self.c {
+                bail!("adopt_shared: layer {l} len {} > capacity {}", lens[l], self.c);
+            }
+            if pages[l].len() != lens[l].div_ceil(PAGE_SLOTS) {
+                bail!(
+                    "adopt_shared: layer {l} has {} pages for {} slots",
+                    pages[l].len(),
+                    lens[l]
+                );
+            }
+            if positions[l].len() != lens[l] || mass[l].len() != lens[l] {
+                bail!("adopt_shared: layer {l} bookkeeping length mismatch");
+            }
+            if pages[l].iter().any(|sp| sp.row_width() != rw) {
+                bail!("adopt_shared: layer {l} row-width mismatch");
+            }
+        }
+        for l in 0..self.l {
+            self.pages[l] = pages[l].iter().map(|sp| PageEntry::Shared(sp.clone())).collect();
+            self.lens[l] = lens[l];
+            self.positions[l] = positions[l].clone();
+            self.mass[l] = mass[l].clone();
+            self.mark_dirty(l, 0, lens[l]);
+        }
+        Ok(())
+    }
+
     /// Consistency invariants (used by tests and debug assertions).
     pub fn check_invariants(&self) -> Result<()> {
         for l in 0..self.l {
@@ -605,14 +789,15 @@ impl Clone for KvCache {
         let mut out = KvCache::with_arena(self.arena.clone(), self.l, self.h, self.c, self.dh);
         let rw = self.row_width();
         for l in 0..self.l {
-            for page in &self.pages[l] {
+            for entry in &self.pages[l] {
+                let page = entry.page();
                 let mut p = out
                     .arena
                     .alloc(rw)
                     .expect("kv-arena budget exceeded while cloning KvCache");
                 p.k.copy_from_slice(&page.k);
                 p.v.copy_from_slice(&page.v);
-                out.pages[l].push(p);
+                out.pages[l].push(PageEntry::Owned(p));
             }
         }
         out.lens = self.lens.clone();
@@ -630,8 +815,12 @@ impl Drop for KvCache {
     fn drop(&mut self) {
         let rw = self.row_width();
         for table in &mut self.pages {
-            for page in table.drain(..) {
-                self.arena.free(rw, page);
+            for entry in table.drain(..) {
+                match entry {
+                    PageEntry::Owned(page) => self.arena.free(rw, page),
+                    // refcount drop: freed by the last reader
+                    PageEntry::Shared(_) => {}
+                }
             }
         }
     }
@@ -884,6 +1073,122 @@ mod tests {
         let mut sv = vec![f32::NAN; 2 * dh];
         kv.stage_rows(0, 0, 20, 22, &mut sk, &mut sv);
         assert!(sk.iter().chain(sv.iter()).all(|&x| x == 0.0));
+    }
+
+    #[test]
+    fn freeze_and_adopt_share_pages_without_copying() {
+        let arena = KvArena::new();
+        let mut donor = KvCache::with_arena(arena.clone(), 2, 2, 64, 4);
+        let w = 20; // 2 pages per layer (one full, one partial)
+        let mut wk = vec![0.0f32; 2 * w * 4];
+        for (i, x) in wk.iter_mut().enumerate() {
+            *x = i as f32;
+        }
+        let wv: Vec<f32> = wk.iter().map(|x| -x).collect();
+        for layer in 0..2 {
+            donor.append_layer(layer, &wk, &wv, w, w, 0).unwrap();
+        }
+        let before = arena.stats().bytes_in_use;
+        let shared = donor.freeze_pages();
+        assert_eq!(donor.n_shared_pages(0), 2, "freeze converts in place");
+        assert_eq!(arena.stats().bytes_in_use, before, "freeze moves no bytes");
+
+        let mut fork = KvCache::with_arena(arena.clone(), 2, 2, 64, 4);
+        fork.adopt_shared(&shared, &donor.lens, &donor.positions, &donor.mass).unwrap();
+        fork.check_invariants().unwrap();
+        assert_eq!(arena.stats().bytes_in_use, before, "adoption charges nothing");
+        assert_eq!(fork.lens, donor.lens);
+        assert_eq!(fork.positions, donor.positions);
+        let (dk, dv) = donor.gather_dense();
+        let (fk, fv) = fork.gather_dense();
+        assert_eq!(dk, fk);
+        assert_eq!(dv, fv);
+        assert_ne!(donor.id(), fork.id(), "fork gets a fresh transfer identity");
+        assert_eq!(fork.dirty_range(0), Some((0, w)), "adopted slots start dirty");
+    }
+
+    #[test]
+    fn cow_on_append_preserves_the_donor_rows() {
+        let arena = KvArena::new();
+        let mut donor = KvCache::with_arena(arena.clone(), 1, 1, 64, 2);
+        let w = vec![1.5f32; 20 * 2];
+        donor.append_layer(0, &w, &w, 20, 20, 0).unwrap();
+        let shared = donor.freeze_pages();
+        let mut fork = KvCache::with_arena(arena.clone(), 1, 1, 64, 2);
+        fork.adopt_shared(&shared, &donor.lens, &donor.positions, &donor.mass).unwrap();
+        let before = arena.stats();
+
+        // fork appends into the shared partial tail page -> exactly one CoW
+        let one = vec![9.0f32; 2];
+        fork.append_layer(0, &one, &one, 1, 1, 20).unwrap();
+        let st = arena.stats();
+        assert_eq!(st.cow_copies, before.cow_copies + 1, "one page copied on write");
+        assert_eq!(
+            st.bytes_in_use,
+            before.bytes_in_use + Page::bytes(2),
+            "CoW charges one private page"
+        );
+        assert_eq!(fork.row_k(0, 0, 20)[0], 9.0);
+        assert_eq!(fork.row_k(0, 0, 19)[0], 1.5, "copied page keeps the prefix rows");
+        assert_eq!(donor.lens[0], 20);
+        assert_eq!(donor.row_k(0, 0, 19)[0], 1.5, "donor must not see the fork's write");
+        assert_eq!(donor.n_shared_pages(0), 2, "donor still reads the frozen pages");
+        assert_eq!(fork.n_shared_pages(0), 1, "fork owns only the CoW'd tail page");
+
+        // the donor's own mutation CoWs its side too, independently
+        donor.retain_slots(0, &[0, 5, 17]).unwrap();
+        let (fk, _) = fork.gather_dense();
+        assert_eq!(fk[19 * 2], 1.5, "fork unaffected by donor compaction");
+        donor.check_invariants().unwrap();
+        fork.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn sole_reader_mutation_reclaims_without_copy() {
+        let arena = KvArena::new();
+        let mut kv = KvCache::with_arena(arena.clone(), 1, 1, 64, 2);
+        let w = vec![0.5f32; 10 * 2];
+        kv.append_layer(0, &w, &w, 10, 10, 0).unwrap();
+        let shared = kv.freeze_pages();
+        drop(shared); // the tree evicted: the cache is the sole reader
+        let before = arena.stats();
+        let one = vec![2.0f32; 2];
+        kv.append_layer(0, &one, &one, 1, 1, 10).unwrap();
+        let st = arena.stats();
+        assert_eq!(st.cow_copies, before.cow_copies, "sole reader must not copy");
+        assert_eq!(st.bytes_in_use, before.bytes_in_use, "un-sharing is free");
+        assert_eq!(kv.n_shared_pages(0), 0, "page reclaimed as owned");
+        assert_eq!(kv.row_k(0, 0, 10)[0], 2.0);
+    }
+
+    #[test]
+    fn adopt_shared_validates_before_installing() {
+        let arena = KvArena::new();
+        let mut donor = KvCache::with_arena(arena.clone(), 1, 2, 32, 2);
+        let w = vec![0.25f32; 2 * 6 * 2];
+        donor.append_layer(0, &w, &w, 6, 6, 0).unwrap();
+        let shared = donor.freeze_pages();
+
+        // non-empty target
+        let mut busy = KvCache::with_arena(arena.clone(), 1, 2, 32, 2);
+        busy.append_layer(0, &w, &w, 6, 6, 0).unwrap();
+        assert!(busy.adopt_shared(&shared, &donor.lens, &donor.positions, &donor.mass).is_err());
+
+        // wrong shape (row width differs)
+        let mut narrow = KvCache::with_arena(arena.clone(), 1, 1, 32, 2);
+        let err = narrow
+            .adopt_shared(&shared, &donor.lens, &donor.positions, &donor.mass)
+            .unwrap_err();
+        assert!(format!("{err}").contains("row-width"), "{err}");
+        assert_eq!(narrow.lens[0], 0, "failed adopt leaves the cache untouched");
+        assert_eq!(narrow.n_pages(0), 0);
+
+        // page-count / bookkeeping mismatches
+        let mut fork = KvCache::with_arena(arena.clone(), 1, 2, 32, 2);
+        assert!(fork.adopt_shared(&shared, &[7], &donor.positions, &donor.mass).is_err());
+        assert!(fork.adopt_shared(&shared, &donor.lens, &[vec![0]], &donor.mass).is_err());
+        fork.adopt_shared(&shared, &donor.lens, &donor.positions, &donor.mass).unwrap();
+        fork.check_invariants().unwrap();
     }
 
     #[test]

@@ -19,8 +19,8 @@
 //!   one full upload, promotion;
 //! - **cold** — full gather, full upload, promotion.
 //!
-//! Residency is capacity-bounded with LRU spill-to-scratch, and everything
-//! is accounted in [`RuntimeStats`] (`bytes_h2d` / `bytes_d2h` /
+//! Residency is capacity-bounded with cost-aware spill-to-scratch, and
+//! everything is accounted in [`RuntimeStats`] (`bytes_h2d` / `bytes_d2h` /
 //! `device_resident_bytes` / `residency_hits` / `spills` / `donations`),
 //! which the serving admission gate and `op:stats` consume.
 
@@ -28,6 +28,7 @@ pub mod arena;
 pub mod device;
 pub mod kv;
 pub mod manifest;
+pub mod prefix;
 pub mod transfer;
 
 use std::cell::{Cell, RefCell};
@@ -39,11 +40,13 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 pub use arena::{
-    admission_ok, seq_footprint_bytes, ArenaStats, KvArena, Page, ARENA_OOM_MARKER, PAGE_SLOTS,
+    admission_ok, seq_footprint_bytes, ArenaStats, KvArena, Page, SharedPage, ARENA_OOM_MARKER,
+    PAGE_SLOTS,
 };
 pub use device::{Acquired, DeviceKvState, DeviceStats, DeviceTier};
 pub use kv::{GatherBytes, KvCache};
 pub use manifest::{Manifest, ModelCfg, ProgKind, ProgMeta};
+pub use prefix::{PrefixCache, PrefixSnapshot, PrefixStats};
 pub use transfer::{DenseImage, ScratchPool, TransferStats};
 
 /// Knobs for the runtime's staging tiers (serving exposes them through
@@ -105,7 +108,7 @@ pub struct RuntimeStats {
     pub residency_hits: u64,
     /// Calls that uploaded a full image (cold, post-spill, or stale stamp).
     pub residency_misses: u64,
-    /// LRU evictions from the device tier (image read back to scratch).
+    /// Spills from the device tier (image read back to scratch).
     pub spills: u64,
     /// Generate calls that donated resident buffers to the program and kept
     /// the output state on-device.

@@ -1,0 +1,577 @@
+//! Cross-request prefix cache: a radix tree over prompt-token chunks whose
+//! nodes pin frozen, refcounted arena pages ([`SharedPage`]), so a new
+//! sequence whose prompt starts with an already-served prefix adopts the
+//! donor's ladder KV state instead of re-running prefill.
+//!
+//! Why this is sound: the ladder policy (and every other registered policy)
+//! is a deterministic function of the token stream, the ingestion-window
+//! cadence, and the compiled capacity — two sequences fed the same tokens
+//! through the same `(model, policy, window, capacity)` signature hold
+//! byte-identical KV pages at every window boundary. The serving backend
+//! therefore freezes a sequence's pages after each FULL ingestion window
+//! ([`PrefixSnapshot::freeze`]) and publishes them here; adoption
+//! ([`PrefixSnapshot::apply`] via `KvCache::adopt_shared`) installs the
+//! same pages into a fork, which then continues prefilling at the matched
+//! offset with the identical chunk cadence. Snapshots are only accepted at
+//! whole-window boundaries (`tokens.len() % window == 0`): a partial-window
+//! boundary would shift the adopter's eviction cadence and diverge from its
+//! cold state.
+//!
+//! Mutation safety is the arena's copy-on-write: the donor keeps appending
+//! and compacting over its now-shared pages (each first write copies that
+//! page privately), and so does every fork — the frozen pages themselves
+//! never change, and the last reader returns them to the pool.
+//!
+//! The tree is capacity-bounded (`ServeConfig.prefix_pool_bytes`): each
+//! snapshot charges its full pinned page span and the least-recently-used
+//! LEAF snapshot is evicted first (inner snapshots share most of their
+//! pages with their descendants, so leaf-first eviction frees real bytes
+//! while keeping the shortest — most reusable — prefixes). Invariants and
+//! the interaction with the residency tier's `(id, sync_gen)` stamps are
+//! documented in PERF.md "Prefix sharing".
+
+use anyhow::Result;
+
+use super::arena::{Page, SharedPage};
+use super::kv::KvCache;
+
+/// A frozen cache state at one prefill-chunk boundary: shared page handles
+/// plus the occupancy bookkeeping a fork needs to resume from it.
+#[derive(Clone)]
+pub struct PrefixSnapshot {
+    /// Per-layer frozen pages (`lens[l].div_ceil(PAGE_SLOTS)` handles each).
+    pages: Vec<Vec<SharedPage>>,
+    lens: Vec<usize>,
+    positions: Vec<Vec<u64>>,
+    mass: Vec<Vec<f64>>,
+    /// Page bytes pinned by this snapshot. Nested snapshots share page
+    /// handles but each charges its full span — a simple over-count that
+    /// keeps the eviction bound conservative.
+    bytes: usize,
+}
+
+impl PrefixSnapshot {
+    /// Freeze `cache`'s current state (converting its pages to shared in
+    /// place; the cache keeps running over them through CoW).
+    pub fn freeze(cache: &mut KvCache) -> Self {
+        let pages = cache.freeze_pages();
+        let per = Page::bytes(cache.row_width());
+        let bytes = pages.iter().map(|t| t.len() * per).sum();
+        Self {
+            pages,
+            lens: cache.lens.clone(),
+            positions: cache.positions.clone(),
+            mass: cache.mass.clone(),
+            bytes,
+        }
+    }
+
+    /// Install into an EMPTY cache (the fork path). Validates shape first;
+    /// a failed apply leaves the cache untouched.
+    pub fn apply(&self, cache: &mut KvCache) -> Result<()> {
+        cache.adopt_shared(&self.pages, &self.lens, &self.positions, &self.mass)
+    }
+
+    /// Page bytes pinned by this snapshot (the prefix-pool charge unit).
+    pub fn bytes(&self) -> usize {
+        self.bytes
+    }
+}
+
+/// Cumulative prefix-cache counters (exported in `op:stats`).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PrefixStats {
+    /// Lookups that matched a snapshot (one adopted fork each).
+    pub hits: u64,
+    /// Lookups that matched nothing.
+    pub misses: u64,
+    /// Snapshots accepted into the tree.
+    pub inserts: u64,
+    /// Snapshots evicted by the capacity bound.
+    pub evictions: u64,
+    /// Prompt tokens whose prefill was skipped via adoption.
+    pub tokens_reused: u64,
+}
+
+struct Node {
+    /// Child edges, each labeled by one full ingestion-window token chunk.
+    children: Vec<(Vec<i32>, Node)>,
+    snap: Option<PrefixSnapshot>,
+    last_used: u64,
+}
+
+impl Node {
+    fn new() -> Self {
+        Self { children: Vec::new(), snap: None, last_used: 0 }
+    }
+}
+
+/// The capacity-bounded radix tree. One instance per serving signature —
+/// reusing KV state across a different `(model, policy, window, capacity)`
+/// would be unsound, so the owner validates [`PrefixCache::signature`]
+/// before adopting.
+pub struct PrefixCache {
+    sig: String,
+    /// Byte bound on pinned snapshots; 0 disables the cache entirely.
+    capacity_bytes: usize,
+    root: Node,
+    clock: u64,
+    resident_bytes: usize,
+    stats: PrefixStats,
+}
+
+impl PrefixCache {
+    pub fn new(sig: String, capacity_bytes: usize) -> Self {
+        Self {
+            sig,
+            capacity_bytes,
+            root: Node::new(),
+            clock: 0,
+            resident_bytes: 0,
+            stats: PrefixStats::default(),
+        }
+    }
+
+    /// The determinism domain this tree's snapshots are valid for.
+    pub fn signature(&self) -> &str {
+        &self.sig
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.capacity_bytes > 0
+    }
+
+    pub fn stats(&self) -> PrefixStats {
+        self.stats
+    }
+
+    /// Bytes currently pinned by stored snapshots (the `op:stats` gauge and
+    /// the admission gate's prefix term).
+    pub fn resident_bytes(&self) -> usize {
+        self.resident_bytes
+    }
+
+    /// Longest stored prefix of `prompt` that ends at a snapshot, walking
+    /// whole chunk edges only. Returns the matched token count and ONE
+    /// clone of that snapshot (handles to the same shared pages — the walk
+    /// itself clones nothing); refreshes LRU clocks along the matched path.
+    pub fn lookup(&mut self, prompt: &[i32]) -> Option<(usize, PrefixSnapshot)> {
+        if !self.enabled() {
+            return None;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        // pass 1 (read-only): find the deepest snapshot-bearing boundary.
+        // The root never carries a snapshot (paths are non-empty), so
+        // best_pos == 0 means no match.
+        let mut best_pos = 0usize;
+        {
+            let mut node = &self.root;
+            let mut pos = 0usize;
+            loop {
+                if node.snap.is_some() {
+                    best_pos = pos;
+                }
+                let found = node.children.iter().find(|(chunk, _)| {
+                    prompt.len() - pos >= chunk.len() && prompt[pos..pos + chunk.len()] == chunk[..]
+                });
+                match found {
+                    Some((chunk, child)) => {
+                        pos += chunk.len();
+                        node = child;
+                    }
+                    None => break,
+                }
+            }
+        }
+        if best_pos == 0 {
+            self.stats.misses += 1;
+            return None;
+        }
+        // pass 2 (mutable): stamp the adopted path's clocks and clone
+        // exactly the snapshot being handed out
+        let mut node = &mut self.root;
+        node.last_used = clock;
+        let mut pos = 0usize;
+        while pos < best_pos {
+            let i = node
+                .children
+                .iter()
+                .position(|(chunk, _)| {
+                    prompt.len() - pos >= chunk.len()
+                        && prompt[pos..pos + chunk.len()] == chunk[..]
+                })
+                .expect("path verified by the read-only pass");
+            let (chunk, child) = &mut node.children[i];
+            pos += chunk.len();
+            node = child;
+            node.last_used = clock;
+        }
+        let snap = node.snap.clone().expect("snapshot verified by the read-only pass");
+        self.stats.hits += 1;
+        self.stats.tokens_reused += best_pos as u64;
+        Some((best_pos, snap))
+    }
+
+    /// Publish a snapshot for the boundary after `tokens` (the full
+    /// ingested prefix), chunked by `window`. `make` is only called when
+    /// the tree actually wants the snapshot — an existing equivalent node
+    /// just gets its LRU clock refreshed, and partial-window boundaries
+    /// (`tokens.len() % window != 0`) are rejected outright because the
+    /// adopter's re-chunking would diverge from its cold eviction cadence.
+    /// Returns whether a new snapshot was stored.
+    pub fn insert_with(
+        &mut self,
+        tokens: &[i32],
+        window: usize,
+        make: impl FnOnce() -> PrefixSnapshot,
+    ) -> bool {
+        if !self.enabled() || window == 0 || tokens.is_empty() || tokens.len() % window != 0 {
+            return false;
+        }
+        self.clock += 1;
+        let clock = self.clock;
+        // pass 1: walk the existing path; an existing snapshot is
+        // equivalent state (determinism), so only the clocks move
+        let mut node = &mut self.root;
+        node.last_used = clock;
+        let mut missing = false;
+        for chunk in tokens.chunks(window) {
+            let found = node.children.iter().position(|(c, _)| c[..] == chunk[..]);
+            match found {
+                Some(i) => {
+                    node = &mut node.children[i].1;
+                    node.last_used = clock;
+                }
+                None => {
+                    missing = true;
+                    break;
+                }
+            }
+        }
+        if !missing && node.snap.is_some() {
+            return false;
+        }
+        let snap = make();
+        if snap.bytes() > self.capacity_bytes {
+            return false; // could never fit; create no empty path nodes
+        }
+        // pass 2: create the remaining path and install
+        let mut node = &mut self.root;
+        for chunk in tokens.chunks(window) {
+            let i = match node.children.iter().position(|(c, _)| c[..] == chunk[..]) {
+                Some(i) => i,
+                None => {
+                    node.children.push((chunk.to_vec(), Node::new()));
+                    node.children.len() - 1
+                }
+            };
+            node = &mut node.children[i].1;
+            node.last_used = clock;
+        }
+        self.resident_bytes += snap.bytes();
+        node.snap = Some(snap);
+        self.stats.inserts += 1;
+        self.evict_to_capacity();
+        true
+    }
+
+    /// Drop everything (tests and signature rotation).
+    pub fn clear(&mut self) {
+        self.root = Node::new();
+        self.resident_bytes = 0;
+    }
+
+    fn evict_to_capacity(&mut self) {
+        while self.resident_bytes > self.capacity_bytes {
+            let Some(freed) = evict_lru_leaf(&mut self.root) else {
+                break;
+            };
+            self.resident_bytes -= freed;
+            self.stats.evictions += 1;
+        }
+    }
+}
+
+/// Evict the least-recently-used LEAF snapshot, pruning emptied nodes on
+/// the way out. Returns the bytes it charged, or None when the tree holds
+/// no leaf snapshot.
+fn evict_lru_leaf(root: &mut Node) -> Option<usize> {
+    fn min_leaf_clock(node: &Node) -> Option<u64> {
+        if node.children.is_empty() {
+            return node.snap.as_ref().map(|_| node.last_used);
+        }
+        node.children.iter().filter_map(|(_, c)| min_leaf_clock(c)).min()
+    }
+
+    fn remove(node: &mut Node, target: u64) -> Option<usize> {
+        if node.children.is_empty() {
+            if node.snap.is_some() && node.last_used == target {
+                return node.snap.take().map(|s| s.bytes());
+            }
+            return None;
+        }
+        let mut hit: Option<(usize, usize)> = None; // (child index, freed)
+        for (i, (_, child)) in node.children.iter_mut().enumerate() {
+            if let Some(freed) = remove(child, target) {
+                hit = Some((i, freed));
+                break;
+            }
+        }
+        let (i, freed) = hit?;
+        let child = &node.children[i].1;
+        if child.children.is_empty() && child.snap.is_none() {
+            node.children.remove(i);
+        }
+        Some(freed)
+    }
+
+    let target = min_leaf_clock(root)?;
+    remove(root, target)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::prop_assert;
+    use crate::runtime::arena::{KvArena, PAGE_SLOTS};
+    use crate::util::prop::PropRunner;
+    use crate::util::rng::Xoshiro256;
+
+    fn mk(arena: &KvArena, l: usize, h: usize, c: usize, dh: usize) -> KvCache {
+        KvCache::with_arena(arena.clone(), l, h, c, dh)
+    }
+
+    /// Append one `n`-slot window of values derived ONLY from `seed`, so a
+    /// replica replaying the same seeds builds byte-identical state.
+    fn append_window(kv: &mut KvCache, n: usize, next_pos: &mut u64, seed: u64) {
+        let (l, h, dh) = (kv.l, kv.h, kv.dh);
+        let mut rng = Xoshiro256::new(seed);
+        for layer in 0..l {
+            let wk: Vec<f32> = (0..h * n * dh).map(|_| rng.below(1000) as f32 * 0.5).collect();
+            let wv: Vec<f32> = (0..h * n * dh).map(|_| rng.below(1000) as f32 * -0.5).collect();
+            kv.append_layer(layer, &wk, &wv, n, n, *next_pos).unwrap();
+        }
+        *next_pos += n as u64;
+    }
+
+    #[test]
+    fn radix_insert_lookup_longest_chunk_match() {
+        let arena = KvArena::new();
+        let mut donor = mk(&arena, 1, 1, 64, 2);
+        let mut pc = PrefixCache::new("sig".into(), 1 << 20);
+        let w = 4;
+        let prompt: Vec<i32> = (0..12).collect();
+        let mut pos = 0;
+        append_window(&mut donor, w, &mut pos, 1);
+        assert!(pc.insert_with(&prompt[..4], w, || PrefixSnapshot::freeze(&mut donor)));
+        append_window(&mut donor, w, &mut pos, 2);
+        assert!(pc.insert_with(&prompt[..8], w, || PrefixSnapshot::freeze(&mut donor)));
+        // partial-window boundaries are rejected (cadence divergence)
+        assert!(!pc.insert_with(&prompt[..6], w, || unreachable!()));
+        // an equivalent boundary refreshes LRU instead of re-freezing
+        assert!(!pc.insert_with(&prompt[..8], w, || unreachable!()));
+        assert_eq!(pc.stats().inserts, 2);
+
+        // longest chunk-aligned match wins; the diverging tail stops it
+        let (m, snap) = pc.lookup(&[0, 1, 2, 3, 4, 5, 6, 7, 99, 98]).unwrap();
+        assert_eq!(m, 8);
+        let mut fork = mk(&arena, 1, 1, 64, 2);
+        snap.apply(&mut fork).unwrap();
+        assert_eq!(fork.lens[0], 8);
+        let (fk, _) = fork.gather_dense();
+        let (dk, _) = donor.gather_dense();
+        assert_eq!(fk, dk, "adopted state equals the donor's at the boundary");
+
+        let (m4, _) = pc.lookup(&[0, 1, 2, 3, 9, 9, 9, 9]).unwrap();
+        assert_eq!(m4, 4);
+        assert!(pc.lookup(&[5, 5, 5, 5]).is_none());
+        assert!(pc.lookup(&[0, 1]).is_none(), "sub-window prompts cannot match");
+        let st = pc.stats();
+        assert_eq!((st.hits, st.misses), (2, 2));
+        assert_eq!(st.tokens_reused, 12);
+    }
+
+    #[test]
+    fn disabled_prefix_cache_stores_and_matches_nothing() {
+        let mut pc = PrefixCache::new("sig".into(), 0);
+        assert!(!pc.enabled());
+        assert!(!pc.insert_with(&[1, 2], 2, || unreachable!()));
+        assert!(pc.lookup(&[1, 2]).is_none());
+        let st = pc.stats();
+        assert_eq!((st.hits, st.misses, st.inserts), (0, 0, 0));
+        assert_eq!(pc.resident_bytes(), 0);
+    }
+
+    #[test]
+    fn lru_leaf_eviction_and_page_release() {
+        let arena = KvArena::new();
+        let w = PAGE_SLOTS; // one full page per window at rw 2
+        let per = Page::bytes(2);
+        let mut pc = PrefixCache::new("sig".into(), per + per / 2);
+        let chunk_a: Vec<i32> = (0..w as i32).collect();
+        let chunk_b: Vec<i32> = (100..100 + w as i32).collect();
+        let mut donor_a = mk(&arena, 1, 1, 64, 2);
+        let mut pa = 0;
+        append_window(&mut donor_a, w, &mut pa, 7);
+        assert!(pc.insert_with(&chunk_a, w, || PrefixSnapshot::freeze(&mut donor_a)));
+        assert_eq!(pc.resident_bytes(), per);
+        let mut donor_b = mk(&arena, 1, 1, 64, 2);
+        let mut pb = 0;
+        append_window(&mut donor_b, w, &mut pb, 8);
+        assert!(pc.insert_with(&chunk_b, w, || PrefixSnapshot::freeze(&mut donor_b)));
+        // over capacity: the least-recently-used leaf (A) was evicted
+        assert_eq!(pc.stats().evictions, 1);
+        assert_eq!(pc.resident_bytes(), per);
+        assert!(pc.lookup(&chunk_a).is_none());
+        assert!(pc.lookup(&chunk_b).is_some());
+        // dropping the donors leaves only the pinned snapshot's page in use
+        drop(donor_a);
+        drop(donor_b);
+        assert_eq!(arena.stats().bytes_in_use, per, "only the surviving leaf pins a page");
+        pc.clear();
+        assert_eq!(arena.stats().bytes_in_use, 0, "clearing the tree returns the pages");
+    }
+
+    #[test]
+    fn lookup_refreshes_lru_order() {
+        let arena = KvArena::new();
+        let w = PAGE_SLOTS;
+        let per = Page::bytes(2);
+        let mut pc = PrefixCache::new("sig".into(), 2 * per + per / 2);
+        let chunks: Vec<Vec<i32>> =
+            (0..3).map(|k| (k * 100..k * 100 + w as i32).collect()).collect();
+        let mut donors = Vec::new();
+        for (k, chunk) in chunks.iter().enumerate().take(2) {
+            let mut d = mk(&arena, 1, 1, 64, 2);
+            let mut p = 0;
+            append_window(&mut d, w, &mut p, k as u64);
+            assert!(pc.insert_with(chunk, w, || PrefixSnapshot::freeze(&mut d)));
+            donors.push(d);
+        }
+        // touching A makes B the LRU victim when C overflows the pool
+        assert!(pc.lookup(&chunks[0]).is_some());
+        let mut d = mk(&arena, 1, 1, 64, 2);
+        let mut p = 0;
+        append_window(&mut d, w, &mut p, 9);
+        assert!(pc.insert_with(&chunks[2], w, || PrefixSnapshot::freeze(&mut d)));
+        assert_eq!(pc.stats().evictions, 1);
+        assert!(pc.lookup(&chunks[1]).is_none(), "LRU leaf B must be the victim");
+        assert!(pc.lookup(&chunks[0]).is_some());
+        assert!(pc.lookup(&chunks[2]).is_some());
+    }
+
+    #[derive(Debug, Clone, Copy)]
+    enum Op {
+        Append { n: usize, seed: u64 },
+        Retain { seed: u64 },
+        Truncate { seed: u64 },
+    }
+
+    #[test]
+    fn forked_sequence_matches_from_scratch_property() {
+        // donor + fork share one frozen prefix over one arena; replicas in
+        // a SEPARATE arena replay the identical history from scratch. After
+        // every random append/compact/evict/CoW interleaving step, each
+        // sequence's dense image must equal its replica's (CoW isolation in
+        // both directions), and after all drops the shared arena must
+        // return to baseline (no leaked pages or refcounts).
+        PropRunner::new(40).run(
+            |rng: &mut Xoshiro256| {
+                let h = 1 + rng.below(2) as usize;
+                let dh = 1 + rng.below(3) as usize;
+                let prefix_windows = 1 + rng.below(3) as usize;
+                let prefix_seed = rng.below(u64::MAX);
+                let ops: Vec<(usize, Op)> = (0..12)
+                    .map(|_| {
+                        let which = rng.below(2) as usize;
+                        let op = match rng.below(4) {
+                            0 | 1 => Op::Append {
+                                n: 1 + rng.below(6) as usize,
+                                seed: rng.below(u64::MAX),
+                            },
+                            2 => Op::Retain { seed: rng.below(u64::MAX) },
+                            _ => Op::Truncate { seed: rng.below(u64::MAX) },
+                        };
+                        (which, op)
+                    })
+                    .collect();
+                (h, dh, prefix_windows, prefix_seed, ops)
+            },
+            |(h, dh, prefix_windows, prefix_seed, ops)| {
+                let (h, dh) = (*h, *dh);
+                let (l, c, w) = (2usize, 64usize, 8usize);
+                let arena = KvArena::new();
+                let ref_arena = KvArena::new();
+                let mut donor = mk(&arena, l, h, c, dh);
+                let mut donor_ref = mk(&ref_arena, l, h, c, dh);
+                let mut fork_ref = mk(&ref_arena, l, h, c, dh);
+                let mut pos = 0u64;
+                for i in 0..*prefix_windows {
+                    let seed = prefix_seed.wrapping_add(i as u64);
+                    let (mut p1, mut p2) = (pos, pos);
+                    append_window(&mut donor, w, &mut pos, seed);
+                    append_window(&mut donor_ref, w, &mut p1, seed);
+                    append_window(&mut fork_ref, w, &mut p2, seed);
+                }
+                let snap = PrefixSnapshot::freeze(&mut donor);
+                let mut fork = mk(&arena, l, h, c, dh);
+                snap.apply(&mut fork).map_err(|e| format!("apply: {e}"))?;
+
+                let mut subjects = [donor, fork];
+                let mut replicas = [donor_ref, fork_ref];
+                let mut next_pos = [pos, pos];
+                for &(which, op) in ops {
+                    match op {
+                        Op::Append { n, seed } => {
+                            if subjects[which].max_len() + n > c {
+                                continue;
+                            }
+                            let mut p2 = next_pos[which];
+                            append_window(&mut subjects[which], n, &mut next_pos[which], seed);
+                            append_window(&mut replicas[which], n, &mut p2, seed);
+                        }
+                        Op::Retain { seed } => {
+                            for layer in 0..l {
+                                let n = subjects[which].lens[layer];
+                                let mut krng = Xoshiro256::new(seed.wrapping_add(layer as u64));
+                                let keep: Vec<usize> =
+                                    (0..n).filter(|_| krng.below(3) > 0).collect();
+                                subjects[which].retain_slots(layer, &keep).unwrap();
+                                replicas[which].retain_slots(layer, &keep).unwrap();
+                            }
+                        }
+                        Op::Truncate { seed } => {
+                            let mut trng = Xoshiro256::new(seed);
+                            for layer in 0..l {
+                                let n = subjects[which].lens[layer];
+                                let new_len = trng.below(n as u64 + 1) as usize;
+                                subjects[which].truncate_layer(layer, new_len).unwrap();
+                                replicas[which].truncate_layer(layer, new_len).unwrap();
+                            }
+                        }
+                    }
+                    for i in 0..2 {
+                        prop_assert!(
+                            subjects[i].check_invariants().is_ok(),
+                            "invariants broken on sequence {i}"
+                        );
+                        let (sk, sv) = subjects[i].gather_dense();
+                        let (rk, rv) = replicas[i].gather_dense();
+                        prop_assert!(
+                            sk == rk && sv == rv,
+                            "sequence {i} diverged from its from-scratch replica"
+                        );
+                    }
+                }
+                drop(snap);
+                drop(subjects);
+                drop(replicas);
+                let leaked = arena.stats().bytes_in_use;
+                prop_assert!(leaked == 0, "leaked {leaked} arena bytes after all drops");
+                Ok(())
+            },
+        );
+    }
+}
+

@@ -63,6 +63,16 @@ pub struct Decoded {
 pub trait SeqBackend {
     type Seq;
     fn new_seq(&mut self) -> Result<Self::Seq>;
+    /// Cross-request prefix reuse, called once right after [`Self::new_seq`]
+    /// during admission (unless the request opted out): the backend may
+    /// install an already-computed KV prefix into the fresh sequence and
+    /// return how many leading prompt tokens it covers — the scheduler then
+    /// starts the sequence `prefilling` at that position, skipping their
+    /// device-side prefill entirely. 0 (the default) means a cold start.
+    fn adopt_prefix(&mut self, seq: &mut Self::Seq, prompt: &[i32]) -> usize {
+        let _ = (seq, prompt);
+        0
+    }
     /// Ingest a prompt chunk.
     fn prefill_chunk(&mut self, seq: &mut Self::Seq, chunk: &[i32]) -> Result<()>;
     /// Greedy-decode up to `n` tokens.
@@ -89,6 +99,9 @@ pub struct Finished {
     pub id: u64,
     pub tokens: Vec<i32>,
     pub prompt_tokens: usize,
+    /// Leading prompt tokens served from an adopted cross-request prefix
+    /// (their prefill never ran; 0 for cold starts).
+    pub prefix_tokens: usize,
     pub queue_s: f64,
     pub ttft_s: f64,
     pub total_s: f64,
@@ -104,12 +117,17 @@ struct Pending {
     max_new: usize,
     t_submit: Instant,
     cancel: CancelToken,
+    /// False when the request opted out of cross-request prefix reuse
+    /// (protocol `prefix_hint: false`).
+    allow_prefix: bool,
 }
 
 struct Active<S> {
     id: u64,
     prompt: Vec<i32>,
     pos: usize,
+    /// Prompt tokens covered by an adopted prefix at admission.
+    prefix_tokens: usize,
     generated: Vec<i32>,
     max_new: usize,
     t_submit: Instant,
@@ -128,6 +146,7 @@ impl<S> Active<S> {
             id: self.id,
             tokens: self.generated,
             prompt_tokens: self.prompt.len(),
+            prefix_tokens: self.prefix_tokens,
             queue_s: (self.t_admit - self.t_submit).as_secs_f64(),
             ttft_s: self.t_first.map(|t| (t - self.t_submit).as_secs_f64()).unwrap_or_default(),
             total_s: (now - self.t_submit).as_secs_f64(),
@@ -170,12 +189,32 @@ impl<B: SeqBackend> Scheduler<B> {
 
     /// Admission control: Err when the queue is full (backpressure).
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize, cancel: CancelToken) -> Result<u64> {
+        self.submit_opt(prompt, max_new, cancel, true)
+    }
+
+    /// [`Self::submit`] with an explicit cross-request prefix-reuse flag
+    /// (`false` = the protocol's `prefix_hint: false` opt-out: the sequence
+    /// always prefills cold).
+    pub fn submit_opt(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        cancel: CancelToken,
+        allow_prefix: bool,
+    ) -> Result<u64> {
         if self.queue.len() >= self.max_queue {
             anyhow::bail!("queue full ({} pending)", self.queue.len());
         }
         let id = self.next_id;
         self.next_id += 1;
-        self.queue.push_back(Pending { id, prompt, max_new, t_submit: Instant::now(), cancel });
+        self.queue.push_back(Pending {
+            id,
+            prompt,
+            max_new,
+            t_submit: Instant::now(),
+            cancel,
+            allow_prefix,
+        });
         Ok(id)
     }
 
@@ -220,6 +259,7 @@ impl<B: SeqBackend> Scheduler<B> {
                     id: p.id,
                     tokens: Vec::new(),
                     prompt_tokens: p.prompt.len(),
+                    prefix_tokens: 0,
                     queue_s: (now - p.t_submit).as_secs_f64(),
                     ttft_s: 0.0,
                     total_s: (now - p.t_submit).as_secs_f64(),
@@ -241,20 +281,30 @@ impl<B: SeqBackend> Scheduler<B> {
         while self.active.len() < self.max_active && self.backend.can_admit(self.active.len()) {
             let Some(p) = self.queue.pop_front() else { break };
             match self.backend.new_seq() {
-                Ok(seq) => self.active.push(Active {
-                    id: p.id,
-                    prompt: p.prompt,
-                    pos: 0,
-                    generated: Vec::new(),
-                    max_new: p.max_new,
-                    t_submit: p.t_submit,
-                    t_admit: Instant::now(),
-                    t_first: None,
-                    cancel: p.cancel,
-                    seq,
-                }),
+                Ok(mut seq) => {
+                    // cross-request prefix reuse: start prefilling past the
+                    // span the backend served from its prefix cache
+                    let matched = if p.allow_prefix {
+                        self.backend.adopt_prefix(&mut seq, &p.prompt).min(p.prompt.len())
+                    } else {
+                        0
+                    };
+                    self.active.push(Active {
+                        id: p.id,
+                        prompt: p.prompt,
+                        pos: matched,
+                        prefix_tokens: matched,
+                        generated: Vec::new(),
+                        max_new: p.max_new,
+                        t_submit: p.t_submit,
+                        t_admit: Instant::now(),
+                        t_first: None,
+                        cancel: p.cancel,
+                        seq,
+                    })
+                }
                 Err(e) => {
-                    done.push(finished_err(p.id, p.prompt.len(), p.t_submit, None, None, e));
+                    done.push(finished_err(p.id, p.prompt.len(), 0, p.t_submit, None, None, e));
                 }
             }
         }
@@ -297,6 +347,7 @@ impl<B: SeqBackend> Scheduler<B> {
                         id: a.id,
                         tokens: a.generated,
                         prompt_tokens: a.prompt.len(),
+                        prefix_tokens: a.prefix_tokens,
                         queue_s: (a.t_admit - a.t_submit).as_secs_f64(),
                         ttft_s: a
                             .t_first
@@ -313,6 +364,7 @@ impl<B: SeqBackend> Scheduler<B> {
                     done.push(finished_err(
                         a.id,
                         a.prompt.len(),
+                        a.prefix_tokens,
                         a.t_submit,
                         Some(a.t_admit),
                         a.t_first,
@@ -330,6 +382,7 @@ impl<B: SeqBackend> Scheduler<B> {
 fn finished_err(
     id: u64,
     prompt_tokens: usize,
+    prefix_tokens: usize,
     t_submit: Instant,
     t_admit: Option<Instant>,
     t_first: Option<Instant>,
@@ -340,6 +393,7 @@ fn finished_err(
         id,
         tokens: Vec::new(),
         prompt_tokens,
+        prefix_tokens,
         queue_s: (t_admit.unwrap_or(now) - t_submit).as_secs_f64(),
         ttft_s: t_first.map(|t| (t - t_submit).as_secs_f64()).unwrap_or_default(),
         total_s: (now - t_submit).as_secs_f64(),
@@ -535,6 +589,80 @@ mod tests {
             done.iter().filter(|f| f.error.is_none()).map(|f| f.id).collect();
         ok_ids.sort_unstable();
         assert_eq!(ok_ids, vec![a, c]);
+    }
+
+    /// Backend with a canned prefix-match length (cross-request reuse mock).
+    struct PrefixMock {
+        inner: Mock,
+        matched: usize,
+        adopt_calls: usize,
+    }
+
+    impl SeqBackend for PrefixMock {
+        type Seq = MockSeq;
+        fn new_seq(&mut self) -> Result<MockSeq> {
+            self.inner.new_seq()
+        }
+        fn adopt_prefix(&mut self, _seq: &mut MockSeq, prompt: &[i32]) -> usize {
+            self.adopt_calls += 1;
+            self.matched.min(prompt.len())
+        }
+        fn prefill_chunk(&mut self, seq: &mut MockSeq, chunk: &[i32]) -> Result<()> {
+            self.inner.prefill_chunk(seq, chunk)
+        }
+        fn decode(&mut self, seq: &mut MockSeq, n: usize) -> Result<Decoded> {
+            self.inner.decode(seq, n)
+        }
+    }
+
+    fn prefix_sched(matched: usize) -> Scheduler<PrefixMock> {
+        Scheduler::new(PrefixMock { inner: mock(), matched, adopt_calls: 0 }, 8, 4, 2, 4)
+    }
+
+    #[test]
+    fn adopted_prefix_skips_matched_prefill() {
+        // 20-token prompt, 16 matched at admission: only the 4-token tail
+        // is ever prefilled, and the finish record reports the reuse
+        let mut s = prefix_sched(16);
+        s.submit(vec![1; 20], 4, CancelToken::new()).unwrap();
+        let mut done = Vec::new();
+        let mut rounds = 0;
+        while s.has_work() && rounds < 20 {
+            done.extend(s.step());
+            rounds += 1;
+        }
+        assert_eq!(done.len(), 1);
+        assert!(done[0].error.is_none());
+        assert_eq!(done[0].prefix_tokens, 16);
+        assert_eq!(done[0].prompt_tokens, 20);
+        assert_eq!(s.backend().inner.prefilled, 4, "matched span must never prefill");
+        assert_eq!(s.backend().adopt_calls, 1);
+        // one prefill round (the 4-token tail) + one decode round
+        assert_eq!(rounds, 2);
+    }
+
+    #[test]
+    fn fully_matched_prompt_goes_straight_to_decode() {
+        let mut s = prefix_sched(64);
+        s.submit(vec![1; 8], 4, CancelToken::new()).unwrap();
+        let done = s.step(); // admit + first (and only) decode quantum
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].prefix_tokens, 8, "match is clamped to the prompt length");
+        assert_eq!(done[0].tokens.len(), 4);
+        assert_eq!(s.backend().inner.prefilled, 0);
+    }
+
+    #[test]
+    fn prefix_opt_out_prefills_cold() {
+        let mut s = prefix_sched(64);
+        s.submit_opt(vec![1; 8], 2, CancelToken::new(), false).unwrap();
+        let mut done = Vec::new();
+        while s.has_work() {
+            done.extend(s.step());
+        }
+        assert_eq!(done[0].prefix_tokens, 0);
+        assert_eq!(s.backend().adopt_calls, 0, "opt-out must not consult the prefix cache");
+        assert_eq!(s.backend().inner.prefilled, 8);
     }
 
     #[test]

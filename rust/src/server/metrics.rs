@@ -6,7 +6,7 @@
 
 use std::time::Instant;
 
-use crate::runtime::RuntimeStats;
+use crate::runtime::{ArenaStats, PrefixStats, RuntimeStats};
 use crate::util::json::Json;
 use crate::util::stats::{Meter, Samples};
 
@@ -147,6 +147,36 @@ pub fn export_runtime(j: &mut Json, rs: &RuntimeStats) {
     j.set("reconciled_bytes", (rs.reconciled_bytes as i64).into());
 }
 
+/// Attach the shared paged-KV arena's occupancy gauges and pool-churn
+/// counters, so bench records and dashboards can correlate prefix reuse
+/// with real page traffic: `kv_arena_pool_hits` / `kv_arena_pages_allocated`
+/// show recycling efficiency, and `cow_copies` counts shared pages that had
+/// to be materialized privately before a mutation (the cost side of
+/// cross-request sharing).
+pub fn export_arena(j: &mut Json, ast: &ArenaStats) {
+    j.set("kv_arena_bytes_in_use", ast.bytes_in_use.into());
+    j.set("kv_arena_bytes_pooled", ast.bytes_pooled.into());
+    j.set("kv_arena_high_water", ast.high_water.into());
+    j.set("kv_arena_pages_pooled", ast.pages_pooled.into());
+    j.set("kv_arena_pages_allocated", (ast.pages_allocated as i64).into());
+    j.set("kv_arena_pages_freed", (ast.pages_freed as i64).into());
+    j.set("kv_arena_pool_hits", (ast.pool_hits as i64).into());
+    j.set("cow_copies", (ast.cow_copies as i64).into());
+}
+
+/// Attach the cross-request prefix cache's counters: `prefix_hits` /
+/// `prefix_tokens_reused` quantify skipped prefill work (the TTFT win),
+/// `prefix_resident_bytes` is the page span pinned by the tree (bounded by
+/// `ServeConfig.prefix_pool_bytes` and counted by the admission gate).
+pub fn export_prefix(j: &mut Json, ps: &PrefixStats, resident_bytes: usize) {
+    j.set("prefix_hits", (ps.hits as i64).into());
+    j.set("prefix_misses", (ps.misses as i64).into());
+    j.set("prefix_inserts", (ps.inserts as i64).into());
+    j.set("prefix_evictions", (ps.evictions as i64).into());
+    j.set("prefix_tokens_reused", (ps.tokens_reused as i64).into());
+    j.set("prefix_resident_bytes", resident_bytes.into());
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -157,6 +187,7 @@ mod tests {
             id,
             tokens: vec![1, 2, 3, 4],
             prompt_tokens: 10,
+            prefix_tokens: 0,
             queue_s: 0.001,
             ttft_s: 0.01,
             total_s: 0.05,
@@ -174,6 +205,7 @@ mod tests {
             id: 2,
             tokens: vec![],
             prompt_tokens: 5,
+            prefix_tokens: 0,
             queue_s: 0.002,
             ttft_s: 0.0,
             total_s: 0.01,
@@ -257,5 +289,47 @@ mod tests {
         assert_eq!(j.usize_of("donations"), Some(7));
         assert_eq!(j.usize_of("reconciled_bytes"), Some(320));
         assert!(j.f64_of("gather_s").unwrap() > 0.2);
+    }
+
+    #[test]
+    fn exports_arena_pool_counters() {
+        let mut j = Json::obj();
+        let ast = ArenaStats {
+            bytes_in_use: 1024,
+            bytes_pooled: 512,
+            high_water: 2048,
+            budget: None,
+            pages_pooled: 2,
+            pages_allocated: 9,
+            pool_hits: 4,
+            pages_freed: 6,
+            cow_copies: 3,
+        };
+        export_arena(&mut j, &ast);
+        assert_eq!(j.usize_of("kv_arena_bytes_in_use"), Some(1024));
+        assert_eq!(j.usize_of("kv_arena_pages_pooled"), Some(2));
+        assert_eq!(j.usize_of("kv_arena_pages_allocated"), Some(9));
+        assert_eq!(j.usize_of("kv_arena_pool_hits"), Some(4));
+        assert_eq!(j.usize_of("kv_arena_pages_freed"), Some(6));
+        assert_eq!(j.usize_of("cow_copies"), Some(3));
+    }
+
+    #[test]
+    fn exports_prefix_counters() {
+        let mut j = Json::obj();
+        let ps = PrefixStats {
+            hits: 7,
+            misses: 2,
+            inserts: 5,
+            evictions: 1,
+            tokens_reused: 3584,
+        };
+        export_prefix(&mut j, &ps, 1 << 16);
+        assert_eq!(j.usize_of("prefix_hits"), Some(7));
+        assert_eq!(j.usize_of("prefix_misses"), Some(2));
+        assert_eq!(j.usize_of("prefix_inserts"), Some(5));
+        assert_eq!(j.usize_of("prefix_evictions"), Some(1));
+        assert_eq!(j.usize_of("prefix_tokens_reused"), Some(3584));
+        assert_eq!(j.usize_of("prefix_resident_bytes"), Some(1 << 16));
     }
 }

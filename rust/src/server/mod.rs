@@ -23,8 +23,10 @@ pub mod protocol;
 pub mod reactor;
 pub mod text;
 
+use std::cell::RefCell;
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
+use std::rc::Rc;
 use std::sync::mpsc::{self, Receiver, Sender};
 
 use anyhow::Result;
@@ -35,15 +37,48 @@ pub use reactor::{Reactor, Work};
 use crate::cache::make_policy;
 use crate::config::ServeConfig;
 use crate::engine::{Engine, EngineOpts};
-use crate::runtime::{admission_ok, seq_footprint_bytes, KvArena, Runtime, RuntimeOpts};
+use crate::runtime::{
+    admission_ok, seq_footprint_bytes, KvArena, PrefixCache, PrefixSnapshot, Runtime, RuntimeOpts,
+};
 
-/// Real backend: each sequence is an [`Engine`] with its own page tables in
-/// the shared paged-KV arena and a fresh policy instance; the `Runtime`
-/// (weights + compiled programs) and the arena are shared.
+/// The determinism domain of a frozen prefix: the ladder (or any registered)
+/// policy produces byte-identical KV state at every ingestion-window
+/// boundary only for the same model, policy spec, window, and compiled
+/// capacity — reuse across any difference is unsound, so the prefix cache
+/// carries this signature and the backend validates it before adopting.
+pub fn prefix_signature(cfg: &ServeConfig) -> String {
+    format!("{}|{}|w{}|c{}", cfg.model, cfg.policy, cfg.window, cfg.capacity)
+}
+
+/// One served sequence: the engine plus the prompt tokens it has ingested
+/// so far — the prefix tree's path key, extended at adoption and after
+/// every prefill chunk.
+pub struct ServedSeq<'rt> {
+    engine: Engine<'rt>,
+    ingested: Vec<i32>,
+}
+
+/// Real backend: each sequence is an [`Engine`] (wrapped in [`ServedSeq`])
+/// with its own page tables in the shared paged-KV arena and a fresh policy
+/// instance; the `Runtime` (weights + compiled programs), the arena, and
+/// the cross-request [`PrefixCache`] are shared. The backend publishes
+/// every sequence's KV state at full-window prefill boundaries and adopts
+/// matching prefixes at admission, so a fleet of prompts sharing one system
+/// prompt prefills the shared span once.
 pub struct EngineBackend<'rt> {
     pub rt: &'rt Runtime,
     pub cfg: ServeConfig,
     arena: KvArena,
+    /// Cross-request prefix cache, shared with the executor's stats hook
+    /// ([`Self::prefix_handle`]).
+    prefix: Rc<RefCell<PrefixCache>>,
+    /// This backend's determinism signature ([`prefix_signature`]).
+    prefix_sig: String,
+    /// The prefix pool's EFFECTIVE byte capacity (`cfg.prefix_pool_bytes`
+    /// clamped to the budget headroom left after one sequence's worst
+    /// case). Admission reserves this cap — not the current residency —
+    /// because the tree fills AFTER sequences were admitted against it.
+    prefix_cap: usize,
     /// Worst-case steady-state arena bytes for one sequence: policy budget
     /// plus one ingest window, clamped to capacity, in whole pages.
     est_seq_bytes: usize,
@@ -70,6 +105,7 @@ impl<'rt> EngineBackend<'rt> {
             .device_pool_bytes
             .saturating_add(cfg.scratch_pool_entries.max(1).saturating_mul(image_bytes));
         let pool_budget = (cfg.kv_pool_bytes > 0).then_some(cfg.kv_pool_bytes);
+        let mut prefix_cap = cfg.prefix_pool_bytes;
         if let Some(limit) = pool_budget {
             // kv_pool_bytes is the TOTAL serving budget: arena pages plus
             // staging. One sequence needs its pages and one image.
@@ -81,26 +117,44 @@ impl<'rt> EngineBackend<'rt> {
                      image); no request could ever be admitted"
                 );
             }
+            // prefix reuse is an optimization, never a startup blocker: a
+            // budget that served pre-prefix configs must keep booting, so
+            // the pool is clamped to the headroom left after one
+            // sequence's worst case (possibly to 0 = disabled). Admission
+            // reserves this cap, so a tree filling up AFTER sequences were
+            // admitted can never push a live sequence into kv-arena-OOM.
+            prefix_cap = prefix_cap.min(limit - min_budget);
         }
+        let prefix_sig = prefix_signature(&cfg);
+        let prefix = Rc::new(RefCell::new(PrefixCache::new(prefix_sig.clone(), prefix_cap)));
         Ok(Self {
             rt,
             cfg,
             arena: KvArena::global().clone(),
+            prefix,
+            prefix_sig,
+            prefix_cap,
             est_seq_bytes,
             image_bytes,
             staging_cap,
             pool_budget,
         })
     }
+
+    /// Handle to the backend's prefix cache (the executor's stats hook
+    /// reads counters through it).
+    pub fn prefix_handle(&self) -> Rc<RefCell<PrefixCache>> {
+        self.prefix.clone()
+    }
 }
 
 impl<'rt> SeqBackend for EngineBackend<'rt> {
-    type Seq = Engine<'rt>;
+    type Seq = ServedSeq<'rt>;
 
-    fn new_seq(&mut self) -> Result<Engine<'rt>> {
+    fn new_seq(&mut self) -> Result<ServedSeq<'rt>> {
         let n_layers = self.rt.model(&self.cfg.model)?.cfg.n_layers;
         let policy = make_policy(&self.cfg.policy, n_layers)?;
-        Engine::new(
+        let engine = Engine::new(
             self.rt,
             EngineOpts {
                 model: self.cfg.model.clone(),
@@ -109,15 +163,51 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
                 memory_budget_bytes: None,
             },
             policy,
-        )
+        )?;
+        Ok(ServedSeq { engine, ingested: Vec::new() })
     }
 
-    fn prefill_chunk(&mut self, seq: &mut Engine<'rt>, chunk: &[i32]) -> Result<()> {
-        seq.prefill(chunk)
+    /// Cross-request prefix adoption (called at admission): look the prompt
+    /// up in the radix tree and, on a hit, install the frozen KV state into
+    /// the fresh engine — the scheduler then skips prefill for the matched
+    /// span. Signature mismatch or a failed install degrade to a cold start.
+    fn adopt_prefix(&mut self, seq: &mut ServedSeq<'rt>, prompt: &[i32]) -> usize {
+        let mut prefix = self.prefix.borrow_mut();
+        if !prefix.enabled() || prefix.signature() != self.prefix_sig {
+            return 0;
+        }
+        let Some((matched, snap)) = prefix.lookup(prompt) else {
+            return 0;
+        };
+        drop(prefix);
+        match seq.engine.adopt_prefix(&snap, matched as u64, prompt[matched - 1]) {
+            Ok(()) => {
+                seq.ingested.extend_from_slice(&prompt[..matched]);
+                matched
+            }
+            Err(_) => 0,
+        }
     }
 
-    fn decode(&mut self, seq: &mut Engine<'rt>, n: usize) -> Result<Decoded> {
-        let (tokens, t_first) = seq.generate_timed(n)?;
+    fn prefill_chunk(&mut self, seq: &mut ServedSeq<'rt>, chunk: &[i32]) -> Result<()> {
+        seq.engine.prefill(chunk)?;
+        seq.ingested.extend_from_slice(chunk);
+        // publish the post-chunk state at FULL-window boundaries only: an
+        // adopter re-chunks from the same offsets, so its eviction cadence
+        // (and therefore its ladder state) is identical to a cold prefill.
+        // insert_with freezes the engine's pages only if the tree actually
+        // wants this boundary.
+        let w = self.cfg.window;
+        if !seq.ingested.is_empty() && seq.ingested.len() % w == 0 {
+            let engine = &mut seq.engine;
+            let mut prefix = self.prefix.borrow_mut();
+            prefix.insert_with(&seq.ingested, w, || PrefixSnapshot::freeze(&mut engine.cache));
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, seq: &mut ServedSeq<'rt>, n: usize) -> Result<Decoded> {
+        let (tokens, t_first) = seq.engine.generate_timed(n)?;
         Ok(Decoded { tokens, t_first })
     }
 
@@ -142,7 +232,21 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
                 let projected =
                     (active + 1).saturating_mul(self.image_bytes).min(self.staging_cap);
                 let staging = self.rt.staging_bytes().max(projected);
-                admission_ok(&self.arena.stats(), active, self.est_seq_bytes, limit, staging)
+                // reserve the prefix pool's CAPACITY, not its current
+                // residency: snapshots are published while the admitted
+                // sequences prefill, so the tree grows (pinning pages the
+                // donors' compactions would otherwise free) after this
+                // check ran — reserving the cap keeps that growth from
+                // OOMing an in-flight sequence
+                let prefix_bytes = self.prefix_cap.max(self.prefix.borrow().resident_bytes());
+                admission_ok(
+                    &self.arena.stats(),
+                    active,
+                    self.est_seq_bytes,
+                    limit,
+                    staging,
+                    prefix_bytes,
+                )
             }
         }
     }
@@ -240,14 +344,14 @@ fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::js
     // the same process when the new config says unlimited (0)
     KvArena::global().set_budget((cfg.kv_pool_bytes > 0).then_some(cfg.kv_pool_bytes));
     let backend = EngineBackend::new(&rt, cfg.clone())?;
+    let prefix = backend.prefix_handle();
     let sched =
         Scheduler::new(backend, cfg.window, cfg.decode_quantum, cfg.max_active, cfg.max_queue);
     let reactor = Reactor::new(sched, cfg.max_new_tokens);
     Ok(reactor.run(&rx, |j| {
         metrics::export_runtime(j, &rt.stats());
-        let ast = KvArena::global().stats();
-        j.set("kv_arena_bytes_in_use", ast.bytes_in_use.into());
-        j.set("kv_arena_bytes_pooled", ast.bytes_pooled.into());
-        j.set("kv_arena_high_water", ast.high_water.into());
+        metrics::export_arena(j, &KvArena::global().stats());
+        let p = prefix.borrow();
+        metrics::export_prefix(j, &p.stats(), p.resident_bytes());
     }))
 }

@@ -1,16 +1,31 @@
 //! JSON-lines wire protocol (one JSON object per line, request/response).
 //!
 //! Requests:
-//!   {"op":"generate","id":1,"prompt":"<mark> w4 w5 <sep> ...","max_new_tokens":8}
-//!   {"op":"generate","id":2,"prompt_tokens":[0,5,20,...],"max_new_tokens":4}
-//!   {"op":"stats","id":3}
-//!   {"op":"shutdown","id":4}
+//!
+//! ```text
+//! {"op":"generate","id":1,"prompt":"<mark> w4 w5 <sep> ...","max_new_tokens":8}
+//! {"op":"generate","id":2,"prompt_tokens":[0,5,20,...],"max_new_tokens":4}
+//! {"op":"generate","id":5,"prompt_tokens":[...],"prefix_hint":false}
+//! {"op":"stats","id":3}
+//! {"op":"shutdown","id":4}
+//! ```
+//!
+//! `prefix_hint` (default true) lets the server reuse KV state computed for
+//! an earlier request with the same prompt prefix (the cross-request prefix
+//! cache); `false` opts this request out — it always prefills cold, which
+//! benchmarking and privacy-sensitive clients want.
 //!
 //! Responses:
-//!   {"id":1,"ok":true,"text":"w84 w85 ...","tokens":[...],"ttft_ms":..,
-//!    "total_ms":..,"prompt_tokens":N,"gen_tokens":M}
-//!   {"id":3,"ok":true,"stats":{...}}
-//!   {"id":2,"ok":false,"error":"..."}
+//!
+//! ```text
+//! {"id":1,"ok":true,"text":"w84 w85 ...","tokens":[...],"ttft_ms":..,
+//!  "total_ms":..,"prompt_tokens":N,"prefix_tokens":P,"gen_tokens":M}
+//! {"id":3,"ok":true,"stats":{...}}
+//! {"id":2,"ok":false,"error":"..."}
+//! ```
+//!
+//! `prefix_tokens` reports how many leading prompt tokens were served from
+//! the prefix cache (0 = cold prefill).
 //!
 //! Connection semantics: closing (or half-closing) the connection's write
 //! side ABANDONS all of that connection's in-flight requests — the server
@@ -29,7 +44,7 @@ pub const SHUTTING_DOWN: &str = "shutting-down";
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Op {
-    Generate { prompt: Vec<i32>, max_new_tokens: usize },
+    Generate { prompt: Vec<i32>, max_new_tokens: usize, prefix_hint: bool },
     Stats,
     Shutdown,
 }
@@ -55,7 +70,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
             if prompt.is_empty() {
                 bail!("empty prompt");
             }
-            Op::Generate { prompt, max_new_tokens: j.usize_of("max_new_tokens").unwrap_or(16) }
+            Op::Generate {
+                prompt,
+                max_new_tokens: j.usize_of("max_new_tokens").unwrap_or(16),
+                prefix_hint: j.bool_of("prefix_hint").unwrap_or(true),
+            }
         }
         Some("stats") => Op::Stats,
         Some("shutdown") => Op::Shutdown,
@@ -68,6 +87,7 @@ pub fn ok_generate(
     id: i64,
     tokens: &[i32],
     prompt_tokens: usize,
+    prefix_tokens: usize,
     ttft_ms: f64,
     total_ms: f64,
 ) -> String {
@@ -77,6 +97,7 @@ pub fn ok_generate(
         ("text", super::text::detokenize(tokens).into()),
         ("tokens", tokens.iter().map(|&t| t as i64).collect::<Vec<i64>>().into()),
         ("prompt_tokens", prompt_tokens.into()),
+        ("prefix_tokens", prefix_tokens.into()),
         ("gen_tokens", tokens.len().into()),
         ("ttft_ms", ttft_ms.into()),
         ("total_ms", total_ms.into()),
@@ -103,9 +124,10 @@ mod tests {
             .unwrap();
         assert_eq!(r.id, 7);
         match r.op {
-            Op::Generate { prompt, max_new_tokens } => {
+            Op::Generate { prompt, max_new_tokens, prefix_hint } => {
                 assert_eq!(prompt, vec![0, 17, 18]);
                 assert_eq!(max_new_tokens, 4);
+                assert!(prefix_hint, "prefix reuse defaults to on");
             }
             _ => panic!(),
         }
@@ -116,10 +138,22 @@ mod tests {
         let r =
             parse_request(r#"{"op":"generate","id":1,"prompt_tokens":[0,5,20,21,2]}"#).unwrap();
         match r.op {
-            Op::Generate { prompt, max_new_tokens } => {
+            Op::Generate { prompt, max_new_tokens, .. } => {
                 assert_eq!(prompt.len(), 5);
                 assert_eq!(max_new_tokens, 16);
             }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_generate_prefix_opt_out() {
+        let r = parse_request(
+            r#"{"op":"generate","id":9,"prompt_tokens":[1,2,3],"prefix_hint":false}"#,
+        )
+        .unwrap();
+        match r.op {
+            Op::Generate { prefix_hint, .. } => assert!(!prefix_hint),
             _ => panic!(),
         }
     }
@@ -134,10 +168,11 @@ mod tests {
 
     #[test]
     fn responses_are_valid_json() {
-        let s = ok_generate(3, &[20, 21], 10, 1.5, 8.25);
+        let s = ok_generate(3, &[20, 21], 10, 4, 1.5, 8.25);
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.bool_of("ok"), Some(true));
         assert_eq!(j.usize_of("gen_tokens"), Some(2));
+        assert_eq!(j.usize_of("prefix_tokens"), Some(4));
         let e = err_response(4, "boom \"quoted\"");
         assert_eq!(Json::parse(&e).unwrap().str_of("error"), Some("boom \"quoted\""));
     }

@@ -126,7 +126,7 @@ impl<B: SeqBackend> Reactor<B> {
             }
         };
         match req.op {
-            Op::Generate { prompt, max_new_tokens } => {
+            Op::Generate { prompt, max_new_tokens, prefix_hint } => {
                 self.metrics.submitted += 1;
                 if self.shutdown {
                     self.metrics.rejected_shutdown += 1;
@@ -134,7 +134,7 @@ impl<B: SeqBackend> Reactor<B> {
                     return;
                 }
                 let max_new = max_new_tokens.min(self.max_new_tokens);
-                match self.sched.submit(prompt, max_new, cancel) {
+                match self.sched.submit_opt(prompt, max_new, cancel, prefix_hint) {
                     Ok(sid) => {
                         self.waiting.insert(sid, (req.id, reply));
                     }
@@ -167,9 +167,14 @@ impl<B: SeqBackend> Reactor<B> {
         }
         let resp = match &f.error {
             Some(e) => err_response(req_id, e),
-            None => {
-                ok_generate(req_id, &f.tokens, f.prompt_tokens, f.ttft_s * 1e3, f.total_s * 1e3)
-            }
+            None => ok_generate(
+                req_id,
+                &f.tokens,
+                f.prompt_tokens,
+                f.prefix_tokens,
+                f.ttft_s * 1e3,
+                f.total_s * 1e3,
+            ),
         };
         let _ = reply.send(resp);
     }

@@ -21,7 +21,7 @@ impl PropRunner {
     }
 
     /// Run `prop` against `cases` generated inputs. On failure, tries to
-    /// shrink (for Vec<i64>-like inputs the caller can shrink internally);
+    /// shrink (for `Vec<i64>`-like inputs the caller can shrink internally);
     /// panics with the failing seed + debug repr.
     pub fn run<T: std::fmt::Debug, G, P>(&self, mut gen: G, mut prop: P)
     where
