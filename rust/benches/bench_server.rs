@@ -7,20 +7,25 @@
 //! gathers only the appended rows with zero dense-buffer allocations, and
 //! writes machine-readable `BENCH_decode.json`), and the burst-intake
 //! serving scenario (one-round burst admission, post-shutdown rejection,
-//! mid-decode cancellation page release; writes `BENCH_serving.json`) —
-//! see PERF.md.
+//! mid-decode cancellation page release, plus the split-phase overlap
+//! record — decoder inter-token latency while a long multi-window prefill
+//! is in flight, sync vs submit/reap; writes `BENCH_serving.json`) — see
+//! PERF.md.
 //!
 //! Set `LACACHE_BENCH_SMOKE=1` (exactly) for the short CI mode; `BENCH_JSON`
 //! / `BENCH_SERVING_JSON` override the JSON output paths.
 
 use std::sync::mpsc;
+use std::time::Duration;
 
 use lacache::cache::{make_policy, CachePolicy};
 use lacache::runtime::{
-    admission_ok, seq_footprint_bytes, Acquired, DeviceTier, KvArena, KvCache, PrefixCache,
-    PrefixSnapshot, ScratchPool,
+    admission_ok, seq_footprint_bytes, Acquired, CallExecutor, DeviceTier, KvArena, KvCache,
+    PrefixCache, PrefixSnapshot, ScratchPool,
 };
-use lacache::server::batcher::{CancelToken, Decoded, Scheduler, SeqBackend};
+use lacache::server::batcher::{
+    CallDone, CallOut, CancelToken, Decoded, Scheduler, SeqBackend, Submitted, Ticket,
+};
 use lacache::server::protocol::{ok_generate, parse_request, SHUTTING_DOWN};
 use lacache::server::{Reactor, Work};
 use lacache::util::bench::Bench;
@@ -65,7 +70,7 @@ fn main() -> anyhow::Result<()> {
     });
     let toks: Vec<i32> = (16..80).collect();
     b.run_throughput("protocol/ok_generate(64 tokens)", 1, "resp", || {
-        std::hint::black_box(ok_generate(1, &toks, 300, 0, 1.0, 2.0));
+        std::hint::black_box(ok_generate(1, &toks, 300, 0, 1.0, 0.5, 2.0));
     });
 
     // json: manifest-scale parse
@@ -360,7 +365,9 @@ fn steady_state_decode_scenario(smoke: bool) -> anyhow::Result<()> {
 /// round, shutdown must admit zero further sequences, and a mid-decode
 /// client disconnect must return the sequence's arena pages before the next
 /// round. Emits machine-readable `BENCH_serving.json` (path override:
-/// `BENCH_SERVING_JSON`) with intake-latency and TTFT-at-first-token stats.
+/// `BENCH_SERVING_JSON`) with intake-latency and TTFT-at-first-token stats,
+/// plus the split-phase overlap record nested under `"overlap"` (see
+/// [`overlap_scenario`]).
 fn burst_intake_scenario(smoke: bool) -> anyhow::Result<()> {
     let burst_n = 32usize;
     let iters = if smoke { 3usize } else { 20 };
@@ -472,6 +479,9 @@ fn burst_intake_scenario(smoke: bool) -> anyhow::Result<()> {
         ttft_ms.p95(),
     );
 
+    // (d) split-phase overlap: decoder ITL while a long prefill is in flight
+    let overlap = overlap_scenario(smoke)?;
+
     let out = Json::from_pairs(vec![
         ("bench", "burst_intake".into()),
         ("smoke", smoke.into()),
@@ -485,11 +495,199 @@ fn burst_intake_scenario(smoke: bool) -> anyhow::Result<()> {
         ("ttft_ms_max", ttft_ms.max().into()),
         ("rejected_after_shutdown", (rejected_shutdown as i64).into()),
         ("cancel_released_bytes", (mid_bytes as i64).into()),
+        ("overlap", overlap),
     ]);
     let path = std::env::var("BENCH_SERVING_JSON").unwrap_or_else(|_| "BENCH_serving.json".into());
     std::fs::write(&path, out.to_string() + "\n")?;
     println!("wrote {path}");
     Ok(())
+}
+
+/// In-flight call output for the simulated split-phase backend below.
+type SimOut = (SimSeq, anyhow::Result<CallOut>);
+
+struct SimSeq {
+    emitted: usize,
+}
+
+/// Device-free split-phase backend whose calls cost pure wall-clock:
+/// prefill burns a fixed latency per prompt token and decode a fixed
+/// latency per quantum. With `ex` set, calls run on the scoped worker pool
+/// (split-phase submit/reap); with `ex == None` the trait's inline default
+/// path runs — the synchronous contrast the overlap scenario measures
+/// against.
+struct SimBackend<'env> {
+    ex: Option<CallExecutor<'env, SimOut>>,
+    prefill_us_per_token: u64,
+    decode_sleep: Duration,
+}
+
+fn sim_decode(seq: &mut SimSeq, n: usize, sleep: Duration) -> anyhow::Result<Decoded> {
+    std::thread::sleep(sleep);
+    let tokens: Vec<i32> = (0..n).map(|i| 100 + (seq.emitted + i) as i32).collect();
+    seq.emitted += n;
+    Ok(Decoded { tokens, t_first: Some(std::time::Instant::now()) })
+}
+
+impl SeqBackend for SimBackend<'_> {
+    type Seq = SimSeq;
+    fn new_seq(&mut self) -> anyhow::Result<SimSeq> {
+        Ok(SimSeq { emitted: 0 })
+    }
+    fn prefill_chunk(&mut self, _s: &mut SimSeq, c: &[i32]) -> anyhow::Result<()> {
+        std::thread::sleep(Duration::from_micros(self.prefill_us_per_token * c.len() as u64));
+        Ok(())
+    }
+    fn decode(&mut self, s: &mut SimSeq, n: usize) -> anyhow::Result<Decoded> {
+        sim_decode(s, n, self.decode_sleep)
+    }
+    fn inflight_capacity(&self) -> usize {
+        self.ex.as_ref().map_or(1, |ex| ex.workers())
+    }
+    fn submit_prefill(
+        &mut self,
+        ticket: Ticket,
+        mut seq: SimSeq,
+        chunk: &[i32],
+    ) -> Submitted<SimSeq> {
+        if let Some(ex) = self.ex.as_mut() {
+            let us = self.prefill_us_per_token * chunk.len() as u64;
+            ex.submit(ticket, move || {
+                std::thread::sleep(Duration::from_micros(us));
+                (seq, Ok(CallOut::Prefill))
+            });
+            return Submitted::InFlight;
+        }
+        let result = self.prefill_chunk(&mut seq, chunk).map(|()| CallOut::Prefill);
+        Submitted::Done(CallDone { ticket, seq, result })
+    }
+    fn submit_decode(&mut self, ticket: Ticket, mut seq: SimSeq, n: usize) -> Submitted<SimSeq> {
+        if let Some(ex) = self.ex.as_mut() {
+            let sleep = self.decode_sleep;
+            ex.submit(ticket, move || {
+                let result = sim_decode(&mut seq, n, sleep).map(CallOut::Decode);
+                (seq, result)
+            });
+            return Submitted::InFlight;
+        }
+        let result = self.decode(&mut seq, n).map(CallOut::Decode);
+        Submitted::Done(CallDone { ticket, seq, result })
+    }
+    fn reap(&mut self, wait: Option<Duration>) -> Vec<CallDone<SimSeq>> {
+        match self.ex.as_mut() {
+            Some(ex) => ex
+                .reap(wait)
+                .into_iter()
+                .map(|c| CallDone { ticket: c.ticket, seq: c.out.0, result: c.out.1 })
+                .collect(),
+            None => Vec::new(),
+        }
+    }
+}
+
+/// Drive one overlap case to completion: `decoders` short-prompt sequences
+/// decoding `decode_quanta` quanta each, plus (when `prefill_tokens > 0`)
+/// one long prefill admitted alongside them. Returns the decoders'
+/// inter-token latency samples — the long prefill generates a single
+/// token, which produces no ITL sample, so it never pollutes the fleet's
+/// distribution.
+fn drive_sim(
+    mut s: Scheduler<SimBackend<'_>>,
+    decoders: usize,
+    decode_quanta: usize,
+    quantum: usize,
+    prefill_tokens: usize,
+) -> anyhow::Result<Samples> {
+    if prefill_tokens > 0 {
+        s.submit(vec![9; prefill_tokens], 1, CancelToken::new())?;
+    }
+    for _ in 0..decoders {
+        s.submit(vec![1], decode_quanta * quantum, CancelToken::new())?;
+    }
+    let mut itl = Samples::new();
+    let mut finished = 0usize;
+    let t0 = std::time::Instant::now();
+    while s.has_work() && t0.elapsed() < Duration::from_secs(60) {
+        finished += s.step().len();
+        for x in s.take_itl() {
+            itl.record(x);
+        }
+    }
+    let want = decoders + usize::from(prefill_tokens > 0);
+    anyhow::ensure!(finished == want, "overlap case finished {finished}/{want} sequences");
+    Ok(itl)
+}
+
+/// Split-phase overlap scenario: one long multi-window prefill joins a
+/// fleet of short decoders. Measures decoder inter-token latency three
+/// ways — split-phase with no prefill (baseline), split-phase with the
+/// prefill in flight (one worker slot busy ~40 ms per window chunk), and
+/// synchronous dispatch with the prefill (every chunk stalls the whole
+/// fleet) — and asserts the split-phase decoder ITL p95 stays within 2x of
+/// the no-prefill baseline. Returns the record nested under `"overlap"` in
+/// `BENCH_serving.json`.
+fn overlap_scenario(smoke: bool) -> anyhow::Result<Json> {
+    let (window, quantum) = (64usize, 4usize);
+    let (decoders, workers) = (8usize, 4usize);
+    let decode_quanta = if smoke { 4usize } else { 8 };
+    let prefill_chunks = if smoke { 2usize } else { 4 };
+    let prefill_tokens = prefill_chunks * window;
+    let prefill_us_per_token = 625u64; // 40 ms per 64-token window chunk
+    let decode_sleep = Duration::from_millis(5);
+    let max_active = decoders + 1;
+
+    // (a) split-phase baseline: the decode fleet alone on `workers` slots
+    let baseline = std::thread::scope(|scope| {
+        let backend = SimBackend {
+            ex: Some(CallExecutor::new(scope, workers)),
+            prefill_us_per_token,
+            decode_sleep,
+        };
+        let s = Scheduler::new(backend, window, quantum, max_active, 16);
+        drive_sim(s, decoders, decode_quanta, quantum, 0)
+    })?;
+    // (b) split-phase overlap: same fleet + one long prefill sharing slots
+    let overlap = std::thread::scope(|scope| {
+        let backend = SimBackend {
+            ex: Some(CallExecutor::new(scope, workers)),
+            prefill_us_per_token,
+            decode_sleep,
+        };
+        let s = Scheduler::new(backend, window, quantum, max_active, 16);
+        drive_sim(s, decoders, decode_quanta, quantum, prefill_tokens)
+    })?;
+    // (c) sync contrast: every 40 ms prefill chunk stalls the whole fleet
+    let backend = SimBackend { ex: None, prefill_us_per_token, decode_sleep };
+    let s = Scheduler::new(backend, window, quantum, max_active, 16);
+    let sync = drive_sim(s, decoders, decode_quanta, quantum, prefill_tokens)?;
+
+    let base_p95 = baseline.p95() * 1e3;
+    let over_p95 = overlap.p95() * 1e3;
+    let sync_p95 = sync.p95() * 1e3;
+    let ratio = over_p95 / base_p95.max(1e-9);
+    assert!(
+        over_p95 <= 2.0 * base_p95,
+        "split-phase decoder ITL p95 must stay within 2x of the no-prefill baseline \
+         (overlap {over_p95:.3} ms vs baseline {base_p95:.3} ms)"
+    );
+    println!(
+        "overlap: {decoders} decoders + {prefill_chunks}x{window}-token prefill on {workers} \
+         in-flight slots | decoder ITL p95: baseline {base_p95:.3} ms | split-phase \
+         {over_p95:.3} ms ({ratio:.2}x) | sync {sync_p95:.3} ms"
+    );
+    Ok(Json::from_pairs(vec![
+        ("decoders", decoders.into()),
+        ("workers", workers.into()),
+        ("decode_quanta", decode_quanta.into()),
+        ("prefill_chunks", prefill_chunks.into()),
+        ("window", window.into()),
+        ("baseline_itl_ms_p50", (baseline.p50() * 1e3).into()),
+        ("baseline_itl_ms_p95", base_p95.into()),
+        ("overlap_itl_ms_p50", (overlap.p50() * 1e3).into()),
+        ("overlap_itl_ms_p95", over_p95.into()),
+        ("overlap_over_baseline_p95", ratio.into()),
+        ("sync_itl_ms_p95", sync_p95.into()),
+    ]))
 }
 
 /// Device-free sequence backend over a real paged-KV arena: prefill appends

@@ -18,7 +18,7 @@ pub enum MassUse {
     LastWindow,
 }
 
-pub trait CachePolicy {
+pub trait CachePolicy: Send {
     fn name(&self) -> String;
 
     /// Per-layer slot budget (compaction trigger threshold).

@@ -46,6 +46,12 @@ pub struct ServeConfig {
     /// beyond it; counted by admission control since pinned pages belong
     /// to no sequence). 0 disables cross-request prefix reuse.
     pub prefix_pool_bytes: usize,
+    /// Device calls the scheduler may have in flight at once. 1 (the
+    /// default) is the synchronous path: every call runs inline on the
+    /// executor thread. > 1 enables split-phase submit/reap over a worker
+    /// pool of that size, so one long prefill no longer stalls concurrently
+    /// decoding sequences.
+    pub max_inflight_calls: usize,
 }
 
 impl Default for ServeConfig {
@@ -64,6 +70,7 @@ impl Default for ServeConfig {
             scratch_pool_entries: 16,
             device_pool_bytes: 256 << 20,
             prefix_pool_bytes: 64 << 20,
+            max_inflight_calls: 1,
         }
     }
 }
@@ -87,6 +94,7 @@ impl ServeConfig {
                 .unwrap_or(d.scratch_pool_entries),
             device_pool_bytes: j.usize_of("device_pool_bytes").unwrap_or(d.device_pool_bytes),
             prefix_pool_bytes: j.usize_of("prefix_pool_bytes").unwrap_or(d.prefix_pool_bytes),
+            max_inflight_calls: j.usize_of("max_inflight_calls").unwrap_or(d.max_inflight_calls),
         })
     }
 
@@ -119,6 +127,7 @@ impl ServeConfig {
         cfg.scratch_pool_entries = args.usize_or("scratch-pool-entries", cfg.scratch_pool_entries);
         cfg.device_pool_bytes = args.usize_or("device-pool-bytes", cfg.device_pool_bytes);
         cfg.prefix_pool_bytes = args.usize_or("prefix-pool-bytes", cfg.prefix_pool_bytes);
+        cfg.max_inflight_calls = args.usize_or("max-inflight-calls", cfg.max_inflight_calls);
         Ok(cfg)
     }
 
@@ -137,6 +146,7 @@ impl ServeConfig {
             ("scratch_pool_entries", self.scratch_pool_entries.into()),
             ("device_pool_bytes", self.device_pool_bytes.into()),
             ("prefix_pool_bytes", self.prefix_pool_bytes.into()),
+            ("max_inflight_calls", self.max_inflight_calls.into()),
         ])
     }
 }
@@ -198,6 +208,7 @@ mod tests {
         assert_eq!(back.scratch_pool_entries, 16);
         assert_eq!(back.device_pool_bytes, 256 << 20);
         assert_eq!(back.prefix_pool_bytes, 64 << 20);
+        assert_eq!(back.max_inflight_calls, 1, "split-phase dispatch defaults to off");
     }
 
     #[test]
@@ -220,6 +231,8 @@ mod tests {
                 "2097152",
                 "--prefix-pool-bytes",
                 "4194304",
+                "--max-inflight-calls",
+                "3",
             ]
             .iter()
             .map(|s| s.to_string())
@@ -235,6 +248,7 @@ mod tests {
         assert_eq!(cfg.scratch_pool_entries, 5);
         assert_eq!(cfg.device_pool_bytes, 2 << 20);
         assert_eq!(cfg.prefix_pool_bytes, 4 << 20);
+        assert_eq!(cfg.max_inflight_calls, 3);
     }
 
     #[test]
@@ -247,6 +261,7 @@ mod tests {
             scratch_pool_entries: 3,
             device_pool_bytes: 0,
             prefix_pool_bytes: 0,
+            max_inflight_calls: 4,
             ..Default::default()
         };
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
@@ -255,6 +270,7 @@ mod tests {
         assert_eq!(back.scratch_pool_entries, 3);
         assert_eq!(back.device_pool_bytes, 0, "0 (residency disabled) must round-trip");
         assert_eq!(back.prefix_pool_bytes, 0, "0 (prefix cache disabled) must round-trip");
+        assert_eq!(back.max_inflight_calls, 4, "in-flight capacity must round-trip");
     }
 
     #[test]

@@ -31,7 +31,8 @@ fn main() -> Result<()> {
         .describe("kv-pool-bytes", "paged-KV arena byte budget (0 = unlimited)", Some("0"))
         .describe("scratch-pool-entries", "warm dense host scratch images (LRU)", Some("16"))
         .describe("device-pool-bytes", "device-residency tier bytes (0 = off)", Some("268435456"))
-        .describe("prefix-pool-bytes", "prefix-cache byte capacity (0 = off)", Some("67108864"));
+        .describe("prefix-pool-bytes", "prefix-cache byte capacity (0 = off)", Some("67108864"))
+        .describe("max-inflight-calls", "device calls in flight at once (1 = sync)", Some("1"));
     if args.flag("help") {
         print!("{}", args.usage("lacache-serve"));
         return Ok(());

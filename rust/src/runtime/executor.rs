@@ -1,0 +1,201 @@
+//! In-flight call executor: a small scoped worker pool that runs device
+//! calls off the reactor thread so one long prefill chunk never stalls the
+//! decode fleet (split-phase submit/reap scheduling, PERF.md "Async
+//! overlap").
+//!
+//! The pool is built over [`std::thread::scope`], so jobs may borrow from
+//! the environment (`&Runtime`, arena handles) — no `'static` laundering.
+//! Each job OWNS the sequence state it advances (the scheduler moves the
+//! whole sequence into the closure and gets it back in the
+//! [`Completion`]), which is what keeps `DeviceTier` accounting race-free:
+//! a sequence's resident image is only ever touched by the single in-flight
+//! call that owns that sequence.
+//!
+//! Shutdown is by drop: dropping the executor closes the job channel, each
+//! worker drains its current job and exits, and the enclosing scope joins
+//! them. Completions of jobs still running at drop are discarded.
+
+use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
+use std::sync::{Arc, Mutex};
+use std::thread;
+use std::time::Duration;
+
+/// A completed in-flight call: the ticket it was submitted under plus the
+/// job's output (which carries the sequence state back to the scheduler).
+pub struct Completion<T> {
+    pub ticket: u64,
+    pub out: T,
+}
+
+type Job<'env, T> = Box<dyn FnOnce() -> T + Send + 'env>;
+
+/// Worker pool for in-flight device calls. `'env` is the borrow scope the
+/// jobs may capture (the serving loop's `thread::scope` environment).
+pub struct CallExecutor<'env, T: Send + 'env> {
+    tx: Sender<(u64, Job<'env, T>)>,
+    done_rx: Receiver<Completion<T>>,
+    workers: usize,
+    inflight: usize,
+}
+
+impl<'env, T: Send + 'env> CallExecutor<'env, T> {
+    /// Spawn `workers` (min 1) pool threads on `scope`. The executor must be
+    /// dropped before the scope closes (drop closes the job channel, which
+    /// is what lets the scope's implicit join finish).
+    pub fn new<'scope>(scope: &'scope thread::Scope<'scope, 'env>, workers: usize) -> Self {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::<(u64, Job<'env, T>)>();
+        let rx = Arc::new(Mutex::new(rx));
+        let (done_tx, done_rx) = channel::<Completion<T>>();
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            let done_tx = done_tx.clone();
+            scope.spawn(move || loop {
+                // hold the receiver lock only while waiting, never while
+                // running a job, so idle workers hand off cleanly
+                let msg = rx.lock().unwrap().recv();
+                match msg {
+                    Ok((ticket, job)) => {
+                        let out = job();
+                        if done_tx.send(Completion { ticket, out }).is_err() {
+                            return; // executor dropped mid-job
+                        }
+                    }
+                    Err(_) => return, // job channel closed: shutdown
+                }
+            });
+        }
+        CallExecutor { tx, done_rx, workers, inflight: 0 }
+    }
+
+    /// Hand a job to the pool. Returns immediately; the result comes back
+    /// through [`Self::reap`] under `ticket`.
+    pub fn submit(&mut self, ticket: u64, job: impl FnOnce() -> T + Send + 'env) {
+        self.inflight += 1;
+        self.tx.send((ticket, Box::new(job))).expect("executor workers alive");
+    }
+
+    /// Drain completions. With `wait` set (and calls in flight), blocks up
+    /// to that long for the first completion; either way every completion
+    /// already queued is drained without blocking.
+    pub fn reap(&mut self, wait: Option<Duration>) -> Vec<Completion<T>> {
+        let mut done = Vec::new();
+        if let Some(d) = wait {
+            if self.inflight > 0 {
+                match self.done_rx.recv_timeout(d) {
+                    Ok(c) => done.push(c),
+                    Err(RecvTimeoutError::Timeout | RecvTimeoutError::Disconnected) => {}
+                }
+            }
+        }
+        while let Ok(c) = self.done_rx.try_recv() {
+            done.push(c);
+        }
+        self.inflight -= done.len();
+        done
+    }
+
+    /// Jobs submitted but not yet reaped.
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
+    /// Pool size (the in-flight concurrency bound).
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn jobs_complete_and_carry_tickets() {
+        thread::scope(|s| {
+            let mut ex: CallExecutor<'_, u64> = CallExecutor::new(s, 4);
+            for t in 0..16u64 {
+                ex.submit(t, move || t * 10);
+            }
+            let mut got: Vec<Completion<u64>> = Vec::new();
+            while got.len() < 16 {
+                got.extend(ex.reap(Some(Duration::from_millis(200))));
+            }
+            assert_eq!(ex.inflight(), 0);
+            got.sort_by_key(|c| c.ticket);
+            for (i, c) in got.iter().enumerate() {
+                assert_eq!(c.ticket, i as u64);
+                assert_eq!(c.out, i as u64 * 10);
+            }
+        });
+    }
+
+    #[test]
+    fn jobs_borrow_from_the_environment() {
+        let data: Vec<u64> = (0..100).collect();
+        let want: u64 = data.iter().sum();
+        thread::scope(|s| {
+            let mut ex = CallExecutor::new(s, 2);
+            ex.submit(7, || data.iter().sum::<u64>());
+            let done = loop {
+                let mut d = ex.reap(Some(Duration::from_millis(500)));
+                if !d.is_empty() {
+                    break d.remove(0);
+                }
+            };
+            assert_eq!(done.ticket, 7);
+            assert_eq!(done.out, want);
+        });
+    }
+
+    #[test]
+    fn reap_without_wait_does_not_block() {
+        thread::scope(|s| {
+            let mut ex: CallExecutor<'_, ()> = CallExecutor::new(s, 1);
+            assert!(ex.reap(None).is_empty());
+            ex.submit(1, || thread::sleep(Duration::from_millis(20)));
+            let mut done = ex.reap(None); // may legitimately see nothing yet
+            while done.is_empty() {
+                done = ex.reap(Some(Duration::from_millis(200)));
+            }
+            assert_eq!(done[0].ticket, 1);
+            assert_eq!(ex.inflight(), 0);
+        });
+    }
+
+    #[test]
+    fn slow_job_does_not_block_fast_jobs() {
+        thread::scope(|s| {
+            let mut ex: CallExecutor<'_, &'static str> = CallExecutor::new(s, 2);
+            ex.submit(1, || {
+                thread::sleep(Duration::from_millis(200));
+                "slow"
+            });
+            ex.submit(2, || "fast");
+            let first = loop {
+                let mut d = ex.reap(Some(Duration::from_millis(1000)));
+                if !d.is_empty() {
+                    break d.remove(0);
+                }
+            };
+            assert_eq!(first.ticket, 2, "fast job reaps while slow is in flight");
+            while ex.inflight() > 0 {
+                ex.reap(Some(Duration::from_millis(1000)));
+            }
+        });
+    }
+
+    #[test]
+    fn clamps_to_at_least_one_worker() {
+        thread::scope(|s| {
+            let mut ex: CallExecutor<'_, i32> = CallExecutor::new(s, 0);
+            assert_eq!(ex.workers(), 1);
+            ex.submit(0, || 42);
+            let mut d = Vec::new();
+            while d.is_empty() {
+                d = ex.reap(Some(Duration::from_millis(200)));
+            }
+            assert_eq!(d[0].out, 42);
+        });
+    }
+}

@@ -26,15 +26,15 @@
 
 pub mod arena;
 pub mod device;
+pub mod executor;
 pub mod kv;
 pub mod manifest;
 pub mod prefix;
 pub mod transfer;
 
-use std::cell::{Cell, RefCell};
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{bail, Context, Result};
@@ -44,6 +44,7 @@ pub use arena::{
     PAGE_SLOTS,
 };
 pub use device::{Acquired, DeviceKvState, DeviceStats, DeviceTier};
+pub use executor::{CallExecutor, Completion};
 pub use kv::{GatherBytes, KvCache};
 pub use manifest::{Manifest, ModelCfg, ProgKind, ProgMeta};
 pub use prefix::{PrefixCache, PrefixSnapshot, PrefixStats};
@@ -137,24 +138,29 @@ pub struct LoadedModel {
     weights: xla::PjRtBuffer,
     #[allow(dead_code)]
     entry: manifest::ModelEntry,
-    exes: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    exes: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
 }
 
+/// The runtime is `Sync`: interior state lives behind `Mutex`es so in-flight
+/// calls on [`executor::CallExecutor`] workers can share one `&Runtime`.
+/// Lock-ordering rule for the staging tiers: **device before scratch** —
+/// every path that holds both takes `device` first (or takes them in
+/// disjoint scopes), so concurrent calls cannot deadlock.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub man: Manifest,
     models: BTreeMap<String, LoadedModel>,
-    stats: RefCell<RuntimeStats>,
+    stats: Mutex<RuntimeStats>,
     /// Reusable dense K/V transfer images (dirty-range incremental gather);
     /// the spill tier under `device`.
-    scratch: RefCell<ScratchPool>,
+    scratch: Mutex<ScratchPool>,
     /// Device-resident K/V images (the hot tier).
-    device: RefCell<DeviceTier>,
+    device: Mutex<DeviceTier>,
     /// Reusable small i32 call buffers.
-    call_buf: RefCell<CallBuf>,
+    call_buf: Mutex<CallBuf>,
     /// Simulated device-memory budget in bytes (None = unlimited). The
     /// engine consults this to reproduce the paper's OOM axis.
-    pub memory_budget_bytes: Cell<Option<usize>>,
+    pub memory_budget_bytes: Mutex<Option<usize>>,
 }
 
 /// Output of a score (teacher-forced window) call.
@@ -238,7 +244,7 @@ impl Runtime {
                     n_params: entry.n_params,
                     weights,
                     entry,
-                    exes: RefCell::new(BTreeMap::new()),
+                    exes: Mutex::new(BTreeMap::new()),
                 },
             );
         }
@@ -246,11 +252,11 @@ impl Runtime {
             client,
             man,
             models,
-            stats: RefCell::new(RuntimeStats::default()),
-            scratch: RefCell::new(ScratchPool::new(opts.scratch_pool_entries)),
-            device: RefCell::new(DeviceTier::new(opts.device_pool_bytes)),
-            call_buf: RefCell::new(CallBuf::default()),
-            memory_budget_bytes: Cell::new(None),
+            stats: Mutex::new(RuntimeStats::default()),
+            scratch: Mutex::new(ScratchPool::new(opts.scratch_pool_entries)),
+            device: Mutex::new(DeviceTier::new(opts.device_pool_bytes)),
+            call_buf: Mutex::new(CallBuf::default()),
+            memory_budget_bytes: Mutex::new(None),
         })
     }
 
@@ -262,37 +268,43 @@ impl Runtime {
     /// entries first, so the gauges never count dropped sequences.
     pub fn stats(&self) -> RuntimeStats {
         self.sweep_staging();
-        let mut st = self.stats.borrow().clone();
-        let pool = self.scratch.borrow();
-        let ts = pool.stats();
-        st.gather_s = ts.gather_s;
-        st.gathered_bytes = ts.gathered_bytes + ts.zeroed_bytes;
-        st.gathers_full = ts.gathers_full;
-        st.gathers_incremental = ts.gathers_incremental;
-        st.gathers_noop = ts.gathers_noop;
-        st.dense_scratch_allocs = ts.dense_allocs;
-        st.scratch_resident_bytes = pool.resident_bytes() as u64;
-        let dev = self.device.borrow();
-        let ds = dev.stats();
-        st.bytes_h2d += ds.uploaded_bytes;
-        st.bytes_d2h += ds.spill_bytes_d2h;
-        st.device_resident_bytes = dev.resident_bytes() as u64;
-        st.residency_hits = ds.hits;
-        st.residency_misses = ds.misses;
-        st.spills = ds.spills;
-        st.donations = ds.donations;
-        st.reconciled_bytes = ds.reconciled_bytes;
+        let mut st = self.stats.lock().unwrap().clone();
+        // scratch and device guards are taken in disjoint scopes (never
+        // nested scratch->device, which would invert the lock order)
+        {
+            let pool = self.scratch.lock().unwrap();
+            let ts = pool.stats();
+            st.gather_s = ts.gather_s;
+            st.gathered_bytes = ts.gathered_bytes + ts.zeroed_bytes;
+            st.gathers_full = ts.gathers_full;
+            st.gathers_incremental = ts.gathers_incremental;
+            st.gathers_noop = ts.gathers_noop;
+            st.dense_scratch_allocs = ts.dense_allocs;
+            st.scratch_resident_bytes = pool.resident_bytes() as u64;
+        }
+        {
+            let dev = self.device.lock().unwrap();
+            let ds = dev.stats();
+            st.bytes_h2d += ds.uploaded_bytes;
+            st.bytes_d2h += ds.spill_bytes_d2h;
+            st.device_resident_bytes = dev.resident_bytes() as u64;
+            st.residency_hits = ds.hits;
+            st.residency_misses = ds.misses;
+            st.spills = ds.spills;
+            st.donations = ds.donations;
+            st.reconciled_bytes = ds.reconciled_bytes;
+        }
         st
     }
 
     /// Raw transfer-layer counters (bench/diagnostic use).
     pub fn transfer_stats(&self) -> TransferStats {
-        self.scratch.borrow().stats()
+        self.scratch.lock().unwrap().stats()
     }
 
     /// Raw residency-tier counters (bench/diagnostic use).
     pub fn device_stats(&self) -> DeviceStats {
-        self.device.borrow().stats()
+        self.device.lock().unwrap().stats()
     }
 
     /// Drop staging entries (device tier + scratch pool) whose cache was
@@ -300,22 +312,22 @@ impl Runtime {
     /// cancelled sequence's `device_resident_bytes` are gone before the next
     /// reactor round admits anyone.
     pub fn sweep_staging(&self) {
-        self.device.borrow_mut().sweep();
-        self.scratch.borrow_mut().sweep();
+        self.device.lock().unwrap().sweep();
+        self.scratch.lock().unwrap().sweep();
     }
 
     /// Host + device staging bytes currently held for live sequences — the
     /// footprint the serving admission gate counts alongside arena pages.
     pub fn staging_bytes(&self) -> usize {
-        self.device.borrow().resident_bytes() + self.scratch.borrow().resident_bytes()
+        self.device.lock().unwrap().resident_bytes() + self.scratch.lock().unwrap().resident_bytes()
     }
 
     /// Deterministically release one cache's staging state (device buffers +
     /// scratch image) — the engine-reset / teardown path; dropped caches are
     /// also caught lazily by [`Self::sweep_staging`].
     pub fn release_cache_state(&self, cache_id: u64) {
-        self.device.borrow_mut().release(cache_id);
-        self.scratch.borrow_mut().release(cache_id);
+        self.device.lock().unwrap().release(cache_id);
+        self.scratch.lock().unwrap().release(cache_id);
     }
 
     /// Pre-compile a set of programs (avoids first-call latency in serving).
@@ -327,22 +339,22 @@ impl Runtime {
         Ok(())
     }
 
-    fn exe(&self, model: &str, prog: &ProgMeta) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    fn exe(&self, model: &str, prog: &ProgMeta) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         let lm = self.model(model)?;
-        if let Some(e) = lm.exes.borrow().get(&prog.name) {
+        if let Some(e) = lm.exes.lock().unwrap().get(&prog.name) {
             return Ok(e.clone());
         }
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&prog.path)
             .map_err(|e| anyhow::anyhow!("parsing {}: {e}", prog.path.display()))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(
+        let exe = Arc::new(
             self.client
                 .compile(&comp)
                 .map_err(|e| anyhow::anyhow!("compiling {model}/{}: {e}", prog.name))?,
         );
-        self.stats.borrow_mut().compile_s += t0.elapsed().as_secs_f64();
-        lm.exes.borrow_mut().insert(prog.name.clone(), exe.clone());
+        self.stats.lock().unwrap().compile_s += t0.elapsed().as_secs_f64();
+        lm.exes.lock().unwrap().insert(prog.name.clone(), exe.clone());
         Ok(exe)
     }
 
@@ -382,7 +394,7 @@ impl Runtime {
         let t0 = Instant::now();
         let (tok_b, tgt_b, lens_b) = {
             // pad the token windows into the reusable call buffers
-            let mut bufs = self.call_buf.borrow_mut();
+            let mut bufs = self.call_buf.lock().unwrap();
             bufs.tok.clear();
             bufs.tok.extend_from_slice(tokens);
             bufs.tok.resize(w, 0);
@@ -397,10 +409,11 @@ impl Runtime {
             (tok_b, tgt_b, lens_b)
         };
         // three-tier K/V path: resident reconcile, or gather + upload +
-        // promote (the tier accounts its own upload bytes)
-        let mut device = self.device.borrow_mut();
+        // promote (the tier accounts its own upload bytes; lock order is
+        // device -> scratch, matching every other dual-guard path)
+        let mut device = self.device.lock().unwrap();
         let acq = {
-            let mut pool = self.scratch.borrow_mut();
+            let mut pool = self.scratch.lock().unwrap();
             device.sweep();
             pool.sweep();
             device.acquire(&self.client, cache, &mut pool)?
@@ -429,7 +442,7 @@ impl Runtime {
         let win_k = parts.pop().context("win_k")?.to_vec::<f32>()?;
         let logprobs = parts.pop().context("logprobs")?.to_vec::<f32>()?;
         {
-            let mut st = self.stats.borrow_mut();
+            let mut st = self.stats.lock().unwrap();
             st.calls += 1;
             st.upload_s += (t1 - t0).as_secs_f64();
             st.execute_s += (t2 - t1).as_secs_f64();
@@ -492,16 +505,16 @@ impl Runtime {
         let l = cache.l;
         let t0 = Instant::now();
         let (lens_b, tok_b) = {
-            let mut bufs = self.call_buf.borrow_mut();
+            let mut bufs = self.call_buf.lock().unwrap();
             bufs.lens.clear();
             bufs.lens.extend(cache.lens.iter().map(|&x| x as i32));
             let lens_b = self.upload_i32(&bufs.lens, &[l])?;
             let tok_b = self.upload_i32(&[last_token], &[])?;
             (lens_b, tok_b)
         };
-        let mut device = self.device.borrow_mut();
+        let mut device = self.device.lock().unwrap();
         let acq = {
-            let mut pool = self.scratch.borrow_mut();
+            let mut pool = self.scratch.lock().unwrap();
             device.sweep();
             pool.sweep();
             device.acquire(&self.client, cache, &mut pool)?
@@ -544,7 +557,7 @@ impl Runtime {
                 let lens = lens_out.to_literal_sync()?.to_vec::<i32>()?;
                 let t3 = Instant::now();
                 {
-                    let mut st = self.stats.borrow_mut();
+                    let mut st = self.stats.lock().unwrap();
                     st.calls += 1;
                     st.upload_s += (t1 - t0).as_secs_f64();
                     st.execute_s += (t2 - t1).as_secs_f64();
@@ -587,7 +600,7 @@ impl Runtime {
                 let last_logits = parts.pop().context("last_logits")?.to_vec::<f32>()?;
                 let tokens = parts.pop().context("tokens")?.to_vec::<i32>()?;
                 {
-                    let mut st = self.stats.borrow_mut();
+                    let mut st = self.stats.lock().unwrap();
                     st.calls += 1;
                     st.upload_s += (t1 - t0).as_secs_f64();
                     st.execute_s += (t2 - t1).as_secs_f64();
@@ -647,7 +660,7 @@ impl Runtime {
             // (exactly append_layer's window layout) into the reusable call
             // buffers — the donated decode path allocates nothing
             let n = appended * dh;
-            let mut bufs = self.call_buf.borrow_mut();
+            let mut bufs = self.call_buf.lock().unwrap();
             bufs.stage_k.clear();
             bufs.stage_k.resize(h * n, 0.0);
             bufs.stage_v.clear();
@@ -670,19 +683,20 @@ impl Runtime {
             }
             drop(bufs);
             {
-                let mut st = self.stats.borrow_mut();
+                let mut st = self.stats.lock().unwrap();
                 st.bytes_d2h += (2 * 4 * l * h * appended * dh) as u64;
                 st.download_s += t0.elapsed().as_secs_f64();
             }
-            let mut device = self.device.borrow_mut();
-            let mut pool = self.scratch.borrow_mut();
+            // lock order: device -> scratch
+            let mut device = self.device.lock().unwrap();
+            let mut pool = self.scratch.lock().unwrap();
             device.install_absorbed(cache, dev.k, dev.v, &mut pool)?;
             return Ok(());
         }
         cache.replace_from_device(&go.k, &go.v, &go.lens, appended, first_pos)?;
         let k = std::mem::take(&mut go.k);
         let v = std::mem::take(&mut go.v);
-        self.scratch.borrow_mut().absorb(cache, k, v);
+        self.scratch.lock().unwrap().absorb(cache, k, v);
         Ok(())
     }
 }

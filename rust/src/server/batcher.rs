@@ -1,33 +1,55 @@
 //! Continuous batcher / prefill-decode scheduler (Orca/vLLM-style
-//! iteration-level scheduling, single-executor variant).
+//! iteration-level scheduling, split-phase submit/reap variant).
 //!
 //! Sequences move `queued -> prefilling -> decoding -> finished`, with a
-//! `cancelled` exit from every state. Each scheduling round runs three
+//! `cancelled` exit from every state. Each scheduling round runs five
 //! explicit phases:
 //!
-//! 1. **reap** — queued requests whose [`CancelToken`] fired are dropped
-//!    before they ever allocate anything;
-//! 2. **admit** — queued requests are admitted FIFO up to `max_active` and
-//!    the backend's memory gate; a `new_seq` failure fails only that request
-//!    (the remaining admissions and the advance phase still run);
-//! 3. **advance** — every active sequence gets exactly one unit of work (one
-//!    prefill window or one decode quantum) in admission order. Finished and
-//!    failed sequences are removed *order-preservingly* (no `swap_remove`
-//!    reshuffling), and a sequence whose token fired is dropped before its
-//!    quantum — dropping the backend sequence returns its paged-KV arena
-//!    pages to the pool immediately.
+//! 1. **reap completions** — drain finished in-flight device calls from the
+//!    backend ([`SeqBackend::reap`]); each completion hands the sequence
+//!    state back to the scheduler, which applies the result (advance, emit
+//!    tokens, finish, or fail) on the reactor thread;
+//! 2. **reap queue** — queued requests whose [`CancelToken`] fired are
+//!    dropped before they ever allocate anything;
+//! 3. **reap cancelled** — active sequences whose token fired and whose
+//!    state is on the host are dropped immediately (returning their paged-KV
+//!    arena pages); a cancelled sequence with a call still in flight is
+//!    dropped at that call's reap instead — nothing ever blocks on it;
+//! 4. **admit** — queued requests are admitted FIFO up to `max_active` and
+//!    the backend's memory gate; a `new_seq` failure fails only that request;
+//!    a `max_new == 0` request finishes here without touching the backend;
+//! 5. **submit** — ready sequences are handed one unit of work each (one
+//!    prefill window or one decode quantum) up to the backend's
+//!    [`SeqBackend::inflight_capacity`]. Synchronous backends (the default
+//!    method shims) complete each submit inline, which reduces this phase to
+//!    the classic blocking advance in admission order; async backends return
+//!    [`Submitted::InFlight`] and the call completes in a later round's reap
+//!    phase. Under a saturated capacity, candidates are picked
+//!    least-recently-submitted first (ties in admission order), so one long
+//!    prefill cannot starve the decode fleet.
+//!
+//! Ownership is the concurrency story: a submit MOVES the sequence (KV
+//! pages, device-resident image and all) into the call, and the scheduler
+//! only sees it again in a completion — there is no shared mutable sequence
+//! state, so `DeviceTier` accounting stays race-free (see PERF.md "Async
+//! overlap").
 //!
 //! The backend is abstracted so the scheduler logic is unit-testable without
 //! a PJRT runtime. TTFT is stamped by the backend at the moment the first
 //! token of a quantum materializes ([`Decoded::t_first`]), not when the
-//! whole quantum returns.
+//! whole quantum returns. Inter-token latency samples are accumulated per
+//! decode completion and drained with [`Scheduler::take_itl`].
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
+
+/// How long a round blocks for a completion when calls are in flight but
+/// nothing else can progress (prevents a busy-spin reactor loop).
+const REAP_WAIT: Duration = Duration::from_millis(2);
 
 /// Shared cancellation flag connecting a connection handler to every
 /// request it has in flight: the handler fires it when the client
@@ -59,7 +81,44 @@ pub struct Decoded {
     pub t_first: Option<Instant>,
 }
 
+/// Identifies an in-flight call across submit and reap (the scheduler uses
+/// the sequence id, which is unique per request).
+pub type Ticket = u64;
+
+/// What a completed device call produced.
+pub enum CallOut {
+    /// A prefill chunk was ingested (the scheduler advanced `pos` at
+    /// submit time; nothing else to carry back).
+    Prefill,
+    /// A decode quantum's tokens.
+    Decode(Decoded),
+}
+
+/// A drained completion: the ticket it was submitted under, the sequence
+/// state (ownership returns to the scheduler), and the call's outcome.
+pub struct CallDone<S> {
+    pub ticket: Ticket,
+    pub seq: S,
+    pub result: Result<CallOut>,
+}
+
+/// Outcome of a non-blocking submit.
+pub enum Submitted<S> {
+    /// The backend ran the call inline (synchronous shim, or a failure
+    /// before dispatch): the completion comes straight back.
+    Done(CallDone<S>),
+    /// The call is in flight; the sequence returns via [`SeqBackend::reap`].
+    InFlight,
+}
+
 /// Execution backend for one sequence (real impl wraps [`crate::engine::Engine`]).
+///
+/// Backends implement the synchronous surface (`prefill_chunk` / `decode`);
+/// the split-phase surface (`submit_*` / `reap`) has default shims that run
+/// the synchronous call inline, so a plain backend IS the `capacity = 1`
+/// scheduler. Async backends override the split-phase methods to dispatch
+/// onto a worker pool ([`crate::runtime::CallExecutor`]) and raise
+/// [`Self::inflight_capacity`].
 pub trait SeqBackend {
     type Seq;
     fn new_seq(&mut self) -> Result<Self::Seq>;
@@ -85,12 +144,48 @@ pub trait SeqBackend {
     /// set has headroom — even with an empty queue — so backends use it to
     /// sweep staging state of sequences dropped last round (cancellation
     /// teardown; a saturated active set is covered by the sweeps inside the
-    /// runtime calls the advance phase makes).
+    /// runtime calls the submit phase makes).
     /// `active` is the number of already-admitted sequences, so backends can
     /// reserve headroom for sequences that have not allocated pages yet.
     fn can_admit(&self, active: usize) -> bool {
         let _ = active;
         true
+    }
+    /// Device calls this backend can have in flight at once. The default 1
+    /// is the synchronous path: every submit completes inline and
+    /// [`Self::reap`] never has anything to drain.
+    fn inflight_capacity(&self) -> usize {
+        1
+    }
+    /// Non-blocking prefill: ownership of `seq` moves into the call and
+    /// comes back through [`Self::reap`] (or immediately, via
+    /// [`Submitted::Done`]). The default shim runs [`Self::prefill_chunk`]
+    /// inline.
+    fn submit_prefill(
+        &mut self,
+        ticket: Ticket,
+        mut seq: Self::Seq,
+        chunk: &[i32],
+    ) -> Submitted<Self::Seq> {
+        let result = self.prefill_chunk(&mut seq, chunk).map(|()| CallOut::Prefill);
+        Submitted::Done(CallDone { ticket, seq, result })
+    }
+    /// Non-blocking decode of up to `n` tokens; same ownership contract as
+    /// [`Self::submit_prefill`].
+    fn submit_decode(
+        &mut self,
+        ticket: Ticket,
+        mut seq: Self::Seq,
+        n: usize,
+    ) -> Submitted<Self::Seq> {
+        let result = self.decode(&mut seq, n).map(CallOut::Decode);
+        Submitted::Done(CallDone { ticket, seq, result })
+    }
+    /// Drain completed in-flight calls, blocking up to `wait` for the first
+    /// one when given. Synchronous backends never have any.
+    fn reap(&mut self, wait: Option<Duration>) -> Vec<CallDone<Self::Seq>> {
+        let _ = wait;
+        Vec::new()
     }
 }
 
@@ -122,6 +217,15 @@ struct Pending {
     allow_prefix: bool,
 }
 
+/// Where an active sequence's state currently lives.
+enum Slot<S> {
+    /// On the host, owned by the scheduler: eligible for submit (and for
+    /// immediate cancellation teardown).
+    Ready(S),
+    /// Moved into an in-flight device call; comes back at reap.
+    InFlight,
+}
+
 struct Active<S> {
     id: u64,
     prompt: Vec<i32>,
@@ -133,13 +237,19 @@ struct Active<S> {
     t_submit: Instant,
     t_admit: Instant,
     t_first: Option<Instant>,
+    /// When the previous decode quantum's tokens were observed (drives the
+    /// inter-token latency samples).
+    t_last: Option<Instant>,
+    /// Round this sequence last got a unit of work (least-recently-submitted
+    /// fairness under a saturated in-flight capacity).
+    last_step: u64,
     cancel: CancelToken,
-    seq: S,
+    seq: Slot<S>,
 }
 
 impl<S> Active<S> {
-    /// Consume into a `cancelled` record; dropping `self.seq` here is what
-    /// returns the sequence's arena pages.
+    /// Consume into a `cancelled` record; dropping the slot here (when the
+    /// state is `Ready`) is what returns the sequence's arena pages.
     fn into_cancelled(self) -> Finished {
         let now = Instant::now();
         Finished {
@@ -154,6 +264,22 @@ impl<S> Active<S> {
             cancelled: true,
         }
     }
+
+    /// Consume into an ok-completion record.
+    fn into_finished(self) -> Finished {
+        let now = Instant::now();
+        Finished {
+            id: self.id,
+            tokens: self.generated,
+            prompt_tokens: self.prompt.len(),
+            prefix_tokens: self.prefix_tokens,
+            queue_s: (self.t_admit - self.t_submit).as_secs_f64(),
+            ttft_s: self.t_first.map(|t| (t - self.t_submit).as_secs_f64()).unwrap_or_default(),
+            total_s: (now - self.t_submit).as_secs_f64(),
+            error: None,
+            cancelled: false,
+        }
+    }
 }
 
 pub struct Scheduler<B: SeqBackend> {
@@ -165,6 +291,13 @@ pub struct Scheduler<B: SeqBackend> {
     queue: VecDeque<Pending>,
     active: Vec<Active<B::Seq>>,
     next_id: u64,
+    /// Submit-phase round counter (fairness clock for `Active::last_step`).
+    round: u64,
+    /// Calls currently in flight at the backend.
+    inflight: usize,
+    /// Inter-token latency samples (seconds) accumulated by decode
+    /// completions; drained by [`Self::take_itl`].
+    itl_s: Vec<f64>,
 }
 
 impl<B: SeqBackend> Scheduler<B> {
@@ -184,6 +317,9 @@ impl<B: SeqBackend> Scheduler<B> {
             queue: VecDeque::new(),
             active: Vec::new(),
             next_id: 1,
+            round: 0,
+            inflight: 0,
+            itl_s: Vec::new(),
         }
     }
 
@@ -226,6 +362,11 @@ impl<B: SeqBackend> Scheduler<B> {
         (self.queue.len(), self.active.len())
     }
 
+    /// Device calls currently in flight (0 for synchronous backends).
+    pub fn inflight(&self) -> usize {
+        self.inflight
+    }
+
     pub fn backend(&self) -> &B {
         &self.backend
     }
@@ -234,17 +375,56 @@ impl<B: SeqBackend> Scheduler<B> {
         &mut self.backend
     }
 
-    /// One scheduling round (reap -> admit -> advance). Returns sequences
-    /// that exited this round: completed, errored, or cancelled.
+    /// Drain the inter-token latency samples (seconds per token) recorded
+    /// since the last call.
+    pub fn take_itl(&mut self) -> Vec<f64> {
+        std::mem::take(&mut self.itl_s)
+    }
+
+    /// One scheduling round (reap completions -> reap queue -> reap
+    /// cancelled -> admit -> submit). Returns sequences that exited this
+    /// round: completed, errored, or cancelled. When calls are in flight
+    /// and the round could make no other progress, blocks briefly for the
+    /// next completion instead of spinning.
     pub fn step(&mut self) -> Vec<Finished> {
         let mut done = Vec::new();
+        let reaped = self.reap_completions(None, &mut done);
         self.reap_queue(&mut done);
+        self.reap_cancelled(&mut done);
         self.admit(&mut done);
-        self.advance(&mut done);
+        let submitted = self.submit_units(&mut done);
+        if reaped == 0 && submitted == 0 && done.is_empty() && self.inflight > 0 {
+            self.reap_completions(Some(REAP_WAIT), &mut done);
+        }
         done
     }
 
-    /// Phase 1: drop queued requests whose client disconnected before they
+    /// Phase 1: drain in-flight completions and apply them. A completion
+    /// whose sequence was cancelled while the call ran is dropped here —
+    /// this is "cancellation at reap": the sequence state (arena pages,
+    /// device residency) is released the moment the scheduler owns it again.
+    fn reap_completions(&mut self, wait: Option<Duration>, done: &mut Vec<Finished>) -> usize {
+        if self.inflight == 0 {
+            return 0;
+        }
+        let mut reaped = 0;
+        for c in self.backend.reap(wait) {
+            reaped += 1;
+            self.inflight = self.inflight.saturating_sub(1);
+            let Some(i) = self.active.iter().position(|a| a.id == c.ticket) else {
+                continue; // sequence already gone; drop the returned state
+            };
+            if self.active[i].cancel.is_cancelled() {
+                drop(c.seq); // releases the sequence's pages/residency
+                done.push(self.active.remove(i).into_cancelled());
+                continue;
+            }
+            self.settle(i, c.seq, c.result, done);
+        }
+        reaped
+    }
+
+    /// Phase 2: drop queued requests whose client disconnected before they
     /// were ever admitted.
     fn reap_queue(&mut self, done: &mut Vec<Finished>) {
         // common case (no cancellations) stays allocation- and move-free
@@ -273,13 +453,45 @@ impl<B: SeqBackend> Scheduler<B> {
         self.queue = kept;
     }
 
-    /// Phase 2: FIFO admission up to the active cap and the backend's memory
+    /// Phase 3: drop cancelled active sequences whose state is on the host
+    /// (ready slots) — their pages return before this round's admission
+    /// counts bytes. In-flight cancellations are handled at reap.
+    fn reap_cancelled(&mut self, done: &mut Vec<Finished>) {
+        let mut i = 0;
+        while i < self.active.len() {
+            if matches!(self.active[i].seq, Slot::Ready(_)) && self.active[i].cancel.is_cancelled()
+            {
+                done.push(self.active.remove(i).into_cancelled());
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Phase 4: FIFO admission up to the active cap and the backend's memory
     /// gate. A `new_seq` failure fails only that request: the remaining
-    /// queue still gets its admission chance and the advance phase still
-    /// runs this round.
+    /// queue still gets its admission chance and the submit phase still
+    /// runs this round. A `max_new == 0` request is the degenerate
+    /// zero-token generate: it finishes right here, without a sequence or
+    /// any device call.
     fn admit(&mut self, done: &mut Vec<Finished>) {
         while self.active.len() < self.max_active && self.backend.can_admit(self.active.len()) {
             let Some(p) = self.queue.pop_front() else { break };
+            if p.max_new == 0 {
+                let now = Instant::now();
+                done.push(Finished {
+                    id: p.id,
+                    tokens: Vec::new(),
+                    prompt_tokens: p.prompt.len(),
+                    prefix_tokens: 0,
+                    queue_s: (now - p.t_submit).as_secs_f64(),
+                    ttft_s: 0.0,
+                    total_s: (now - p.t_submit).as_secs_f64(),
+                    error: None,
+                    cancelled: false,
+                });
+                continue;
+            }
             match self.backend.new_seq() {
                 Ok(mut seq) => {
                     // cross-request prefix reuse: start prefilling past the
@@ -299,8 +511,10 @@ impl<B: SeqBackend> Scheduler<B> {
                         t_submit: p.t_submit,
                         t_admit: Instant::now(),
                         t_first: None,
+                        t_last: None,
+                        last_step: self.round,
                         cancel: p.cancel,
-                        seq,
+                        seq: Slot::Ready(seq),
                     })
                 }
                 Err(e) => {
@@ -310,67 +524,119 @@ impl<B: SeqBackend> Scheduler<B> {
         }
     }
 
-    /// Phase 3: one unit of work per active sequence, in admission order.
-    fn advance(&mut self, done: &mut Vec<Finished>) {
+    /// Phase 5: hand out units of work. Each ready sequence gets at most one
+    /// submit per round; candidates are picked least-recently-submitted
+    /// first with ties in admission order, so under a saturated capacity the
+    /// fleet round-robins — and with the synchronous shims (capacity 1,
+    /// inline completion) this is exactly the old blocking advance in
+    /// admission order. Returns the number of units submitted.
+    fn submit_units(&mut self, done: &mut Vec<Finished>) -> usize {
+        self.round += 1;
+        let capacity = self.backend.inflight_capacity().max(1);
         let window = self.window;
         let quantum = self.quantum;
-        let mut i = 0;
-        while i < self.active.len() {
+        let mut submitted = 0;
+        loop {
+            if self.inflight >= capacity {
+                break;
+            }
+            let Some(i) = self
+                .active
+                .iter()
+                .enumerate()
+                .filter(|(_, a)| matches!(a.seq, Slot::Ready(_)) && a.last_step < self.round)
+                .min_by_key(|&(i, a)| (a.last_step, i))
+                .map(|(i, _)| i)
+            else {
+                break;
+            };
+            // drop between quanta: the seq (and its KvCache pages) is freed
+            // before any more device time is spent on it
             if self.active[i].cancel.is_cancelled() {
-                // drop between quanta: the seq (and its KvCache pages) is
-                // freed before any more device time is spent on it
                 done.push(self.active.remove(i).into_cancelled());
                 continue;
             }
-            let a = &mut self.active[i];
-            let result: Result<bool> = (|| {
+            // nothing left to prefill or decode (max_new == generated):
+            // finish without issuing a zero-step device call
+            if self.active[i].pos >= self.active[i].prompt.len()
+                && self.active[i].generated.len() >= self.active[i].max_new
+            {
+                done.push(self.active.remove(i).into_finished());
+                continue;
+            }
+            self.active[i].last_step = self.round;
+            submitted += 1;
+            let sub = {
+                let Self { backend, active, .. } = self;
+                let a = &mut active[i];
+                let ticket = a.id;
+                let Slot::Ready(seq) = std::mem::replace(&mut a.seq, Slot::InFlight) else {
+                    unreachable!("submit candidates hold a ready slot");
+                };
                 if a.pos < a.prompt.len() {
+                    let start = a.pos;
                     let end = (a.pos + window).min(a.prompt.len());
-                    self.backend.prefill_chunk(&mut a.seq, &a.prompt[a.pos..end])?;
+                    // pos advances at submit: on error the sequence exits
+                    // anyway, and nothing reads pos while in flight
                     a.pos = end;
-                    Ok(false)
+                    backend.submit_prefill(ticket, seq, &a.prompt[start..end])
                 } else {
                     let n = quantum.min(a.max_new - a.generated.len());
-                    let d = self.backend.decode(&mut a.seq, n)?;
+                    backend.submit_decode(ticket, seq, n)
+                }
+            };
+            match sub {
+                Submitted::Done(cd) => self.settle(i, cd.seq, cd.result, done),
+                Submitted::InFlight => self.inflight += 1,
+            }
+        }
+        submitted
+    }
+
+    /// Apply a call's outcome to the active sequence at `i`: store the state
+    /// back (ready for the next round), finish, or fail. Decode completions
+    /// stamp TTFT and record inter-token latency samples.
+    fn settle(&mut self, i: usize, seq: B::Seq, result: Result<CallOut>, done: &mut Vec<Finished>) {
+        match result {
+            Ok(CallOut::Prefill) => {
+                self.active[i].seq = Slot::Ready(seq);
+            }
+            Ok(CallOut::Decode(d)) => {
+                let now = Instant::now();
+                let finished = {
+                    let Self { active, itl_s, .. } = self;
+                    let a = &mut active[i];
                     if a.t_first.is_none() {
-                        a.t_first = Some(d.t_first.unwrap_or_else(Instant::now));
+                        a.t_first = Some(d.t_first.unwrap_or(now));
                     }
+                    if let Some(prev) = a.t_last {
+                        if !d.tokens.is_empty() {
+                            let per = (now - prev).as_secs_f64() / d.tokens.len() as f64;
+                            itl_s.resize(itl_s.len() + d.tokens.len(), per);
+                        }
+                    }
+                    a.t_last = Some(now);
                     a.generated.extend(d.tokens);
-                    Ok(a.generated.len() >= a.max_new)
+                    a.generated.len() >= a.max_new
+                };
+                if finished {
+                    // `seq` drops at the end of this call: pages return now
+                    done.push(self.active.remove(i).into_finished());
+                } else {
+                    self.active[i].seq = Slot::Ready(seq);
                 }
-            })();
-            match result {
-                Ok(true) => {
-                    let a = self.active.remove(i);
-                    let now = Instant::now();
-                    done.push(Finished {
-                        id: a.id,
-                        tokens: a.generated,
-                        prompt_tokens: a.prompt.len(),
-                        prefix_tokens: a.prefix_tokens,
-                        queue_s: (a.t_admit - a.t_submit).as_secs_f64(),
-                        ttft_s: a
-                            .t_first
-                            .map(|t| (t - a.t_submit).as_secs_f64())
-                            .unwrap_or_default(),
-                        total_s: (now - a.t_submit).as_secs_f64(),
-                        error: None,
-                        cancelled: false,
-                    });
-                }
-                Ok(false) => i += 1,
-                Err(e) => {
-                    let a = self.active.remove(i);
-                    done.push(finished_err(
-                        a.id,
-                        a.prompt.len(),
-                        a.prefix_tokens,
-                        a.t_submit,
-                        Some(a.t_admit),
-                        a.t_first,
-                        e,
-                    ));
-                }
+            }
+            Err(e) => {
+                let a = self.active.remove(i);
+                done.push(finished_err(
+                    a.id,
+                    a.prompt.len(),
+                    a.prefix_tokens,
+                    a.t_submit,
+                    Some(a.t_admit),
+                    a.t_first,
+                    e,
+                ));
             }
         }
     }
@@ -405,13 +671,18 @@ fn finished_err(
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::runtime::{KvArena, KvCache};
+    use crate::prop_assert;
+    use crate::runtime::{CallExecutor, KvArena, KvCache};
+    use crate::util::prop::PropRunner;
+    use std::collections::BTreeMap;
+    use std::sync::Mutex;
 
     /// Mock backend: "generates" token 100+len; fails on prompts containing -1.
     struct Mock {
         prefilled: usize,
         admit: bool,
         new_seq_calls: usize,
+        decode_calls: usize,
         new_seq_fails_at: Option<usize>,
     }
 
@@ -440,6 +711,7 @@ mod tests {
             Ok(())
         }
         fn decode(&mut self, seq: &mut MockSeq, n: usize) -> Result<Decoded> {
+            self.decode_calls += 1;
             let tokens: Vec<i32> = (0..n).map(|i| 100 + (seq.emitted + i) as i32).collect();
             seq.emitted += n;
             Ok(Decoded { tokens, t_first: Some(Instant::now()) })
@@ -447,7 +719,13 @@ mod tests {
     }
 
     fn mock() -> Mock {
-        Mock { prefilled: 0, admit: true, new_seq_calls: 0, new_seq_fails_at: None }
+        Mock {
+            prefilled: 0,
+            admit: true,
+            new_seq_calls: 0,
+            decode_calls: 0,
+            new_seq_fails_at: None,
+        }
     }
 
     fn sched() -> Scheduler<Mock> {
@@ -589,6 +867,42 @@ mod tests {
             done.iter().filter(|f| f.error.is_none()).map(|f| f.id).collect();
         ok_ids.sort_unstable();
         assert_eq!(ok_ids, vec![a, c]);
+    }
+
+    #[test]
+    fn zero_max_new_finishes_without_backend_calls() {
+        // regression: max_new == 0 used to admit a sequence and issue a
+        // zero-step decode device call before finishing
+        let mut s = sched();
+        let id = submit(&mut s, vec![1, 2, 3], 0);
+        let done = s.step();
+        assert_eq!(done.len(), 1);
+        let f = &done[0];
+        assert_eq!(f.id, id);
+        assert!(f.tokens.is_empty());
+        assert!(f.error.is_none());
+        assert!(!f.cancelled);
+        assert_eq!(f.prompt_tokens, 3);
+        assert_eq!(s.backend().new_seq_calls, 0, "zero-token generate must not allocate a seq");
+        assert_eq!(s.backend().prefilled, 0, "zero-token generate must not prefill");
+        assert_eq!(s.backend().decode_calls, 0, "zero-token generate must not decode");
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn zero_max_new_does_not_consume_the_rounds_admission_slots() {
+        // a zero-token request ahead of real work must not block admission
+        let mut s = sched();
+        submit(&mut s, vec![1; 4], 0);
+        let real = submit(&mut s, vec![1; 4], 4);
+        let mut done = Vec::new();
+        while s.has_work() {
+            done.extend(s.step());
+        }
+        assert_eq!(done.len(), 2);
+        let f = done.iter().find(|f| f.id == real).unwrap();
+        assert_eq!(f.tokens.len(), 4);
+        assert_eq!(s.backend().new_seq_calls, 1);
     }
 
     /// Backend with a canned prefix-match length (cross-request reuse mock).
@@ -912,5 +1226,322 @@ mod tests {
             2,
             "survivors must complete normally"
         );
+    }
+
+    // ------------------------------------------------------------------
+    // split-phase (submit/reap) coverage: a generic pool-backed async
+    // backend over the real CallExecutor, used by the overlap test and the
+    // sync-equivalence property test
+    // ------------------------------------------------------------------
+
+    type PrefillFn<S> = Arc<dyn Fn(&mut S, &[i32]) -> Result<()> + Send + Sync>;
+    type DecodeFn<S> = Arc<dyn Fn(&mut S, usize) -> Result<Decoded> + Send + Sync>;
+
+    /// Async test backend: ships each call (with its owned sequence) onto a
+    /// [`CallExecutor`] worker pool — the same ownership-transfer shape as
+    /// the serving `EngineBackend`.
+    struct PoolBackend<'env, S: Send + 'env> {
+        ex: CallExecutor<'env, (S, Result<CallOut>)>,
+        capacity: usize,
+        new_fn: Box<dyn FnMut() -> Result<S> + 'env>,
+        prefill_fn: PrefillFn<S>,
+        decode_fn: DecodeFn<S>,
+    }
+
+    impl<'env, S: Send + 'env> SeqBackend for PoolBackend<'env, S> {
+        type Seq = S;
+        fn new_seq(&mut self) -> Result<S> {
+            (self.new_fn)()
+        }
+        fn prefill_chunk(&mut self, seq: &mut S, chunk: &[i32]) -> Result<()> {
+            (self.prefill_fn)(seq, chunk)
+        }
+        fn decode(&mut self, seq: &mut S, n: usize) -> Result<Decoded> {
+            (self.decode_fn)(seq, n)
+        }
+        fn inflight_capacity(&self) -> usize {
+            self.capacity
+        }
+        fn submit_prefill(&mut self, ticket: Ticket, mut seq: S, chunk: &[i32]) -> Submitted<S> {
+            let f = Arc::clone(&self.prefill_fn);
+            let chunk = chunk.to_vec();
+            self.ex.submit(ticket, move || {
+                let result = f(&mut seq, &chunk).map(|()| CallOut::Prefill);
+                (seq, result)
+            });
+            Submitted::InFlight
+        }
+        fn submit_decode(&mut self, ticket: Ticket, mut seq: S, n: usize) -> Submitted<S> {
+            let f = Arc::clone(&self.decode_fn);
+            self.ex.submit(ticket, move || {
+                let result = f(&mut seq, n).map(CallOut::Decode);
+                (seq, result)
+            });
+            Submitted::InFlight
+        }
+        fn reap(&mut self, wait: Option<Duration>) -> Vec<CallDone<S>> {
+            self.ex
+                .reap(wait)
+                .into_iter()
+                .map(|c| CallDone { ticket: c.ticket, seq: c.out.0, result: c.out.1 })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn long_prefill_does_not_stall_decoders_at_capacity() {
+        // one slow 64-token prefill and one fast decoder in flight together
+        // (capacity 2): the decoder must finish while the prefill still runs
+        std::thread::scope(|scope| {
+            let slow_mark = 9i32;
+            let backend: PoolBackend<'_, MockSeq> = PoolBackend {
+                ex: CallExecutor::new(scope, 2),
+                capacity: 2,
+                new_fn: Box::new(|| Ok(MockSeq { emitted: 0 })),
+                prefill_fn: Arc::new(move |_seq, chunk: &[i32]| {
+                    if chunk.contains(&slow_mark) {
+                        std::thread::sleep(Duration::from_millis(40));
+                    }
+                    Ok(())
+                }),
+                decode_fn: Arc::new(|seq: &mut MockSeq, n| {
+                    std::thread::sleep(Duration::from_millis(1));
+                    let tokens: Vec<i32> =
+                        (0..n).map(|i| 100 + (seq.emitted + i) as i32).collect();
+                    seq.emitted += n;
+                    Ok(Decoded { tokens, t_first: Some(Instant::now()) })
+                }),
+            };
+            let mut s = Scheduler::new(backend, 64, 4, 4, 8);
+            let slow = s.submit(vec![slow_mark; 64], 1, CancelToken::new()).unwrap();
+            let fast = s.submit(vec![1; 1], 8, CancelToken::new()).unwrap();
+            let t0 = Instant::now();
+            let mut finished: BTreeMap<u64, (Instant, Vec<i32>)> = BTreeMap::new();
+            while s.has_work() && t0.elapsed() < Duration::from_secs(10) {
+                for f in s.step() {
+                    assert!(f.error.is_none(), "unexpected error: {:?}", f.error);
+                    finished.insert(f.id, (Instant::now(), f.tokens));
+                }
+            }
+            assert_eq!(finished.len(), 2, "both sequences must drain");
+            assert!(
+                finished[&fast].0 < finished[&slow].0,
+                "decoder must finish while the long prefill is in flight"
+            );
+            assert_eq!(finished[&fast].1, (100..108).collect::<Vec<i32>>());
+            assert_eq!(finished[&slow].1.len(), 1);
+        });
+    }
+
+    // --- sync vs split-phase equivalence over real paged-KV state ---
+
+    /// Per-sequence KV checksums, recorded when the sequence drops (i.e.
+    /// when the scheduler finishes or cancels it).
+    type KvSums = Arc<Mutex<BTreeMap<u64, u64>>>;
+
+    struct TraceSeq {
+        kv: KvCache,
+        pos: u64,
+        emitted: usize,
+        tag: u64,
+        sums: KvSums,
+    }
+
+    impl Drop for TraceSeq {
+        fn drop(&mut self) {
+            // FNV-1a over the dense K/V image + per-layer lens: byte-level
+            // witness of the exact prefill/decode schedule this seq saw
+            let (k, v) = self.kv.gather_dense();
+            let mut h = 0xcbf29ce484222325u64;
+            for x in k.iter().chain(v.iter()) {
+                for b in x.to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x100000001b3);
+                }
+            }
+            for &l in &self.kv.lens {
+                h ^= l as u64;
+                h = h.wrapping_mul(0x100000001b3);
+            }
+            self.sums.lock().unwrap().insert(self.tag, h);
+        }
+    }
+
+    /// Append `n` rows of position-dependent values at `pos` (content is a
+    /// pure function of (layer, head, position, dim), so identical schedules
+    /// yield byte-identical state).
+    fn trace_fill(kv: &mut KvCache, pos: u64, n: usize) -> Result<()> {
+        let (l, h, dh) = (kv.l, kv.h, kv.dh);
+        for layer in 0..l {
+            let mut k = vec![0.0f32; h * n * dh];
+            let mut v = vec![0.0f32; h * n * dh];
+            for hh in 0..h {
+                for r in 0..n {
+                    for d in 0..dh {
+                        let idx = (hh * n + r) * dh + d;
+                        let base = (pos + r as u64) as f32
+                            + layer as f32 * 0.5
+                            + hh as f32 * 0.25
+                            + d as f32 * 0.0625;
+                        k[idx] = base;
+                        v[idx] = -base;
+                    }
+                }
+            }
+            kv.append_layer(layer, &k, &v, n, n, pos)?;
+        }
+        Ok(())
+    }
+
+    fn trace_prefill(seq: &mut TraceSeq, chunk: &[i32]) -> Result<()> {
+        trace_fill(&mut seq.kv, seq.pos, chunk.len())?;
+        seq.pos += chunk.len() as u64;
+        Ok(())
+    }
+
+    fn trace_decode(seq: &mut TraceSeq, n: usize) -> Result<Decoded> {
+        trace_fill(&mut seq.kv, seq.pos, n)?;
+        seq.pos += n as u64;
+        let tokens: Vec<i32> = (0..n).map(|i| 100 + (seq.emitted + i) as i32).collect();
+        seq.emitted += n;
+        Ok(Decoded { tokens, t_first: Some(Instant::now()) })
+    }
+
+    fn trace_seq(arena: &KvArena, sums: &KvSums, tag: u64) -> TraceSeq {
+        TraceSeq {
+            kv: KvCache::with_arena(arena.clone(), 2, 2, 256, 4),
+            pos: 0,
+            emitted: 0,
+            tag,
+            sums: Arc::clone(sums),
+        }
+    }
+
+    /// Synchronous reference backend over the same trace functions.
+    struct TraceBackend {
+        arena: KvArena,
+        sums: KvSums,
+        next_tag: u64,
+    }
+
+    impl SeqBackend for TraceBackend {
+        type Seq = TraceSeq;
+        fn new_seq(&mut self) -> Result<TraceSeq> {
+            let tag = self.next_tag;
+            self.next_tag += 1;
+            Ok(trace_seq(&self.arena, &self.sums, tag))
+        }
+        fn prefill_chunk(&mut self, seq: &mut TraceSeq, chunk: &[i32]) -> Result<()> {
+            trace_prefill(seq, chunk)
+        }
+        fn decode(&mut self, seq: &mut TraceSeq, n: usize) -> Result<Decoded> {
+            trace_decode(seq, n)
+        }
+    }
+
+    #[test]
+    fn split_phase_matches_synchronous_path() {
+        // property: for the same seeded request trace, the split-phase
+        // scheduler over a real worker pool produces the same per-request
+        // token streams and byte-identical final KV state as the
+        // synchronous (capacity 1, inline shim) path
+        PropRunner::new(12).run(
+            |rng| {
+                let n_req = 2 + rng.below(5) as usize;
+                (0..n_req)
+                    .map(|_| (1 + rng.below(40) as usize, rng.below(12) as usize))
+                    .collect::<Vec<(usize, usize)>>()
+            },
+            |trace| {
+                // synchronous reference run
+                let sync_sums: KvSums = KvSums::default();
+                let mut sync_tokens: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+                {
+                    let backend = TraceBackend {
+                        arena: KvArena::new(),
+                        sums: Arc::clone(&sync_sums),
+                        next_tag: 0,
+                    };
+                    let mut s = Scheduler::new(backend, 8, 4, 3, 64);
+                    for &(p, m) in trace {
+                        s.submit(vec![1; p], m, CancelToken::new()).unwrap();
+                    }
+                    let mut guard = 0;
+                    while s.has_work() && guard < 10_000 {
+                        for f in s.step() {
+                            prop_assert!(f.error.is_none(), "sync error: {:?}", f.error);
+                            sync_tokens.insert(f.id, f.tokens);
+                        }
+                        guard += 1;
+                    }
+                    prop_assert!(!s.has_work(), "sync run did not drain");
+                }
+
+                // split-phase run over a 3-worker pool, capacity 3
+                let async_sums: KvSums = KvSums::default();
+                let mut async_tokens: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+                let mut errors: Vec<String> = Vec::new();
+                let mut drained = false;
+                std::thread::scope(|scope| {
+                    let arena = KvArena::new();
+                    let sums = Arc::clone(&async_sums);
+                    let mut tag = 0u64;
+                    let backend: PoolBackend<'_, TraceSeq> = PoolBackend {
+                        ex: CallExecutor::new(scope, 3),
+                        capacity: 3,
+                        new_fn: Box::new(move || {
+                            let t = tag;
+                            tag += 1;
+                            Ok(trace_seq(&arena, &sums, t))
+                        }),
+                        prefill_fn: Arc::new(trace_prefill),
+                        decode_fn: Arc::new(trace_decode),
+                    };
+                    let mut s = Scheduler::new(backend, 8, 4, 3, 64);
+                    for &(p, m) in trace {
+                        s.submit(vec![1; p], m, CancelToken::new()).unwrap();
+                    }
+                    let mut guard = 0;
+                    while s.has_work() && guard < 100_000 {
+                        for f in s.step() {
+                            if let Some(e) = &f.error {
+                                errors.push(e.clone());
+                            }
+                            async_tokens.insert(f.id, f.tokens);
+                        }
+                        guard += 1;
+                    }
+                    drained = !s.has_work();
+                });
+                prop_assert!(errors.is_empty(), "split-phase errors: {errors:?}");
+                prop_assert!(drained, "split-phase run did not drain");
+                prop_assert!(
+                    async_tokens == sync_tokens,
+                    "token streams diverge: {async_tokens:?} vs {sync_tokens:?}"
+                );
+                let a = sync_sums.lock().unwrap().clone();
+                let b = async_sums.lock().unwrap().clone();
+                prop_assert!(a == b, "final KV state diverges: {a:?} vs {b:?}");
+                prop_assert!(
+                    a.len() == trace.iter().filter(|&&(_, m)| m > 0).count(),
+                    "each admitted sequence must record exactly one checksum"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn itl_samples_accumulate_across_decode_quanta() {
+        let mut s = sched();
+        submit(&mut s, vec![1; 8], 12); // 1 prefill + 3 decode quanta
+        while s.has_work() {
+            s.step();
+        }
+        // first quantum seeds the timestamp; quanta 2 and 3 emit 4 samples each
+        let itl = s.take_itl();
+        assert_eq!(itl.len(), 8);
+        assert!(itl.iter().all(|&x| x >= 0.0));
+        assert!(s.take_itl().is_empty(), "take_itl drains");
     }
 }

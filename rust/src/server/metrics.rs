@@ -1,5 +1,6 @@
-//! Serving metrics registry: request counters, TTFT / end-to-end latency
-//! distributions, token throughput, reactor intake depth, cancellation and
+//! Serving metrics registry: request counters, TTFT / inter-token /
+//! end-to-end latency distributions, token throughput, reactor intake
+//! depth, cancellation and
 //! post-shutdown rejection counters, and the runtime transfer counters
 //! (upload/download volume, incremental-gather traffic). Exported over the
 //! wire via `op:stats`.
@@ -31,6 +32,11 @@ pub struct Metrics {
     pub queue_s: Samples,
     pub ttft_s: Samples,
     pub total_s: Samples,
+    /// Per-step inter-token latency samples (seconds per token), recorded
+    /// at every decode-quantum completion across ALL sequences — unlike the
+    /// per-request means, this distribution exposes the stalls one long
+    /// prefill inflicts on concurrently decoding sequences.
+    pub itl_s: Samples,
     pub gen_tokens: Meter,
     pub prompt_tokens: u64,
 }
@@ -50,6 +56,7 @@ impl Default for Metrics {
             queue_s: Samples::new(),
             ttft_s: Samples::new(),
             total_s: Samples::new(),
+            itl_s: Samples::new(),
             gen_tokens: Meter::default(),
             prompt_tokens: 0,
         }
@@ -90,6 +97,7 @@ impl Metrics {
     pub fn to_json(&self) -> Json {
         let uptime = self.started.elapsed().as_secs_f64();
         let intake_max = if self.intake_depth.is_empty() { 0.0 } else { self.intake_depth.max() };
+        let itl_max = if self.itl_s.is_empty() { 0.0 } else { self.itl_s.max() };
         Json::from_pairs(vec![
             ("uptime_s", uptime.into()),
             ("submitted", (self.submitted as i64).into()),
@@ -111,6 +119,9 @@ impl Metrics {
             ("latency_ms_p50", (self.total_s.p50() * 1e3).into()),
             ("latency_ms_p95", (self.total_s.p95() * 1e3).into()),
             ("queue_ms_p95", (self.queue_s.p95() * 1e3).into()),
+            ("itl_ms_p50", (self.itl_s.p50() * 1e3).into()),
+            ("itl_ms_p95", (self.itl_s.p95() * 1e3).into()),
+            ("itl_ms_max", (itl_max * 1e3).into()),
         ])
     }
 }
@@ -233,6 +244,21 @@ mod tests {
         assert_eq!(j.usize_of("errored"), Some(0));
         // cancellations do not pollute the success latency distributions
         assert_eq!(m.ttft_s.len(), 1);
+    }
+
+    #[test]
+    fn itl_distribution_exports_in_ms() {
+        let mut m = Metrics::default();
+        for &s in &[0.002, 0.004, 0.010, 0.003] {
+            m.itl_s.record(s);
+        }
+        let j = m.to_json();
+        assert!(j.f64_of("itl_ms_p50").unwrap() >= 2.0);
+        assert!(j.f64_of("itl_ms_p95").unwrap() <= 10.0 + 1e-9);
+        assert_eq!(j.f64_of("itl_ms_max"), Some(10.0));
+        // empty registry exports 0, not -inf
+        let j0 = Metrics::default().to_json();
+        assert_eq!(j0.f64_of("itl_ms_max"), Some(0.0));
     }
 
     #[test]

@@ -11,11 +11,17 @@
 //! is a [`Reactor`]: every round it drains the intake channel to empty
 //! (burst admission no longer waits on device steps), rejects generate
 //! requests once `op:shutdown` was accepted, then takes one scheduler step
-//! (reap cancelled / admit / advance — see [`batcher`]).
+//! (reap completions / reap cancelled / admit / submit — see [`batcher`]).
 //!
 //! Threads: N connection reader/writer pairs + 1 executor that owns the
-//! `Runtime` (PJRT handles are not `Send`; the executor constructs it on
-//! its own thread and everything device-related stays there).
+//! `Runtime` and drives the scheduler, plus (with `max_inflight_calls > 1`)
+//! a scoped [`CallExecutor`] worker pool the executor ships device calls
+//! to. The `Runtime` is `Sync` — workers borrow it directly — and each
+//! in-flight call OWNS the sequence it advances, so device-tier accounting
+//! never races (split-phase submit/reap, PERF.md "Async overlap"). The
+//! cross-request prefix cache is the one deliberately single-threaded
+//! piece: adoption and snapshot publishing both happen on the executor
+//! thread (publishing at reap), so it needs no locking.
 
 pub mod batcher;
 pub mod metrics;
@@ -28,17 +34,19 @@ use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 use std::rc::Rc;
 use std::sync::mpsc::{self, Receiver, Sender};
+use std::time::Duration;
 
 use anyhow::Result;
 
-use batcher::{CancelToken, Decoded, Scheduler, SeqBackend};
+use batcher::{CallDone, CallOut, CancelToken, Decoded, Scheduler, SeqBackend, Submitted, Ticket};
 pub use reactor::{Reactor, Work};
 
 use crate::cache::make_policy;
 use crate::config::ServeConfig;
 use crate::engine::{Engine, EngineOpts};
 use crate::runtime::{
-    admission_ok, seq_footprint_bytes, KvArena, PrefixCache, PrefixSnapshot, Runtime, RuntimeOpts,
+    admission_ok, seq_footprint_bytes, CallExecutor, KvArena, PrefixCache, PrefixSnapshot, Runtime,
+    RuntimeOpts,
 };
 
 /// The determinism domain of a frozen prefix: the ladder (or any registered)
@@ -57,6 +65,10 @@ pub struct ServedSeq<'rt> {
     engine: Engine<'rt>,
     ingested: Vec<i32>,
 }
+
+/// What an in-flight device call carries back through the worker pool: the
+/// sequence it owned plus the call's outcome.
+pub type SeqCall<'rt> = (ServedSeq<'rt>, Result<CallOut>);
 
 /// Real backend: each sequence is an [`Engine`] (wrapped in [`ServedSeq`])
 /// with its own page tables in the shared paged-KV arena and a fresh policy
@@ -91,6 +103,10 @@ pub struct EngineBackend<'rt> {
     /// evicts the rest).
     staging_cap: usize,
     pool_budget: Option<usize>,
+    /// Worker pool for split-phase device calls ([`Self::with_executor`]).
+    /// `None` = the synchronous path: the scheduler's default submit shims
+    /// run every call inline on the executor thread.
+    executor: Option<CallExecutor<'rt, SeqCall<'rt>>>,
 }
 
 impl<'rt> EngineBackend<'rt> {
@@ -138,13 +154,44 @@ impl<'rt> EngineBackend<'rt> {
             image_bytes,
             staging_cap,
             pool_budget,
+            executor: None,
         })
+    }
+
+    /// Enable split-phase dispatch: prefill/decode calls are shipped whole —
+    /// the [`ServedSeq`] moves into the job — onto `ex`'s worker pool and
+    /// come back through [`SeqBackend::reap`]. The pool size is the
+    /// in-flight capacity the scheduler sees. The `Runtime` is `Sync`, so
+    /// workers drive it concurrently; its device/scratch tiers serialize
+    /// internally (lock order: device before scratch).
+    pub fn with_executor(mut self, ex: CallExecutor<'rt, SeqCall<'rt>>) -> Self {
+        self.executor = Some(ex);
+        self
     }
 
     /// Handle to the backend's prefix cache (the executor's stats hook
     /// reads counters through it).
     pub fn prefix_handle(&self) -> Rc<RefCell<PrefixCache>> {
         self.prefix.clone()
+    }
+
+    /// Publish a sequence's post-chunk KV state into the prefix tree at
+    /// FULL-window boundaries only: an adopter re-chunks from the same
+    /// offsets, so its eviction cadence (and therefore its ladder state) is
+    /// identical to a cold prefill. `insert_with` freezes the engine's
+    /// pages only if the tree actually wants this boundary.
+    ///
+    /// Runs on the executor thread exclusively — after an inline prefill,
+    /// or at reap for a pool-dispatched one (the prefix cache is the
+    /// single-threaded piece of the backend, so in-flight jobs never touch
+    /// it).
+    fn publish_prefix(&self, seq: &mut ServedSeq<'rt>) {
+        let w = self.cfg.window;
+        if !seq.ingested.is_empty() && seq.ingested.len() % w == 0 {
+            let engine = &mut seq.engine;
+            let mut prefix = self.prefix.borrow_mut();
+            prefix.insert_with(&seq.ingested, w, || PrefixSnapshot::freeze(&mut engine.cache));
+        }
     }
 }
 
@@ -192,23 +239,80 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
     fn prefill_chunk(&mut self, seq: &mut ServedSeq<'rt>, chunk: &[i32]) -> Result<()> {
         seq.engine.prefill(chunk)?;
         seq.ingested.extend_from_slice(chunk);
-        // publish the post-chunk state at FULL-window boundaries only: an
-        // adopter re-chunks from the same offsets, so its eviction cadence
-        // (and therefore its ladder state) is identical to a cold prefill.
-        // insert_with freezes the engine's pages only if the tree actually
-        // wants this boundary.
-        let w = self.cfg.window;
-        if !seq.ingested.is_empty() && seq.ingested.len() % w == 0 {
-            let engine = &mut seq.engine;
-            let mut prefix = self.prefix.borrow_mut();
-            prefix.insert_with(&seq.ingested, w, || PrefixSnapshot::freeze(&mut engine.cache));
-        }
+        self.publish_prefix(seq);
         Ok(())
     }
 
     fn decode(&mut self, seq: &mut ServedSeq<'rt>, n: usize) -> Result<Decoded> {
         let (tokens, t_first) = seq.engine.generate_timed(n)?;
         Ok(Decoded { tokens, t_first })
+    }
+
+    fn inflight_capacity(&self) -> usize {
+        self.executor.as_ref().map_or(1, |ex| ex.workers())
+    }
+
+    /// Split-phase prefill: the whole [`ServedSeq`] moves into the job. The
+    /// job runs engine ingestion only; prefix-tree publishing (non-`Send`)
+    /// happens when the completion is reaped on the executor thread.
+    fn submit_prefill(
+        &mut self,
+        ticket: Ticket,
+        mut seq: ServedSeq<'rt>,
+        chunk: &[i32],
+    ) -> Submitted<ServedSeq<'rt>> {
+        if let Some(ex) = self.executor.as_mut() {
+            let chunk = chunk.to_vec();
+            ex.submit(ticket, move || {
+                let result = seq.engine.prefill(&chunk).map(|()| CallOut::Prefill);
+                if result.is_ok() {
+                    seq.ingested.extend_from_slice(&chunk);
+                }
+                (seq, result)
+            });
+            return Submitted::InFlight;
+        }
+        let result = self.prefill_chunk(&mut seq, chunk).map(|()| CallOut::Prefill);
+        Submitted::Done(CallDone { ticket, seq, result })
+    }
+
+    fn submit_decode(
+        &mut self,
+        ticket: Ticket,
+        mut seq: ServedSeq<'rt>,
+        n: usize,
+    ) -> Submitted<ServedSeq<'rt>> {
+        if let Some(ex) = self.executor.as_mut() {
+            ex.submit(ticket, move || {
+                let result = seq
+                    .engine
+                    .generate_timed(n)
+                    .map(|(tokens, t_first)| CallOut::Decode(Decoded { tokens, t_first }));
+                (seq, result)
+            });
+            return Submitted::InFlight;
+        }
+        let result = self.decode(&mut seq, n).map(CallOut::Decode);
+        Submitted::Done(CallDone { ticket, seq, result })
+    }
+
+    fn reap(&mut self, wait: Option<Duration>) -> Vec<CallDone<ServedSeq<'rt>>> {
+        let Some(ex) = self.executor.as_mut() else {
+            return Vec::new();
+        };
+        let mut done: Vec<CallDone<ServedSeq<'rt>>> = ex
+            .reap(wait)
+            .into_iter()
+            .map(|c| CallDone { ticket: c.ticket, seq: c.out.0, result: c.out.1 })
+            .collect();
+        // deferred prefix publishing for pool-dispatched prefills (see
+        // publish_prefix: the prefix cache lives on this thread only)
+        for c in &mut done {
+            if matches!(c.result, Ok(CallOut::Prefill)) {
+                self.publish_prefix(&mut c.seq);
+            }
+        }
+        done
     }
 
     /// Admission control by real memory pressure: arena pages PLUS the
@@ -343,15 +447,24 @@ fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::js
     // unconditional: clears any stale budget from a previous run_server in
     // the same process when the new config says unlimited (0)
     KvArena::global().set_budget((cfg.kv_pool_bytes > 0).then_some(cfg.kv_pool_bytes));
-    let backend = EngineBackend::new(&rt, cfg.clone())?;
-    let prefix = backend.prefix_handle();
-    let sched =
-        Scheduler::new(backend, cfg.window, cfg.decode_quantum, cfg.max_active, cfg.max_queue);
-    let reactor = Reactor::new(sched, cfg.max_new_tokens);
-    Ok(reactor.run(&rx, |j| {
-        metrics::export_runtime(j, &rt.stats());
-        metrics::export_arena(j, &KvArena::global().stats());
-        let p = prefix.borrow();
-        metrics::export_prefix(j, &p.stats(), p.resident_bytes());
-    }))
+    // the whole serving loop runs under a thread scope so the in-flight
+    // call pool (when enabled) can borrow the Runtime directly; dropping
+    // the scheduler (and with it the backend's executor) at the end of the
+    // closure is what lets the scope join its workers
+    std::thread::scope(|scope| {
+        let mut backend = EngineBackend::new(&rt, cfg.clone())?;
+        if cfg.max_inflight_calls > 1 {
+            backend = backend.with_executor(CallExecutor::new(scope, cfg.max_inflight_calls));
+        }
+        let prefix = backend.prefix_handle();
+        let sched =
+            Scheduler::new(backend, cfg.window, cfg.decode_quantum, cfg.max_active, cfg.max_queue);
+        let reactor = Reactor::new(sched, cfg.max_new_tokens);
+        Ok(reactor.run(&rx, |j| {
+            metrics::export_runtime(j, &rt.stats());
+            metrics::export_arena(j, &KvArena::global().stats());
+            let p = prefix.borrow();
+            metrics::export_prefix(j, &p.stats(), p.resident_bytes());
+        }))
+    })
 }

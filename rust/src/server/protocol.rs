@@ -19,13 +19,16 @@
 //!
 //! ```text
 //! {"id":1,"ok":true,"text":"w84 w85 ...","tokens":[...],"ttft_ms":..,
-//!  "total_ms":..,"prompt_tokens":N,"prefix_tokens":P,"gen_tokens":M}
+//!  "itl_ms":..,"total_ms":..,"prompt_tokens":N,"prefix_tokens":P,
+//!  "gen_tokens":M}
 //! {"id":3,"ok":true,"stats":{...}}
 //! {"id":2,"ok":false,"error":"..."}
 //! ```
 //!
 //! `prefix_tokens` reports how many leading prompt tokens were served from
-//! the prefix cache (0 = cold prefill).
+//! the prefix cache (0 = cold prefill). `itl_ms` is the request's mean
+//! inter-token latency after the first token (0 when at most one token was
+//! generated).
 //!
 //! Connection semantics: closing (or half-closing) the connection's write
 //! side ABANDONS all of that connection's in-flight requests — the server
@@ -83,12 +86,14 @@ pub fn parse_request(line: &str) -> Result<Request> {
     Ok(Request { id, op })
 }
 
+#[allow(clippy::too_many_arguments)]
 pub fn ok_generate(
     id: i64,
     tokens: &[i32],
     prompt_tokens: usize,
     prefix_tokens: usize,
     ttft_ms: f64,
+    itl_ms: f64,
     total_ms: f64,
 ) -> String {
     Json::from_pairs(vec![
@@ -100,6 +105,7 @@ pub fn ok_generate(
         ("prefix_tokens", prefix_tokens.into()),
         ("gen_tokens", tokens.len().into()),
         ("ttft_ms", ttft_ms.into()),
+        ("itl_ms", itl_ms.into()),
         ("total_ms", total_ms.into()),
     ])
     .to_string()
@@ -168,11 +174,12 @@ mod tests {
 
     #[test]
     fn responses_are_valid_json() {
-        let s = ok_generate(3, &[20, 21], 10, 4, 1.5, 8.25);
+        let s = ok_generate(3, &[20, 21], 10, 4, 1.5, 2.25, 8.25);
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.bool_of("ok"), Some(true));
         assert_eq!(j.usize_of("gen_tokens"), Some(2));
         assert_eq!(j.usize_of("prefix_tokens"), Some(4));
+        assert_eq!(j.f64_of("itl_ms"), Some(2.25));
         let e = err_response(4, "boom \"quoted\"");
         assert_eq!(Json::parse(&e).unwrap().str_of("error"), Some("boom \"quoted\""));
     }

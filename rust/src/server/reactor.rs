@@ -2,11 +2,14 @@
 //!
 //! One reactor round is: **intake** (drain the request channel to empty —
 //! burst depth no longer scales with device-step time), then **one
-//! scheduler step** (reap cancelled / admit / advance, see
-//! [`super::batcher`]), then **delivery** of everything that exited the
-//! scheduler. The reactor is generic over [`SeqBackend`] so the whole
-//! serving control path — including shutdown and cancellation semantics —
-//! is testable and benchable without a PJRT runtime.
+//! scheduler step** (reap completions / reap cancelled / admit / submit,
+//! see [`super::batcher`]), then **delivery** of everything that exited the
+//! scheduler. With a split-phase backend the step's submit phase returns
+//! while device calls are still running, so intake keeps draining (and
+//! decoders keep being fed) underneath a long prefill. The reactor is
+//! generic over [`SeqBackend`] so the whole serving control path —
+//! including shutdown and cancellation semantics — is testable and
+//! benchable without a PJRT runtime.
 //!
 //! Admission back-pressure is the backend's: the admit phase consults
 //! [`SeqBackend::can_admit`] whenever the active set has headroom, where
@@ -92,6 +95,9 @@ impl<B: SeqBackend> Reactor<B> {
         for f in self.sched.step() {
             self.deliver(f);
         }
+        for itl in self.sched.take_itl() {
+            self.metrics.itl_s.record(itl);
+        }
         !self.shutdown || self.sched.has_work()
     }
 
@@ -167,14 +173,25 @@ impl<B: SeqBackend> Reactor<B> {
         }
         let resp = match &f.error {
             Some(e) => err_response(req_id, e),
-            None => ok_generate(
-                req_id,
-                &f.tokens,
-                f.prompt_tokens,
-                f.prefix_tokens,
-                f.ttft_s * 1e3,
-                f.total_s * 1e3,
-            ),
+            None => {
+                // steady-state decode speed: time after the first token,
+                // averaged over the remaining tokens (0 when ≤ 1 token)
+                let n = f.tokens.len();
+                let itl_ms = if n > 1 {
+                    (f.total_s - f.ttft_s).max(0.0) * 1e3 / (n - 1) as f64
+                } else {
+                    0.0
+                };
+                ok_generate(
+                    req_id,
+                    &f.tokens,
+                    f.prompt_tokens,
+                    f.prefix_tokens,
+                    f.ttft_s * 1e3,
+                    itl_ms,
+                    f.total_s * 1e3,
+                )
+            }
         };
         let _ = reply.send(resp);
     }

@@ -9,9 +9,9 @@
 //! execution report "backend unavailable" — integration tests gate on
 //! artifacts and skip cleanly in stub builds.
 
-use std::cell::RefCell;
 use std::fmt;
 use std::path::Path;
+use std::sync::Mutex;
 
 pub type Result<T> = std::result::Result<T, Error>;
 
@@ -77,7 +77,7 @@ pub struct PjRtClient;
 /// so the residency tier can keep K/V state alive across program calls. The
 /// partial-update surface models the real bindings' aliased update path.
 pub struct PjRtBuffer {
-    data: RefCell<Vec<u8>>,
+    data: Mutex<Vec<u8>>,
     dims: Vec<usize>,
     elem_size: usize,
 }
@@ -110,7 +110,7 @@ impl PjRtClient {
         for (x, chunk) in data.iter().zip(bytes.chunks_exact_mut(T::SIZE)) {
             x.write_le(chunk);
         }
-        Ok(PjRtBuffer { data: RefCell::new(bytes), dims: dims.to_vec(), elem_size: T::SIZE })
+        Ok(PjRtBuffer { data: Mutex::new(bytes), dims: dims.to_vec(), elem_size: T::SIZE })
     }
 
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
@@ -154,12 +154,12 @@ impl PjRtLoadedExecutable {
 impl PjRtBuffer {
     /// Bytes this buffer occupies on the (stub) device.
     pub fn on_device_size_bytes(&self) -> usize {
-        self.data.borrow().len()
+        self.data.lock().unwrap().len()
     }
 
     /// Element count (device size / element size).
     pub fn element_count(&self) -> usize {
-        self.data.borrow().len() / self.elem_size.max(1)
+        self.data.lock().unwrap().len() / self.elem_size.max(1)
     }
 
     pub fn dims(&self) -> &[usize] {
@@ -182,7 +182,7 @@ impl PjRtBuffer {
                 self.elem_size
             )));
         }
-        let data = self.data.borrow();
+        let data = self.data.lock().unwrap();
         let lo = elem_offset * T::SIZE;
         let hi = lo + out.len() * T::SIZE;
         if hi > data.len() {
@@ -213,7 +213,7 @@ impl PjRtBuffer {
                 self.elem_size
             )));
         }
-        let mut data = self.data.borrow_mut();
+        let mut data = self.data.lock().unwrap();
         let lo = elem_offset * T::SIZE;
         let hi = lo + src.len() * T::SIZE;
         if hi > data.len() {
@@ -232,7 +232,7 @@ impl PjRtBuffer {
     /// unavailable in the stub, so execution *outputs* never exist here;
     /// host-sourced buffers read back fine.)
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        Ok(Literal { data: self.data.borrow().clone(), elem_size: self.elem_size })
+        Ok(Literal { data: self.data.lock().unwrap().clone(), elem_size: self.elem_size })
     }
 }
 
