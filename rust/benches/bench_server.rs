@@ -9,22 +9,29 @@
 //! serving scenario (one-round burst admission, post-shutdown rejection,
 //! mid-decode cancellation page release, plus the split-phase overlap
 //! record — decoder inter-token latency while a long multi-window prefill
-//! is in flight, sync vs submit/reap; writes `BENCH_serving.json`) — see
-//! PERF.md.
+//! is in flight, sync vs submit/reap; writes `BENCH_serving.json`), and the
+//! chaos serving scenario (seeded transient-fault injection at a 10% rate
+//! must leave every sequence byte-identical to the fault-free run with zero
+//! quarantines at the default retry budget, and one injected worker panic
+//! mid-decode must kill exactly the affected sequence; writes
+//! `BENCH_chaos.json`) — see PERF.md.
 //!
 //! Set `LACACHE_BENCH_SMOKE=1` (exactly) for the short CI mode; `BENCH_JSON`
-//! / `BENCH_SERVING_JSON` override the JSON output paths.
+//! / `BENCH_SERVING_JSON` / `BENCH_CHAOS_JSON` override the JSON output
+//! paths, `LACACHE_FAULT_SEED` / `LACACHE_FAULT_RATE` the chaos plan.
 
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 use std::time::Duration;
 
 use lacache::cache::{make_policy, CachePolicy};
 use lacache::runtime::{
-    admission_ok, seq_footprint_bytes, Acquired, CallExecutor, DeviceTier, KvArena, KvCache,
-    PrefixCache, PrefixSnapshot, ScratchPool,
+    admission_ok, seq_footprint_bytes, Acquired, CallError, CallExecutor, Completion, DeviceTier,
+    KvArena, KvCache, PrefixCache, PrefixSnapshot, ScratchPool,
 };
 use lacache::server::batcher::{
-    CallDone, CallOut, CancelToken, Decoded, Scheduler, SeqBackend, Submitted, Ticket,
+    CallDone, CallOut, CancelToken, Decoded, FaultStats, Finished, Scheduler, SeqBackend,
+    Submitted, Ticket,
 };
 use lacache::server::protocol::{ok_generate, parse_request, SHUTTING_DOWN};
 use lacache::server::{Reactor, Work};
@@ -87,6 +94,7 @@ fn main() -> anyhow::Result<()> {
     device_residency_scenario(smoke)?;
     burst_intake_scenario(smoke)?;
     shared_prefix_scenario(smoke)?;
+    chaos_scenario(smoke)?;
     Ok(())
 }
 
@@ -559,7 +567,7 @@ impl SeqBackend for SimBackend<'_> {
             return Submitted::InFlight;
         }
         let result = self.prefill_chunk(&mut seq, chunk).map(|()| CallOut::Prefill);
-        Submitted::Done(CallDone { ticket, seq, result })
+        Submitted::Done(CallDone { ticket, seq: Some(seq), result })
     }
     fn submit_decode(&mut self, ticket: Ticket, mut seq: SimSeq, n: usize) -> Submitted<SimSeq> {
         if let Some(ex) = self.ex.as_mut() {
@@ -571,17 +579,27 @@ impl SeqBackend for SimBackend<'_> {
             return Submitted::InFlight;
         }
         let result = self.decode(&mut seq, n).map(CallOut::Decode);
-        Submitted::Done(CallDone { ticket, seq, result })
+        Submitted::Done(CallDone { ticket, seq: Some(seq), result })
     }
     fn reap(&mut self, wait: Option<Duration>) -> Vec<CallDone<SimSeq>> {
         match self.ex.as_mut() {
-            Some(ex) => ex
-                .reap(wait)
-                .into_iter()
-                .map(|c| CallDone { ticket: c.ticket, seq: c.out.0, result: c.out.1 })
-                .collect(),
+            Some(ex) => ex.reap(wait).into_iter().map(pool_call_done).collect(),
             None => Vec::new(),
         }
+    }
+}
+
+/// Map a worker-pool [`Completion`] to the scheduler's [`CallDone`]: a
+/// panicked job dropped its sequence state during unwind, so it comes back
+/// as `seq: None` with a structured fatal error.
+fn pool_call_done<S>(c: Completion<(S, anyhow::Result<CallOut>)>) -> CallDone<S> {
+    match c.out {
+        Ok((seq, result)) => CallDone { ticket: c.ticket, seq: Some(seq), result },
+        Err(panic) => CallDone {
+            ticket: c.ticket,
+            seq: None,
+            result: Err(CallError::fatal(format!("worker panic: {panic}"))),
+        },
     }
 }
 
@@ -688,6 +706,292 @@ fn overlap_scenario(smoke: bool) -> anyhow::Result<Json> {
         ("overlap_over_baseline_p95", ratio.into()),
         ("sync_itl_ms_p95", sync_p95.into()),
     ]))
+}
+
+/// In-flight call output for the chaos backend.
+type ChaosOut = (ChaosSeq, anyhow::Result<CallOut>);
+
+struct ChaosSeq {
+    id: u64,
+    emitted: usize,
+    /// Per-sequence fault-draw counter: keys [`xla::fault::check_keyed`] so
+    /// fault placement is a pure function of (seed, site, sequence, op) —
+    /// independent of thread interleaving across the worker pool.
+    draws: u64,
+    /// In the panic record, the one sequence whose decode worker panics.
+    doomed: bool,
+}
+
+/// Split-phase worker-pool backend for the chaos scenario: deterministic
+/// token stream per sequence, with seeded fault injection BEFORE any state
+/// mutation — a faulted call leaves `emitted` untouched, so a retried
+/// quantum reproduces exactly the tokens the fault-free run emits.
+struct ChaosBackend<'env> {
+    ex: CallExecutor<'env, ChaosOut>,
+    next_id: u64,
+    decode_sleep: Duration,
+    /// `recover` hook invocations (one per retry the scheduler performs).
+    recoveries: u64,
+    /// Doom the first-admitted sequence (the panic record arms the
+    /// `chaos-panic` site; without that rule the flag is inert).
+    doom_leader: bool,
+}
+
+fn chaos_inject(site: &str, seq: &mut ChaosSeq) -> anyhow::Result<()> {
+    seq.draws += 1;
+    if let Some(kind) = xla::fault::check_keyed(site, (seq.id << 24) | seq.draws) {
+        if let Some(msg) = xla::fault::apply(site, kind) {
+            anyhow::bail!(msg);
+        }
+    }
+    Ok(())
+}
+
+fn chaos_prefill(seq: &mut ChaosSeq, n: usize) -> anyhow::Result<()> {
+    chaos_inject("chaos-prefill", seq)?;
+    std::thread::sleep(Duration::from_micros(30 * n as u64));
+    Ok(())
+}
+
+fn chaos_decode(seq: &mut ChaosSeq, n: usize, sleep: Duration) -> anyhow::Result<Decoded> {
+    if seq.doomed && seq.emitted > 0 {
+        // mid-decode (the first quantum already emitted): the panic record's
+        // plan makes this site panic the worker thread
+        if let Some(kind) = xla::fault::check("chaos-panic") {
+            let _ = xla::fault::apply("chaos-panic", kind);
+        }
+    }
+    chaos_inject("chaos-decode", seq)?;
+    std::thread::sleep(sleep);
+    let tokens: Vec<i32> =
+        (0..n).map(|i| (seq.id as i32) * 1000 + (seq.emitted + i) as i32).collect();
+    seq.emitted += n;
+    Ok(Decoded { tokens, t_first: Some(std::time::Instant::now()) })
+}
+
+impl SeqBackend for ChaosBackend<'_> {
+    type Seq = ChaosSeq;
+    fn new_seq(&mut self) -> anyhow::Result<ChaosSeq> {
+        let id = self.next_id;
+        self.next_id += 1;
+        Ok(ChaosSeq { id, emitted: 0, draws: 0, doomed: self.doom_leader && id == 0 })
+    }
+    fn prefill_chunk(&mut self, s: &mut ChaosSeq, c: &[i32]) -> anyhow::Result<()> {
+        chaos_prefill(s, c.len())
+    }
+    fn decode(&mut self, s: &mut ChaosSeq, n: usize) -> anyhow::Result<Decoded> {
+        chaos_decode(s, n, self.decode_sleep)
+    }
+    fn inflight_capacity(&self) -> usize {
+        self.ex.workers()
+    }
+    fn recover(&mut self, _seq: &mut ChaosSeq, _pos: usize) {
+        self.recoveries += 1;
+    }
+    fn submit_prefill(
+        &mut self,
+        ticket: Ticket,
+        mut seq: ChaosSeq,
+        chunk: &[i32],
+    ) -> Submitted<ChaosSeq> {
+        let n = chunk.len();
+        self.ex.submit(ticket, move || {
+            let result = chaos_prefill(&mut seq, n).map(|()| CallOut::Prefill);
+            (seq, result)
+        });
+        Submitted::InFlight
+    }
+    fn submit_decode(&mut self, ticket: Ticket, mut seq: ChaosSeq, n: usize) -> Submitted<ChaosSeq> {
+        let sleep = self.decode_sleep;
+        self.ex.submit(ticket, move || {
+            let result = chaos_decode(&mut seq, n, sleep).map(CallOut::Decode);
+            (seq, result)
+        });
+        Submitted::InFlight
+    }
+    fn reap(&mut self, wait: Option<Duration>) -> Vec<CallDone<ChaosSeq>> {
+        self.ex.reap(wait).into_iter().map(pool_call_done).collect()
+    }
+}
+
+/// Drive one chaos workload to completion under whatever fault plan is
+/// installed. Returns the finish records, decoder ITL samples, the
+/// scheduler's fault counters, and the recovery-hook count.
+fn chaos_run(
+    n_seqs: usize,
+    prompt_len: usize,
+    max_new: usize,
+    workers: usize,
+    doom_leader: bool,
+) -> anyhow::Result<(Vec<Finished>, Samples, FaultStats, u64)> {
+    std::thread::scope(|scope| {
+        let backend = ChaosBackend {
+            ex: CallExecutor::new(scope, workers),
+            next_id: 0,
+            decode_sleep: Duration::from_millis(2),
+            recoveries: 0,
+            doom_leader,
+        };
+        let mut s = Scheduler::new(backend, 64, 4, n_seqs, 2 * n_seqs);
+        for _ in 0..n_seqs {
+            s.submit(vec![1; prompt_len], max_new, CancelToken::new())?;
+        }
+        let mut done = Vec::new();
+        let mut itl = Samples::new();
+        let t0 = std::time::Instant::now();
+        while s.has_work() && t0.elapsed() < Duration::from_secs(60) {
+            done.extend(s.step());
+            for x in s.take_itl() {
+                itl.record(x);
+            }
+        }
+        anyhow::ensure!(done.len() == n_seqs, "chaos run finished {}/{n_seqs}", done.len());
+        anyhow::ensure!(s.inflight() == 0, "chaos run left calls in flight");
+        let stats = s.fault_stats();
+        let recoveries = s.backend().recoveries;
+        Ok((done, itl, stats, recoveries))
+    })
+}
+
+fn tokens_by_id(done: &[Finished]) -> BTreeMap<u64, Vec<i32>> {
+    done.iter().map(|f| (f.id, f.tokens.clone())).collect()
+}
+
+/// Chaos serving scenario (device-free, full split-phase scheduler +
+/// worker-pool path): the fault-injected fleet must be indistinguishable
+/// from the fault-free one except in latency.
+///
+/// 1. **Transient record**: a seeded plan injects transient faults at ~10%
+///    of prefill/decode calls. Every sequence must finish with tokens
+///    byte-identical to the fault-free run, `retries > 0` (faults actually
+///    landed), `quarantined == 0` at the DEFAULT retry budget, one
+///    `recover` (rebuild-from-arena) hook call per retry, and decoder ITL
+///    p95 within a recorded bound of the fault-free p95.
+/// 2. **Panic record**: one worker panic injected mid-decode (after the
+///    doomed sequence's first quantum) must quarantine exactly that
+///    sequence — structured `fatal` code, partial output kept — while every
+///    survivor still matches the fault-free tokens and the pool survives.
+///
+/// Emits machine-readable `BENCH_chaos.json` (path override:
+/// `BENCH_CHAOS_JSON`); `LACACHE_FAULT_SEED` / `LACACHE_FAULT_RATE`
+/// override the plan. Faults are drawn per (seed, site, sequence, op), so a
+/// given seed replays identically across runs and thread schedules.
+fn chaos_scenario(smoke: bool) -> anyhow::Result<()> {
+    use xla::fault::{self, FaultKind, FaultPlan};
+
+    let n_seqs = if smoke { 8usize } else { 16 };
+    let prompt_len = 96usize; // two prefill chunks at window 64
+    let quanta = if smoke { 6usize } else { 12 };
+    let max_new = quanta * 4;
+    let workers = 4usize;
+    let seed0: u64 = std::env::var("LACACHE_FAULT_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x1acac4e);
+    let rate: f64 = std::env::var("LACACHE_FAULT_RATE")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0.10);
+
+    // fault-free baseline: the ground-truth token streams
+    fault::install(None);
+    let (base_done, base_itl, base_stats, _) =
+        chaos_run(n_seqs, prompt_len, max_new, workers, false)?;
+    assert_eq!(base_stats.retries, 0);
+    assert!(base_done.iter().all(|f| f.error.is_none()), "fault-free run must be clean");
+    let expect = tokens_by_id(&base_done);
+
+    // transient record; a seed whose draws happen to land zero faults would
+    // make the asserts vacuous, so bump until at least one retry happened
+    // (each seed is still fully deterministic)
+    let mut seed = seed0;
+    let (f_done, f_itl, f_stats, recoveries) = loop {
+        fault::install(Some(
+            FaultPlan::new(seed)
+                .rule("chaos-prefill", FaultKind::Transient, rate)
+                .rule("chaos-decode", FaultKind::Transient, rate),
+        ));
+        let run = chaos_run(n_seqs, prompt_len, max_new, workers, false)?;
+        if run.2.retries > 0 {
+            break run;
+        }
+        println!("chaos: seed {seed} drew no faults at rate {rate}; bumping");
+        seed += 1;
+    };
+    fault::install(None);
+    for f in &f_done {
+        assert!(f.error.is_none(), "faulted run must fully recover, got: {:?}", f.error);
+    }
+    assert_eq!(
+        tokens_by_id(&f_done),
+        expect,
+        "recovered sequences must be byte-identical to the fault-free run"
+    );
+    assert_eq!(f_stats.quarantined, 0, "default retry budget must absorb a {rate} fault rate");
+    assert_eq!(recoveries, f_stats.retries, "every retry must run rebuild-from-arena recovery");
+    let base_p95_ms = base_itl.p95() * 1e3;
+    let f_p95_ms = f_itl.p95() * 1e3;
+    let itl_bound_ms = 10.0 * base_p95_ms.max(2.0) + 50.0;
+    assert!(
+        f_p95_ms <= itl_bound_ms,
+        "faulted decoder ITL p95 {f_p95_ms:.3} ms exceeds bound {itl_bound_ms:.3} ms \
+         (fault-free p95 {base_p95_ms:.3} ms)"
+    );
+
+    // panic record: one worker panic mid-decode kills only its sequence
+    fault::install(Some(FaultPlan::new(seed).rule("chaos-panic", FaultKind::Panic, 1.0)));
+    let (p_done, _, p_stats, _) = chaos_run(n_seqs, prompt_len, max_new, workers, true)?;
+    fault::install(None);
+    assert_eq!(p_stats.quarantined, 1, "exactly the doomed sequence must be quarantined");
+    let doomed: Vec<&Finished> = p_done.iter().filter(|f| f.error.is_some()).collect();
+    assert_eq!(doomed.len(), 1);
+    let d = doomed[0];
+    assert_eq!(d.code.as_deref(), Some("fatal"));
+    assert!(d.error.as_deref().unwrap_or("").contains("panic"), "error must name the panic");
+    let partial = d.tokens.len();
+    assert!(
+        partial > 0 && partial < max_new,
+        "panic landed mid-decode: partial output expected, got {partial}/{max_new} tokens"
+    );
+    let survivors = p_done.iter().filter(|f| f.error.is_none()).count();
+    assert_eq!(survivors, n_seqs - 1, "every other sequence must survive the worker panic");
+    for f in p_done.iter().filter(|f| f.error.is_none()) {
+        assert_eq!(Some(&f.tokens), expect.get(&f.id), "survivors must match fault-free output");
+    }
+
+    println!(
+        "\nchaos: {n_seqs} seqs x {prompt_len}+{max_new} tokens | seed {seed} rate {rate} | \
+         {} retries, {} recoveries, 0 quarantined, tokens identical | ITL p95 fault-free \
+         {base_p95_ms:.3} ms vs faulted {f_p95_ms:.3} ms (bound {itl_bound_ms:.1} ms) | panic: \
+         1 quarantined ({partial}-token partial), {survivors} survivors",
+        f_stats.retries, recoveries,
+    );
+
+    let out = Json::from_pairs(vec![
+        ("bench", "chaos_serving".into()),
+        ("smoke", smoke.into()),
+        ("sequences", n_seqs.into()),
+        ("prompt_tokens", prompt_len.into()),
+        ("max_new_tokens", max_new.into()),
+        ("fault_seed", (seed as i64).into()),
+        ("fault_rate", rate.into()),
+        ("retries", (f_stats.retries as i64).into()),
+        ("recoveries", (recoveries as i64).into()),
+        ("quarantined", (f_stats.quarantined as i64).into()),
+        ("tokens_identical_to_fault_free", true.into()),
+        ("itl_ms_p50_fault_free", (base_itl.p50() * 1e3).into()),
+        ("itl_ms_p95_fault_free", base_p95_ms.into()),
+        ("itl_ms_p50_faulted", (f_itl.p50() * 1e3).into()),
+        ("itl_ms_p95_faulted", f_p95_ms.into()),
+        ("itl_ms_p95_bound", itl_bound_ms.into()),
+        ("panic_quarantined", (p_stats.quarantined as i64).into()),
+        ("panic_partial_tokens", partial.into()),
+        ("panic_survivors", survivors.into()),
+    ]);
+    let path = std::env::var("BENCH_CHAOS_JSON").unwrap_or_else(|_| "BENCH_chaos.json".into());
+    std::fs::write(&path, out.to_string() + "\n")?;
+    println!("wrote {path}");
+    Ok(())
 }
 
 /// Device-free sequence backend over a real paged-KV arena: prefill appends

@@ -52,6 +52,15 @@ pub struct ServeConfig {
     /// pool of that size, so one long prefill no longer stalls concurrently
     /// decoding sequences.
     pub max_inflight_calls: usize,
+    /// Retry budget per device call: a call failing with a retryable error
+    /// (transient / device-lost) is re-submitted up to this many times after
+    /// rebuild-from-arena recovery; exhaustion quarantines just that
+    /// sequence with a structured error. 0 disables retries.
+    pub call_retries: usize,
+    /// Base backoff (ms) before the first retry; doubles per attempt
+    /// (non-blocking — the sequence sits out submit rounds while the rest
+    /// of the fleet keeps decoding).
+    pub retry_backoff_ms: usize,
 }
 
 impl Default for ServeConfig {
@@ -71,6 +80,8 @@ impl Default for ServeConfig {
             device_pool_bytes: 256 << 20,
             prefix_pool_bytes: 64 << 20,
             max_inflight_calls: 1,
+            call_retries: 4,
+            retry_backoff_ms: 5,
         }
     }
 }
@@ -95,6 +106,8 @@ impl ServeConfig {
             device_pool_bytes: j.usize_of("device_pool_bytes").unwrap_or(d.device_pool_bytes),
             prefix_pool_bytes: j.usize_of("prefix_pool_bytes").unwrap_or(d.prefix_pool_bytes),
             max_inflight_calls: j.usize_of("max_inflight_calls").unwrap_or(d.max_inflight_calls),
+            call_retries: j.usize_of("call_retries").unwrap_or(d.call_retries),
+            retry_backoff_ms: j.usize_of("retry_backoff_ms").unwrap_or(d.retry_backoff_ms),
         })
     }
 
@@ -128,6 +141,8 @@ impl ServeConfig {
         cfg.device_pool_bytes = args.usize_or("device-pool-bytes", cfg.device_pool_bytes);
         cfg.prefix_pool_bytes = args.usize_or("prefix-pool-bytes", cfg.prefix_pool_bytes);
         cfg.max_inflight_calls = args.usize_or("max-inflight-calls", cfg.max_inflight_calls);
+        cfg.call_retries = args.usize_or("call-retries", cfg.call_retries);
+        cfg.retry_backoff_ms = args.usize_or("retry-backoff-ms", cfg.retry_backoff_ms);
         Ok(cfg)
     }
 
@@ -147,6 +162,8 @@ impl ServeConfig {
             ("device_pool_bytes", self.device_pool_bytes.into()),
             ("prefix_pool_bytes", self.prefix_pool_bytes.into()),
             ("max_inflight_calls", self.max_inflight_calls.into()),
+            ("call_retries", self.call_retries.into()),
+            ("retry_backoff_ms", self.retry_backoff_ms.into()),
         ])
     }
 }
@@ -209,6 +226,8 @@ mod tests {
         assert_eq!(back.device_pool_bytes, 256 << 20);
         assert_eq!(back.prefix_pool_bytes, 64 << 20);
         assert_eq!(back.max_inflight_calls, 1, "split-phase dispatch defaults to off");
+        assert_eq!(back.call_retries, 4);
+        assert_eq!(back.retry_backoff_ms, 5);
     }
 
     #[test]
@@ -233,6 +252,10 @@ mod tests {
                 "4194304",
                 "--max-inflight-calls",
                 "3",
+                "--call-retries",
+                "7",
+                "--retry-backoff-ms",
+                "20",
             ]
             .iter()
             .map(|s| s.to_string())
@@ -249,6 +272,8 @@ mod tests {
         assert_eq!(cfg.device_pool_bytes, 2 << 20);
         assert_eq!(cfg.prefix_pool_bytes, 4 << 20);
         assert_eq!(cfg.max_inflight_calls, 3);
+        assert_eq!(cfg.call_retries, 7);
+        assert_eq!(cfg.retry_backoff_ms, 20);
     }
 
     #[test]
@@ -262,6 +287,8 @@ mod tests {
             device_pool_bytes: 0,
             prefix_pool_bytes: 0,
             max_inflight_calls: 4,
+            call_retries: 0,
+            retry_backoff_ms: 50,
             ..Default::default()
         };
         let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
@@ -271,6 +298,8 @@ mod tests {
         assert_eq!(back.device_pool_bytes, 0, "0 (residency disabled) must round-trip");
         assert_eq!(back.prefix_pool_bytes, 0, "0 (prefix cache disabled) must round-trip");
         assert_eq!(back.max_inflight_calls, 4, "in-flight capacity must round-trip");
+        assert_eq!(back.call_retries, 0, "0 (retries disabled) must round-trip");
+        assert_eq!(back.retry_backoff_ms, 50);
     }
 
     #[test]

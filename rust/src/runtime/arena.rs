@@ -119,11 +119,11 @@ impl KvArena {
     /// Cap `bytes_in_use` (None = unlimited). Existing allocations persist;
     /// only future allocations are checked.
     pub fn set_budget(&self, budget: Option<usize>) {
-        self.pool.lock().unwrap().budget = budget;
+        super::error::lock_recover(&self.pool, "kv arena pool").budget = budget;
     }
 
     pub fn stats(&self) -> ArenaStats {
-        let p = self.pool.lock().unwrap();
+        let p = super::error::lock_recover(&self.pool, "kv arena pool");
         ArenaStats {
             bytes_in_use: p.bytes_in_use,
             bytes_pooled: p.bytes_pooled,
@@ -141,7 +141,7 @@ impl KvArena {
     /// with [`ARENA_OOM_MARKER`] when the pool budget would be exceeded.
     pub fn alloc(&self, row_width: usize) -> Result<Page> {
         let bytes = Page::bytes(row_width);
-        let mut p = self.pool.lock().unwrap();
+        let mut p = super::error::lock_recover(&self.pool, "kv arena pool");
         if let Some(limit) = p.budget {
             if p.bytes_in_use + bytes > limit {
                 bail!(
@@ -168,7 +168,7 @@ impl KvArena {
     /// Return a page to the free list for reuse.
     pub fn free(&self, row_width: usize, page: Page) {
         let bytes = Page::bytes(row_width);
-        let mut p = self.pool.lock().unwrap();
+        let mut p = super::error::lock_recover(&self.pool, "kv arena pool");
         p.bytes_in_use = p.bytes_in_use.saturating_sub(bytes);
         p.bytes_pooled += bytes;
         p.pages_freed += 1;
@@ -178,7 +178,7 @@ impl KvArena {
     /// Record one copy-on-write materialization (a shared page was about to
     /// be mutated; [`super::KvCache`] allocated a private copy instead).
     pub fn note_cow(&self) {
-        self.pool.lock().unwrap().cow_copies += 1;
+        super::error::lock_recover(&self.pool, "kv arena pool").cow_copies += 1;
     }
 }
 

@@ -91,7 +91,16 @@ pub struct DeviceStats {
     pub uploaded_bytes: u64,
     /// Device→host bytes moved by spills.
     pub spill_bytes_d2h: u64,
+    /// Cumulative retryable device-call failures reported by the runtime
+    /// ([`DeviceTier::note_call_failure`]); enough of them in a row flips
+    /// the tier into sticky degraded mode.
+    pub call_failures: u64,
 }
+
+/// Consecutive retryable call failures that flip the tier into sticky
+/// degraded mode (the host/scratch path keeps serving; residency is out of
+/// the fault loop until restart).
+pub const DEGRADED_FAILURE_THRESHOLD: u32 = 3;
 
 /// Outcome of [`DeviceTier::acquire`]: where the call's K/V image lives.
 pub enum Acquired {
@@ -116,6 +125,14 @@ pub struct DeviceTier {
     /// allocations in steady state.
     stage_k: Vec<f32>,
     stage_v: Vec<f32>,
+    /// Sticky degraded mode: residency is bypassed (every acquire is
+    /// transient, donations are not re-installed) after repeated retryable
+    /// call failures — the device is suspect, the host path is the durable
+    /// fallback. Never clears at runtime; a restart gets a fresh tier.
+    degraded: bool,
+    /// Consecutive retryable call failures (reset by
+    /// [`Self::note_call_success`]).
+    consec_failures: u32,
 }
 
 impl DeviceTier {
@@ -126,11 +143,58 @@ impl DeviceTier {
             stats: DeviceStats::default(),
             stage_k: Vec::new(),
             stage_v: Vec::new(),
+            degraded: false,
+            consec_failures: 0,
         }
     }
 
     pub fn stats(&self) -> DeviceStats {
         self.stats
+    }
+
+    /// Whether the tier is in sticky degraded mode.
+    pub fn degraded(&self) -> bool {
+        self.degraded
+    }
+
+    /// Force degraded mode on (ops/test hook; the organic path is
+    /// [`Self::note_call_failure`] crossing [`DEGRADED_FAILURE_THRESHOLD`]).
+    pub fn set_degraded(&mut self) {
+        if !self.degraded {
+            self.degraded = true;
+            self.drop_entries();
+        }
+    }
+
+    /// Record one RETRYABLE device-call failure (transient / device-lost —
+    /// the runtime classifies before calling). Crossing the consecutive
+    /// threshold flips sticky degraded mode and frees every resident image:
+    /// they would never be used again, and their bytes count against the
+    /// serving admission budget.
+    pub fn note_call_failure(&mut self) {
+        self.stats.call_failures += 1;
+        self.consec_failures += 1;
+        if !self.degraded && self.consec_failures >= DEGRADED_FAILURE_THRESHOLD {
+            eprintln!(
+                "lacache: device tier degraded after {} consecutive retryable call \
+                 failures; serving via the host/scratch path",
+                self.consec_failures
+            );
+            self.degraded = true;
+            self.drop_entries();
+        }
+    }
+
+    /// Record a successful device call (resets the consecutive-failure
+    /// count; degraded mode, once entered, is sticky).
+    pub fn note_call_success(&mut self) {
+        self.consec_failures = 0;
+    }
+
+    fn drop_entries(&mut self) {
+        let n = self.entries.len() as u64;
+        self.entries.clear();
+        self.stats.released += n;
     }
 
     /// Bytes currently resident (K + V across all entries) — the gauge the
@@ -205,6 +269,22 @@ impl DeviceTier {
         let elems = cache.dense_elems();
         let image_bytes = 2 * 4 * elems;
         let dims = [cache.l, cache.h, cache.c, cache.dh];
+        if self.degraded {
+            // degraded mode: never promote, never consult residency — a full
+            // gather + transient upload per call, exactly the pre-residency
+            // behavior. The arena pages stay the source of truth, so this is
+            // always correct, just slower.
+            self.stats.misses += 1;
+            let (k_b, v_b) = {
+                let img = pool.gather(cache);
+                (
+                    client.buffer_from_host_buffer(&img.k, &dims, None)?,
+                    client.buffer_from_host_buffer(&img.v, &dims, None)?,
+                )
+            };
+            self.stats.uploaded_bytes += image_bytes as u64;
+            return Ok(Acquired::Transient(k_b, v_b));
+        }
         if let Some(i) = self.entries.iter().position(|e| e.cache_id == cache.id()) {
             if self.entries[i].elems != elems {
                 // shape drift (cannot happen for a live cache; be safe)
@@ -309,6 +389,12 @@ impl DeviceTier {
         v: xla::PjRtBuffer,
         pool: &mut ScratchPool,
     ) -> Result<()> {
+        if self.degraded {
+            // drop the buffers WITHOUT mark_synced: the cache stays dirty,
+            // its next acquire gathers from the host pages, and the suspect
+            // device holds no durable state
+            return Ok(());
+        }
         let elems = cache.dense_elems();
         // shape check by ELEMENT count: real backends may report a padded
         // on-device size, which only affects capacity accounting below
@@ -803,6 +889,65 @@ mod tests {
         assert!(st2.reconciled_bytes > st.reconciled_bytes);
         assert!(st2.reconciled_bytes - st.reconciled_bytes < image_bytes(l, h, c, dh) as u64);
         assert_device_current(&tier, &kv).unwrap();
+    }
+
+    #[test]
+    fn degraded_mode_bypasses_residency() {
+        let client = xla::PjRtClient::cpu().unwrap();
+        let (l, h, c, dh) = (2usize, 1usize, 32usize, 2usize);
+        let mut kv = mk_cache(l, h, c, dh);
+        let mut pool = ScratchPool::new(2);
+        let mut tier = DeviceTier::new(4 * image_bytes(l, h, c, dh));
+        let mut pos = 0;
+        let mut rng = Xoshiro256::new(67);
+        append_random(&mut kv, 6, &mut pos, &mut rng);
+
+        // healthy: promote to residency
+        assert!(matches!(tier.acquire(&client, &mut kv, &mut pool).unwrap(), Acquired::Resident));
+        assert!(tier.resident_bytes() > 0);
+
+        // failures below the threshold don't flip the tier, and a success
+        // in between resets the consecutive count
+        tier.note_call_failure();
+        tier.note_call_failure();
+        tier.note_call_success();
+        tier.note_call_failure();
+        tier.note_call_failure();
+        assert!(!tier.degraded());
+        assert_eq!(tier.stats().call_failures, 4);
+
+        // one more consecutive failure crosses DEGRADED_FAILURE_THRESHOLD:
+        // sticky degraded, resident images freed
+        tier.note_call_failure();
+        assert!(tier.degraded());
+        assert!(tier.is_empty());
+        assert_eq!(tier.resident_bytes(), 0);
+
+        // degraded acquire: always transient, byte-exact vs the host gather
+        let (fk, fv) = kv.gather_dense();
+        match tier.acquire(&client, &mut kv, &mut pool).unwrap() {
+            Acquired::Transient(k, v) => {
+                let mut dk = vec![0.0f32; kv.dense_elems()];
+                let mut dv = vec![0.0f32; kv.dense_elems()];
+                k.copy_to_host_partial(&mut dk, 0).unwrap();
+                v.copy_to_host_partial(&mut dv, 0).unwrap();
+                assert_eq!(dk, fk);
+                assert_eq!(dv, fv);
+            }
+            Acquired::Resident => panic!("degraded tier must not promote"),
+        }
+
+        // donated-step contract still holds end to end: the host pages stay
+        // the source of truth even though install_absorbed drops the buffers
+        donated_step(&client, &mut tier, &mut pool, &mut kv, &mut pos, &mut rng).unwrap();
+        assert!(tier.is_empty(), "degraded tier must not re-install donations");
+        kv.check_invariants().unwrap();
+        let (gk, _) = kv.gather_dense();
+        assert_eq!(gk.len(), kv.dense_elems());
+
+        // success does NOT un-degrade (sticky until restart)
+        tier.note_call_success();
+        assert!(tier.degraded());
     }
 
     #[derive(Debug, Clone, Copy)]

@@ -1,0 +1,248 @@
+//! Device-call error taxonomy and poison-safe locking.
+//!
+//! Every device-call path (`score` / `generate` / upload / download) used to
+//! surface bare `anyhow` strings, so callers could not tell a blip worth
+//! retrying from a lost device or a real bug. [`CallError`] classifies a
+//! failure into four kinds with stable wire codes; it is carried *inside*
+//! `anyhow::Error` (it implements `std::error::Error`), so the existing
+//! `Result<T>` plumbing is unchanged and [`classify`] recovers the kind by
+//! downcast, falling back to marker-string matching for errors raised below
+//! the taxonomy (arena OOM, stub unavailability, injected faults).
+//!
+//! The recovery contract that makes retry sound lives one level up (see
+//! PERF.md "Failure handling & recovery"): a failed call mutates nothing
+//! durable — host arena pages are the source of truth, so dropping the
+//! sequence's residency entry and re-gathering rebuilds the exact pre-call
+//! image, even after a failed *donated* generate consumed the resident
+//! buffers.
+//!
+//! [`lock_recover`] is the companion for panic isolation: a panicked call on
+//! the worker pool must not cascade-poison every runtime mutex into
+//! process-wide unwrap aborts. It clears the poison (the guarded state is
+//! counters/caches with per-entry invariants, never mid-transaction), logs
+//! once, and bumps a process-wide `lock_poisoned` counter exported via
+//! `op:stats`.
+
+use std::fmt;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Mutex, MutexGuard};
+
+/// What a failed device call means for the caller's next move.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum CallErrorKind {
+    /// A blip (injected fault, spurious transfer failure): retry the call
+    /// after rebuilding from arena pages.
+    Transient,
+    /// The device (or its runtime) went away; the call may succeed on a
+    /// fresh acquire, so it is retryable, but repeated losses flip the tier
+    /// into degraded mode.
+    DeviceLost,
+    /// Out of memory (arena budget, device allocation): retrying the same
+    /// call cannot succeed until pressure drops — not retryable here; the
+    /// scheduler's admission gate is the pressure valve.
+    Oom,
+    /// Anything else: bugs, unavailable backend, panics. Never retried.
+    Fatal,
+}
+
+impl CallErrorKind {
+    /// Stable wire code, used in protocol error responses and bench JSON.
+    pub fn code(self) -> &'static str {
+        match self {
+            CallErrorKind::Transient => "transient",
+            CallErrorKind::DeviceLost => "device-lost",
+            CallErrorKind::Oom => "oom",
+            CallErrorKind::Fatal => "fatal",
+        }
+    }
+
+    /// Whether a rebuild-from-arena retry can help.
+    pub fn retryable(self) -> bool {
+        matches!(self, CallErrorKind::Transient | CallErrorKind::DeviceLost)
+    }
+}
+
+/// A classified device-call failure, carried inside `anyhow::Error`.
+#[derive(Debug)]
+pub struct CallError {
+    pub kind: CallErrorKind,
+    pub msg: String,
+}
+
+impl fmt::Display for CallError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "[{}] {}", self.kind.code(), self.msg)
+    }
+}
+
+impl std::error::Error for CallError {}
+
+impl CallError {
+    pub fn new(kind: CallErrorKind, msg: impl Into<String>) -> anyhow::Error {
+        anyhow::Error::new(CallError { kind, msg: msg.into() })
+    }
+
+    pub fn transient(msg: impl Into<String>) -> anyhow::Error {
+        Self::new(CallErrorKind::Transient, msg)
+    }
+
+    pub fn device_lost(msg: impl Into<String>) -> anyhow::Error {
+        Self::new(CallErrorKind::DeviceLost, msg)
+    }
+
+    pub fn oom(msg: impl Into<String>) -> anyhow::Error {
+        Self::new(CallErrorKind::Oom, msg)
+    }
+
+    pub fn fatal(msg: impl Into<String>) -> anyhow::Error {
+        Self::new(CallErrorKind::Fatal, msg)
+    }
+
+    /// Re-wrap an arbitrary error with an explicit kind, preserving its
+    /// rendered message (the original chain is flattened — classification
+    /// only needs the kind and a human-readable cause).
+    pub fn wrap(kind: CallErrorKind, err: &anyhow::Error) -> anyhow::Error {
+        Self::new(kind, format!("{err:#}"))
+    }
+}
+
+/// Classify an error from a device-call path. Typed [`CallError`]s anywhere
+/// in the chain win; otherwise marker strings decide. Unknown errors are
+/// `Fatal`: retrying an unclassified failure risks re-executing a bug with
+/// side effects, so the default is quarantine, not optimism.
+pub fn classify(err: &anyhow::Error) -> CallErrorKind {
+    for cause in err.chain() {
+        if let Some(ce) = cause.downcast_ref::<CallError>() {
+            return ce.kind;
+        }
+    }
+    classify_msg(&format!("{err:#}"))
+}
+
+/// Marker-string fallback for errors raised below the taxonomy. The OOM
+/// markers are `runtime::arena::ARENA_OOM_MARKER` ("kv-arena-OOM") and the
+/// engine's simulated-memory marker ("simulated-OOM") — both contain "OOM",
+/// matched case-sensitively to avoid catching e.g. "zoom".
+pub fn classify_msg(msg: &str) -> CallErrorKind {
+    if msg.contains(xla::fault::TRANSIENT_MARKER) {
+        CallErrorKind::Transient
+    } else if msg.contains("DEVICE_LOST") || msg.contains("device lost") {
+        CallErrorKind::DeviceLost
+    } else if msg.contains("OOM") || msg.contains("RESOURCE_EXHAUSTED") || msg.contains("out of memory")
+    {
+        CallErrorKind::Oom
+    } else {
+        // Includes xla::fault::FATAL_MARKER, worker panics, and the stub's
+        // "backend unavailable" — the stub can never execute, so retrying
+        // there would only burn the retry budget.
+        CallErrorKind::Fatal
+    }
+}
+
+static LOCK_POISONED: AtomicU64 = AtomicU64::new(0);
+static POISON_LOGGED: AtomicBool = AtomicBool::new(false);
+
+/// Lock a mutex, recovering from poison instead of panicking. Poison means
+/// some thread panicked while holding the guard; every runtime mutex guards
+/// state with per-entry invariants (stat counters, LRU caches, staging
+/// buffers) that a mid-panic writer cannot half-update into inconsistency,
+/// so recovery is taking the data as-is. Clears the poison flag (one panic,
+/// one count), logs the first occurrence, and bumps the process-wide
+/// [`lock_poisoned_total`] stat.
+pub fn lock_recover<'a, T>(m: &'a Mutex<T>, what: &str) -> MutexGuard<'a, T> {
+    match m.lock() {
+        Ok(g) => g,
+        Err(poisoned) => {
+            m.clear_poison();
+            LOCK_POISONED.fetch_add(1, Ordering::Relaxed);
+            if !POISON_LOGGED.swap(true, Ordering::Relaxed) {
+                eprintln!("lacache: recovered poisoned mutex ({what}); suppressing further logs");
+            }
+            poisoned.into_inner()
+        }
+    }
+}
+
+/// Total poisoned-mutex recoveries since process start (exported via
+/// `op:stats` as `lock_poisoned`).
+pub fn lock_poisoned_total() -> u64 {
+    LOCK_POISONED.load(Ordering::Relaxed)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kinds_carry_codes_and_retryability() {
+        assert_eq!(CallErrorKind::Transient.code(), "transient");
+        assert_eq!(CallErrorKind::DeviceLost.code(), "device-lost");
+        assert_eq!(CallErrorKind::Oom.code(), "oom");
+        assert_eq!(CallErrorKind::Fatal.code(), "fatal");
+        assert!(CallErrorKind::Transient.retryable());
+        assert!(CallErrorKind::DeviceLost.retryable());
+        assert!(!CallErrorKind::Oom.retryable());
+        assert!(!CallErrorKind::Fatal.retryable());
+    }
+
+    #[test]
+    fn classify_prefers_typed_errors_over_markers() {
+        // a typed Transient whose message *mentions* OOM still classifies
+        // as Transient: the downcast wins over string matching
+        let e = CallError::transient("spurious OOM-looking blip");
+        assert_eq!(classify(&e), CallErrorKind::Transient);
+        // and the type survives context wrapping
+        let e = e.context("while scoring window 3");
+        assert_eq!(classify(&e), CallErrorKind::Transient);
+    }
+
+    #[test]
+    fn classify_falls_back_to_marker_strings() {
+        assert_eq!(classify(&anyhow::anyhow!("kv-arena-OOM: budget")), CallErrorKind::Oom);
+        assert_eq!(classify(&anyhow::anyhow!("simulated-OOM at step 4")), CallErrorKind::Oom);
+        assert_eq!(
+            classify(&anyhow::anyhow!("pjrt: RESOURCE_EXHAUSTED alloc")),
+            CallErrorKind::Oom
+        );
+        assert_eq!(classify(&anyhow::anyhow!("pjrt: DEVICE_LOST")), CallErrorKind::DeviceLost);
+        assert_eq!(
+            classify(&anyhow::anyhow!("{} at upload", xla::fault::TRANSIENT_MARKER)),
+            CallErrorKind::Transient
+        );
+        assert_eq!(
+            classify(&anyhow::anyhow!("{} at execute", xla::fault::FATAL_MARKER)),
+            CallErrorKind::Fatal
+        );
+        // the stub's unavailable error must never be retried
+        assert_eq!(
+            classify(&anyhow::anyhow!(
+                "xla backend unavailable (stub build: native PJRT bindings are not linked)"
+            )),
+            CallErrorKind::Fatal
+        );
+        assert_eq!(classify(&anyhow::anyhow!("some novel failure")), CallErrorKind::Fatal);
+    }
+
+    #[test]
+    fn lock_recover_clears_poison_and_counts() {
+        let m = std::sync::Arc::new(Mutex::new(7u32));
+        let m2 = m.clone();
+        let before = lock_poisoned_total();
+        let _ = std::thread::spawn(move || {
+            let _g = m2.lock().unwrap();
+            panic!("poison it");
+        })
+        .join();
+        assert!(m.is_poisoned());
+        {
+            let mut g = lock_recover(&m, "test mutex");
+            assert_eq!(*g, 7);
+            *g = 8;
+        }
+        assert!(!m.is_poisoned(), "lock_recover must clear the poison flag");
+        assert_eq!(lock_poisoned_total(), before + 1);
+        // subsequent locks are clean and do not re-count
+        assert_eq!(*lock_recover(&m, "test mutex"), 8);
+        assert_eq!(lock_poisoned_total(), before + 1);
+    }
+}

@@ -14,17 +14,41 @@
 //! Shutdown is by drop: dropping the executor closes the job channel, each
 //! worker drains its current job and exits, and the enclosing scope joins
 //! them. Completions of jobs still running at drop are discarded.
+//!
+//! **Panic isolation**: jobs run under [`std::panic::catch_unwind`], so a
+//! panicking device call surfaces as `Completion { out: Err(panic message) }`
+//! instead of tearing down `std::thread::scope` (which would abort the whole
+//! serving loop). The worker thread itself survives — the pool never loses
+//! capacity to a job panic — and whatever the job owned (the sequence state)
+//! was dropped during unwind, returning its arena pages. The scheduler turns
+//! such completions into a structured `Fatal` error for just that sequence.
 
+use std::panic::AssertUnwindSafe;
 use std::sync::mpsc::{channel, Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::thread;
 use std::time::Duration;
 
+use super::error::lock_recover;
+
 /// A completed in-flight call: the ticket it was submitted under plus the
-/// job's output (which carries the sequence state back to the scheduler).
+/// job's output (which carries the sequence state back to the scheduler),
+/// or the panic message if the job panicked (the sequence it owned was
+/// dropped during unwind).
 pub struct Completion<T> {
     pub ticket: u64,
-    pub out: T,
+    pub out: Result<T, String>,
+}
+
+/// Render a panic payload (the `Box<dyn Any>` from `catch_unwind`) as text.
+fn panic_msg(p: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
 }
 
 type Job<'env, T> = Box<dyn FnOnce() -> T + Send + 'env>;
@@ -33,6 +57,7 @@ type Job<'env, T> = Box<dyn FnOnce() -> T + Send + 'env>;
 /// jobs may capture (the serving loop's `thread::scope` environment).
 pub struct CallExecutor<'env, T: Send + 'env> {
     tx: Sender<(u64, Job<'env, T>)>,
+    done_tx: Sender<Completion<T>>,
     done_rx: Receiver<Completion<T>>,
     workers: usize,
     inflight: usize,
@@ -53,10 +78,13 @@ impl<'env, T: Send + 'env> CallExecutor<'env, T> {
             scope.spawn(move || loop {
                 // hold the receiver lock only while waiting, never while
                 // running a job, so idle workers hand off cleanly
-                let msg = rx.lock().unwrap().recv();
+                let msg = lock_recover(&rx, "executor job queue").recv();
                 match msg {
                     Ok((ticket, job)) => {
-                        let out = job();
+                        // catch_unwind: a panicking job must cost one
+                        // sequence, not the scope (and not this worker)
+                        let out = std::panic::catch_unwind(AssertUnwindSafe(job))
+                            .map_err(panic_msg);
                         if done_tx.send(Completion { ticket, out }).is_err() {
                             return; // executor dropped mid-job
                         }
@@ -65,14 +93,22 @@ impl<'env, T: Send + 'env> CallExecutor<'env, T> {
                 }
             });
         }
-        CallExecutor { tx, done_rx, workers, inflight: 0 }
+        CallExecutor { tx, done_tx, done_rx, workers, inflight: 0 }
     }
 
     /// Hand a job to the pool. Returns immediately; the result comes back
-    /// through [`Self::reap`] under `ticket`.
+    /// through [`Self::reap`] under `ticket`. Workers survive job panics,
+    /// so the pool is always reachable; if the channel is somehow down
+    /// anyway, the job runs inline rather than being lost (or aborting the
+    /// serving loop, as the old `expect` here did).
     pub fn submit(&mut self, ticket: u64, job: impl FnOnce() -> T + Send + 'env) {
         self.inflight += 1;
-        self.tx.send((ticket, Box::new(job))).expect("executor workers alive");
+        if let Err(std::sync::mpsc::SendError((ticket, job))) =
+            self.tx.send((ticket, Box::new(job)))
+        {
+            let out = std::panic::catch_unwind(AssertUnwindSafe(job)).map_err(panic_msg);
+            let _ = self.done_tx.send(Completion { ticket, out });
+        }
     }
 
     /// Drain completions. With `wait` set (and calls in flight), blocks up
@@ -125,7 +161,7 @@ mod tests {
             got.sort_by_key(|c| c.ticket);
             for (i, c) in got.iter().enumerate() {
                 assert_eq!(c.ticket, i as u64);
-                assert_eq!(c.out, i as u64 * 10);
+                assert_eq!(c.out, Ok(i as u64 * 10));
             }
         });
     }
@@ -144,7 +180,7 @@ mod tests {
                 }
             };
             assert_eq!(done.ticket, 7);
-            assert_eq!(done.out, want);
+            assert_eq!(done.out, Ok(want));
         });
     }
 
@@ -195,7 +231,27 @@ mod tests {
             while d.is_empty() {
                 d = ex.reap(Some(Duration::from_millis(200)));
             }
-            assert_eq!(d[0].out, 42);
+            assert_eq!(d[0].out, Ok(42));
+        });
+    }
+
+    #[test]
+    fn panicking_job_is_isolated_and_pool_survives() {
+        thread::scope(|s| {
+            // one worker: if the panic killed it, the second job could
+            // never complete and the reap loop below would spin forever
+            let mut ex: CallExecutor<'_, u32> = CallExecutor::new(s, 1);
+            ex.submit(1, || panic!("injected panic mid-call"));
+            ex.submit(2, || 5);
+            let mut got: Vec<Completion<u32>> = Vec::new();
+            while got.len() < 2 {
+                got.extend(ex.reap(Some(Duration::from_millis(500))));
+            }
+            got.sort_by_key(|c| c.ticket);
+            let err = got[0].out.as_ref().unwrap_err();
+            assert!(err.contains("injected panic"), "panic message must surface, got {err:?}");
+            assert_eq!(got[1].out, Ok(5), "the worker survives the panicked job");
+            assert_eq!(ex.inflight(), 0);
         });
     }
 }

@@ -26,6 +26,7 @@
 
 pub mod arena;
 pub mod device;
+pub mod error;
 pub mod executor;
 pub mod kv;
 pub mod manifest;
@@ -44,11 +45,20 @@ pub use arena::{
     PAGE_SLOTS,
 };
 pub use device::{Acquired, DeviceKvState, DeviceStats, DeviceTier};
+pub use error::{classify, lock_poisoned_total, lock_recover, CallError, CallErrorKind};
 pub use executor::{CallExecutor, Completion};
 pub use kv::{GatherBytes, KvCache};
 pub use manifest::{Manifest, ModelCfg, ProgKind, ProgMeta};
 pub use prefix::{PrefixCache, PrefixSnapshot, PrefixStats};
 pub use transfer::{DenseImage, ScratchPool, TransferStats};
+
+/// Wrap a device-call stage failure with its classified [`CallErrorKind`]
+/// (downcast if already typed, marker strings otherwise), so every error
+/// leaving `score`/`generate`/upload/download paths carries the taxonomy.
+fn classify_call(stage: &str, e: anyhow::Error) -> anyhow::Error {
+    let kind = classify(&e);
+    CallError::new(kind, format!("{stage}: {e:#}"))
+}
 
 /// Knobs for the runtime's staging tiers (serving exposes them through
 /// `ServeConfig`; the defaults here serve the CLI/eval paths).
@@ -117,6 +127,15 @@ pub struct RuntimeStats {
     /// Bytes uploaded by dirty-range reconciliation over resident images
     /// (the device-hit path's only KV upload traffic).
     pub reconciled_bytes: u64,
+    /// Whether the device tier is in sticky degraded mode (repeated
+    /// retryable call failures): residency is bypassed and every call
+    /// serves via the host/scratch path until restart.
+    pub device_degraded: bool,
+    /// Consecutive retryable device-call failures (resets on success;
+    /// flipping the tier degraded at the threshold).
+    pub device_failures: u64,
+    /// Poisoned-mutex recoveries by [`lock_recover`] (process-wide).
+    pub lock_poisoned: u64,
 }
 
 /// Reusable per-call buffers (padded token/target windows, i32 lens, f32
@@ -268,11 +287,11 @@ impl Runtime {
     /// entries first, so the gauges never count dropped sequences.
     pub fn stats(&self) -> RuntimeStats {
         self.sweep_staging();
-        let mut st = self.stats.lock().unwrap().clone();
+        let mut st = lock_recover(&self.stats, "runtime stats").clone();
         // scratch and device guards are taken in disjoint scopes (never
         // nested scratch->device, which would invert the lock order)
         {
-            let pool = self.scratch.lock().unwrap();
+            let pool = lock_recover(&self.scratch, "scratch pool");
             let ts = pool.stats();
             st.gather_s = ts.gather_s;
             st.gathered_bytes = ts.gathered_bytes + ts.zeroed_bytes;
@@ -283,7 +302,7 @@ impl Runtime {
             st.scratch_resident_bytes = pool.resident_bytes() as u64;
         }
         {
-            let dev = self.device.lock().unwrap();
+            let dev = lock_recover(&self.device, "device tier");
             let ds = dev.stats();
             st.bytes_h2d += ds.uploaded_bytes;
             st.bytes_d2h += ds.spill_bytes_d2h;
@@ -293,18 +312,27 @@ impl Runtime {
             st.spills = ds.spills;
             st.donations = ds.donations;
             st.reconciled_bytes = ds.reconciled_bytes;
+            st.device_degraded = dev.degraded();
+            st.device_failures = ds.call_failures;
         }
+        st.lock_poisoned = lock_poisoned_total();
         st
     }
 
     /// Raw transfer-layer counters (bench/diagnostic use).
     pub fn transfer_stats(&self) -> TransferStats {
-        self.scratch.lock().unwrap().stats()
+        lock_recover(&self.scratch, "scratch pool").stats()
     }
 
     /// Raw residency-tier counters (bench/diagnostic use).
     pub fn device_stats(&self) -> DeviceStats {
-        self.device.lock().unwrap().stats()
+        lock_recover(&self.device, "device tier").stats()
+    }
+
+    /// Whether the device tier has flipped into sticky degraded mode
+    /// (served to load balancers via `op:ping`).
+    pub fn device_degraded(&self) -> bool {
+        lock_recover(&self.device, "device tier").degraded()
     }
 
     /// Drop staging entries (device tier + scratch pool) whose cache was
@@ -312,22 +340,23 @@ impl Runtime {
     /// cancelled sequence's `device_resident_bytes` are gone before the next
     /// reactor round admits anyone.
     pub fn sweep_staging(&self) {
-        self.device.lock().unwrap().sweep();
-        self.scratch.lock().unwrap().sweep();
+        lock_recover(&self.device, "device tier").sweep();
+        lock_recover(&self.scratch, "scratch pool").sweep();
     }
 
     /// Host + device staging bytes currently held for live sequences — the
     /// footprint the serving admission gate counts alongside arena pages.
     pub fn staging_bytes(&self) -> usize {
-        self.device.lock().unwrap().resident_bytes() + self.scratch.lock().unwrap().resident_bytes()
+        lock_recover(&self.device, "device tier").resident_bytes()
+            + lock_recover(&self.scratch, "scratch pool").resident_bytes()
     }
 
     /// Deterministically release one cache's staging state (device buffers +
     /// scratch image) — the engine-reset / teardown path; dropped caches are
     /// also caught lazily by [`Self::sweep_staging`].
     pub fn release_cache_state(&self, cache_id: u64) {
-        self.device.lock().unwrap().release(cache_id);
-        self.scratch.lock().unwrap().release(cache_id);
+        lock_recover(&self.device, "device tier").release(cache_id);
+        lock_recover(&self.scratch, "scratch pool").release(cache_id);
     }
 
     /// Pre-compile a set of programs (avoids first-call latency in serving).
@@ -341,7 +370,7 @@ impl Runtime {
 
     fn exe(&self, model: &str, prog: &ProgMeta) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         let lm = self.model(model)?;
-        if let Some(e) = lm.exes.lock().unwrap().get(&prog.name) {
+        if let Some(e) = lock_recover(&lm.exes, "model executables").get(&prog.name) {
             return Ok(e.clone());
         }
         let t0 = Instant::now();
@@ -353,13 +382,15 @@ impl Runtime {
                 .compile(&comp)
                 .map_err(|e| anyhow::anyhow!("compiling {model}/{}: {e}", prog.name))?,
         );
-        self.stats.lock().unwrap().compile_s += t0.elapsed().as_secs_f64();
-        lm.exes.lock().unwrap().insert(prog.name.clone(), exe.clone());
+        lock_recover(&self.stats, "runtime stats").compile_s += t0.elapsed().as_secs_f64();
+        lock_recover(&lm.exes, "model executables").insert(prog.name.clone(), exe.clone());
         Ok(exe)
     }
 
     fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
-        Ok(self.client.buffer_from_host_buffer(data, dims, None)?)
+        self.client
+            .buffer_from_host_buffer(data, dims, None)
+            .map_err(|e| classify_call("upload", e.into()))
     }
 
     /// Teacher-forced scoring of `tokens` (with next-token `targets`) over
@@ -394,7 +425,7 @@ impl Runtime {
         let t0 = Instant::now();
         let (tok_b, tgt_b, lens_b) = {
             // pad the token windows into the reusable call buffers
-            let mut bufs = self.call_buf.lock().unwrap();
+            let mut bufs = lock_recover(&self.call_buf, "call buffers");
             bufs.tok.clear();
             bufs.tok.extend_from_slice(tokens);
             bufs.tok.resize(w, 0);
@@ -411,12 +442,14 @@ impl Runtime {
         // three-tier K/V path: resident reconcile, or gather + upload +
         // promote (the tier accounts its own upload bytes; lock order is
         // device -> scratch, matching every other dual-guard path)
-        let mut device = self.device.lock().unwrap();
+        let mut device = lock_recover(&self.device, "device tier");
         let acq = {
-            let mut pool = self.scratch.lock().unwrap();
+            let mut pool = lock_recover(&self.scratch, "scratch pool");
             device.sweep();
             pool.sweep();
-            device.acquire(&self.client, cache, &mut pool)?
+            device
+                .acquire(&self.client, cache, &mut pool)
+                .map_err(|e| classify_call("upload", e))?
         };
         let (kc_b, vc_b): (&xla::PjRtBuffer, &xla::PjRtBuffer) = match &acq {
             Acquired::Resident => {
@@ -428,10 +461,23 @@ impl Runtime {
         let arg_refs: Vec<&xla::PjRtBuffer> =
             vec![&lm.weights, &tok_b, &tgt_b, kc_b, vc_b, &lens_b];
         let t1 = Instant::now();
-        let out = exe.execute_b(&arg_refs)?;
+        let exec_res = exe.execute_b(&arg_refs);
         let t2 = Instant::now();
-        let lit = out[0][0].to_literal_sync()?;
-        let mut parts = lit.to_tuple()?;
+        let out = match exec_res {
+            Ok(o) => {
+                device.note_call_success();
+                o
+            }
+            Err(e) => {
+                let err = classify_call("execute", e.into());
+                if classify(&err).retryable() {
+                    device.note_call_failure();
+                }
+                return Err(err.context(format!("score {model}/{}", prog.name)));
+            }
+        };
+        let lit = out[0][0].to_literal_sync().map_err(|e| classify_call("download", e.into()))?;
+        let mut parts = lit.to_tuple().map_err(|e| classify_call("download", e.into()))?;
         let t3 = Instant::now();
         let mass = if scored {
             Some(parts.pop().context("missing mass output")?.to_vec::<f32>()?)
@@ -442,7 +488,7 @@ impl Runtime {
         let win_k = parts.pop().context("win_k")?.to_vec::<f32>()?;
         let logprobs = parts.pop().context("logprobs")?.to_vec::<f32>()?;
         {
-            let mut st = self.stats.lock().unwrap();
+            let mut st = lock_recover(&self.stats, "runtime stats");
             st.calls += 1;
             st.upload_s += (t1 - t0).as_secs_f64();
             st.execute_s += (t2 - t1).as_secs_f64();
@@ -505,19 +551,21 @@ impl Runtime {
         let l = cache.l;
         let t0 = Instant::now();
         let (lens_b, tok_b) = {
-            let mut bufs = self.call_buf.lock().unwrap();
+            let mut bufs = lock_recover(&self.call_buf, "call buffers");
             bufs.lens.clear();
             bufs.lens.extend(cache.lens.iter().map(|&x| x as i32));
             let lens_b = self.upload_i32(&bufs.lens, &[l])?;
             let tok_b = self.upload_i32(&[last_token], &[])?;
             (lens_b, tok_b)
         };
-        let mut device = self.device.lock().unwrap();
+        let mut device = lock_recover(&self.device, "device tier");
         let acq = {
-            let mut pool = self.scratch.lock().unwrap();
+            let mut pool = lock_recover(&self.scratch, "scratch pool");
             device.sweep();
             pool.sweep();
-            device.acquire(&self.client, cache, &mut pool)?
+            device
+                .acquire(&self.client, cache, &mut pool)
+                .map_err(|e| classify_call("upload", e))?
         };
         match acq {
             Acquired::Resident => {
@@ -527,15 +575,30 @@ impl Runtime {
                 let (kc_dev, vc_dev) = device.take(cache.id()).expect("acquired entry present");
                 drop(device);
                 let t1 = Instant::now();
-                let out = {
+                let exec_res = {
                     let arg_refs: Vec<&xla::PjRtBuffer> =
                         vec![&lm.weights, &kc_dev, &vc_dev, &lens_b, &tok_b];
                     // on error the donated state is lost either way: the
                     // entry is already out of the tier, host pages stay
-                    // authoritative, and the next call re-promotes
-                    exe.execute_with_donation(&arg_refs, &[1, 2]).map_err(|e| {
-                        anyhow::anyhow!("execute(donated) {model}/{}: {e}", prog.name)
-                    })?
+                    // authoritative, and the next call re-promotes — this
+                    // is the invariant the scheduler's rebuild-from-arena
+                    // retry leans on
+                    exe.execute_with_donation(&arg_refs, &[1, 2])
+                };
+                let out = match exec_res {
+                    Ok(o) => {
+                        lock_recover(&self.device, "device tier").note_call_success();
+                        o
+                    }
+                    Err(e) => {
+                        let err = classify_call("execute", e.into());
+                        if classify(&err).retryable() {
+                            lock_recover(&self.device, "device tier").note_call_failure();
+                        }
+                        return Err(
+                            err.context(format!("execute(donated) {model}/{}", prog.name))
+                        );
+                    }
                 };
                 let t2 = Instant::now();
                 let mut leaves = out.into_iter().next().context("empty execution result")?;
@@ -557,7 +620,7 @@ impl Runtime {
                 let lens = lens_out.to_literal_sync()?.to_vec::<i32>()?;
                 let t3 = Instant::now();
                 {
-                    let mut st = self.stats.lock().unwrap();
+                    let mut st = lock_recover(&self.stats, "runtime stats");
                     st.calls += 1;
                     st.upload_s += (t1 - t0).as_secs_f64();
                     st.execute_s += (t2 - t1).as_secs_f64();
@@ -584,10 +647,24 @@ impl Runtime {
                 let arg_refs: Vec<&xla::PjRtBuffer> =
                     vec![&lm.weights, &kc_b, &vc_b, &lens_b, &tok_b];
                 let t1 = Instant::now();
-                let out = exe.execute_b(&arg_refs)?;
+                let exec_res = exe.execute_b(&arg_refs);
                 let t2 = Instant::now();
-                let lit = out[0][0].to_literal_sync()?;
-                let mut parts = lit.to_tuple()?;
+                let out = match exec_res {
+                    Ok(o) => {
+                        lock_recover(&self.device, "device tier").note_call_success();
+                        o
+                    }
+                    Err(e) => {
+                        let err = classify_call("execute", e.into());
+                        if classify(&err).retryable() {
+                            lock_recover(&self.device, "device tier").note_call_failure();
+                        }
+                        return Err(err.context(format!("execute {model}/{}", prog.name)));
+                    }
+                };
+                let lit =
+                    out[0][0].to_literal_sync().map_err(|e| classify_call("download", e.into()))?;
+                let mut parts = lit.to_tuple().map_err(|e| classify_call("download", e.into()))?;
                 let t3 = Instant::now();
                 let mass = if scored {
                     Some(parts.pop().context("mass")?.to_vec::<f32>()?)
@@ -600,7 +677,7 @@ impl Runtime {
                 let last_logits = parts.pop().context("last_logits")?.to_vec::<f32>()?;
                 let tokens = parts.pop().context("tokens")?.to_vec::<i32>()?;
                 {
-                    let mut st = self.stats.lock().unwrap();
+                    let mut st = lock_recover(&self.stats, "runtime stats");
                     st.calls += 1;
                     st.upload_s += (t1 - t0).as_secs_f64();
                     st.execute_s += (t2 - t1).as_secs_f64();
@@ -660,7 +737,7 @@ impl Runtime {
             // (exactly append_layer's window layout) into the reusable call
             // buffers — the donated decode path allocates nothing
             let n = appended * dh;
-            let mut bufs = self.call_buf.lock().unwrap();
+            let mut bufs = lock_recover(&self.call_buf, "call buffers");
             bufs.stage_k.clear();
             bufs.stage_k.resize(h * n, 0.0);
             bufs.stage_v.clear();
@@ -669,8 +746,12 @@ impl Runtime {
                 let old_len = cache.lens[layer];
                 for hh in 0..h {
                     let off = ((layer * h + hh) * c + old_len) * dh;
-                    dev.k.copy_to_host_partial(&mut bufs.stage_k[hh * n..(hh + 1) * n], off)?;
-                    dev.v.copy_to_host_partial(&mut bufs.stage_v[hh * n..(hh + 1) * n], off)?;
+                    dev.k
+                        .copy_to_host_partial(&mut bufs.stage_k[hh * n..(hh + 1) * n], off)
+                        .map_err(|e| classify_call("download", e.into()))?;
+                    dev.v
+                        .copy_to_host_partial(&mut bufs.stage_v[hh * n..(hh + 1) * n], off)
+                        .map_err(|e| classify_call("download", e.into()))?;
                 }
                 cache.append_layer(
                     layer,
@@ -683,20 +764,20 @@ impl Runtime {
             }
             drop(bufs);
             {
-                let mut st = self.stats.lock().unwrap();
+                let mut st = lock_recover(&self.stats, "runtime stats");
                 st.bytes_d2h += (2 * 4 * l * h * appended * dh) as u64;
                 st.download_s += t0.elapsed().as_secs_f64();
             }
             // lock order: device -> scratch
-            let mut device = self.device.lock().unwrap();
-            let mut pool = self.scratch.lock().unwrap();
+            let mut device = lock_recover(&self.device, "device tier");
+            let mut pool = lock_recover(&self.scratch, "scratch pool");
             device.install_absorbed(cache, dev.k, dev.v, &mut pool)?;
             return Ok(());
         }
         cache.replace_from_device(&go.k, &go.v, &go.lens, appended, first_pos)?;
         let k = std::mem::take(&mut go.k);
         let v = std::mem::take(&mut go.v);
-        self.scratch.lock().unwrap().absorb(cache, k, v);
+        lock_recover(&self.scratch, "scratch pool").absorb(cache, k, v);
         Ok(())
     }
 }

@@ -47,9 +47,64 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::runtime::classify;
+
 /// How long a round blocks for a completion when calls are in flight but
 /// nothing else can progress (prevents a busy-spin reactor loop).
 const REAP_WAIT: Duration = Duration::from_millis(2);
+
+/// Retry budget for failed device calls. A call that fails with a retryable
+/// [`crate::runtime::CallErrorKind`] (transient / device-lost) is re-submitted
+/// after `backoff * 2^(attempt-1)` — non-blocking: the sequence just sits out
+/// submit rounds until its backoff elapses, so the rest of the fleet keeps
+/// decoding. The budget is per-call: a successful settle resets the count.
+#[derive(Clone, Copy, Debug)]
+pub struct RetryPolicy {
+    pub max_retries: u32,
+    pub backoff: Duration,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        Self { max_retries: 4, backoff: Duration::from_millis(5) }
+    }
+}
+
+/// Fault-handling counters (surfaced through `op:stats` and the chaos bench).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct FaultStats {
+    /// Failed calls re-submitted after rebuild-from-arena recovery.
+    pub retries: u64,
+    /// Sequences finished with a structured error (retry budget exhausted,
+    /// non-retryable failure, or a worker panic that dropped their state).
+    pub quarantined: u64,
+    /// Sequences finished early (partial output) because their
+    /// `deadline_ms` passed, plus queued requests that expired unadmitted.
+    pub deadline_exceeded: u64,
+    /// Requests rejected at submit because the queue was full.
+    pub overloaded: u64,
+}
+
+/// Structured queue-full rejection: callers (the reactor) downcast this out
+/// of the anyhow error to emit a protocol `overloaded` code with a
+/// `retry_after_ms` hint instead of free-text.
+#[derive(Clone, Copy, Debug)]
+pub struct Overloaded {
+    pub queued: usize,
+    pub retry_after_ms: u64,
+}
+
+impl std::fmt::Display for Overloaded {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "overloaded: queue full ({} pending); retry after {} ms",
+            self.queued, self.retry_after_ms
+        )
+    }
+}
+
+impl std::error::Error for Overloaded {}
 
 /// Shared cancellation flag connecting a connection handler to every
 /// request it has in flight: the handler fires it when the client
@@ -96,9 +151,13 @@ pub enum CallOut {
 
 /// A drained completion: the ticket it was submitted under, the sequence
 /// state (ownership returns to the scheduler), and the call's outcome.
+/// `seq: None` means the call's worker PANICKED — the sequence state was
+/// dropped during unwind (its arena pages returned then), so there is
+/// nothing to retry with; the scheduler quarantines the sequence with the
+/// structured error in `result`.
 pub struct CallDone<S> {
     pub ticket: Ticket,
-    pub seq: S,
+    pub seq: Option<S>,
     pub result: Result<CallOut>,
 }
 
@@ -157,6 +216,21 @@ pub trait SeqBackend {
     fn inflight_capacity(&self) -> usize {
         1
     }
+    /// Crash-consistent recovery hook, called before a failed call is
+    /// retried: drop any device/scratch residency the sequence holds so the
+    /// retry rebuilds its dense image from the host arena pages — the
+    /// durable source of truth (a failed call never mutated them; see
+    /// PERF.md "Failure handling & recovery"). `pos` is the rolled-back
+    /// prompt position the retry will resume from. Default: nothing to do
+    /// (host-only backends are trivially consistent).
+    fn recover(&mut self, seq: &mut Self::Seq, pos: usize) {
+        let _ = (seq, pos);
+    }
+    /// Sticky degraded-mode flag (real backends surface the runtime's
+    /// device-tier state; see `op:ping`). Default: never degraded.
+    fn degraded(&self) -> bool {
+        false
+    }
     /// Non-blocking prefill: ownership of `seq` moves into the call and
     /// comes back through [`Self::reap`] (or immediately, via
     /// [`Submitted::Done`]). The default shim runs [`Self::prefill_chunk`]
@@ -168,7 +242,7 @@ pub trait SeqBackend {
         chunk: &[i32],
     ) -> Submitted<Self::Seq> {
         let result = self.prefill_chunk(&mut seq, chunk).map(|()| CallOut::Prefill);
-        Submitted::Done(CallDone { ticket, seq, result })
+        Submitted::Done(CallDone { ticket, seq: Some(seq), result })
     }
     /// Non-blocking decode of up to `n` tokens; same ownership contract as
     /// [`Self::submit_prefill`].
@@ -179,7 +253,7 @@ pub trait SeqBackend {
         n: usize,
     ) -> Submitted<Self::Seq> {
         let result = self.decode(&mut seq, n).map(CallOut::Decode);
-        Submitted::Done(CallDone { ticket, seq, result })
+        Submitted::Done(CallDone { ticket, seq: Some(seq), result })
     }
     /// Drain completed in-flight calls, blocking up to `wait` for the first
     /// one when given. Synchronous backends never have any.
@@ -201,6 +275,10 @@ pub struct Finished {
     pub ttft_s: f64,
     pub total_s: f64,
     pub error: Option<String>,
+    /// Structured error code accompanying `error` (`"transient"`,
+    /// `"device-lost"`, `"oom"`, `"fatal"`, `"deadline-exceeded"`) — the
+    /// taxonomy clients branch on; `None` for clean completions.
+    pub code: Option<String>,
     /// True when the sequence exited because its [`CancelToken`] fired (the
     /// client is gone; no response should be written).
     pub cancelled: bool,
@@ -215,6 +293,9 @@ struct Pending {
     /// False when the request opted out of cross-request prefix reuse
     /// (protocol `prefix_hint: false`).
     allow_prefix: bool,
+    /// Absolute wall-clock budget (protocol `deadline_ms`, stamped at
+    /// submit): past this instant the request finishes with whatever it has.
+    deadline: Option<Instant>,
 }
 
 /// Where an active sequence's state currently lives.
@@ -244,6 +325,17 @@ struct Active<S> {
     /// fairness under a saturated in-flight capacity).
     last_step: u64,
     cancel: CancelToken,
+    /// Failed attempts at the CURRENT unit of work (reset on success).
+    attempts: u32,
+    /// Retry backoff gate: the submit phase skips this sequence until the
+    /// instant passes (non-blocking backoff).
+    not_before: Option<Instant>,
+    /// `pos` as of the last submit — the rollback point for retry (pos
+    /// advances at submit time, but a failed call ingested nothing).
+    submit_base: usize,
+    /// Request deadline (see [`Pending::deadline`]); enforced at scheduler
+    /// phase boundaries, with partial output.
+    deadline: Option<Instant>,
     seq: Slot<S>,
 }
 
@@ -261,6 +353,7 @@ impl<S> Active<S> {
             ttft_s: self.t_first.map(|t| (t - self.t_submit).as_secs_f64()).unwrap_or_default(),
             total_s: (now - self.t_submit).as_secs_f64(),
             error: None,
+            code: None,
             cancelled: true,
         }
     }
@@ -277,6 +370,26 @@ impl<S> Active<S> {
             ttft_s: self.t_first.map(|t| (t - self.t_submit).as_secs_f64()).unwrap_or_default(),
             total_s: (now - self.t_submit).as_secs_f64(),
             error: None,
+            code: None,
+            cancelled: false,
+        }
+    }
+
+    /// Consume into a structured-error record, KEEPING partial output: the
+    /// tokens generated before the failure (or deadline) already cost device
+    /// time and are often still useful to the client.
+    fn into_failed(self, error: String, code: String) -> Finished {
+        let now = Instant::now();
+        Finished {
+            id: self.id,
+            tokens: self.generated,
+            prompt_tokens: self.prompt.len(),
+            prefix_tokens: self.prefix_tokens,
+            queue_s: (self.t_admit - self.t_submit).as_secs_f64(),
+            ttft_s: self.t_first.map(|t| (t - self.t_submit).as_secs_f64()).unwrap_or_default(),
+            total_s: (now - self.t_submit).as_secs_f64(),
+            error: Some(error),
+            code: Some(code),
             cancelled: false,
         }
     }
@@ -288,6 +401,13 @@ pub struct Scheduler<B: SeqBackend> {
     pub quantum: usize,
     pub max_active: usize,
     pub max_queue: usize,
+    /// Retry budget + backoff for failed device calls.
+    pub retry: RetryPolicy,
+    /// How far past its deadline an IN-FLIGHT call may run before the
+    /// watchdog abandons the sequence (finishes it with partial output and
+    /// lets the eventual completion drop at reap). Generous by default: the
+    /// watchdog is for stuck calls, not ordinary overrun.
+    pub watchdog_grace: Duration,
     queue: VecDeque<Pending>,
     active: Vec<Active<B::Seq>>,
     next_id: u64,
@@ -298,6 +418,7 @@ pub struct Scheduler<B: SeqBackend> {
     /// Inter-token latency samples (seconds) accumulated by decode
     /// completions; drained by [`Self::take_itl`].
     itl_s: Vec<f64>,
+    faults: FaultStats,
 }
 
 impl<B: SeqBackend> Scheduler<B> {
@@ -314,18 +435,21 @@ impl<B: SeqBackend> Scheduler<B> {
             quantum,
             max_active,
             max_queue,
+            retry: RetryPolicy::default(),
+            watchdog_grace: Duration::from_secs(1),
             queue: VecDeque::new(),
             active: Vec::new(),
             next_id: 1,
             round: 0,
             inflight: 0,
             itl_s: Vec::new(),
+            faults: FaultStats::default(),
         }
     }
 
     /// Admission control: Err when the queue is full (backpressure).
     pub fn submit(&mut self, prompt: Vec<i32>, max_new: usize, cancel: CancelToken) -> Result<u64> {
-        self.submit_opt(prompt, max_new, cancel, true)
+        self.submit_req(prompt, max_new, cancel, true, None)
     }
 
     /// [`Self::submit`] with an explicit cross-request prefix-reuse flag
@@ -338,20 +462,48 @@ impl<B: SeqBackend> Scheduler<B> {
         cancel: CancelToken,
         allow_prefix: bool,
     ) -> Result<u64> {
+        self.submit_req(prompt, max_new, cancel, allow_prefix, None)
+    }
+
+    /// Full-surface submit: prefix-reuse flag plus an optional relative
+    /// deadline (protocol `deadline_ms`). A queue-full rejection is the
+    /// structured [`Overloaded`] error with a `retry_after_ms` hint scaled
+    /// to the backlog.
+    pub fn submit_req(
+        &mut self,
+        prompt: Vec<i32>,
+        max_new: usize,
+        cancel: CancelToken,
+        allow_prefix: bool,
+        deadline: Option<Duration>,
+    ) -> Result<u64> {
         if self.queue.len() >= self.max_queue {
-            anyhow::bail!("queue full ({} pending)", self.queue.len());
+            self.faults.overloaded += 1;
+            let hint = (self.queue.len() as u64 * 10).clamp(50, 2000);
+            return Err(anyhow::Error::new(Overloaded {
+                queued: self.queue.len(),
+                retry_after_ms: hint,
+            }));
         }
         let id = self.next_id;
         self.next_id += 1;
+        let now = Instant::now();
         self.queue.push_back(Pending {
             id,
             prompt,
             max_new,
-            t_submit: Instant::now(),
+            t_submit: now,
             cancel,
             allow_prefix,
+            deadline: deadline.map(|d| now + d),
         });
         Ok(id)
+    }
+
+    /// Fault-handling counters (retries, quarantines, deadline exits,
+    /// overload rejections).
+    pub fn fault_stats(&self) -> FaultStats {
+        self.faults
     }
 
     pub fn has_work(&self) -> bool {
@@ -382,19 +534,29 @@ impl<B: SeqBackend> Scheduler<B> {
     }
 
     /// One scheduling round (reap completions -> reap queue -> reap
-    /// cancelled -> admit -> submit). Returns sequences that exited this
-    /// round: completed, errored, or cancelled. When calls are in flight
-    /// and the round could make no other progress, blocks briefly for the
-    /// next completion instead of spinning.
+    /// cancelled -> reap deadlines -> admit -> submit). Returns sequences
+    /// that exited this round: completed, errored, expired, or cancelled.
+    /// When calls are in flight and the round could make no other progress,
+    /// blocks briefly for the next completion instead of spinning; with only
+    /// retry backoffs pending, sleeps toward the earliest one.
     pub fn step(&mut self) -> Vec<Finished> {
         let mut done = Vec::new();
         let reaped = self.reap_completions(None, &mut done);
         self.reap_queue(&mut done);
         self.reap_cancelled(&mut done);
+        self.reap_deadlines(&mut done);
         self.admit(&mut done);
         let submitted = self.submit_units(&mut done);
-        if reaped == 0 && submitted == 0 && done.is_empty() && self.inflight > 0 {
-            self.reap_completions(Some(REAP_WAIT), &mut done);
+        if reaped == 0 && submitted == 0 && done.is_empty() {
+            if self.inflight > 0 {
+                self.reap_completions(Some(REAP_WAIT), &mut done);
+            } else if let Some(t) = self.active.iter().filter_map(|a| a.not_before).min() {
+                // nothing runnable until the earliest backoff elapses
+                let now = Instant::now();
+                if t > now {
+                    std::thread::sleep((t - now).min(REAP_WAIT));
+                }
+            }
         }
         done
     }
@@ -403,6 +565,9 @@ impl<B: SeqBackend> Scheduler<B> {
     /// whose sequence was cancelled while the call ran is dropped here —
     /// this is "cancellation at reap": the sequence state (arena pages,
     /// device residency) is released the moment the scheduler owns it again.
+    /// A completion with `seq: None` is a worker panic: the state died in
+    /// the unwind, so the sequence quarantines with its structured error
+    /// while everyone else keeps going.
     fn reap_completions(&mut self, wait: Option<Duration>, done: &mut Vec<Finished>) -> usize {
         if self.inflight == 0 {
             return 0;
@@ -419,22 +584,35 @@ impl<B: SeqBackend> Scheduler<B> {
                 done.push(self.active.remove(i).into_cancelled());
                 continue;
             }
-            self.settle(i, c.seq, c.result, done);
+            match c.seq {
+                Some(seq) => self.settle(i, seq, c.result, done),
+                None => {
+                    self.faults.quarantined += 1;
+                    let e = c
+                        .result
+                        .err()
+                        .unwrap_or_else(|| anyhow::anyhow!("worker panic (no detail)"));
+                    let code = classify(&e).code().to_string();
+                    done.push(self.active.remove(i).into_failed(format!("{e:#}"), code));
+                }
+            }
         }
         reaped
     }
 
-    /// Phase 2: drop queued requests whose client disconnected before they
-    /// were ever admitted.
+    /// Phase 2: drop queued requests whose client disconnected — or whose
+    /// deadline expired — before they were ever admitted.
     fn reap_queue(&mut self, done: &mut Vec<Finished>) {
-        // common case (no cancellations) stays allocation- and move-free
-        if !self.queue.iter().any(|p| p.cancel.is_cancelled()) {
+        let now = Instant::now();
+        let expired = |p: &Pending| p.deadline.is_some_and(|d| now >= d);
+        // common case (no cancellations, no expiries) stays allocation- and
+        // move-free
+        if !self.queue.iter().any(|p| p.cancel.is_cancelled() || expired(p)) {
             return;
         }
         let mut kept = VecDeque::with_capacity(self.queue.len());
         for p in self.queue.drain(..) {
             if p.cancel.is_cancelled() {
-                let now = Instant::now();
                 done.push(Finished {
                     id: p.id,
                     tokens: Vec::new(),
@@ -444,7 +622,22 @@ impl<B: SeqBackend> Scheduler<B> {
                     ttft_s: 0.0,
                     total_s: (now - p.t_submit).as_secs_f64(),
                     error: None,
+                    code: None,
                     cancelled: true,
+                });
+            } else if expired(&p) {
+                self.faults.deadline_exceeded += 1;
+                done.push(Finished {
+                    id: p.id,
+                    tokens: Vec::new(),
+                    prompt_tokens: p.prompt.len(),
+                    prefix_tokens: 0,
+                    queue_s: (now - p.t_submit).as_secs_f64(),
+                    ttft_s: 0.0,
+                    total_s: (now - p.t_submit).as_secs_f64(),
+                    error: Some("deadline exceeded before admission".to_string()),
+                    code: Some("deadline-exceeded".to_string()),
+                    cancelled: false,
                 });
             } else {
                 kept.push_back(p);
@@ -462,6 +655,43 @@ impl<B: SeqBackend> Scheduler<B> {
             if matches!(self.active[i].seq, Slot::Ready(_)) && self.active[i].cancel.is_cancelled()
             {
                 done.push(self.active.remove(i).into_cancelled());
+            } else {
+                i += 1;
+            }
+        }
+    }
+
+    /// Phase 3b: enforce request deadlines at the phase boundary. A READY
+    /// sequence past its deadline finishes now with partial output. An
+    /// IN-FLIGHT sequence gets `watchdog_grace` beyond the deadline for its
+    /// call to land; past that the watchdog abandons it — the sequence
+    /// finishes (partial output, structured code) and the stuck call's
+    /// eventual completion is dropped at reap, so one wedged device call
+    /// can never pin a client connection open forever.
+    fn reap_deadlines(&mut self, done: &mut Vec<Finished>) {
+        let now = Instant::now();
+        let mut i = 0;
+        while i < self.active.len() {
+            let a = &self.active[i];
+            let Some(d) = a.deadline else {
+                i += 1;
+                continue;
+            };
+            let expired = match a.seq {
+                Slot::Ready(_) => now >= d,
+                Slot::InFlight => now >= d + self.watchdog_grace,
+            };
+            if expired {
+                self.faults.deadline_exceeded += 1;
+                let msg = match self.active[i].seq {
+                    Slot::Ready(_) => "deadline exceeded".to_string(),
+                    Slot::InFlight => {
+                        "deadline exceeded (in-flight call abandoned by watchdog)".to_string()
+                    }
+                };
+                done.push(
+                    self.active.remove(i).into_failed(msg, "deadline-exceeded".to_string()),
+                );
             } else {
                 i += 1;
             }
@@ -488,6 +718,7 @@ impl<B: SeqBackend> Scheduler<B> {
                     ttft_s: 0.0,
                     total_s: (now - p.t_submit).as_secs_f64(),
                     error: None,
+                    code: None,
                     cancelled: false,
                 });
                 continue;
@@ -514,6 +745,10 @@ impl<B: SeqBackend> Scheduler<B> {
                         t_last: None,
                         last_step: self.round,
                         cancel: p.cancel,
+                        attempts: 0,
+                        not_before: None,
+                        submit_base: matched,
+                        deadline: p.deadline,
                         seq: Slot::Ready(seq),
                     })
                 }
@@ -535,6 +770,7 @@ impl<B: SeqBackend> Scheduler<B> {
         let capacity = self.backend.inflight_capacity().max(1);
         let window = self.window;
         let quantum = self.quantum;
+        let now = Instant::now();
         let mut submitted = 0;
         loop {
             if self.inflight >= capacity {
@@ -544,7 +780,12 @@ impl<B: SeqBackend> Scheduler<B> {
                 .active
                 .iter()
                 .enumerate()
-                .filter(|(_, a)| matches!(a.seq, Slot::Ready(_)) && a.last_step < self.round)
+                .filter(|(_, a)| {
+                    matches!(a.seq, Slot::Ready(_))
+                        && a.last_step < self.round
+                        // retry backoff: sit out rounds, never block them
+                        && a.not_before.map_or(true, |t| t <= now)
+                })
                 .min_by_key(|&(i, a)| (a.last_step, i))
                 .map(|(i, _)| i)
             else {
@@ -570,14 +811,18 @@ impl<B: SeqBackend> Scheduler<B> {
                 let Self { backend, active, .. } = self;
                 let a = &mut active[i];
                 let ticket = a.id;
+                a.not_before = None;
+                // the retry rollback point: a failed call ingested nothing,
+                // so resuming from here re-submits the same unit of work
+                a.submit_base = a.pos;
                 let Slot::Ready(seq) = std::mem::replace(&mut a.seq, Slot::InFlight) else {
                     unreachable!("submit candidates hold a ready slot");
                 };
                 if a.pos < a.prompt.len() {
                     let start = a.pos;
                     let end = (a.pos + window).min(a.prompt.len());
-                    // pos advances at submit: on error the sequence exits
-                    // anyway, and nothing reads pos while in flight
+                    // pos advances at submit: on failure settle rolls it
+                    // back to submit_base, and nothing reads pos in flight
                     a.pos = end;
                     backend.submit_prefill(ticket, seq, &a.prompt[start..end])
                 } else {
@@ -586,7 +831,22 @@ impl<B: SeqBackend> Scheduler<B> {
                 }
             };
             match sub {
-                Submitted::Done(cd) => self.settle(i, cd.seq, cd.result, done),
+                Submitted::Done(cd) => match cd.seq {
+                    Some(seq) => self.settle(i, seq, cd.result, done),
+                    None => {
+                        // an inline shim panicked through catch_unwind-less
+                        // code paths cannot happen (shims run in this
+                        // thread); a backend may still hand back seq-less
+                        // failures — quarantine them like reap does
+                        self.faults.quarantined += 1;
+                        let e = cd
+                            .result
+                            .err()
+                            .unwrap_or_else(|| anyhow::anyhow!("call lost its sequence"));
+                        let code = classify(&e).code().to_string();
+                        done.push(self.active.remove(i).into_failed(format!("{e:#}"), code));
+                    }
+                },
                 Submitted::InFlight => self.inflight += 1,
             }
         }
@@ -594,18 +854,32 @@ impl<B: SeqBackend> Scheduler<B> {
     }
 
     /// Apply a call's outcome to the active sequence at `i`: store the state
-    /// back (ready for the next round), finish, or fail. Decode completions
-    /// stamp TTFT and record inter-token latency samples.
+    /// back (ready for the next round), finish, retry, or quarantine. Decode
+    /// completions stamp TTFT and record inter-token latency samples.
+    ///
+    /// The error arm is the crash-consistent recovery path: a RETRYABLE
+    /// failure (transient / device-lost) with budget left rolls `pos` back
+    /// to the submit point, invalidates the sequence's device/scratch
+    /// residency ([`SeqBackend::recover`]) so the retry rebuilds its dense
+    /// image from the host arena pages, and re-queues the sequence behind an
+    /// exponential backoff gate. Budget exhaustion or a non-retryable error
+    /// quarantines just this sequence — the round (and every other
+    /// sequence) proceeds.
     fn settle(&mut self, i: usize, seq: B::Seq, result: Result<CallOut>, done: &mut Vec<Finished>) {
         match result {
             Ok(CallOut::Prefill) => {
-                self.active[i].seq = Slot::Ready(seq);
+                let a = &mut self.active[i];
+                a.attempts = 0;
+                a.not_before = None;
+                a.seq = Slot::Ready(seq);
             }
             Ok(CallOut::Decode(d)) => {
                 let now = Instant::now();
                 let finished = {
                     let Self { active, itl_s, .. } = self;
                     let a = &mut active[i];
+                    a.attempts = 0;
+                    a.not_before = None;
                     if a.t_first.is_none() {
                         a.t_first = Some(d.t_first.unwrap_or(now));
                     }
@@ -627,16 +901,32 @@ impl<B: SeqBackend> Scheduler<B> {
                 }
             }
             Err(e) => {
-                let a = self.active.remove(i);
-                done.push(finished_err(
-                    a.id,
-                    a.prompt.len(),
-                    a.prefix_tokens,
-                    a.t_submit,
-                    Some(a.t_admit),
-                    a.t_first,
-                    e,
-                ));
+                let kind = classify(&e);
+                if kind.retryable() && self.active[i].attempts < self.retry.max_retries {
+                    let mut seq = seq;
+                    let a = &mut self.active[i];
+                    a.attempts += 1;
+                    self.faults.retries += 1;
+                    // the failed call mutated nothing durable (append-after-
+                    // success invariant): resume the same unit of work from
+                    // the arena pages
+                    a.pos = a.submit_base;
+                    let pos = a.pos;
+                    let shift = (a.attempts - 1).min(10);
+                    let backoff = self.retry.backoff.saturating_mul(1u32 << shift);
+                    a.not_before = Some(Instant::now() + backoff);
+                    self.backend.recover(&mut seq, pos);
+                    self.active[i].seq = Slot::Ready(seq);
+                } else {
+                    self.faults.quarantined += 1;
+                    let a = self.active.remove(i);
+                    let attempts = a.attempts;
+                    let mut msg = format!("{e:#}");
+                    if attempts > 0 {
+                        msg = format!("{msg} (after {attempts} retries)");
+                    }
+                    done.push(a.into_failed(msg, kind.code().to_string()));
+                }
             }
         }
     }
@@ -663,6 +953,7 @@ fn finished_err(
         queue_s: (t_admit.unwrap_or(now) - t_submit).as_secs_f64(),
         ttft_s: t_first.map(|t| (t - t_submit).as_secs_f64()).unwrap_or_default(),
         total_s: (now - t_submit).as_secs_f64(),
+        code: Some(classify(&e).code().to_string()),
         error: Some(format!("{e:#}")),
         cancelled: false,
     }
@@ -1237,6 +1528,8 @@ mod tests {
     type PrefillFn<S> = Arc<dyn Fn(&mut S, &[i32]) -> Result<()> + Send + Sync>;
     type DecodeFn<S> = Arc<dyn Fn(&mut S, usize) -> Result<Decoded> + Send + Sync>;
 
+    type RecoverFn<S> = Option<Arc<dyn Fn(&mut S, usize) + Send + Sync>>;
+
     /// Async test backend: ships each call (with its owned sequence) onto a
     /// [`CallExecutor`] worker pool — the same ownership-transfer shape as
     /// the serving `EngineBackend`.
@@ -1246,6 +1539,7 @@ mod tests {
         new_fn: Box<dyn FnMut() -> Result<S> + 'env>,
         prefill_fn: PrefillFn<S>,
         decode_fn: DecodeFn<S>,
+        recover_fn: RecoverFn<S>,
     }
 
     impl<'env, S: Send + 'env> SeqBackend for PoolBackend<'env, S> {
@@ -1258,6 +1552,11 @@ mod tests {
         }
         fn decode(&mut self, seq: &mut S, n: usize) -> Result<Decoded> {
             (self.decode_fn)(seq, n)
+        }
+        fn recover(&mut self, seq: &mut S, pos: usize) {
+            if let Some(f) = &self.recover_fn {
+                f(seq, pos);
+            }
         }
         fn inflight_capacity(&self) -> usize {
             self.capacity
@@ -1283,7 +1582,16 @@ mod tests {
             self.ex
                 .reap(wait)
                 .into_iter()
-                .map(|c| CallDone { ticket: c.ticket, seq: c.out.0, result: c.out.1 })
+                .map(|c| match c.out {
+                    Ok((seq, result)) => CallDone { ticket: c.ticket, seq: Some(seq), result },
+                    Err(panic) => CallDone {
+                        ticket: c.ticket,
+                        seq: None,
+                        result: Err(crate::runtime::CallError::fatal(format!(
+                            "worker panic: {panic}"
+                        ))),
+                    },
+                })
                 .collect()
         }
     }
@@ -1311,6 +1619,7 @@ mod tests {
                     seq.emitted += n;
                     Ok(Decoded { tokens, t_first: Some(Instant::now()) })
                 }),
+                recover_fn: None,
             };
             let mut s = Scheduler::new(backend, 64, 4, 4, 8);
             let slow = s.submit(vec![slow_mark; 64], 1, CancelToken::new()).unwrap();
@@ -1496,6 +1805,7 @@ mod tests {
                         }),
                         prefill_fn: Arc::new(trace_prefill),
                         decode_fn: Arc::new(trace_decode),
+                        recover_fn: None,
                     };
                     let mut s = Scheduler::new(backend, 8, 4, 3, 64);
                     for &(p, m) in trace {
@@ -1543,5 +1853,425 @@ mod tests {
         assert_eq!(itl.len(), 8);
         assert!(itl.iter().all(|&x| x >= 0.0));
         assert!(s.take_itl().is_empty(), "take_itl drains");
+    }
+
+    // ------------------------------------------------------------------
+    // fault handling: retry/recover, quarantine, deadlines, watchdog,
+    // structured overload, worker panic isolation
+    // ------------------------------------------------------------------
+
+    /// Sync backend that fails its next `fail_next` prefill/decode calls
+    /// with a typed transient error, recording every recover() rollback.
+    struct FlakyMock {
+        inner: Mock,
+        fail_next: usize,
+        recover_calls: Vec<usize>,
+    }
+
+    impl SeqBackend for FlakyMock {
+        type Seq = MockSeq;
+        fn new_seq(&mut self) -> Result<MockSeq> {
+            self.inner.new_seq()
+        }
+        fn prefill_chunk(&mut self, seq: &mut MockSeq, chunk: &[i32]) -> Result<()> {
+            if self.fail_next > 0 {
+                self.fail_next -= 1;
+                return Err(crate::runtime::CallError::transient("injected flaky prefill"));
+            }
+            self.inner.prefill_chunk(seq, chunk)
+        }
+        fn decode(&mut self, seq: &mut MockSeq, n: usize) -> Result<Decoded> {
+            if self.fail_next > 0 {
+                self.fail_next -= 1;
+                return Err(crate::runtime::CallError::transient("injected flaky decode"));
+            }
+            self.inner.decode(seq, n)
+        }
+        fn recover(&mut self, _seq: &mut MockSeq, pos: usize) {
+            self.recover_calls.push(pos);
+        }
+    }
+
+    #[test]
+    fn transient_failure_retries_and_recovers() {
+        let backend = FlakyMock { inner: mock(), fail_next: 2, recover_calls: Vec::new() };
+        let mut s = Scheduler::new(backend, 8, 4, 2, 4);
+        s.retry.backoff = Duration::from_millis(1);
+        s.submit(vec![1; 12], 4, CancelToken::new()).unwrap();
+        let mut done = Vec::new();
+        let t0 = Instant::now();
+        while s.has_work() && t0.elapsed() < Duration::from_secs(5) {
+            done.extend(s.step());
+        }
+        assert_eq!(done.len(), 1);
+        let f = &done[0];
+        assert!(f.error.is_none(), "faults within the retry budget must be invisible: {f:?}");
+        assert_eq!(f.tokens, vec![100, 101, 102, 103]);
+        assert_eq!(s.fault_stats().retries, 2);
+        assert_eq!(s.fault_stats().quarantined, 0);
+        // both failures hit the first prefill unit: recover saw its rollback
+        // point (pos 0) twice, and no prompt token was ingested twice
+        assert_eq!(s.backend().recover_calls, vec![0, 0]);
+        assert_eq!(s.backend().inner.prefilled, 12, "each prompt token ingested exactly once");
+    }
+
+    #[test]
+    fn retry_budget_exhaustion_quarantines_with_code() {
+        let backend = FlakyMock { inner: mock(), fail_next: usize::MAX, recover_calls: Vec::new() };
+        let mut s = Scheduler::new(backend, 8, 4, 2, 4);
+        s.retry = RetryPolicy { max_retries: 3, backoff: Duration::from_millis(1) };
+        s.submit(vec![1; 4], 2, CancelToken::new()).unwrap();
+        let mut done = Vec::new();
+        let t0 = Instant::now();
+        while s.has_work() && t0.elapsed() < Duration::from_secs(5) {
+            done.extend(s.step());
+        }
+        assert_eq!(done.len(), 1);
+        let f = &done[0];
+        assert_eq!(f.code.as_deref(), Some("transient"));
+        assert!(f.error.as_ref().unwrap().contains("after 3 retries"), "got {:?}", f.error);
+        assert_eq!(s.fault_stats().retries, 3);
+        assert_eq!(s.fault_stats().quarantined, 1);
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn fatal_error_skips_retry_and_carries_code() {
+        // unclassified backend errors (the poison prompt) are fatal: no
+        // retries are burned, the sequence quarantines immediately
+        let mut s = sched();
+        submit(&mut s, vec![-1], 2);
+        let mut done = Vec::new();
+        while s.has_work() {
+            done.extend(s.step());
+        }
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].code.as_deref(), Some("fatal"));
+        assert_eq!(s.fault_stats().retries, 0);
+        assert_eq!(s.fault_stats().quarantined, 1);
+    }
+
+    #[test]
+    fn overloaded_rejection_is_structured() {
+        let mut s = sched(); // max_queue 4
+        for _ in 0..4 {
+            submit(&mut s, vec![1], 1);
+        }
+        let err = s.submit(vec![1], 1, CancelToken::new()).unwrap_err();
+        let o = err.downcast_ref::<Overloaded>().expect("queue-full must be a typed Overloaded");
+        assert_eq!(o.queued, 4);
+        assert!(o.retry_after_ms >= 50);
+        assert_eq!(s.fault_stats().overloaded, 1);
+    }
+
+    #[test]
+    fn deadline_exceeded_finishes_with_partial_output() {
+        let mut s = sched();
+        let id = s
+            .submit_req(
+                vec![1; 4],
+                1_000_000, // would decode forever; only the deadline ends it
+                CancelToken::new(),
+                true,
+                Some(Duration::from_millis(30)),
+            )
+            .unwrap();
+        let mut done = Vec::new();
+        let t0 = Instant::now();
+        while done.is_empty() && t0.elapsed() < Duration::from_secs(5) {
+            done.extend(s.step());
+        }
+        let f = &done[0];
+        assert_eq!(f.id, id);
+        assert_eq!(f.code.as_deref(), Some("deadline-exceeded"));
+        assert!(f.error.is_some());
+        assert!(!f.cancelled);
+        assert!(!f.tokens.is_empty(), "partial output generated before the deadline survives");
+        assert_eq!(s.fault_stats().deadline_exceeded, 1);
+        assert!(!s.has_work());
+    }
+
+    #[test]
+    fn queued_request_expires_before_admission() {
+        let mut s = Scheduler::new(Mock { admit: false, ..mock() }, 8, 4, 2, 4);
+        s.submit_req(
+            vec![1; 4],
+            4,
+            CancelToken::new(),
+            true,
+            Some(Duration::from_millis(5)),
+        )
+        .unwrap();
+        std::thread::sleep(Duration::from_millis(10));
+        let done = s.step();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].code.as_deref(), Some("deadline-exceeded"));
+        assert!(done[0].tokens.is_empty());
+        assert_eq!(s.backend().new_seq_calls, 0, "expired request must never admit");
+        assert_eq!(s.fault_stats().deadline_exceeded, 1);
+    }
+
+    #[test]
+    fn worker_panic_quarantines_only_that_sequence() {
+        std::thread::scope(|scope| {
+            let panic_mark = -7i32;
+            let backend: PoolBackend<'_, MockSeq> = PoolBackend {
+                ex: CallExecutor::new(scope, 2),
+                capacity: 2,
+                new_fn: Box::new(|| Ok(MockSeq { emitted: 0 })),
+                prefill_fn: Arc::new(move |_seq, chunk: &[i32]| {
+                    if chunk.contains(&panic_mark) {
+                        panic!("injected panic mid-prefill");
+                    }
+                    Ok(())
+                }),
+                decode_fn: Arc::new(|seq: &mut MockSeq, n| {
+                    let tokens: Vec<i32> =
+                        (0..n).map(|i| 100 + (seq.emitted + i) as i32).collect();
+                    seq.emitted += n;
+                    Ok(Decoded { tokens, t_first: Some(Instant::now()) })
+                }),
+                recover_fn: None,
+            };
+            let mut s = Scheduler::new(backend, 8, 4, 4, 8);
+            let doomed = s.submit(vec![panic_mark; 4], 4, CancelToken::new()).unwrap();
+            let healthy = s.submit(vec![1; 4], 4, CancelToken::new()).unwrap();
+            let mut done = Vec::new();
+            let t0 = Instant::now();
+            while s.has_work() && t0.elapsed() < Duration::from_secs(10) {
+                done.extend(s.step());
+            }
+            assert_eq!(done.len(), 2, "both sequences must exit");
+            let bad = done.iter().find(|f| f.id == doomed).unwrap();
+            assert_eq!(bad.code.as_deref(), Some("fatal"));
+            assert!(bad.error.as_ref().unwrap().contains("panic"), "got {:?}", bad.error);
+            let good = done.iter().find(|f| f.id == healthy).unwrap();
+            assert!(good.error.is_none(), "the panic must not leak into other sequences");
+            assert_eq!(good.tokens.len(), 4);
+            assert_eq!(s.fault_stats().quarantined, 1);
+            assert_eq!(s.inflight(), 0);
+        });
+    }
+
+    #[test]
+    fn watchdog_abandons_stuck_inflight_call() {
+        std::thread::scope(|scope| {
+            let backend: PoolBackend<'_, MockSeq> = PoolBackend {
+                ex: CallExecutor::new(scope, 1),
+                capacity: 1,
+                new_fn: Box::new(|| Ok(MockSeq { emitted: 0 })),
+                prefill_fn: Arc::new(|_seq, _chunk: &[i32]| {
+                    std::thread::sleep(Duration::from_millis(150)); // "wedged" call
+                    Ok(())
+                }),
+                decode_fn: Arc::new(|seq: &mut MockSeq, n| {
+                    let tokens: Vec<i32> =
+                        (0..n).map(|i| 100 + (seq.emitted + i) as i32).collect();
+                    seq.emitted += n;
+                    Ok(Decoded { tokens, t_first: Some(Instant::now()) })
+                }),
+                recover_fn: None,
+            };
+            let mut s = Scheduler::new(backend, 8, 4, 2, 4);
+            s.watchdog_grace = Duration::from_millis(25);
+            let id = s
+                .submit_req(
+                    vec![1; 4],
+                    4,
+                    CancelToken::new(),
+                    true,
+                    Some(Duration::from_millis(25)),
+                )
+                .unwrap();
+            let mut done = Vec::new();
+            let t0 = Instant::now();
+            while done.is_empty() && t0.elapsed() < Duration::from_secs(5) {
+                done.extend(s.step());
+            }
+            let f = &done[0];
+            assert_eq!(f.id, id);
+            assert_eq!(f.code.as_deref(), Some("deadline-exceeded"));
+            assert!(f.error.as_ref().unwrap().contains("watchdog"), "got {:?}", f.error);
+            assert!(
+                t0.elapsed() < Duration::from_millis(140),
+                "the watchdog must not wait for the wedged call to land"
+            );
+            // the stuck call eventually completes and is dropped quietly
+            let t1 = Instant::now();
+            while s.inflight() > 0 && t1.elapsed() < Duration::from_secs(5) {
+                s.step();
+            }
+            assert_eq!(s.inflight(), 0);
+            assert!(!s.has_work());
+        });
+    }
+
+    #[test]
+    fn faulted_split_phase_recovers_to_fault_free_results() {
+        // satellite property: seeded transient faults injected at every sim
+        // call site (prefill / decode / upload / spill) of a pooled
+        // split-phase run over real arena pages and a real device tier must
+        // recover — via retry + rebuild-from-arena — to byte-identical final
+        // KV images and identical token streams vs the fault-free
+        // synchronous reference, with zero quarantines.
+        use crate::runtime::{DeviceTier, ScratchPool};
+        use std::sync::atomic::AtomicU64;
+        use xla::fault::{self, FaultKind, FaultPlan};
+
+        fn inject(site: &str) -> anyhow::Result<()> {
+            if let Some(kind) = xla::fault::check(site) {
+                if let Some(msg) = xla::fault::apply(site, kind) {
+                    anyhow::bail!("{msg}");
+                }
+            }
+            Ok(())
+        }
+
+        let total_retries = AtomicU64::new(0);
+        PropRunner::new(6).run(
+            |rng| {
+                let n_req = 2 + rng.below(4) as usize;
+                let seed = rng.below(u64::MAX);
+                let trace: Vec<(usize, usize)> = (0..n_req)
+                    .map(|_| (1 + rng.below(30) as usize, rng.below(10) as usize))
+                    .collect();
+                (seed, trace)
+            },
+            |(seed, trace)| {
+                // fault-free synchronous reference
+                fault::install(None);
+                let sync_sums: KvSums = KvSums::default();
+                let mut sync_tokens: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+                {
+                    let backend = TraceBackend {
+                        arena: KvArena::new(),
+                        sums: Arc::clone(&sync_sums),
+                        next_tag: 0,
+                    };
+                    let mut s = Scheduler::new(backend, 8, 4, 3, 64);
+                    for &(p, m) in trace {
+                        s.submit(vec![1; p], m, CancelToken::new()).unwrap();
+                    }
+                    let mut guard = 0;
+                    while s.has_work() && guard < 10_000 {
+                        for f in s.step() {
+                            prop_assert!(f.error.is_none(), "sync error: {:?}", f.error);
+                            sync_tokens.insert(f.id, f.tokens);
+                        }
+                        guard += 1;
+                    }
+                    prop_assert!(!s.has_work(), "sync run did not drain");
+                }
+
+                // faulted split-phase run: every fault fires BEFORE any
+                // durable mutation, recovery drops device/scratch residency
+                // so retries rebuild from the arena pages
+                fault::install(Some(
+                    FaultPlan::new(*seed)
+                        .rule("sim-prefill", FaultKind::Transient, 0.12)
+                        .rule("sim-decode", FaultKind::Transient, 0.12)
+                        .rule("sim-upload", FaultKind::Transient, 0.08)
+                        .rule("sim-spill", FaultKind::Transient, 0.08),
+                ));
+                let async_sums: KvSums = KvSums::default();
+                let mut async_tokens: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+                let mut errors: Vec<String> = Vec::new();
+                let mut drained = false;
+                let mut faults = FaultStats::default();
+                std::thread::scope(|scope| {
+                    let arena = KvArena::new();
+                    let sums = Arc::clone(&async_sums);
+                    let mut tag = 0u64;
+                    // capacity for ONE image: concurrent sequences thrash
+                    // the spill path while faults land around them
+                    let image_bytes = 2 * 4 * 2 * 2 * 256 * 4;
+                    let tiers = Arc::new(Mutex::new((
+                        DeviceTier::new(image_bytes),
+                        ScratchPool::new(2),
+                    )));
+                    let client = Arc::new(xla::PjRtClient::cpu().unwrap());
+                    let acq_tiers = Arc::clone(&tiers);
+                    let acq_client = Arc::clone(&client);
+                    let dec_tiers = Arc::clone(&tiers);
+                    let dec_client = Arc::clone(&client);
+                    let rec_tiers = Arc::clone(&tiers);
+                    let backend: PoolBackend<'_, TraceSeq> = PoolBackend {
+                        ex: CallExecutor::new(scope, 3),
+                        capacity: 3,
+                        new_fn: Box::new(move || {
+                            let t = tag;
+                            tag += 1;
+                            Ok(trace_seq(&arena, &sums, t))
+                        }),
+                        prefill_fn: Arc::new(move |seq, chunk| {
+                            inject("sim-prefill")?;
+                            inject("sim-upload")?;
+                            {
+                                let mut g = acq_tiers.lock().unwrap();
+                                let (tier, pool) = &mut *g;
+                                tier.acquire(&acq_client, &mut seq.kv, pool)?;
+                            }
+                            trace_prefill(seq, chunk)
+                        }),
+                        decode_fn: Arc::new(move |seq, n| {
+                            inject("sim-decode")?;
+                            inject("sim-upload")?;
+                            inject("sim-spill")?;
+                            {
+                                let mut g = dec_tiers.lock().unwrap();
+                                let (tier, pool) = &mut *g;
+                                tier.acquire(&dec_client, &mut seq.kv, pool)?;
+                            }
+                            trace_decode(seq, n)
+                        }),
+                        recover_fn: Some(Arc::new(move |seq: &mut TraceSeq, _pos| {
+                            // rebuild-from-arena: drop all staged residency;
+                            // the retry re-gathers from the host pages
+                            let mut g = rec_tiers.lock().unwrap();
+                            let (tier, pool) = &mut *g;
+                            tier.release(seq.kv.id());
+                            pool.release(seq.kv.id());
+                        })),
+                    };
+                    let mut s = Scheduler::new(backend, 8, 4, 3, 64);
+                    s.retry = RetryPolicy {
+                        max_retries: 8,
+                        backoff: Duration::from_micros(200),
+                    };
+                    for &(p, m) in trace {
+                        s.submit(vec![1; p], m, CancelToken::new()).unwrap();
+                    }
+                    let mut guard = 0;
+                    while s.has_work() && guard < 200_000 {
+                        for f in s.step() {
+                            if let Some(e) = &f.error {
+                                errors.push(e.clone());
+                            }
+                            async_tokens.insert(f.id, f.tokens);
+                        }
+                        guard += 1;
+                    }
+                    drained = !s.has_work();
+                    faults = s.fault_stats();
+                });
+                fault::install(None);
+                total_retries.fetch_add(faults.retries, Ordering::Relaxed);
+                prop_assert!(errors.is_empty(), "faulted run must fully recover: {errors:?}");
+                prop_assert!(drained, "faulted run did not drain");
+                prop_assert!(faults.quarantined == 0, "quarantines: {}", faults.quarantined);
+                prop_assert!(
+                    async_tokens == sync_tokens,
+                    "token streams diverge under faults: {async_tokens:?} vs {sync_tokens:?}"
+                );
+                let a = sync_sums.lock().unwrap().clone();
+                let b = async_sums.lock().unwrap().clone();
+                prop_assert!(a == b, "final KV state diverges under faults: {a:?} vs {b:?}");
+                Ok(())
+            },
+        );
+        assert!(
+            total_retries.load(Ordering::Relaxed) > 0,
+            "the fault plan never fired; the property is vacuous"
+        );
     }
 }

@@ -175,6 +175,29 @@ pub fn export_arena(j: &mut Json, ast: &ArenaStats) {
     j.set("cow_copies", (ast.cow_copies as i64).into());
 }
 
+/// Attach the scheduler's fault-handling counters plus the process-wide
+/// resilience gauges to an `op:stats` payload (PERF.md "Failure handling &
+/// recovery"): `retries` counts failed device calls re-submitted after
+/// rebuild-from-arena recovery, `quarantined` counts sequences that exited
+/// with a structured error (budget exhausted, fatal, or worker panic),
+/// `deadline_exceeded` / `overloaded` count the deadline and backpressure
+/// exits, `device_degraded` is the sticky device-tier bypass flag, and
+/// `lock_poisoned` counts runtime mutexes recovered after a panicking
+/// holder.
+pub fn export_faults(
+    j: &mut Json,
+    fs: &crate::server::batcher::FaultStats,
+    degraded: bool,
+    lock_poisoned: u64,
+) {
+    j.set("retries", (fs.retries as i64).into());
+    j.set("quarantined", (fs.quarantined as i64).into());
+    j.set("deadline_exceeded", (fs.deadline_exceeded as i64).into());
+    j.set("overloaded", (fs.overloaded as i64).into());
+    j.set("device_degraded", degraded.into());
+    j.set("lock_poisoned", (lock_poisoned as i64).into());
+}
+
 /// Attach the cross-request prefix cache's counters: `prefix_hits` /
 /// `prefix_tokens_reused` quantify skipped prefill work (the TTFT win),
 /// `prefix_resident_bytes` is the page span pinned by the tree (bounded by
@@ -203,6 +226,7 @@ mod tests {
             ttft_s: 0.01,
             total_s: 0.05,
             error: None,
+            code: None,
             cancelled: false,
         }
     }
@@ -221,6 +245,7 @@ mod tests {
             ttft_s: 0.0,
             total_s: 0.01,
             error: Some("boom".into()),
+            code: Some("fatal".into()),
             cancelled: false,
         });
         let j = m.to_json();
@@ -338,6 +363,24 @@ mod tests {
         assert_eq!(j.usize_of("kv_arena_pool_hits"), Some(4));
         assert_eq!(j.usize_of("kv_arena_pages_freed"), Some(6));
         assert_eq!(j.usize_of("cow_copies"), Some(3));
+    }
+
+    #[test]
+    fn exports_fault_counters() {
+        let mut j = Json::obj();
+        let fs = crate::server::batcher::FaultStats {
+            retries: 6,
+            quarantined: 1,
+            deadline_exceeded: 2,
+            overloaded: 3,
+        };
+        export_faults(&mut j, &fs, true, 4);
+        assert_eq!(j.usize_of("retries"), Some(6));
+        assert_eq!(j.usize_of("quarantined"), Some(1));
+        assert_eq!(j.usize_of("deadline_exceeded"), Some(2));
+        assert_eq!(j.usize_of("overloaded"), Some(3));
+        assert_eq!(j.bool_of("device_degraded"), Some(true));
+        assert_eq!(j.usize_of("lock_poisoned"), Some(4));
     }
 
     #[test]

@@ -45,8 +45,8 @@ use crate::cache::make_policy;
 use crate::config::ServeConfig;
 use crate::engine::{Engine, EngineOpts};
 use crate::runtime::{
-    admission_ok, seq_footprint_bytes, CallExecutor, KvArena, PrefixCache, PrefixSnapshot, Runtime,
-    RuntimeOpts,
+    admission_ok, seq_footprint_bytes, CallError, CallExecutor, KvArena, PrefixCache,
+    PrefixSnapshot, Runtime, RuntimeOpts,
 };
 
 /// The determinism domain of a frozen prefix: the ladder (or any registered)
@@ -273,7 +273,7 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
             return Submitted::InFlight;
         }
         let result = self.prefill_chunk(&mut seq, chunk).map(|()| CallOut::Prefill);
-        Submitted::Done(CallDone { ticket, seq, result })
+        Submitted::Done(CallDone { ticket, seq: Some(seq), result })
     }
 
     fn submit_decode(
@@ -293,7 +293,7 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
             return Submitted::InFlight;
         }
         let result = self.decode(&mut seq, n).map(CallOut::Decode);
-        Submitted::Done(CallDone { ticket, seq, result })
+        Submitted::Done(CallDone { ticket, seq: Some(seq), result })
     }
 
     fn reap(&mut self, wait: Option<Duration>) -> Vec<CallDone<ServedSeq<'rt>>> {
@@ -303,16 +303,41 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
         let mut done: Vec<CallDone<ServedSeq<'rt>>> = ex
             .reap(wait)
             .into_iter()
-            .map(|c| CallDone { ticket: c.ticket, seq: c.out.0, result: c.out.1 })
+            .map(|c| match c.out {
+                Ok((seq, result)) => CallDone { ticket: c.ticket, seq: Some(seq), result },
+                // the job panicked: its ServedSeq (arena pages, residency)
+                // was dropped during unwind — surface a structured Fatal so
+                // the scheduler quarantines just that sequence
+                Err(panic) => CallDone {
+                    ticket: c.ticket,
+                    seq: None,
+                    result: Err(CallError::fatal(format!("worker panic: {panic}"))),
+                },
+            })
             .collect();
         // deferred prefix publishing for pool-dispatched prefills (see
         // publish_prefix: the prefix cache lives on this thread only)
         for c in &mut done {
             if matches!(c.result, Ok(CallOut::Prefill)) {
-                self.publish_prefix(&mut c.seq);
+                if let Some(seq) = c.seq.as_mut() {
+                    self.publish_prefix(seq);
+                }
             }
         }
         done
+    }
+
+    /// Crash-consistent recovery before a retry: drop the sequence's staged
+    /// residency (device image + scratch spill) so the retried call rebuilds
+    /// its dense image from the paged-KV arena — the durable source of truth
+    /// a failed call never mutated (PERF.md "Failure handling & recovery").
+    fn recover(&mut self, seq: &mut ServedSeq<'rt>, _pos: usize) {
+        self.rt.release_cache_state(seq.engine.cache.id());
+    }
+
+    /// Sticky device-tier degraded flag (surfaced through `op:ping`).
+    fn degraded(&self) -> bool {
+        self.rt.device_degraded()
     }
 
     /// Admission control by real memory pressure: arena pages PLUS the
@@ -457,8 +482,12 @@ fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::js
             backend = backend.with_executor(CallExecutor::new(scope, cfg.max_inflight_calls));
         }
         let prefix = backend.prefix_handle();
-        let sched =
+        let mut sched =
             Scheduler::new(backend, cfg.window, cfg.decode_quantum, cfg.max_active, cfg.max_queue);
+        sched.retry = batcher::RetryPolicy {
+            max_retries: cfg.call_retries as u32,
+            backoff: Duration::from_millis(cfg.retry_backoff_ms as u64),
+        };
         let reactor = Reactor::new(sched, cfg.max_new_tokens);
         Ok(reactor.run(&rx, |j| {
             metrics::export_runtime(j, &rt.stats());

@@ -6,7 +6,9 @@
 //! {"op":"generate","id":1,"prompt":"<mark> w4 w5 <sep> ...","max_new_tokens":8}
 //! {"op":"generate","id":2,"prompt_tokens":[0,5,20,...],"max_new_tokens":4}
 //! {"op":"generate","id":5,"prompt_tokens":[...],"prefix_hint":false}
+//! {"op":"generate","id":6,"prompt_tokens":[...],"deadline_ms":500}
 //! {"op":"stats","id":3}
+//! {"op":"ping","id":8}
 //! {"op":"shutdown","id":4}
 //! ```
 //!
@@ -15,6 +17,12 @@
 //! cache); `false` opts this request out — it always prefills cold, which
 //! benchmarking and privacy-sensitive clients want.
 //!
+//! `deadline_ms` (optional) bounds the request's wall-clock time from
+//! submit: past the deadline the server finishes the request early with
+//! whatever tokens it has generated, `ok:false`, and `code:
+//! "deadline-exceeded"` (a stuck in-flight device call is abandoned by a
+//! watchdog after a short grace period, so the reply never hangs on it).
+//!
 //! Responses:
 //!
 //! ```text
@@ -22,13 +30,26 @@
 //!  "itl_ms":..,"total_ms":..,"prompt_tokens":N,"prefix_tokens":P,
 //!  "gen_tokens":M}
 //! {"id":3,"ok":true,"stats":{...}}
-//! {"id":2,"ok":false,"error":"..."}
+//! {"id":8,"ok":true,"version":"...","degraded":false,"inflight":0,
+//!  "queue_depth":0,"active_seqs":0}
+//! {"id":2,"ok":false,"error":"...","code":"..."}
+//! {"id":7,"ok":false,"error":"overloaded: ...","code":"overloaded",
+//!  "retry_after_ms":50}
 //! ```
 //!
 //! `prefix_tokens` reports how many leading prompt tokens were served from
 //! the prefix cache (0 = cold prefill). `itl_ms` is the request's mean
 //! inter-token latency after the first token (0 when at most one token was
 //! generated).
+//!
+//! Failed generates carry a machine-readable `code` alongside the free-text
+//! `error`: `"overloaded"` (queue full — retry after `retry_after_ms`),
+//! `"deadline-exceeded"` (partial `tokens`/`text` are included when any
+//! were generated), or a device-call classification
+//! (`"transient"` / `"device-lost"` / `"oom"` / `"fatal"`) once the retry
+//! budget is exhausted. `op:ping` is the health probe: `degraded` reports
+//! the sticky device-tier bypass (see PERF.md "Failure handling &
+//! recovery"), `inflight` / `queue_depth` / `active_seqs` the load.
 //!
 //! Connection semantics: closing (or half-closing) the connection's write
 //! side ABANDONS all of that connection's in-flight requests — the server
@@ -47,8 +68,15 @@ pub const SHUTTING_DOWN: &str = "shutting-down";
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Op {
-    Generate { prompt: Vec<i32>, max_new_tokens: usize, prefix_hint: bool },
+    Generate {
+        prompt: Vec<i32>,
+        max_new_tokens: usize,
+        prefix_hint: bool,
+        /// Relative wall-clock bound from submit (`None` = unbounded).
+        deadline_ms: Option<u64>,
+    },
     Stats,
+    Ping,
     Shutdown,
 }
 
@@ -77,9 +105,11 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 prompt,
                 max_new_tokens: j.usize_of("max_new_tokens").unwrap_or(16),
                 prefix_hint: j.bool_of("prefix_hint").unwrap_or(true),
+                deadline_ms: j.usize_of("deadline_ms").map(|d| d as u64),
             }
         }
         Some("stats") => Op::Stats,
+        Some("ping") => Op::Ping,
         Some("shutdown") => Op::Shutdown,
         other => bail!("unknown op {other:?}"),
     };
@@ -115,9 +145,62 @@ pub fn ok_stats(id: i64, stats: Json) -> String {
     Json::from_pairs(vec![("id", id.into()), ("ok", true.into()), ("stats", stats)]).to_string()
 }
 
+/// Health-probe reply (`op:ping`): build version, the sticky device-tier
+/// degraded flag, and the current load gauges.
+pub fn ok_ping(
+    id: i64,
+    version: &str,
+    degraded: bool,
+    inflight: usize,
+    queue_depth: usize,
+    active_seqs: usize,
+) -> String {
+    Json::from_pairs(vec![
+        ("id", id.into()),
+        ("ok", true.into()),
+        ("version", version.into()),
+        ("degraded", degraded.into()),
+        ("inflight", inflight.into()),
+        ("queue_depth", queue_depth.into()),
+        ("active_seqs", active_seqs.into()),
+    ])
+    .to_string()
+}
+
 pub fn err_response(id: i64, msg: &str) -> String {
-    Json::from_pairs(vec![("id", id.into()), ("ok", false.into()), ("error", msg.into())])
-        .to_string()
+    err_full(id, msg, None, None, None)
+}
+
+/// Structured error reply: free-text `error` plus the optional
+/// machine-readable `code`, a `retry_after_ms` backpressure hint
+/// (`code: "overloaded"`), and the partial output generated before a
+/// deadline or fault ended the request (omitted when empty).
+pub fn err_full(
+    id: i64,
+    msg: &str,
+    code: Option<&str>,
+    retry_after_ms: Option<u64>,
+    partial_tokens: Option<&[i32]>,
+) -> String {
+    let mut j = Json::from_pairs(vec![
+        ("id", id.into()),
+        ("ok", false.into()),
+        ("error", msg.into()),
+    ]);
+    if let Some(c) = code {
+        j.set("code", c.into());
+    }
+    if let Some(ms) = retry_after_ms {
+        j.set("retry_after_ms", (ms as i64).into());
+    }
+    if let Some(t) = partial_tokens {
+        if !t.is_empty() {
+            j.set("text", super::text::detokenize(t).into());
+            j.set("tokens", t.iter().map(|&x| x as i64).collect::<Vec<i64>>().into());
+            j.set("gen_tokens", t.len().into());
+        }
+    }
+    j.to_string()
 }
 
 #[cfg(test)]
@@ -130,13 +213,33 @@ mod tests {
             .unwrap();
         assert_eq!(r.id, 7);
         match r.op {
-            Op::Generate { prompt, max_new_tokens, prefix_hint } => {
+            Op::Generate { prompt, max_new_tokens, prefix_hint, deadline_ms } => {
                 assert_eq!(prompt, vec![0, 17, 18]);
                 assert_eq!(max_new_tokens, 4);
                 assert!(prefix_hint, "prefix reuse defaults to on");
+                assert_eq!(deadline_ms, None, "deadline defaults to unbounded");
             }
             _ => panic!(),
         }
+    }
+
+    #[test]
+    fn parse_generate_deadline() {
+        let r = parse_request(
+            r#"{"op":"generate","id":6,"prompt_tokens":[1,2],"deadline_ms":500}"#,
+        )
+        .unwrap();
+        match r.op {
+            Op::Generate { deadline_ms, .. } => assert_eq!(deadline_ms, Some(500)),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_ping() {
+        let r = parse_request(r#"{"op":"ping","id":8}"#).unwrap();
+        assert_eq!(r.id, 8);
+        assert_eq!(r.op, Op::Ping);
     }
 
     #[test]
@@ -182,5 +285,39 @@ mod tests {
         assert_eq!(j.f64_of("itl_ms"), Some(2.25));
         let e = err_response(4, "boom \"quoted\"");
         assert_eq!(Json::parse(&e).unwrap().str_of("error"), Some("boom \"quoted\""));
+    }
+
+    #[test]
+    fn coded_errors_carry_code_hint_and_partial_output() {
+        let s = err_full(7, "overloaded: queue full", Some("overloaded"), Some(50), None);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(false));
+        assert_eq!(j.str_of("code"), Some("overloaded"));
+        assert_eq!(j.usize_of("retry_after_ms"), Some(50));
+        assert!(j.get("tokens").is_none());
+
+        let s = err_full(8, "deadline exceeded", Some("deadline-exceeded"), None, Some(&[20, 21]));
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.str_of("code"), Some("deadline-exceeded"));
+        assert_eq!(j.usize_of("gen_tokens"), Some(2));
+        assert_eq!(j.get("tokens").and_then(|a| a.as_arr()).map(|a| a.len()), Some(2));
+
+        // empty partial output is omitted, and err_response stays code-free
+        let s = err_full(9, "x", Some("fatal"), None, Some(&[]));
+        let j = Json::parse(&s).unwrap();
+        assert!(j.get("tokens").is_none());
+        assert!(Json::parse(&err_response(1, "y")).unwrap().get("code").is_none());
+    }
+
+    #[test]
+    fn ping_response_shape() {
+        let s = ok_ping(8, "0.1.0", true, 2, 3, 4);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(true));
+        assert_eq!(j.str_of("version"), Some("0.1.0"));
+        assert_eq!(j.bool_of("degraded"), Some(true));
+        assert_eq!(j.usize_of("inflight"), Some(2));
+        assert_eq!(j.usize_of("queue_depth"), Some(3));
+        assert_eq!(j.usize_of("active_seqs"), Some(4));
     }
 }

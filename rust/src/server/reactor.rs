@@ -28,9 +28,11 @@ use std::collections::BTreeMap;
 use std::sync::mpsc::{Receiver, Sender};
 use std::time::Duration;
 
-use super::batcher::{CancelToken, Finished, Scheduler, SeqBackend};
-use super::metrics::Metrics;
-use super::protocol::{err_response, ok_generate, ok_stats, parse_request, Op, SHUTTING_DOWN};
+use super::batcher::{CancelToken, Finished, Overloaded, Scheduler, SeqBackend};
+use super::metrics::{export_faults, Metrics};
+use super::protocol::{
+    err_full, err_response, ok_generate, ok_ping, ok_stats, parse_request, Op, SHUTTING_DOWN,
+};
 use crate::util::json::Json;
 
 /// One unit of work handed from a connection handler to the reactor.
@@ -132,7 +134,7 @@ impl<B: SeqBackend> Reactor<B> {
             }
         };
         match req.op {
-            Op::Generate { prompt, max_new_tokens, prefix_hint } => {
+            Op::Generate { prompt, max_new_tokens, prefix_hint, deadline_ms } => {
                 self.metrics.submitted += 1;
                 if self.shutdown {
                     self.metrics.rejected_shutdown += 1;
@@ -140,13 +142,26 @@ impl<B: SeqBackend> Reactor<B> {
                     return;
                 }
                 let max_new = max_new_tokens.min(self.max_new_tokens);
-                match self.sched.submit_opt(prompt, max_new, cancel, prefix_hint) {
+                let deadline = deadline_ms.map(Duration::from_millis);
+                match self.sched.submit_req(prompt, max_new, cancel, prefix_hint, deadline) {
                     Ok(sid) => {
                         self.waiting.insert(sid, (req.id, reply));
                     }
                     Err(e) => {
                         self.metrics.rejected += 1;
-                        let _ = reply.send(err_response(req.id, &format!("{e:#}")));
+                        // queue-full backpressure is machine-readable: code
+                        // + a retry_after_ms hint scaled to the backlog
+                        let resp = match e.downcast_ref::<Overloaded>() {
+                            Some(o) => err_full(
+                                req.id,
+                                &format!("{e:#}"),
+                                Some("overloaded"),
+                                Some(o.retry_after_ms),
+                                None,
+                            ),
+                            None => err_response(req.id, &format!("{e:#}")),
+                        };
+                        let _ = reply.send(resp);
                     }
                 }
             }
@@ -155,8 +170,25 @@ impl<B: SeqBackend> Reactor<B> {
                 let (q, a) = self.sched.depth();
                 j.set("queue_depth", q.into());
                 j.set("active_seqs", a.into());
+                export_faults(
+                    &mut j,
+                    &self.sched.fault_stats(),
+                    self.sched.backend().degraded(),
+                    crate::runtime::lock_poisoned_total(),
+                );
                 stats_hook(&mut j);
                 let _ = reply.send(ok_stats(req.id, j));
+            }
+            Op::Ping => {
+                let (q, a) = self.sched.depth();
+                let _ = reply.send(ok_ping(
+                    req.id,
+                    env!("CARGO_PKG_VERSION"),
+                    self.sched.backend().degraded(),
+                    self.sched.inflight(),
+                    q,
+                    a,
+                ));
             }
             Op::Shutdown => {
                 self.shutdown = true;
@@ -172,7 +204,9 @@ impl<B: SeqBackend> Reactor<B> {
             return; // the client is gone; there is no one to write to
         }
         let resp = match &f.error {
-            Some(e) => err_response(req_id, e),
+            // structured failure: free-text error + machine-readable code +
+            // whatever partial output the request generated before it died
+            Some(e) => err_full(req_id, e, f.code.as_deref(), None, Some(&f.tokens)),
             None => {
                 // steady-state decode speed: time after the first token,
                 // averaged over the remaining tokens (0 when ≤ 1 token)
@@ -341,5 +375,108 @@ mod tests {
         assert_eq!(r.metrics().cancelled, 1);
         assert!(!r.sched().has_work());
         assert!(rrx.try_recv().is_err(), "cancelled request must not receive a response");
+    }
+
+    /// Backend that never admits (permanent memory pressure), to pin
+    /// requests in the queue.
+    struct Gated;
+
+    impl SeqBackend for Gated {
+        type Seq = NoSeq;
+        fn new_seq(&mut self) -> anyhow::Result<NoSeq> {
+            Ok(NoSeq)
+        }
+        fn prefill_chunk(&mut self, _s: &mut NoSeq, _c: &[i32]) -> anyhow::Result<()> {
+            Ok(())
+        }
+        fn decode(&mut self, _s: &mut NoSeq, n: usize) -> anyhow::Result<Decoded> {
+            Ok(Decoded { tokens: vec![17; n], t_first: None })
+        }
+        fn can_admit(&self, _active: usize) -> bool {
+            false
+        }
+    }
+
+    #[test]
+    fn ping_reports_health() {
+        let sched = Scheduler::new(Instant0, 128, 16, 16, 64);
+        let mut r = Reactor::new(sched, 64);
+        let (tx, rx) = mpsc::channel();
+        let ping = send(&tx, r#"{"op":"ping","id":8}"#.into());
+        r.poll(&rx, &no_hook);
+        let j = Json::parse(&ping.recv().unwrap()).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(true));
+        assert_eq!(j.str_of("version"), Some(env!("CARGO_PKG_VERSION")));
+        assert_eq!(j.bool_of("degraded"), Some(false));
+        assert_eq!(j.usize_of("inflight"), Some(0));
+        assert_eq!(j.usize_of("queue_depth"), Some(0));
+        assert_eq!(j.usize_of("active_seqs"), Some(0));
+    }
+
+    #[test]
+    fn overload_rejection_is_coded_on_the_wire() {
+        let sched = Scheduler::new(Gated, 128, 16, 16, 2); // queue cap 2
+        let mut r = Reactor::new(sched, 64);
+        let (tx, rx) = mpsc::channel();
+        let replies: Vec<_> = (0..3).map(|i| send(&tx, gen_line(i, 4))).collect();
+        r.poll(&rx, &no_hook);
+        assert_eq!(r.metrics().rejected, 1);
+        // first two queued (no reply yet), third rejected with the hint
+        assert!(replies[0].try_recv().is_err());
+        assert!(replies[1].try_recv().is_err());
+        let j = Json::parse(&replies[2].recv().unwrap()).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(false));
+        assert_eq!(j.str_of("code"), Some("overloaded"));
+        assert!(j.usize_of("retry_after_ms").unwrap() >= 50);
+        // and the counter is visible through op:stats
+        let stats = send(&tx, r#"{"op":"stats","id":9}"#.into());
+        r.poll(&rx, &no_hook);
+        let s = Json::parse(&stats.recv().unwrap()).unwrap();
+        let s = s.req("stats");
+        assert_eq!(s.usize_of("overloaded"), Some(1));
+        assert_eq!(s.usize_of("retries"), Some(0));
+        assert_eq!(s.usize_of("quarantined"), Some(0));
+        assert_eq!(s.bool_of("device_degraded"), Some(false));
+    }
+
+    /// Decode at ~5 ms/token so a deadline can land mid-generation.
+    struct SlowDecode;
+
+    impl SeqBackend for SlowDecode {
+        type Seq = NoSeq;
+        fn new_seq(&mut self) -> anyhow::Result<NoSeq> {
+            Ok(NoSeq)
+        }
+        fn prefill_chunk(&mut self, _s: &mut NoSeq, _c: &[i32]) -> anyhow::Result<()> {
+            Ok(())
+        }
+        fn decode(&mut self, _s: &mut NoSeq, n: usize) -> anyhow::Result<Decoded> {
+            std::thread::sleep(Duration::from_millis(5));
+            Ok(Decoded { tokens: vec![17; n], t_first: None })
+        }
+    }
+
+    #[test]
+    fn deadline_reply_is_coded_and_carries_partial_output() {
+        let sched = Scheduler::new(SlowDecode, 128, 1, 16, 64); // 1 token per 5ms quantum
+        let mut r = Reactor::new(sched, 64);
+        let (tx, rx) = mpsc::channel();
+        let line = r#"{"op":"generate","id":3,"prompt_tokens":[1,2,3],"max_new_tokens":64,"deadline_ms":30}"#;
+        let reply = send(&tx, line.to_string());
+        let t0 = std::time::Instant::now();
+        let resp = loop {
+            r.poll(&rx, &no_hook);
+            if let Ok(resp) = reply.try_recv() {
+                break resp;
+            }
+            assert!(t0.elapsed() < Duration::from_secs(5), "deadline reply never arrived");
+        };
+        let j = Json::parse(&resp).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(false));
+        assert_eq!(j.str_of("code"), Some("deadline-exceeded"));
+        let n = j.usize_of("gen_tokens").unwrap();
+        assert!(n >= 1 && n < 64, "partial output expected, got {n} tokens");
+        assert_eq!(j.get("tokens").and_then(|a| a.as_arr()).map(|a| a.len()), Some(n));
+        assert!(!r.sched().has_work());
     }
 }

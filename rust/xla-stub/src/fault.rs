@@ -1,0 +1,293 @@
+//! Deterministic, seeded fault injection for chaos testing the serving
+//! stack in stub builds.
+//!
+//! A [`FaultPlan`] maps call *sites* (short strings like `"upload"`,
+//! `"execute"`, or any site a test invents) to an injection [`FaultKind`]
+//! and a rate. Decisions are pure functions of `(seed, site, draw key)` —
+//! no RNG state, no wall clock — so a plan replays identically across runs
+//! and thread schedules:
+//!
+//! - [`check`] keys the draw on a per-site call counter (deterministic when
+//!   the call order is; fine for single-threaded unit tests and the stub's
+//!   own hooks);
+//! - [`check_keyed`] takes a caller-supplied key (e.g. a per-sequence draw
+//!   counter) so concurrent schedules cannot perturb fault placement —
+//!   this is what the chaos bench and property tests use.
+//!
+//! Plans install programmatically ([`install`]) or from the
+//! `LACACHE_FAULT_PLAN` env var (read once, on first check):
+//!
+//! ```text
+//! LACACHE_FAULT_PLAN="seed=42;upload:transient:0.1;execute:panic:0.05;download:latency20:0.5"
+//! ```
+//!
+//! Faults FIRE BEFORE the faulted operation touches anything — a faulted
+//! call mutates nothing. That is the crash-consistency contract the
+//! runtime's rebuild-from-arena recovery depends on.
+//!
+//! With no plan installed and the env var unset, [`check`] is a single
+//! relaxed atomic load — the hooks cost nothing in normal runs.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Mutex, Once, OnceLock};
+
+/// Marker substring carried by injected transient-fault errors; the
+/// runtime's error taxonomy classifies on it.
+pub const TRANSIENT_MARKER: &str = "injected-transient-fault";
+/// Marker substring carried by injected fatal-fault errors and panics.
+pub const FATAL_MARKER: &str = "injected-fatal-fault";
+
+/// What an injected fault does at its call site.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum FaultKind {
+    /// The operation fails with a [`TRANSIENT_MARKER`] error (retryable).
+    Transient,
+    /// The operation fails with a [`FATAL_MARKER`] error (never retried).
+    Fatal,
+    /// The operation succeeds after sleeping this many milliseconds.
+    Latency(u64),
+    /// The calling thread panics (exercises worker panic isolation).
+    Panic,
+}
+
+/// One injection rule: at `site`, fire `kind` on a `rate` fraction of draws.
+#[derive(Clone, Debug)]
+pub struct SiteRule {
+    pub site: String,
+    pub kind: FaultKind,
+    /// Fraction of draws at this site that fault, in `[0, 1]`.
+    pub rate: f64,
+}
+
+/// A seeded set of injection rules.
+#[derive(Clone, Debug, Default)]
+pub struct FaultPlan {
+    pub seed: u64,
+    pub rules: Vec<SiteRule>,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> Self {
+        FaultPlan { seed, rules: Vec::new() }
+    }
+
+    /// Builder-style: add one rule.
+    pub fn rule(mut self, site: &str, kind: FaultKind, rate: f64) -> Self {
+        self.rules.push(SiteRule { site: site.to_string(), kind, rate });
+        self
+    }
+
+    /// Parse the `LACACHE_FAULT_PLAN` format: `;`-separated items, either
+    /// `seed=N` or `site:kind:rate` with kind one of `transient`, `fatal`,
+    /// `panic`, or `latencyNNN` (milliseconds). Unparseable items error so
+    /// a typo'd plan fails loudly instead of silently injecting nothing.
+    pub fn parse(spec: &str) -> Result<Self, String> {
+        let mut plan = FaultPlan::default();
+        for item in spec.split(';').map(str::trim).filter(|s| !s.is_empty()) {
+            if let Some(seed) = item.strip_prefix("seed=") {
+                plan.seed =
+                    seed.parse().map_err(|_| format!("fault plan: bad seed {seed:?}"))?;
+                continue;
+            }
+            let parts: Vec<&str> = item.split(':').collect();
+            if parts.len() != 3 {
+                return Err(format!("fault plan: expected site:kind:rate, got {item:?}"));
+            }
+            let kind = match parts[1] {
+                "transient" => FaultKind::Transient,
+                "fatal" => FaultKind::Fatal,
+                "panic" => FaultKind::Panic,
+                k => {
+                    let ms = k
+                        .strip_prefix("latency")
+                        .and_then(|ms| ms.parse().ok())
+                        .ok_or_else(|| format!("fault plan: unknown kind {k:?}"))?;
+                    FaultKind::Latency(ms)
+                }
+            };
+            let rate: f64 =
+                parts[2].parse().map_err(|_| format!("fault plan: bad rate {:?}", parts[2]))?;
+            if !(0.0..=1.0).contains(&rate) {
+                return Err(format!("fault plan: rate {rate} outside [0, 1]"));
+            }
+            plan.rules.push(SiteRule { site: parts[0].to_string(), kind, rate });
+        }
+        Ok(plan)
+    }
+}
+
+struct FaultState {
+    plan: Option<FaultPlan>,
+    /// Per-site draw counters backing [`check`].
+    counters: HashMap<String, u64>,
+}
+
+static STATE: OnceLock<Mutex<FaultState>> = OnceLock::new();
+static ENABLED: AtomicBool = AtomicBool::new(false);
+static ENV_INIT: Once = Once::new();
+
+fn state() -> &'static Mutex<FaultState> {
+    STATE.get_or_init(|| Mutex::new(FaultState { plan: None, counters: HashMap::new() }))
+}
+
+fn init_from_env() {
+    ENV_INIT.call_once(|| {
+        if let Ok(spec) = std::env::var("LACACHE_FAULT_PLAN") {
+            match FaultPlan::parse(&spec) {
+                Ok(plan) => install_inner(Some(plan)),
+                Err(e) => panic!("LACACHE_FAULT_PLAN: {e}"),
+            }
+        }
+    });
+}
+
+fn install_inner(plan: Option<FaultPlan>) {
+    let mut g = state().lock().unwrap_or_else(|p| p.into_inner());
+    ENABLED.store(plan.as_ref().is_some_and(|p| !p.rules.is_empty()), Ordering::SeqCst);
+    g.plan = plan;
+    g.counters.clear();
+}
+
+/// Install (or clear, with `None`) the process-wide fault plan, resetting
+/// per-site counters. Overrides any env-configured plan.
+pub fn install(plan: Option<FaultPlan>) {
+    init_from_env();
+    install_inner(plan);
+}
+
+/// SplitMix64: a well-mixed hash of the 64-bit input.
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E3779B97F4A7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D049BB133111EB);
+    x ^ (x >> 31)
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+/// Pure decision function: does draw `key` at `site` fault, and how?
+fn decide(plan: &FaultPlan, site: &str, key: u64) -> Option<FaultKind> {
+    for (i, r) in plan.rules.iter().enumerate() {
+        if r.site != site {
+            continue;
+        }
+        let h = splitmix64(
+            plan.seed ^ fnv1a(site).rotate_left(i as u32) ^ key.wrapping_mul(0x2545F4914F6CDD1D),
+        );
+        // top 53 bits -> uniform in [0, 1)
+        let u = (h >> 11) as f64 / (1u64 << 53) as f64;
+        if u < r.rate {
+            return Some(r.kind);
+        }
+    }
+    None
+}
+
+/// Draw a fault decision for `site` keyed on its global call counter.
+/// Returns the fault to apply, or `None` (the overwhelmingly common case).
+pub fn check(site: &str) -> Option<FaultKind> {
+    init_from_env();
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let mut g = state().lock().unwrap_or_else(|p| p.into_inner());
+    let key = {
+        let c = g.counters.entry(site.to_string()).or_insert(0);
+        let k = *c;
+        *c += 1;
+        k
+    };
+    g.plan.as_ref().and_then(|p| decide(p, site, key))
+}
+
+/// Draw a fault decision keyed by the caller — the decision depends only on
+/// `(seed, site, key)`, so callers that key on e.g. a per-sequence op count
+/// get fault placement independent of thread interleaving.
+pub fn check_keyed(site: &str, key: u64) -> Option<FaultKind> {
+    init_from_env();
+    if !ENABLED.load(Ordering::Relaxed) {
+        return None;
+    }
+    let g = state().lock().unwrap_or_else(|p| p.into_inner());
+    g.plan.as_ref().and_then(|p| decide(p, site, key))
+}
+
+/// Apply a drawn fault: sleep for latency faults (then proceed), panic for
+/// panic faults, and return the marker error message for transient/fatal
+/// faults — the caller turns `Some(msg)` into its own error type *before*
+/// performing any part of the faulted operation.
+pub fn apply(site: &str, kind: FaultKind) -> Option<String> {
+    match kind {
+        FaultKind::Latency(ms) => {
+            std::thread::sleep(std::time::Duration::from_millis(ms));
+            None
+        }
+        FaultKind::Panic => panic!("{FATAL_MARKER}: injected panic at {site}"),
+        FaultKind::Transient => Some(format!("{TRANSIENT_MARKER} at {site}")),
+        FaultKind::Fatal => Some(format!("{FATAL_MARKER} at {site}")),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_round_trips_the_env_format() {
+        let p = FaultPlan::parse("seed=42; upload:transient:0.1;execute:panic:0.05").unwrap();
+        assert_eq!(p.seed, 42);
+        assert_eq!(p.rules.len(), 2);
+        assert_eq!(p.rules[0].site, "upload");
+        assert_eq!(p.rules[0].kind, FaultKind::Transient);
+        assert!((p.rules[0].rate - 0.1).abs() < 1e-12);
+        assert_eq!(p.rules[1].kind, FaultKind::Panic);
+        let p = FaultPlan::parse("download:latency20:0.5").unwrap();
+        assert_eq!(p.rules[0].kind, FaultKind::Latency(20));
+        assert!(FaultPlan::parse("upload:transient").is_err());
+        assert!(FaultPlan::parse("upload:flaky:0.1").is_err());
+        assert!(FaultPlan::parse("upload:transient:1.5").is_err());
+        assert!(FaultPlan::parse("seed=abc").is_err());
+    }
+
+    #[test]
+    fn decisions_are_deterministic_and_rate_shaped() {
+        let plan = FaultPlan::new(7).rule("op", FaultKind::Transient, 0.1);
+        let hits: Vec<u64> = (0..10_000).filter(|&k| decide(&plan, "op", k).is_some()).collect();
+        // deterministic: same plan, same answers
+        let hits2: Vec<u64> = (0..10_000).filter(|&k| decide(&plan, "op", k).is_some()).collect();
+        assert_eq!(hits, hits2);
+        // rate-shaped: ~10% +/- generous slack
+        assert!(hits.len() > 700 && hits.len() < 1300, "got {} faults", hits.len());
+        // other sites unaffected
+        assert!(decide(&plan, "other", 0).is_none());
+        // different seeds place faults differently
+        let plan2 = FaultPlan::new(8).rule("op", FaultKind::Transient, 0.1);
+        let hits3: Vec<u64> = (0..10_000).filter(|&k| decide(&plan2, "op", k).is_some()).collect();
+        assert_ne!(hits, hits3);
+    }
+
+    #[test]
+    fn rate_bounds_are_absolute() {
+        let never = FaultPlan::new(3).rule("op", FaultKind::Fatal, 0.0);
+        assert!((0..1000).all(|k| decide(&never, "op", k).is_none()));
+        let always = FaultPlan::new(3).rule("op", FaultKind::Fatal, 1.0);
+        assert!((0..1000).all(|k| decide(&always, "op", k) == Some(FaultKind::Fatal)));
+    }
+
+    #[test]
+    fn apply_formats_markers() {
+        let msg = apply("upload", FaultKind::Transient).unwrap();
+        assert!(msg.contains(TRANSIENT_MARKER) && msg.contains("upload"));
+        let msg = apply("execute", FaultKind::Fatal).unwrap();
+        assert!(msg.contains(FATAL_MARKER));
+        assert!(apply("x", FaultKind::Latency(0)).is_none());
+    }
+}

@@ -29,6 +29,7 @@
 //! both-feature-set build) still compile — the real-binding build is
 //! artifact-gated, like the integration suite.
 
+pub mod fault;
 mod stub;
 
 #[cfg(not(feature = "real-pjrt"))]

@@ -41,6 +41,18 @@ impl fmt::Display for Error {
 
 impl std::error::Error for Error {}
 
+/// Injection hook shared by every stub call site: draw from the installed
+/// [`crate::fault`] plan (free when no plan is active) and fail BEFORE the
+/// operation touches anything, so a faulted call never half-applies.
+fn faultpoint(site: &str) -> Result<()> {
+    if let Some(kind) = crate::fault::check(site) {
+        if let Some(msg) = crate::fault::apply(site, kind) {
+            return Err(Error::msg(msg));
+        }
+    }
+    Ok(())
+}
+
 /// Element types a buffer or [`Literal`] can be read back as. The stub stores
 /// raw little-endian bytes, so each type carries its own (de)serialization.
 pub trait NativeType: Copy {
@@ -106,6 +118,7 @@ impl PjRtClient {
         dims: &[usize],
         _device: Option<usize>,
     ) -> Result<PjRtBuffer> {
+        faultpoint("upload")?;
         let mut bytes = vec![0u8; data.len() * T::SIZE];
         for (x, chunk) in data.iter().zip(bytes.chunks_exact_mut(T::SIZE)) {
             x.write_le(chunk);
@@ -132,6 +145,7 @@ impl XlaComputation {
 
 impl PjRtLoadedExecutable {
     pub fn execute_b(&self, _args: &[&PjRtBuffer]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        faultpoint("execute")?;
         Err(Error::unavailable())
     }
 
@@ -147,19 +161,28 @@ impl PjRtLoadedExecutable {
         _args: &[&PjRtBuffer],
         _donated: &[usize],
     ) -> Result<Vec<Vec<PjRtBuffer>>> {
+        faultpoint("execute")?;
         Err(Error::unavailable())
     }
 }
 
 impl PjRtBuffer {
+    /// Poison-safe access to the retained bytes: an injected panic that
+    /// unwound while a guard was held must not brick the buffer (the bytes
+    /// themselves are always whole — writers copy element-wise into
+    /// pre-validated ranges).
+    fn bytes(&self) -> std::sync::MutexGuard<'_, Vec<u8>> {
+        self.data.lock().unwrap_or_else(|p| p.into_inner())
+    }
+
     /// Bytes this buffer occupies on the (stub) device.
     pub fn on_device_size_bytes(&self) -> usize {
-        self.data.lock().unwrap().len()
+        self.bytes().len()
     }
 
     /// Element count (device size / element size).
     pub fn element_count(&self) -> usize {
-        self.data.lock().unwrap().len() / self.elem_size.max(1)
+        self.bytes().len() / self.elem_size.max(1)
     }
 
     pub fn dims(&self) -> &[usize] {
@@ -175,6 +198,7 @@ impl PjRtBuffer {
         out: &mut [T],
         elem_offset: usize,
     ) -> Result<()> {
+        faultpoint("download")?;
         if T::SIZE != self.elem_size {
             return Err(Error::msg(format!(
                 "copy_to_host_partial: element size {} != buffer element size {}",
@@ -182,7 +206,7 @@ impl PjRtBuffer {
                 self.elem_size
             )));
         }
-        let data = self.data.lock().unwrap();
+        let data = self.bytes();
         let lo = elem_offset * T::SIZE;
         let hi = lo + out.len() * T::SIZE;
         if hi > data.len() {
@@ -206,6 +230,7 @@ impl PjRtBuffer {
         src: &[T],
         elem_offset: usize,
     ) -> Result<()> {
+        faultpoint("overwrite")?;
         if T::SIZE != self.elem_size {
             return Err(Error::msg(format!(
                 "overwrite_from_host_partial: element size {} != buffer element size {}",
@@ -213,7 +238,7 @@ impl PjRtBuffer {
                 self.elem_size
             )));
         }
-        let mut data = self.data.lock().unwrap();
+        let mut data = self.bytes();
         let lo = elem_offset * T::SIZE;
         let hi = lo + src.len() * T::SIZE;
         if hi > data.len() {
@@ -232,7 +257,8 @@ impl PjRtBuffer {
     /// unavailable in the stub, so execution *outputs* never exist here;
     /// host-sourced buffers read back fine.)
     pub fn to_literal_sync(&self) -> Result<Literal> {
-        Ok(Literal { data: self.data.lock().unwrap().clone(), elem_size: self.elem_size })
+        faultpoint("download")?;
+        Ok(Literal { data: self.bytes().clone(), elem_size: self.elem_size })
     }
 }
 
