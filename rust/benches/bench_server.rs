@@ -14,11 +14,17 @@
 //! must leave every sequence byte-identical to the fault-free run with zero
 //! quarantines at the default retry budget, and one injected worker panic
 //! mid-decode must kill exactly the affected sequence; writes
-//! `BENCH_chaos.json`) — see PERF.md.
+//! `BENCH_chaos.json`), and the multi-device sharding scenario (two prompt
+//! families homed on distinct stub devices via locality-aware placement:
+//! aggregate resident bytes must exceed any single shard's cap, prefix hits
+//! must equal the single-device run, and killing one stub device must
+//! degrade only its own shard while later sequences spill over with a cold
+//! prefill; writes `BENCH_shard.json`) — see PERF.md.
 //!
 //! Set `LACACHE_BENCH_SMOKE=1` (exactly) for the short CI mode; `BENCH_JSON`
-//! / `BENCH_SERVING_JSON` / `BENCH_CHAOS_JSON` override the JSON output
-//! paths, `LACACHE_FAULT_SEED` / `LACACHE_FAULT_RATE` the chaos plan.
+//! / `BENCH_SERVING_JSON` / `BENCH_CHAOS_JSON` / `BENCH_SHARD_JSON` override
+//! the JSON output paths, `LACACHE_FAULT_SEED` / `LACACHE_FAULT_RATE` the
+//! chaos plan.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -26,8 +32,9 @@ use std::time::Duration;
 
 use lacache::cache::{make_policy, CachePolicy};
 use lacache::runtime::{
-    admission_ok, seq_footprint_bytes, Acquired, CallError, CallExecutor, Completion, DeviceTier,
-    KvArena, KvCache, PrefixCache, PrefixSnapshot, ScratchPool,
+    admission_ok, place, seq_footprint_bytes, Acquired, CallError, CallExecutor, Completion,
+    DeviceTier, KvArena, KvCache, PlacementStats, PrefixCache, PrefixSnapshot, ScratchPool,
+    ShardLoad,
 };
 use lacache::server::batcher::{
     CallDone, CallOut, CancelToken, Decoded, FaultStats, Finished, Scheduler, SeqBackend,
@@ -95,6 +102,7 @@ fn main() -> anyhow::Result<()> {
     burst_intake_scenario(smoke)?;
     shared_prefix_scenario(smoke)?;
     chaos_scenario(smoke)?;
+    shard_scenario(smoke)?;
     Ok(())
 }
 
@@ -1149,7 +1157,10 @@ impl SeqBackend for PrefixBackend {
         Ok(PrefixSeq { kv, ingested: Vec::new(), next_pos: 0 })
     }
 
-    fn adopt_prefix(&mut self, seq: &mut PrefixSeq, prompt: &[i32]) -> usize {
+    fn adopt_prefix(&mut self, seq: &mut PrefixSeq, prompt: &[i32], allow: bool) -> usize {
+        if !allow {
+            return 0;
+        }
         let Some((matched, snap)) = self.prefix.lookup(prompt) else {
             return 0;
         };
@@ -1344,6 +1355,376 @@ fn shared_prefix_scenario(smoke: bool) -> anyhow::Result<()> {
         ("shared_span_charged_once", true.into()),
     ]);
     let path = std::env::var("BENCH_PREFIX_JSON").unwrap_or_else(|_| "BENCH_prefix.json".into());
+    std::fs::write(&path, out.to_string() + "\n")?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Multi-shard serving substrate for [`shard_scenario`]: N per-device
+/// residency tiers + scratch pools over one multi-device stub client, one
+/// logical prefix tree whose snapshots record a home shard, and the real
+/// [`place`] policy deciding every admission — the same pieces the sharded
+/// `EngineBackend` composes, minus the model.
+struct ShardBenchBackend {
+    client: xla::PjRtClient,
+    arena: KvArena,
+    prefix: PrefixCache,
+    placement: PlacementStats,
+    tiers: Vec<DeviceTier>,
+    pools: Vec<ScratchPool>,
+    policy: Box<dyn CachePolicy>,
+    l: usize,
+    h: usize,
+    c: usize,
+    dh: usize,
+    window: usize,
+    /// Tokens actually prefilled — grows only for cold (non-adopted) spans.
+    prefill_tokens: u64,
+}
+
+struct ShardBenchSeq {
+    kv: KvCache,
+    ingested: Vec<i32>,
+    next_pos: u64,
+    shard: usize,
+}
+
+impl ShardBenchBackend {
+    fn new(devices: usize, per_shard_cap: usize, shape: (usize, usize, usize, usize)) -> Self {
+        let (l, h, c, dh) = shape;
+        Self {
+            client: xla::PjRtClient::cpu_with_devices(devices).unwrap(),
+            arena: KvArena::new(),
+            prefix: PrefixCache::new("bench-shard".into(), 256 << 20),
+            placement: PlacementStats::default(),
+            tiers: (0..devices).map(|d| DeviceTier::with_device(per_shard_cap, d)).collect(),
+            pools: (0..devices).map(|_| ScratchPool::new(4)).collect(),
+            policy: make_policy("lacache:budget=128,span=2", l).unwrap(),
+            l,
+            h,
+            c,
+            dh,
+            window: 128,
+            prefill_tokens: 0,
+        }
+    }
+
+    fn fill_row(&self, row: &mut [f32], n: usize, i: usize, tok: i32, pos: u64) {
+        let v = tok as f32 * 1e-3 + pos as f32 * 1e-6;
+        for hh in 0..self.h {
+            for d in 0..self.dh {
+                row[(hh * n + i) * self.dh + d] = v;
+            }
+        }
+    }
+
+    fn shard_loads(&self) -> Vec<ShardLoad> {
+        self.tiers
+            .iter()
+            .map(|t| ShardLoad {
+                device: t.device(),
+                resident_bytes: t.resident_bytes(),
+                inflight: 0,
+                degraded: t.degraded(),
+                capacity_bytes: t.capacity_bytes(),
+            })
+            .collect()
+    }
+
+    /// Promote the sequence's image into ITS OWN shard's tier — the
+    /// runtime's per-call residency path. A failed device call (e.g. the
+    /// device was killed) is noted against that tier only; crossing the
+    /// consecutive-failure threshold trips the shard's sticky degraded
+    /// bypass while every other shard keeps its residency. The KV append
+    /// already landed in the arena, so the call itself still succeeds
+    /// host-side.
+    fn promote(&mut self, seq: &mut ShardBenchSeq) {
+        let tier = &mut self.tiers[seq.shard];
+        if tier.degraded() {
+            return;
+        }
+        match tier.acquire(&self.client, &mut seq.kv, &mut self.pools[seq.shard]) {
+            Ok(_) => tier.note_call_success(),
+            Err(_) => tier.note_call_failure(),
+        }
+    }
+
+    fn aggregate_resident(&self) -> usize {
+        self.tiers.iter().map(|t| t.resident_bytes()).sum()
+    }
+}
+
+impl SeqBackend for ShardBenchBackend {
+    type Seq = ShardBenchSeq;
+
+    fn new_seq(&mut self) -> anyhow::Result<ShardBenchSeq> {
+        let kv = KvCache::with_arena(self.arena.clone(), self.l, self.h, self.c, self.dh);
+        Ok(ShardBenchSeq { kv, ingested: Vec::new(), next_pos: 0, shard: 0 })
+    }
+
+    fn adopt_prefix(&mut self, seq: &mut ShardBenchSeq, prompt: &[i32], allow: bool) -> usize {
+        let hit = if allow { self.prefix.lookup(prompt) } else { None };
+        let preferred = hit.as_ref().map(|(_, snap)| snap.home_shard());
+        let placement = place(&self.shard_loads(), preferred);
+        self.placement.note(placement.kind);
+        seq.shard = placement.shard;
+        let Some((matched, snap)) = hit else {
+            return 0;
+        };
+        if placement.shard != snap.home_shard() {
+            return 0; // spillover cold-prefills; snapshots never migrate
+        }
+        if snap.apply(&mut seq.kv).is_err() {
+            return 0;
+        }
+        seq.ingested.extend_from_slice(&prompt[..matched]);
+        seq.next_pos = matched as u64;
+        matched
+    }
+
+    fn prefill_chunk(&mut self, seq: &mut ShardBenchSeq, chunk: &[i32]) -> anyhow::Result<()> {
+        let n = chunk.len();
+        let mut row = vec![0.0f32; self.h * n * self.dh];
+        for (i, &tok) in chunk.iter().enumerate() {
+            self.fill_row(&mut row, n, i, tok, seq.next_pos + i as u64);
+        }
+        for layer in 0..self.l {
+            seq.kv.append_layer(layer, &row, &row, n, n, seq.next_pos)?;
+        }
+        seq.next_pos += n as u64;
+        self.policy.evict(&mut seq.kv)?;
+        self.prefill_tokens += n as u64;
+        seq.ingested.extend_from_slice(chunk);
+        let w = self.window;
+        if !seq.ingested.is_empty() && seq.ingested.len() % w == 0 {
+            let home = seq.shard;
+            let kv = &mut seq.kv;
+            self.prefix.insert_with(&seq.ingested, w, || PrefixSnapshot::freeze_on(kv, home));
+        }
+        self.promote(seq);
+        Ok(())
+    }
+
+    fn decode(&mut self, seq: &mut ShardBenchSeq, n: usize) -> anyhow::Result<Decoded> {
+        let mut row = vec![0.0f32; self.h * self.dh];
+        for _ in 0..n {
+            let tok = 1000 + seq.next_pos as i32;
+            self.fill_row(&mut row, 1, 0, tok, seq.next_pos);
+            for layer in 0..self.l {
+                seq.kv.append_layer(layer, &row, &row, 1, 1, seq.next_pos)?;
+            }
+            seq.next_pos += 1;
+        }
+        self.policy.evict(&mut seq.kv)?;
+        self.promote(seq);
+        Ok(Decoded { tokens: vec![7; n], t_first: None })
+    }
+
+    fn can_admit(&self, _active: usize) -> bool {
+        true
+    }
+}
+
+/// Multi-device sharding scenario (full scheduler path over the stub
+/// client's `--devices N` analog): two prompt families get distinct home
+/// shards, followers place prefix-locally, and one killed device degrades
+/// only its own shard. Asserts the subsystem's serving guarantees:
+///
+/// 1. **capacity scales with shards**: peak aggregate device-resident bytes
+///    across the fleet exceed any single shard's residency cap;
+/// 2. **locality preserves reuse**: `prefix_hits` equals the `--devices 1`
+///    run of the same workload, and no pre-fault follower cold-prefills
+///    (total prefilled tokens == the two leader prompts);
+/// 3. **decode ITL stays bounded** under the cross-shard concurrent load;
+/// 4. **fault isolation**: killing one stub device trips sticky degraded
+///    mode on that shard alone — its sequences finish host-side, the other
+///    shard keeps its residency, and later sequences homed on the dead
+///    shard spill over (counted, cold-prefilled, never migrated).
+///
+/// Emits machine-readable `BENCH_shard.json` (path override:
+/// `BENCH_SHARD_JSON`) for the CI perf trajectory.
+fn shard_scenario(smoke: bool) -> anyhow::Result<()> {
+    let shape = (8usize, 4usize, 2048usize, 24usize);
+    let (l, h, c, dh) = shape;
+    let (window, quantum) = (128usize, 16usize);
+    let image_bytes = 2 * 4 * l * h * c * dh;
+    // holds 2 dense images, not 3: follower load must spill within a shard
+    let per_shard_cap = 2 * image_bytes + image_bytes / 2;
+    let prompt_windows = 4usize;
+    let prompt_a: Vec<i32> = (0..(prompt_windows * window) as i32).map(|t| t % 251).collect();
+    let prompt_b: Vec<i32> =
+        (0..(prompt_windows * window) as i32).map(|t| 1000 + (t % 241)).collect();
+
+    // --- single-device reference: same workload, no fault ---------------
+    let backend1 = ShardBenchBackend::new(1, per_shard_cap, shape);
+    let mut s1 = Scheduler::new(backend1, window, quantum, 8, 32);
+    let drive = |s: &mut Scheduler<ShardBenchBackend>| {
+        let mut done = Vec::new();
+        while s.has_work() {
+            done.extend(s.step());
+        }
+        done
+    };
+    s1.submit(prompt_a.clone(), quantum, CancelToken::new())?;
+    drive(&mut s1);
+    s1.submit(prompt_b.clone(), quantum, CancelToken::new())?;
+    drive(&mut s1);
+    for _ in 0..3 {
+        s1.submit(prompt_a.clone(), 2 * quantum, CancelToken::new())?;
+        s1.submit(prompt_b.clone(), 2 * quantum, CancelToken::new())?;
+    }
+    drive(&mut s1);
+    s1.submit(prompt_b.clone(), 4 * quantum, CancelToken::new())?;
+    s1.submit(prompt_a.clone(), 4 * quantum, CancelToken::new())?;
+    s1.submit(prompt_b.clone(), 2 * quantum, CancelToken::new())?;
+    let d1 = drive(&mut s1);
+    assert!(d1.iter().all(|f| f.error.is_none()));
+    let single_hits = s1.backend().prefix.stats().hits;
+    let single_prefill = s1.backend().prefill_tokens;
+    assert_eq!(single_prefill, (prompt_a.len() + prompt_b.len()) as u64);
+
+    // --- two-shard run: same workload + one device killed mid-run -------
+    let devices = 2usize;
+    let backend = ShardBenchBackend::new(devices, per_shard_cap, shape);
+    let mut s = Scheduler::new(backend, window, quantum, 8, 32);
+    let mut itl = Samples::new();
+    let mut agg_peak = 0usize;
+    let mut finished = Vec::new();
+
+    // leader A cold-prefills on the least-loaded shard (0) and publishes
+    // its snapshots there; once its first window is resident, shard 0
+    // carries bytes, so leader B's admission lands on shard 1 — distinct
+    // home shards by load alone
+    s.submit(prompt_a.clone(), quantum, CancelToken::new())?;
+    for _ in 0..8 {
+        finished.extend(s.step());
+        if s.backend().aggregate_resident() > 0 {
+            break;
+        }
+    }
+    assert!(s.backend().aggregate_resident() > 0, "leader A's first window must promote");
+    s.submit(prompt_b.clone(), quantum, CancelToken::new())?;
+    while s.has_work() {
+        finished.extend(s.step());
+        for x in s.take_itl() {
+            itl.record(x);
+        }
+        agg_peak = agg_peak.max(s.backend().aggregate_resident());
+    }
+    assert!(
+        s.backend().tiers[0].resident_bytes() > 0 && s.backend().tiers[1].resident_bytes() > 0,
+        "the two prompt families must land on distinct shards"
+    );
+
+    // 6 concurrent followers (3 per family): every one adopts on its home
+    // shard, so both shards hold live images at once
+    for _ in 0..3 {
+        s.submit(prompt_a.clone(), 2 * quantum, CancelToken::new())?;
+        s.submit(prompt_b.clone(), 2 * quantum, CancelToken::new())?;
+    }
+    while s.has_work() {
+        finished.extend(s.step());
+        for x in s.take_itl() {
+            itl.record(x);
+        }
+        agg_peak = agg_peak.max(s.backend().aggregate_resident());
+    }
+    assert_eq!(
+        s.backend().prefill_tokens,
+        (prompt_a.len() + prompt_b.len()) as u64,
+        "pre-fault followers must all adopt locally: zero cold prefill beyond the two leaders"
+    );
+    assert!(
+        agg_peak > per_shard_cap,
+        "aggregate resident bytes ({agg_peak} B) must exceed one shard's cap \
+         ({per_shard_cap} B): the fleet holds more than any single device could"
+    );
+
+    // kill device 1: its follower finishes host-side after the shard trips
+    // sticky degraded mode; a concurrent shard-0 follower is untouched
+    s.backend().client.kill_device(1);
+    s.submit(prompt_b.clone(), 4 * quantum, CancelToken::new())?;
+    s.submit(prompt_a.clone(), 4 * quantum, CancelToken::new())?;
+    while s.has_work() {
+        finished.extend(s.step());
+        for x in s.take_itl() {
+            itl.record(x);
+        }
+    }
+    assert!(
+        s.backend().tiers[1].degraded(),
+        "repeated failed calls on the killed device must trip its shard degraded"
+    );
+    assert!(
+        !s.backend().tiers[0].degraded(),
+        "one lost device must degrade ITS shard only — the fleet keeps serving"
+    );
+
+    // post-fault: a new family-B request spills over (home shard degraded),
+    // cold-prefills on shard 0, and completes — no cross-device migration
+    s.submit(prompt_b.clone(), 2 * quantum, CancelToken::new())?;
+    while s.has_work() {
+        finished.extend(s.step());
+        for x in s.take_itl() {
+            itl.record(x);
+        }
+    }
+    for f in &finished {
+        assert!(f.error.is_none(), "sequence failed: {:?}", f.error);
+    }
+    let spill = finished.last().unwrap();
+    assert_eq!(spill.prefix_tokens, 0, "spillover must cold-prefill, never migrate pages");
+    assert!(s.backend().placement.spillover >= 1);
+    assert!(s.backend().placement.local_prefix >= 8, "followers must place prefix-locally");
+    assert_eq!(
+        s.backend().prefill_tokens,
+        (prompt_a.len() + 2 * prompt_b.len()) as u64,
+        "exactly one post-fault spillover prefill beyond the two leaders"
+    );
+    let hits = s.backend().prefix.stats().hits;
+    assert_eq!(
+        hits, single_hits,
+        "prefix-local placement must preserve every hit of the --devices 1 run"
+    );
+    let itl_p95 = itl.p95();
+    assert!(
+        itl_p95 < 0.5,
+        "decode ITL p95 must stay bounded under sharded load, got {itl_p95:.3}s"
+    );
+
+    let n_seqs = finished.len();
+    println!(
+        "\nshard: {devices} shards x {per_shard_cap} B cap | {n_seqs} seqs, 2 prompt families | \
+         aggregate resident peak {agg_peak} B ({:.2}x one shard's cap) | \
+         prefix hits {hits} (== 1-device run: {single_hits}) | \
+         placement local={} spillover={} | itl p95 {:.3} ms | shard 1 degraded, shard 0 serving",
+        agg_peak as f64 / per_shard_cap as f64,
+        s.backend().placement.local_prefix,
+        s.backend().placement.spillover,
+        itl_p95 * 1e3,
+    );
+
+    let out = Json::from_pairs(vec![
+        ("bench", "shard".into()),
+        ("smoke", smoke.into()),
+        ("devices", devices.into()),
+        ("shape_lhcd", vec![l, h, c, dh].into()),
+        ("per_shard_cap_bytes", per_shard_cap.into()),
+        ("image_bytes", image_bytes.into()),
+        ("aggregate_resident_peak_bytes", agg_peak.into()),
+        ("exceeds_single_shard_cap", (agg_peak > per_shard_cap).into()),
+        ("prefix_hits", (hits as i64).into()),
+        ("prefix_hits_single_device", (single_hits as i64).into()),
+        ("prefill_tokens_total", (s.backend().prefill_tokens as i64).into()),
+        ("placement_local_prefix", (s.backend().placement.local_prefix as i64).into()),
+        ("placement_least_loaded", (s.backend().placement.least_loaded as i64).into()),
+        ("placement_spillover", (s.backend().placement.spillover as i64).into()),
+        ("placement_host_only", (s.backend().placement.host_only as i64).into()),
+        ("itl_ms_p95", (itl_p95 * 1e3).into()),
+        ("shard0_degraded", s.backend().tiers[0].degraded().into()),
+        ("shard1_degraded", s.backend().tiers[1].degraded().into()),
+    ]);
+    let path = std::env::var("BENCH_SHARD_JSON").unwrap_or_else(|_| "BENCH_shard.json".into());
     std::fs::write(&path, out.to_string() + "\n")?;
     println!("wrote {path}");
     Ok(())

@@ -61,6 +61,15 @@ pub struct ServeConfig {
     /// (non-blocking — the sequence sits out submit rounds while the rest
     /// of the fleet keeps decoding).
     pub retry_backoff_ms: usize,
+    /// Device shards the runtime partitions itself across (clamped to
+    /// >= 1). Each shard gets its own PJRT device, compiled executables,
+    /// residency tier with a `device_pool_bytes / devices` byte slice,
+    /// scratch pool, and submit/reap executor lane; sequences are placed at
+    /// admission by `runtime::placement` (prefix-local first, then
+    /// least-loaded-bytes). On the stub backend `--devices N` fabricates N
+    /// device slots; under `real-pjrt` the client enumerates platform
+    /// devices and this is clamped to what exists.
+    pub devices: usize,
 }
 
 impl Default for ServeConfig {
@@ -82,6 +91,7 @@ impl Default for ServeConfig {
             max_inflight_calls: 1,
             call_retries: 4,
             retry_backoff_ms: 5,
+            devices: 1,
         }
     }
 }
@@ -108,6 +118,7 @@ impl ServeConfig {
             max_inflight_calls: j.usize_of("max_inflight_calls").unwrap_or(d.max_inflight_calls),
             call_retries: j.usize_of("call_retries").unwrap_or(d.call_retries),
             retry_backoff_ms: j.usize_of("retry_backoff_ms").unwrap_or(d.retry_backoff_ms),
+            devices: j.usize_of("devices").unwrap_or(d.devices).max(1),
         })
     }
 
@@ -143,6 +154,7 @@ impl ServeConfig {
         cfg.max_inflight_calls = args.usize_or("max-inflight-calls", cfg.max_inflight_calls);
         cfg.call_retries = args.usize_or("call-retries", cfg.call_retries);
         cfg.retry_backoff_ms = args.usize_or("retry-backoff-ms", cfg.retry_backoff_ms);
+        cfg.devices = args.usize_or("devices", cfg.devices).max(1);
         Ok(cfg)
     }
 
@@ -164,6 +176,7 @@ impl ServeConfig {
             ("max_inflight_calls", self.max_inflight_calls.into()),
             ("call_retries", self.call_retries.into()),
             ("retry_backoff_ms", self.retry_backoff_ms.into()),
+            ("devices", self.devices.into()),
         ])
     }
 }
@@ -201,7 +214,7 @@ impl ExpConfig {
             lengths: args.usize_list_or("lengths", &d.lengths),
             seeds: args
                 .get("seeds")
-                .map(|s| s.split(',').map(|x| x.parse().unwrap()).collect())
+                .map(|_| args.usize_list_or("seeds", &[]).into_iter().map(|s| s as u64).collect())
                 .unwrap_or(d.seeds),
             window: args.usize_or("window", d.window),
             out_dir: args.str_or("out", &d.out_dir),
@@ -228,6 +241,21 @@ mod tests {
         assert_eq!(back.max_inflight_calls, 1, "split-phase dispatch defaults to off");
         assert_eq!(back.call_retries, 4);
         assert_eq!(back.retry_backoff_ms, 5);
+        assert_eq!(back.devices, 1, "sharding defaults to a single device");
+    }
+
+    #[test]
+    fn serve_config_devices_roundtrip_and_clamp() {
+        let cfg = ServeConfig { devices: 4, ..Default::default() };
+        let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.devices, 4);
+        // 0 devices is meaningless: clamped to 1 from both JSON and CLI
+        let zero = ServeConfig { devices: 0, ..Default::default() };
+        assert_eq!(ServeConfig::from_json(&zero.to_json()).unwrap().devices, 1);
+        let args = Args::parse(vec!["--devices".into(), "0".into()]);
+        assert_eq!(ServeConfig::from_args(&args).unwrap().devices, 1);
+        let args = Args::parse(vec!["--devices".into(), "3".into()]);
+        assert_eq!(ServeConfig::from_args(&args).unwrap().devices, 3);
     }
 
     #[test]

@@ -29,6 +29,10 @@ pub struct Engine<'rt> {
     pub opts: EngineOpts,
     pub policy: Box<dyn CachePolicy>,
     pub cache: KvCache,
+    /// Device shard every runtime call routes through. Defaults to 0 (the
+    /// single-device CLI/eval paths never change it); serving assigns it at
+    /// admission from the placement policy, before the first device call.
+    pub shard: usize,
     /// Original-stream token index of the next token to ingest.
     pub n_tokens: u64,
     pub last_token: i32,
@@ -56,6 +60,7 @@ impl<'rt> Engine<'rt> {
             opts,
             policy,
             cache,
+            shard: 0,
             n_tokens: 0,
             last_token: crate::data::corpus::BOS,
             n_evicted: 0,
@@ -164,7 +169,8 @@ impl<'rt> Engine<'rt> {
                     }
                 }
             }
-            let so = self.rt.score(
+            let so = self.rt.score_on(
+                self.shard,
                 &self.opts.model,
                 w,
                 self.opts.c,
@@ -242,8 +248,14 @@ impl<'rt> Engine<'rt> {
                     }
                 }
             }
-            let mut go =
-                self.rt.generate(&self.opts.model, k, scored, &mut self.cache, self.last_token)?;
+            let mut go = self.rt.generate_on(
+                self.shard,
+                &self.opts.model,
+                k,
+                scored,
+                &mut self.cache,
+                self.last_token,
+            )?;
             if t_first.is_none() {
                 // the first token of the call exists as soon as the first
                 // program call returns
@@ -252,7 +264,7 @@ impl<'rt> Engine<'rt> {
             // merge the appended rows and adopt the downloaded state as the
             // next upload's scratch image (the steady-state decode path
             // re-gathers nothing)
-            self.rt.absorb_generated(&mut self.cache, &mut go, k, self.n_tokens)?;
+            self.rt.absorb_generated_on(self.shard, &mut self.cache, &mut go, k, self.n_tokens)?;
             if let Some(mass) = &go.mass {
                 let c = self.cache.c;
                 for layer in 0..self.cache.l {
@@ -283,9 +295,15 @@ impl<'rt> Engine<'rt> {
     /// sampling).
     pub fn step_logits(&mut self) -> Result<Vec<f32>> {
         self.check_memory(1)?;
-        let mut go =
-            self.rt.generate(&self.opts.model, 1, false, &mut self.cache, self.last_token)?;
-        self.rt.absorb_generated(&mut self.cache, &mut go, 1, self.n_tokens)?;
+        let mut go = self.rt.generate_on(
+            self.shard,
+            &self.opts.model,
+            1,
+            false,
+            &mut self.cache,
+            self.last_token,
+        )?;
+        self.rt.absorb_generated_on(self.shard, &mut self.cache, &mut go, 1, self.n_tokens)?;
         self.last_token = go.tokens[0];
         self.n_tokens += 1;
         self.evict()?;

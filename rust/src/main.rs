@@ -32,7 +32,8 @@ fn main() -> Result<()> {
         .describe("scratch-pool-entries", "warm dense host scratch images (LRU)", Some("16"))
         .describe("device-pool-bytes", "device-residency tier bytes (0 = off)", Some("268435456"))
         .describe("prefix-pool-bytes", "prefix-cache byte capacity (0 = off)", Some("67108864"))
-        .describe("max-inflight-calls", "device calls in flight at once (1 = sync)", Some("1"))
+        .describe("devices", "device shards to partition the runtime across", Some("1"))
+        .describe("max-inflight-calls", "device calls in flight at once, per shard (1 = sync)", Some("1"))
         .describe("call-retries", "retry budget per failed device call", Some("4"))
         .describe("retry-backoff-ms", "base retry backoff, doubles per attempt", Some("5"));
     if args.flag("help") {

@@ -269,6 +269,26 @@ pub fn admission_ok(
         && reserved.saturating_add(prefix_bytes) <= limit
 }
 
+/// Per-shard staging pressure folded into the single `staging_bytes` number
+/// [`admission_ok`] counts. `staged[i]` is shard `i`'s measured staging
+/// bytes (device tier + scratch pool) and `caps[i]` its physical ceiling
+/// (residency slice + scratch worst case); `projected_total` is the
+/// admission projection for the whole hot set ((active+1) dense images).
+///
+/// Each shard contributes `max(measured, its even share of the projection)`
+/// clamped to its own cap — so an oversubscribed shard cannot borrow
+/// headroom from an idle one, and no shard is ever charged beyond what its
+/// tiers can physically hold (LRU evicts the rest). With one shard this
+/// reduces exactly to the pre-sharding formula
+/// `max(measured, min(projected, cap))` (both clamp at the same cap).
+pub fn sharded_staging_bytes(staged: &[usize], caps: &[usize], projected_total: usize) -> usize {
+    if staged.is_empty() {
+        return projected_total;
+    }
+    let share = projected_total.div_ceil(staged.len());
+    staged.iter().zip(caps).map(|(&s, &cap)| s.max(share).min(cap)).sum()
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -328,6 +348,33 @@ mod tests {
         assert!(admission_ok(&empty, 1, est, 2 * est, 0, 0));
         assert!(!admission_ok(&empty, 1, est, 2 * est, 0, 1));
         assert!(admission_ok(&empty, 1, est, 3 * est, 0, est));
+    }
+
+    #[test]
+    fn sharded_staging_reduces_to_single_tier_formula() {
+        // one shard: identical to max(measured, min(projected, cap))
+        for (measured, cap, proj) in
+            [(0usize, 100usize, 40usize), (70, 100, 40), (10, 100, 250), (90, 100, 250)]
+        {
+            assert_eq!(
+                sharded_staging_bytes(&[measured], &[cap], proj),
+                measured.max(proj.min(cap)),
+                "single-shard equivalence for measured={measured} cap={cap} proj={proj}"
+            );
+        }
+    }
+
+    #[test]
+    fn sharded_staging_isolates_per_shard_budgets() {
+        // an oversubscribed shard cannot borrow the idle shard's headroom:
+        // each shard is charged at least its projection share
+        let staged = [100usize, 0];
+        let caps = [100usize, 100];
+        assert_eq!(sharded_staging_bytes(&staged, &caps, 80), 140, "100 (full) + 40 (share)");
+        // ...and never beyond its own physical cap
+        assert_eq!(sharded_staging_bytes(&staged, &caps, 400), 200, "both clamp at their cap");
+        // empty topology degrades to the raw projection (no caps known)
+        assert_eq!(sharded_staging_bytes(&[], &[], 64), 64);
     }
 
     #[test]

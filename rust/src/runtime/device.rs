@@ -120,6 +120,9 @@ pub struct DeviceTier {
     /// Byte capacity (K + V, all entries); 0 disables residency entirely —
     /// every call uploads transiently, the pre-residency behavior.
     capacity_bytes: usize,
+    /// PJRT device ordinal this tier's uploads target. One tier per
+    /// [`super::Runtime`] shard; device 0 for the single-device layout.
+    device: usize,
     stats: DeviceStats,
     /// Reusable reconcile staging (one (layer, head) run at a time); no
     /// allocations in steady state.
@@ -137,15 +140,27 @@ pub struct DeviceTier {
 
 impl DeviceTier {
     pub fn new(capacity_bytes: usize) -> Self {
+        Self::with_device(capacity_bytes, 0)
+    }
+
+    /// A tier whose uploads target a specific PJRT device ordinal (one tier
+    /// per runtime shard).
+    pub fn with_device(capacity_bytes: usize, device: usize) -> Self {
         Self {
             entries: Vec::new(),
             capacity_bytes,
+            device,
             stats: DeviceStats::default(),
             stage_k: Vec::new(),
             stage_v: Vec::new(),
             degraded: false,
             consec_failures: 0,
         }
+    }
+
+    /// The PJRT device ordinal this tier's uploads target.
+    pub fn device(&self) -> usize {
+        self.device
     }
 
     pub fn stats(&self) -> DeviceStats {
@@ -278,8 +293,8 @@ impl DeviceTier {
             let (k_b, v_b) = {
                 let img = pool.gather(cache);
                 (
-                    client.buffer_from_host_buffer(&img.k, &dims, None)?,
-                    client.buffer_from_host_buffer(&img.v, &dims, None)?,
+                    client.buffer_from_host_buffer(&img.k, &dims, Some(self.device))?,
+                    client.buffer_from_host_buffer(&img.v, &dims, Some(self.device))?,
                 )
             };
             self.stats.uploaded_bytes += image_bytes as u64;
@@ -340,8 +355,8 @@ impl DeviceTier {
         let (k_b, v_b) = {
             let img = pool.gather(cache);
             (
-                client.buffer_from_host_buffer(&img.k, &dims, None)?,
-                client.buffer_from_host_buffer(&img.v, &dims, None)?,
+                client.buffer_from_host_buffer(&img.k, &dims, Some(self.device))?,
+                client.buffer_from_host_buffer(&img.v, &dims, Some(self.device))?,
             )
         };
         self.stats.uploaded_bytes += image_bytes as u64;
@@ -948,6 +963,38 @@ mod tests {
         // success does NOT un-degrade (sticky until restart)
         tier.note_call_success();
         assert!(tier.degraded());
+    }
+
+    #[test]
+    fn tier_bound_to_killed_device_fails_and_degrades_alone() {
+        let client = xla::PjRtClient::cpu_with_devices(2).unwrap();
+        let (l, h, c, dh) = (1usize, 1usize, 16usize, 2usize);
+        let mut kv0 = mk_cache(l, h, c, dh);
+        let mut kv1 = mk_cache(l, h, c, dh);
+        let mut pool0 = ScratchPool::new(2);
+        let mut pool1 = ScratchPool::new(2);
+        let mut tier0 = DeviceTier::with_device(4 * image_bytes(l, h, c, dh), 0);
+        let mut tier1 = DeviceTier::with_device(4 * image_bytes(l, h, c, dh), 1);
+        assert_eq!((tier0.device(), tier1.device()), (0, 1));
+        let mut rng = Xoshiro256::new(71);
+        let (mut p0, mut p1) = (0, 0);
+        append_random(&mut kv0, 3, &mut p0, &mut rng);
+        append_random(&mut kv1, 3, &mut p1, &mut rng);
+        tier0.acquire(&client, &mut kv0, &mut pool0).unwrap();
+
+        client.kill_device(1);
+        let err = tier1.acquire(&client, &mut kv1, &mut pool1).unwrap_err();
+        assert!(format!("{err}").contains("DEVICE_LOST"), "unexpected error: {err}");
+        for _ in 0..DEGRADED_FAILURE_THRESHOLD {
+            tier1.note_call_failure();
+        }
+        assert!(tier1.degraded(), "lost device's tier must degrade");
+        assert!(!tier0.degraded(), "sibling shard must stay healthy");
+
+        // the surviving shard still serves residency
+        tier0.acquire(&client, &mut kv0, &mut pool0).unwrap();
+        assert!(tier0.resident_bytes() > 0);
+        assert_device_current(&tier0, &kv0).unwrap();
     }
 
     #[derive(Debug, Clone, Copy)]

@@ -131,6 +131,19 @@ impl<'env, T: Send + 'env> CallExecutor<'env, T> {
         done
     }
 
+    /// Spawn `lanes` independent pools of `workers_per_lane` threads each —
+    /// one lane per device shard, so per-shard call queues drain in
+    /// parallel and a stalled device only backs up its own lane. Lanes
+    /// share nothing (each has its own job and completion channels); the
+    /// caller routes submits by shard and drains every lane at reap.
+    pub fn lanes<'scope>(
+        scope: &'scope thread::Scope<'scope, 'env>,
+        lanes: usize,
+        workers_per_lane: usize,
+    ) -> Vec<Self> {
+        (0..lanes.max(1)).map(|_| Self::new(scope, workers_per_lane)).collect()
+    }
+
     /// Jobs submitted but not yet reaped.
     pub fn inflight(&self) -> usize {
         self.inflight
@@ -232,6 +245,34 @@ mod tests {
                 d = ex.reap(Some(Duration::from_millis(200)));
             }
             assert_eq!(d[0].out, Ok(42));
+        });
+    }
+
+    #[test]
+    fn lanes_are_independent_pools() {
+        thread::scope(|s| {
+            let mut lanes: Vec<CallExecutor<'_, usize>> = CallExecutor::lanes(s, 3, 2);
+            assert_eq!(lanes.len(), 3);
+            // a slow job on lane 0 does not delay lane 2's completion
+            lanes[0].submit(0, || {
+                thread::sleep(Duration::from_millis(150));
+                0
+            });
+            lanes[2].submit(2, || 2);
+            let fast = loop {
+                let mut d = lanes[2].reap(Some(Duration::from_millis(1000)));
+                if !d.is_empty() {
+                    break d.remove(0);
+                }
+            };
+            assert_eq!(fast.out, Ok(2));
+            assert_eq!(lanes[0].inflight(), 1, "lane 0's job is still in flight");
+            while lanes[0].inflight() > 0 {
+                lanes[0].reap(Some(Duration::from_millis(1000)));
+            }
+            // zero lanes clamps to one, like the worker count
+            let extra: Vec<CallExecutor<'_, ()>> = CallExecutor::lanes(s, 0, 1);
+            assert_eq!(extra.len(), 1);
         });
     }
 

@@ -36,6 +36,7 @@ use std::sync::{Arc, Weak};
 use anyhow::{bail, Result};
 
 use super::arena::{KvArena, Page, SharedPage, PAGE_SLOTS};
+use super::error::CallError;
 
 /// Unique-per-instance cache ids: the scratch-pool key that makes a dense
 /// image attributable to exactly one cache (clones and resets get fresh ids).
@@ -780,21 +781,22 @@ impl KvCache {
     }
 }
 
-impl Clone for KvCache {
-    /// Deep copy: fresh pages from the same arena and a fresh id (no scratch
-    /// image can match the clone, so its first gather is a full one). Panics
-    /// if the arena budget cannot accommodate the copy (clones are a
-    /// bench/test affair; the serving path never clones caches).
-    fn clone(&self) -> Self {
+impl KvCache {
+    /// Fallible deep copy: fresh pages from the same arena and a fresh id
+    /// (no scratch image can match the clone, so its first gather is a full
+    /// one). Arena-budget exhaustion mid-copy surfaces as a typed
+    /// [`CallError`] of kind `Oom` — not retryable, so a fork under memory
+    /// pressure quarantines one sequence instead of killing the process —
+    /// and the partially built clone's pages return to the arena via `Drop`.
+    pub fn try_clone(&self) -> Result<Self> {
         let mut out = KvCache::with_arena(self.arena.clone(), self.l, self.h, self.c, self.dh);
         let rw = self.row_width();
         for l in 0..self.l {
             for entry in &self.pages[l] {
                 let page = entry.page();
-                let mut p = out
-                    .arena
-                    .alloc(rw)
-                    .expect("kv-arena budget exceeded while cloning KvCache");
+                let mut p = out.arena.alloc(rw).map_err(|e| {
+                    CallError::oom(format!("kv-arena budget exceeded while cloning KvCache: {e}"))
+                })?;
                 p.k.copy_from_slice(&page.k);
                 p.v.copy_from_slice(&page.v);
                 out.pages[l].push(PageEntry::Owned(p));
@@ -807,7 +809,17 @@ impl Clone for KvCache {
             let len = out.lens[l];
             out.mark_dirty(l, 0, len);
         }
-        out
+        Ok(out)
+    }
+}
+
+impl Clone for KvCache {
+    /// Infallible facade over [`KvCache::try_clone`] for bench/test code
+    /// that clones under a known-sufficient budget. Anything that can run
+    /// under arena pressure (the serving fork path) must use `try_clone`
+    /// and propagate the typed OOM instead.
+    fn clone(&self) -> Self {
+        self.try_clone().expect("kv-arena budget exceeded while cloning KvCache")
     }
 }
 
@@ -994,6 +1006,35 @@ mod tests {
         assert_eq!(c.lens[0], 2);
         assert_eq!(kv.row_k(0, 0, 1)[0], 1.0);
         assert_eq!(c.row_k(0, 0, 1)[0], 4.0);
+    }
+
+    #[test]
+    fn try_clone_surfaces_typed_oom_and_leaks_nothing() {
+        use crate::runtime::error::{classify, CallErrorKind};
+        let arena = KvArena::new();
+        let mut kv = KvCache::with_arena(arena.clone(), 1, 1, 64, 2);
+        let n = 2 * PAGE_SLOTS; // two pages, so the clone OOMs mid-copy
+        let w: Vec<f32> = (0..n * 2).map(|i| i as f32).collect();
+        kv.append_layer(0, &w, &w, n, n, 0).unwrap();
+        let used = arena.stats().bytes_in_use;
+
+        // room for only ONE of the clone's two pages
+        arena.set_budget(Some(used + Page::bytes(2)));
+        let err = kv.try_clone().unwrap_err();
+        assert_eq!(classify(&err), CallErrorKind::Oom, "budget exhaustion must classify as OOM");
+        assert!(!CallErrorKind::Oom.retryable(), "OOM quarantines; retry cannot help");
+        assert!(format!("{err:#}").contains("cloning KvCache"), "context lost: {err:#}");
+        // the half-built clone's page went back: occupancy is unchanged
+        assert_eq!(arena.stats().bytes_in_use, used, "failed try_clone must not leak pages");
+
+        // with the budget lifted the same clone succeeds, deep and exact
+        arena.set_budget(None);
+        let c = kv.try_clone().unwrap();
+        assert_ne!(kv.id(), c.id());
+        let (k1, v1) = kv.gather_dense();
+        let (k2, v2) = c.gather_dense();
+        assert_eq!(k1, k2);
+        assert_eq!(v1, v2);
     }
 
     #[test]

@@ -161,6 +161,18 @@ impl Manifest {
     }
 }
 
+/// Program names the serving path pre-compiles at startup (one score window
+/// plus both decode chunk sizes) — warmed once per device shard so no
+/// shard pays first-call compile latency. Shared by the server and the
+/// bench harness so the two never warm different program sets.
+pub fn serving_prog_names(window: usize, capacity: usize) -> Vec<String> {
+    vec![
+        format!("score_w{window}_c{capacity}"),
+        format!("generate_k16_c{capacity}"),
+        format!("generate_k1_c{capacity}"),
+    ]
+}
+
 /// Expected flat weight length for a config (mirrors model.py::weight_spec).
 pub fn expected_n_params(cfg: &ModelCfg) -> usize {
     let d = cfg.d_model;
@@ -198,5 +210,15 @@ mod tests {
         assert_eq!(g.k, 16);
         assert!(man.generate_prog("base", 16, 256, true).is_ok());
         assert!(man.prog("base", "nonexistent").is_err());
+    }
+
+    #[test]
+    fn serving_progs_cover_score_and_both_decode_chunks() {
+        let names = serving_prog_names(128, 256);
+        assert_eq!(
+            names,
+            vec!["score_w128_c256", "generate_k16_c256", "generate_k1_c256"],
+            "serving warmup set must match the compiled program naming scheme"
+        );
     }
 }

@@ -19,10 +19,25 @@
 //!   one full upload, promotion;
 //! - **cold** — full gather, full upload, promotion.
 //!
+//! # Device shards
+//!
+//! The runtime is partitioned into N **shards**, one per PJRT device
+//! ordinal: each shard bundles its own residency tier (an equal slice of
+//! `device_pool_bytes`), scratch pool, and call buffers, so calls routed to
+//! different shards contend on nothing but the shared stats counter. Calls
+//! name their shard explicitly (`score_on` / `generate_on` /
+//! `absorb_generated_on`); the unsuffixed entry points are shard-0 wrappers
+//! serving the single-device CLI/eval paths. Which shard a sequence lands
+//! on is the admission-time [`placement`] policy's call (prefix-locality
+//! first, least-loaded-bytes otherwise); one shard's sticky degraded flag
+//! leaves the other shards serving ([`Runtime::device_degraded`] only
+//! reports fleet-wide degradation).
+//!
 //! Residency is capacity-bounded with cost-aware spill-to-scratch, and
 //! everything is accounted in [`RuntimeStats`] (`bytes_h2d` / `bytes_d2h` /
 //! `device_resident_bytes` / `residency_hits` / `spills` / `donations`),
-//! which the serving admission gate and `op:stats` consume.
+//! which the serving admission gate and `op:stats` consume; per-shard
+//! gauges come from [`Runtime::shard_stats`].
 
 pub mod arena;
 pub mod device;
@@ -30,6 +45,7 @@ pub mod error;
 pub mod executor;
 pub mod kv;
 pub mod manifest;
+pub mod placement;
 pub mod prefix;
 pub mod transfer;
 
@@ -41,14 +57,15 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 pub use arena::{
-    admission_ok, seq_footprint_bytes, ArenaStats, KvArena, Page, SharedPage, ARENA_OOM_MARKER,
-    PAGE_SLOTS,
+    admission_ok, seq_footprint_bytes, sharded_staging_bytes, ArenaStats, KvArena, Page,
+    SharedPage, ARENA_OOM_MARKER, PAGE_SLOTS,
 };
 pub use device::{Acquired, DeviceKvState, DeviceStats, DeviceTier};
 pub use error::{classify, lock_poisoned_total, lock_recover, CallError, CallErrorKind};
 pub use executor::{CallExecutor, Completion};
 pub use kv::{GatherBytes, KvCache};
 pub use manifest::{Manifest, ModelCfg, ProgKind, ProgMeta};
+pub use placement::{place, Placement, PlacementKind, PlacementStats, ShardLoad};
 pub use prefix::{PrefixCache, PrefixSnapshot, PrefixStats};
 pub use transfer::{DenseImage, ScratchPool, TransferStats};
 
@@ -65,24 +82,31 @@ fn classify_call(stage: &str, e: anyhow::Error) -> anyhow::Error {
 #[derive(Clone, Debug)]
 pub struct RuntimeOpts {
     /// Dense scratch images the transfer layer keeps warm (LRU) — one per
-    /// sequence in the serving hot set; clamped to >= 1 (the gather path
-    /// always needs one staging image). A sequence beyond this pays one
-    /// full re-gather when it rotates back in.
+    /// sequence in the serving hot set; divided across shards and clamped
+    /// to >= 1 per shard (the gather path always needs one staging image).
+    /// A sequence beyond this pays one full re-gather when it rotates back
+    /// in.
     pub scratch_pool_entries: usize,
     /// Byte capacity of the device-residency tier (K + V across resident
-    /// sequences). 0 disables residency: every call re-uploads its image,
-    /// the pre-residency behavior.
+    /// sequences), split evenly across shards. 0 disables residency: every
+    /// call re-uploads its image, the pre-residency behavior.
     pub device_pool_bytes: usize,
+    /// Device shards to partition the runtime across. Each shard binds one
+    /// PJRT device ordinal and owns a `device_pool_bytes / devices`
+    /// residency slice, a scratch pool, and call buffers. The stub client
+    /// materializes this many devices; under `real-pjrt` the client's own
+    /// enumeration is authoritative and this is clamped to it.
+    pub devices: usize,
 }
 
 impl Default for RuntimeOpts {
     fn default() -> Self {
-        Self { scratch_pool_entries: 16, device_pool_bytes: 256 << 20 }
+        Self { scratch_pool_entries: 16, device_pool_bytes: 256 << 20, devices: 1 }
     }
 }
 
 /// Cumulative runtime counters (per process) for the perf log. The transfer
-/// and residency fields are folded in from the staging tiers by
+/// and residency fields are folded in — summed across every shard — by
 /// [`Runtime::stats`].
 #[derive(Clone, Debug, Default)]
 pub struct RuntimeStats {
@@ -110,16 +134,16 @@ pub struct RuntimeStats {
     /// Dense-buffer allocations by the transfer layer (zero after warmup).
     pub dense_scratch_allocs: u64,
     /// Host bytes currently pooled as scratch images (staging memory that
-    /// the admission gate counts; bounded by the pool's entry cap).
+    /// the admission gate counts; bounded by the pools' entry caps).
     pub scratch_resident_bytes: u64,
-    /// Bytes currently resident in the device tier (K + V across entries) —
+    /// Bytes currently resident across every shard's device tier (K + V) —
     /// counted by the admission gate alongside arena pages.
     pub device_resident_bytes: u64,
     /// Calls served by a resident device image (no full upload).
     pub residency_hits: u64,
     /// Calls that uploaded a full image (cold, post-spill, or stale stamp).
     pub residency_misses: u64,
-    /// Spills from the device tier (image read back to scratch).
+    /// Spills from the device tiers (image read back to scratch).
     pub spills: u64,
     /// Generate calls that donated resident buffers to the program and kept
     /// the output state on-device.
@@ -127,15 +151,40 @@ pub struct RuntimeStats {
     /// Bytes uploaded by dirty-range reconciliation over resident images
     /// (the device-hit path's only KV upload traffic).
     pub reconciled_bytes: u64,
-    /// Whether the device tier is in sticky degraded mode (repeated
-    /// retryable call failures): residency is bypassed and every call
-    /// serves via the host/scratch path until restart.
+    /// Whether EVERY shard's device tier is in sticky degraded mode
+    /// (repeated retryable call failures): residency is bypassed fleet-wide
+    /// and every call serves via the host/scratch path until restart. A
+    /// single lost device degrades only its shard — see
+    /// [`Runtime::shard_stats`] for the per-shard flags.
     pub device_degraded: bool,
-    /// Consecutive retryable device-call failures (resets on success;
-    /// flipping the tier degraded at the threshold).
+    /// Consecutive retryable device-call failures summed across shards
+    /// (each shard resets its own count on success).
     pub device_failures: u64,
     /// Poisoned-mutex recoveries by [`lock_recover`] (process-wide).
     pub lock_poisoned: u64,
+}
+
+/// Point-in-time per-shard gauges for `op:stats` / `op:ping` (the
+/// fleet-level aggregation lives in [`RuntimeStats`]).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardStat {
+    /// PJRT device ordinal backing the shard.
+    pub device: usize,
+    /// The shard's residency-tier byte slice.
+    pub capacity_bytes: usize,
+    /// Bytes currently resident in the shard's device tier.
+    pub resident_bytes: u64,
+    /// Host bytes held by the shard's scratch pool.
+    pub scratch_resident_bytes: u64,
+    /// Calls this shard served from a resident image.
+    pub residency_hits: u64,
+    /// Calls this shard served with a full image upload.
+    pub residency_misses: u64,
+    /// Spills from this shard's device tier.
+    pub spills: u64,
+    /// Sticky per-shard degraded flag: this shard bypasses residency, the
+    /// rest of the fleet keeps serving normally.
+    pub degraded: bool,
 }
 
 /// Reusable per-call buffers (padded token/target windows, i32 lens, f32
@@ -150,33 +199,72 @@ struct CallBuf {
     stage_v: Vec<f32>,
 }
 
+/// One device's slice of the runtime: residency tier, scratch pool, and
+/// call buffers bound to a single PJRT device ordinal. Shards share the
+/// client and the compiled-model table but no mutable call state, so calls
+/// on different shards proceed in parallel.
+struct DeviceShard {
+    /// PJRT device ordinal this shard's buffers live on.
+    device: usize,
+    /// This shard's `device_pool_bytes` slice (capacity of `tier`).
+    capacity_bytes: usize,
+    /// Reusable dense K/V transfer images (dirty-range incremental gather);
+    /// the spill tier under `tier`.
+    scratch: Mutex<ScratchPool>,
+    /// Device-resident K/V images (the hot tier), bound to `device`.
+    tier: Mutex<DeviceTier>,
+    /// Reusable small i32/f32 call buffers.
+    call_buf: Mutex<CallBuf>,
+}
+
 pub struct LoadedModel {
     pub name: String,
     pub cfg: ModelCfg,
     pub n_params: usize,
-    weights: xla::PjRtBuffer,
+    /// One uploaded weights buffer per shard, indexed by shard.
+    weights: Vec<xla::PjRtBuffer>,
     #[allow(dead_code)]
     entry: manifest::ModelEntry,
-    exes: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    /// Compiled executables keyed by `(shard, program name)` — real PJRT
+    /// executables are device-bound, so each shard compiles (and caches)
+    /// its own handle.
+    exes: Mutex<BTreeMap<(usize, String), Arc<xla::PjRtLoadedExecutable>>>,
+}
+
+/// Byte slice of the global `device_pool_bytes` owned by shard `i` of `n`:
+/// an even split with the remainder spread over the lowest-indexed shards,
+/// so the slices sum exactly to the configured pool.
+pub(crate) fn shard_slice_bytes(total: usize, n: usize, i: usize) -> usize {
+    let n = n.max(1);
+    total / n + usize::from(i < total % n)
+}
+
+/// Stub client: materialize exactly the requested device count.
+#[cfg(not(feature = "real-pjrt"))]
+fn new_client(devices: usize) -> xla::Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu_with_devices(devices)
+}
+
+/// Real PJRT enumerates its own topology; `devices` is clamped to what the
+/// client reports after construction.
+#[cfg(feature = "real-pjrt")]
+fn new_client(_devices: usize) -> xla::Result<xla::PjRtClient> {
+    xla::PjRtClient::cpu()
 }
 
 /// The runtime is `Sync`: interior state lives behind `Mutex`es so in-flight
 /// calls on [`executor::CallExecutor`] workers can share one `&Runtime`.
-/// Lock-ordering rule for the staging tiers: **device before scratch** —
-/// every path that holds both takes `device` first (or takes them in
-/// disjoint scopes), so concurrent calls cannot deadlock.
+/// Lock-ordering rule for the staging tiers: **device before scratch**,
+/// within one shard — every path that holds both takes the shard's `tier`
+/// first (or takes them in disjoint scopes), and no path ever holds two
+/// shards' guards at once, so concurrent calls cannot deadlock.
 pub struct Runtime {
     client: xla::PjRtClient,
     pub man: Manifest,
     models: BTreeMap<String, LoadedModel>,
     stats: Mutex<RuntimeStats>,
-    /// Reusable dense K/V transfer images (dirty-range incremental gather);
-    /// the spill tier under `device`.
-    scratch: Mutex<ScratchPool>,
-    /// Device-resident K/V images (the hot tier).
-    device: Mutex<DeviceTier>,
-    /// Reusable small i32 call buffers.
-    call_buf: Mutex<CallBuf>,
+    /// One shard per PJRT device; never empty.
+    shards: Vec<DeviceShard>,
     /// Simulated device-memory budget in bytes (None = unlimited). The
     /// engine consults this to reproduce the paper's OOM axis.
     pub memory_budget_bytes: Mutex<Option<usize>>,
@@ -224,16 +312,32 @@ pub struct GenOut {
 impl Runtime {
     /// Load the manifest and the listed models with default staging-tier
     /// knobs (weights uploaded eagerly; program compilation is lazy, cached
-    /// per program).
+    /// per (shard, program)).
     pub fn load(dir: &Path, model_names: &[&str]) -> Result<Runtime> {
         Self::load_with(dir, model_names, RuntimeOpts::default())
     }
 
     /// [`Self::load`] with explicit staging-tier sizing (the serving path
-    /// passes `ServeConfig.scratch_pool_entries` / `device_pool_bytes`).
+    /// passes `ServeConfig.{scratch_pool_entries, device_pool_bytes,
+    /// devices}`). Weights are uploaded once per shard so every device can
+    /// execute without cross-device transfers.
     pub fn load_with(dir: &Path, model_names: &[&str], opts: RuntimeOpts) -> Result<Runtime> {
         let man = Manifest::load(dir)?;
-        let client = xla::PjRtClient::cpu()?;
+        let client = new_client(opts.devices.max(1))?;
+        let devices = opts.devices.max(1).min(client.device_count().max(1));
+        let scratch_entries = (opts.scratch_pool_entries / devices).max(1);
+        let shards: Vec<DeviceShard> = (0..devices)
+            .map(|i| {
+                let capacity = shard_slice_bytes(opts.device_pool_bytes, devices, i);
+                DeviceShard {
+                    device: i,
+                    capacity_bytes: capacity,
+                    scratch: Mutex::new(ScratchPool::new(scratch_entries)),
+                    tier: Mutex::new(DeviceTier::with_device(capacity, i)),
+                    call_buf: Mutex::new(CallBuf::default()),
+                }
+            })
+            .collect();
         let mut models = BTreeMap::new();
         for &name in model_names {
             let entry = man.model(name)?.clone();
@@ -254,7 +358,19 @@ impl Runtime {
                 .chunks_exact(4)
                 .map(|b| f32::from_le_bytes([b[0], b[1], b[2], b[3]]))
                 .collect();
-            let weights = client.buffer_from_host_buffer(&floats, &[entry.n_params], None)?;
+            let weights = shards
+                .iter()
+                .map(|s| {
+                    client
+                        .buffer_from_host_buffer(&floats, &[entry.n_params], Some(s.device))
+                        .map_err(|e| {
+                            anyhow::anyhow!(
+                                "uploading {name} weights to device {}: {e}",
+                                s.device
+                            )
+                        })
+                })
+                .collect::<Result<Vec<_>>>()?;
             models.insert(
                 name.to_string(),
                 LoadedModel {
@@ -272,9 +388,7 @@ impl Runtime {
             man,
             models,
             stats: Mutex::new(RuntimeStats::default()),
-            scratch: Mutex::new(ScratchPool::new(opts.scratch_pool_entries)),
-            device: Mutex::new(DeviceTier::new(opts.device_pool_bytes)),
-            call_buf: Mutex::new(CallBuf::default()),
+            shards,
             memory_budget_bytes: Mutex::new(None),
         })
     }
@@ -283,94 +397,210 @@ impl Runtime {
         self.models.get(name).with_context(|| format!("model `{name}` not loaded"))
     }
 
-    /// Runtime counters with the staging-tier stats folded in. Sweeps dead
-    /// entries first, so the gauges never count dropped sequences.
+    /// Number of device shards (>= 1).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    fn shard(&self, idx: usize) -> Result<&DeviceShard> {
+        self.shards
+            .get(idx)
+            .with_context(|| format!("shard {idx} out of range ({} shards)", self.shards.len()))
+    }
+
+    /// Runtime counters with every shard's staging-tier stats folded in
+    /// (summed). Sweeps dead entries first, so the gauges never count
+    /// dropped sequences. `device_degraded` is fleet-level: true only when
+    /// ALL shards are degraded.
     pub fn stats(&self) -> RuntimeStats {
         self.sweep_staging();
         let mut st = lock_recover(&self.stats, "runtime stats").clone();
-        // scratch and device guards are taken in disjoint scopes (never
-        // nested scratch->device, which would invert the lock order)
-        {
-            let pool = lock_recover(&self.scratch, "scratch pool");
-            let ts = pool.stats();
-            st.gather_s = ts.gather_s;
-            st.gathered_bytes = ts.gathered_bytes + ts.zeroed_bytes;
-            st.gathers_full = ts.gathers_full;
-            st.gathers_incremental = ts.gathers_incremental;
-            st.gathers_noop = ts.gathers_noop;
-            st.dense_scratch_allocs = ts.dense_allocs;
-            st.scratch_resident_bytes = pool.resident_bytes() as u64;
+        let mut all_degraded = true;
+        for sh in &self.shards {
+            // scratch and tier guards are taken in disjoint scopes (never
+            // nested scratch->tier, which would invert the lock order)
+            {
+                let pool = lock_recover(&sh.scratch, "scratch pool");
+                let ts = pool.stats();
+                st.gather_s += ts.gather_s;
+                st.gathered_bytes += ts.gathered_bytes + ts.zeroed_bytes;
+                st.gathers_full += ts.gathers_full;
+                st.gathers_incremental += ts.gathers_incremental;
+                st.gathers_noop += ts.gathers_noop;
+                st.dense_scratch_allocs += ts.dense_allocs;
+                st.scratch_resident_bytes += pool.resident_bytes() as u64;
+            }
+            {
+                let dev = lock_recover(&sh.tier, "device tier");
+                let ds = dev.stats();
+                st.bytes_h2d += ds.uploaded_bytes;
+                st.bytes_d2h += ds.spill_bytes_d2h;
+                st.device_resident_bytes += dev.resident_bytes() as u64;
+                st.residency_hits += ds.hits;
+                st.residency_misses += ds.misses;
+                st.spills += ds.spills;
+                st.donations += ds.donations;
+                st.reconciled_bytes += ds.reconciled_bytes;
+                st.device_failures += ds.call_failures;
+                all_degraded &= dev.degraded();
+            }
         }
-        {
-            let dev = lock_recover(&self.device, "device tier");
-            let ds = dev.stats();
-            st.bytes_h2d += ds.uploaded_bytes;
-            st.bytes_d2h += ds.spill_bytes_d2h;
-            st.device_resident_bytes = dev.resident_bytes() as u64;
-            st.residency_hits = ds.hits;
-            st.residency_misses = ds.misses;
-            st.spills = ds.spills;
-            st.donations = ds.donations;
-            st.reconciled_bytes = ds.reconciled_bytes;
-            st.device_degraded = dev.degraded();
-            st.device_failures = ds.call_failures;
-        }
+        st.device_degraded = all_degraded;
         st.lock_poisoned = lock_poisoned_total();
         st
     }
 
-    /// Raw transfer-layer counters (bench/diagnostic use).
+    /// Point-in-time per-shard gauges (`op:stats` `shards[i]`, `op:ping`
+    /// shard health). Sweeps dead entries first, like [`Self::stats`].
+    pub fn shard_stats(&self) -> Vec<ShardStat> {
+        self.sweep_staging();
+        self.shards
+            .iter()
+            .map(|sh| {
+                let (resident_bytes, ds, degraded) = {
+                    let dev = lock_recover(&sh.tier, "device tier");
+                    (dev.resident_bytes() as u64, dev.stats(), dev.degraded())
+                };
+                let scratch_resident_bytes =
+                    lock_recover(&sh.scratch, "scratch pool").resident_bytes() as u64;
+                ShardStat {
+                    device: sh.device,
+                    capacity_bytes: sh.capacity_bytes,
+                    resident_bytes,
+                    scratch_resident_bytes,
+                    residency_hits: ds.hits,
+                    residency_misses: ds.misses,
+                    spills: ds.spills,
+                    degraded,
+                }
+            })
+            .collect()
+    }
+
+    /// Load snapshot for the [`placement`] policy. `inflight` is zero here —
+    /// the runtime does not track executor lanes; serving overlays each
+    /// lane's in-flight count before calling [`place`].
+    pub fn shard_loads(&self) -> Vec<ShardLoad> {
+        self.shards
+            .iter()
+            .map(|sh| {
+                let dev = lock_recover(&sh.tier, "device tier");
+                ShardLoad {
+                    device: sh.device,
+                    resident_bytes: dev.resident_bytes(),
+                    inflight: 0,
+                    degraded: dev.degraded(),
+                    capacity_bytes: sh.capacity_bytes,
+                }
+            })
+            .collect()
+    }
+
+    /// Raw transfer-layer counters for one shard (bench/diagnostic use).
+    pub fn transfer_stats_on(&self, shard: usize) -> TransferStats {
+        lock_recover(&self.shards[shard].scratch, "scratch pool").stats()
+    }
+
+    /// Shard-0 transfer counters (single-device bench/diagnostic paths).
     pub fn transfer_stats(&self) -> TransferStats {
-        lock_recover(&self.scratch, "scratch pool").stats()
+        self.transfer_stats_on(0)
     }
 
-    /// Raw residency-tier counters (bench/diagnostic use).
+    /// Raw residency-tier counters for one shard (bench/diagnostic use).
+    pub fn device_stats_on(&self, shard: usize) -> DeviceStats {
+        lock_recover(&self.shards[shard].tier, "device tier").stats()
+    }
+
+    /// Shard-0 residency counters (single-device bench/diagnostic paths).
     pub fn device_stats(&self) -> DeviceStats {
-        lock_recover(&self.device, "device tier").stats()
+        self.device_stats_on(0)
     }
 
-    /// Whether the device tier has flipped into sticky degraded mode
-    /// (served to load balancers via `op:ping`).
+    /// Whether EVERY shard's device tier has flipped into sticky degraded
+    /// mode (served to load balancers via `op:ping`). A single degraded
+    /// shard does not trip this — the fleet keeps serving; per-shard flags
+    /// are in [`Self::shard_stats`].
     pub fn device_degraded(&self) -> bool {
-        lock_recover(&self.device, "device tier").degraded()
+        self.shards.iter().all(|sh| lock_recover(&sh.tier, "device tier").degraded())
     }
 
-    /// Drop staging entries (device tier + scratch pool) whose cache was
-    /// dropped. Called before every stats read and admission decision, so a
-    /// cancelled sequence's `device_resident_bytes` are gone before the next
-    /// reactor round admits anyone.
+    /// Sticky degraded flag of one shard's device tier (out-of-range shards
+    /// read as degraded).
+    pub fn shard_degraded(&self, shard: usize) -> bool {
+        self.shards
+            .get(shard)
+            .map(|sh| lock_recover(&sh.tier, "device tier").degraded())
+            .unwrap_or(true)
+    }
+
+    /// Drop staging entries (device tiers + scratch pools, every shard)
+    /// whose cache was dropped. Called before every stats read and
+    /// admission decision, so a cancelled sequence's
+    /// `device_resident_bytes` are gone before the next reactor round
+    /// admits anyone.
     pub fn sweep_staging(&self) {
-        lock_recover(&self.device, "device tier").sweep();
-        lock_recover(&self.scratch, "scratch pool").sweep();
+        for sh in &self.shards {
+            lock_recover(&sh.tier, "device tier").sweep();
+            lock_recover(&sh.scratch, "scratch pool").sweep();
+        }
     }
 
-    /// Host + device staging bytes currently held for live sequences — the
-    /// footprint the serving admission gate counts alongside arena pages.
+    /// Host + device staging bytes currently held for live sequences across
+    /// all shards — the footprint the serving admission gate counts
+    /// alongside arena pages.
     pub fn staging_bytes(&self) -> usize {
-        lock_recover(&self.device, "device tier").resident_bytes()
-            + lock_recover(&self.scratch, "scratch pool").resident_bytes()
+        self.shards
+            .iter()
+            .map(|sh| {
+                lock_recover(&sh.tier, "device tier").resident_bytes()
+                    + lock_recover(&sh.scratch, "scratch pool").resident_bytes()
+            })
+            .sum()
+    }
+
+    /// Staging bytes held by one shard (its per-shard admission slice).
+    pub fn staging_bytes_on(&self, shard: usize) -> usize {
+        self.shards
+            .get(shard)
+            .map(|sh| {
+                lock_recover(&sh.tier, "device tier").resident_bytes()
+                    + lock_recover(&sh.scratch, "scratch pool").resident_bytes()
+            })
+            .unwrap_or(0)
     }
 
     /// Deterministically release one cache's staging state (device buffers +
-    /// scratch image) — the engine-reset / teardown path; dropped caches are
-    /// also caught lazily by [`Self::sweep_staging`].
+    /// scratch image, on whichever shard holds them) — the engine-reset /
+    /// teardown path; dropped caches are also caught lazily by
+    /// [`Self::sweep_staging`].
     pub fn release_cache_state(&self, cache_id: u64) {
-        lock_recover(&self.device, "device tier").release(cache_id);
-        lock_recover(&self.scratch, "scratch pool").release(cache_id);
+        for sh in &self.shards {
+            lock_recover(&sh.tier, "device tier").release(cache_id);
+            lock_recover(&sh.scratch, "scratch pool").release(cache_id);
+        }
     }
 
-    /// Pre-compile a set of programs (avoids first-call latency in serving).
+    /// Pre-compile a set of programs on every shard (avoids first-call
+    /// latency in serving).
     pub fn warmup(&self, model: &str, prog_names: &[&str]) -> Result<()> {
         for p in prog_names {
             let meta = self.man.prog(model, p)?.clone();
-            self.exe(model, &meta)?;
+            for shard in 0..self.shards.len() {
+                self.exe(shard, model, &meta)?;
+            }
         }
         Ok(())
     }
 
-    fn exe(&self, model: &str, prog: &ProgMeta) -> Result<Arc<xla::PjRtLoadedExecutable>> {
+    fn exe(
+        &self,
+        shard: usize,
+        model: &str,
+        prog: &ProgMeta,
+    ) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         let lm = self.model(model)?;
-        if let Some(e) = lock_recover(&lm.exes, "model executables").get(&prog.name) {
+        let key = (shard, prog.name.clone());
+        if let Some(e) = lock_recover(&lm.exes, "model executables").get(&key) {
             return Ok(e.clone());
         }
         let t0 = Instant::now();
@@ -383,23 +613,17 @@ impl Runtime {
                 .map_err(|e| anyhow::anyhow!("compiling {model}/{}: {e}", prog.name))?,
         );
         lock_recover(&self.stats, "runtime stats").compile_s += t0.elapsed().as_secs_f64();
-        lock_recover(&lm.exes, "model executables").insert(prog.name.clone(), exe.clone());
+        lock_recover(&lm.exes, "model executables").insert(key, exe.clone());
         Ok(exe)
     }
 
-    fn upload_i32(&self, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
+    fn upload_i32(&self, device: usize, data: &[i32], dims: &[usize]) -> Result<xla::PjRtBuffer> {
         self.client
-            .buffer_from_host_buffer(data, dims, None)
+            .buffer_from_host_buffer(data, dims, Some(device))
             .map_err(|e| classify_call("upload", e.into()))
     }
 
-    /// Teacher-forced scoring of `tokens` (with next-token `targets`) over
-    /// the resident cache. `tokens.len()` may be shorter than the program
-    /// window; inputs are padded and only valid logprobs are meaningful.
-    /// Takes the cache mutably to advance its dirty-range sync point: on a
-    /// device hit the call uploads only dirty slot ranges (tokens, targets
-    /// and lens aside), otherwise it uploads one full image and promotes it
-    /// into the residency tier.
+    /// Shard-0 [`Self::score_on`] — the single-device CLI/eval entry point.
     #[allow(clippy::too_many_arguments)]
     pub fn score(
         &self,
@@ -411,8 +635,31 @@ impl Runtime {
         targets: &[i32],
         cache: &mut KvCache,
     ) -> Result<ScoreOut> {
+        self.score_on(0, model, w, c, scored, tokens, targets, cache)
+    }
+
+    /// Teacher-forced scoring of `tokens` (with next-token `targets`) over
+    /// the resident cache, on shard `shard`'s device. `tokens.len()` may be
+    /// shorter than the program window; inputs are padded and only valid
+    /// logprobs are meaningful. Takes the cache mutably to advance its
+    /// dirty-range sync point: on a device hit the call uploads only dirty
+    /// slot ranges (tokens, targets and lens aside), otherwise it uploads
+    /// one full image and promotes it into the shard's residency tier.
+    #[allow(clippy::too_many_arguments)]
+    pub fn score_on(
+        &self,
+        shard: usize,
+        model: &str,
+        w: usize,
+        c: usize,
+        scored: bool,
+        tokens: &[i32],
+        targets: &[i32],
+        cache: &mut KvCache,
+    ) -> Result<ScoreOut> {
+        let sh = self.shard(shard)?;
         let prog = self.man.score_prog(model, w, c, scored)?.clone();
-        let exe = self.exe(model, &prog)?;
+        let exe = self.exe(shard, model, &prog)?;
         let lm = self.model(model)?;
         let cfg = &lm.cfg;
         if tokens.len() > w || tokens.len() != targets.len() {
@@ -424,8 +671,8 @@ impl Runtime {
         let l = cache.l;
         let t0 = Instant::now();
         let (tok_b, tgt_b, lens_b) = {
-            // pad the token windows into the reusable call buffers
-            let mut bufs = lock_recover(&self.call_buf, "call buffers");
+            // pad the token windows into the shard's reusable call buffers
+            let mut bufs = lock_recover(&sh.call_buf, "call buffers");
             bufs.tok.clear();
             bufs.tok.extend_from_slice(tokens);
             bufs.tok.resize(w, 0);
@@ -434,17 +681,17 @@ impl Runtime {
             bufs.tgt.resize(w, 0);
             bufs.lens.clear();
             bufs.lens.extend(cache.lens.iter().map(|&x| x as i32));
-            let tok_b = self.upload_i32(&bufs.tok, &[w])?;
-            let tgt_b = self.upload_i32(&bufs.tgt, &[w])?;
-            let lens_b = self.upload_i32(&bufs.lens, &[l])?;
+            let tok_b = self.upload_i32(sh.device, &bufs.tok, &[w])?;
+            let tgt_b = self.upload_i32(sh.device, &bufs.tgt, &[w])?;
+            let lens_b = self.upload_i32(sh.device, &bufs.lens, &[l])?;
             (tok_b, tgt_b, lens_b)
         };
         // three-tier K/V path: resident reconcile, or gather + upload +
         // promote (the tier accounts its own upload bytes; lock order is
-        // device -> scratch, matching every other dual-guard path)
-        let mut device = lock_recover(&self.device, "device tier");
+        // tier -> scratch, matching every other dual-guard path)
+        let mut device = lock_recover(&sh.tier, "device tier");
         let acq = {
-            let mut pool = lock_recover(&self.scratch, "scratch pool");
+            let mut pool = lock_recover(&sh.scratch, "scratch pool");
             device.sweep();
             pool.sweep();
             device
@@ -459,7 +706,7 @@ impl Runtime {
             Acquired::Transient(k, v) => (k, v),
         };
         let arg_refs: Vec<&xla::PjRtBuffer> =
-            vec![&lm.weights, &tok_b, &tgt_b, kc_b, vc_b, &lens_b];
+            vec![&lm.weights[shard], &tok_b, &tgt_b, kc_b, vc_b, &lens_b];
         let t1 = Instant::now();
         let exec_res = exe.execute_b(&arg_refs);
         let t2 = Instant::now();
@@ -505,10 +752,7 @@ impl Runtime {
         Ok(ScoreOut { logprobs, win_k, win_v, mass })
     }
 
-    /// Greedy decode of `k_steps` tokens; the device appends K/V in-graph,
-    /// and the state merges back into the host cache via
-    /// [`Runtime::absorb_generated`]. On a device hit the resident buffers
-    /// are DONATED to the program and the output state stays on the device.
+    /// Shard-0 greedy decode — the single-device CLI/eval entry point.
     pub fn generate(
         &self,
         model: &str,
@@ -517,11 +761,28 @@ impl Runtime {
         cache: &mut KvCache,
         last_token: i32,
     ) -> Result<GenOut> {
-        self.generate_variant(model, k_steps, scored, false, cache, last_token)
+        self.generate_variant_on(0, model, k_steps, scored, false, cache, last_token)
     }
 
-    /// Decode with explicit program-variant selection (`pallas = true` runs
-    /// the interpret-mode Pallas-kernel artifact — numerics-identical to the
+    /// Greedy decode of `k_steps` tokens on shard `shard`; the device
+    /// appends K/V in-graph, and the state merges back into the host cache
+    /// via [`Runtime::absorb_generated_on`]. On a device hit the resident
+    /// buffers are DONATED to the program and the output state stays on the
+    /// device.
+    pub fn generate_on(
+        &self,
+        shard: usize,
+        model: &str,
+        k_steps: usize,
+        scored: bool,
+        cache: &mut KvCache,
+        last_token: i32,
+    ) -> Result<GenOut> {
+        self.generate_variant_on(shard, model, k_steps, scored, false, cache, last_token)
+    }
+
+    /// Shard-0 [`Self::generate_variant_on`] (`pallas = true` runs the
+    /// interpret-mode Pallas-kernel artifact — numerics-identical to the
     /// fast path, used for kernel validation and the PERF.md comparison).
     pub fn generate_variant(
         &self,
@@ -532,13 +793,29 @@ impl Runtime {
         cache: &mut KvCache,
         last_token: i32,
     ) -> Result<GenOut> {
+        self.generate_variant_on(0, model, k_steps, scored, pallas, cache, last_token)
+    }
+
+    /// Decode with explicit program-variant selection, on shard `shard`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn generate_variant_on(
+        &self,
+        shard: usize,
+        model: &str,
+        k_steps: usize,
+        scored: bool,
+        pallas: bool,
+        cache: &mut KvCache,
+        last_token: i32,
+    ) -> Result<GenOut> {
+        let sh = self.shard(shard)?;
         let c = cache.c;
         let prog = if pallas {
             self.man.generate_pallas_prog(model, k_steps, c)?.clone()
         } else {
             self.man.generate_prog(model, k_steps, c, scored)?.clone()
         };
-        let exe = self.exe(model, &prog)?;
+        let exe = self.exe(shard, model, &prog)?;
         let lm = self.model(model)?;
         if cache.max_len() + k_steps > c {
             bail!(
@@ -551,16 +828,16 @@ impl Runtime {
         let l = cache.l;
         let t0 = Instant::now();
         let (lens_b, tok_b) = {
-            let mut bufs = lock_recover(&self.call_buf, "call buffers");
+            let mut bufs = lock_recover(&sh.call_buf, "call buffers");
             bufs.lens.clear();
             bufs.lens.extend(cache.lens.iter().map(|&x| x as i32));
-            let lens_b = self.upload_i32(&bufs.lens, &[l])?;
-            let tok_b = self.upload_i32(&[last_token], &[])?;
+            let lens_b = self.upload_i32(sh.device, &bufs.lens, &[l])?;
+            let tok_b = self.upload_i32(sh.device, &[last_token], &[])?;
             (lens_b, tok_b)
         };
-        let mut device = lock_recover(&self.device, "device tier");
+        let mut device = lock_recover(&sh.tier, "device tier");
         let acq = {
-            let mut pool = lock_recover(&self.scratch, "scratch pool");
+            let mut pool = lock_recover(&sh.scratch, "scratch pool");
             device.sweep();
             pool.sweep();
             device
@@ -577,7 +854,7 @@ impl Runtime {
                 let t1 = Instant::now();
                 let exec_res = {
                     let arg_refs: Vec<&xla::PjRtBuffer> =
-                        vec![&lm.weights, &kc_dev, &vc_dev, &lens_b, &tok_b];
+                        vec![&lm.weights[shard], &kc_dev, &vc_dev, &lens_b, &tok_b];
                     // on error the donated state is lost either way: the
                     // entry is already out of the tier, host pages stay
                     // authoritative, and the next call re-promotes — this
@@ -587,13 +864,13 @@ impl Runtime {
                 };
                 let out = match exec_res {
                     Ok(o) => {
-                        lock_recover(&self.device, "device tier").note_call_success();
+                        lock_recover(&sh.tier, "device tier").note_call_success();
                         o
                     }
                     Err(e) => {
                         let err = classify_call("execute", e.into());
                         if classify(&err).retryable() {
-                            lock_recover(&self.device, "device tier").note_call_failure();
+                            lock_recover(&sh.tier, "device tier").note_call_failure();
                         }
                         return Err(
                             err.context(format!("execute(donated) {model}/{}", prog.name))
@@ -645,19 +922,19 @@ impl Runtime {
             Acquired::Transient(kc_b, vc_b) => {
                 drop(device);
                 let arg_refs: Vec<&xla::PjRtBuffer> =
-                    vec![&lm.weights, &kc_b, &vc_b, &lens_b, &tok_b];
+                    vec![&lm.weights[shard], &kc_b, &vc_b, &lens_b, &tok_b];
                 let t1 = Instant::now();
                 let exec_res = exe.execute_b(&arg_refs);
                 let t2 = Instant::now();
                 let out = match exec_res {
                     Ok(o) => {
-                        lock_recover(&self.device, "device tier").note_call_success();
+                        lock_recover(&sh.tier, "device tier").note_call_success();
                         o
                     }
                     Err(e) => {
                         let err = classify_call("execute", e.into());
                         if classify(&err).retryable() {
-                            lock_recover(&self.device, "device tier").note_call_failure();
+                            lock_recover(&sh.tier, "device tier").note_call_failure();
                         }
                         return Err(err.context(format!("execute {model}/{}", prog.name)));
                     }
@@ -694,8 +971,19 @@ impl Runtime {
         }
     }
 
+    /// Shard-0 [`Self::absorb_generated_on`].
+    pub fn absorb_generated(
+        &self,
+        cache: &mut KvCache,
+        go: &mut GenOut,
+        appended: usize,
+        first_pos: u64,
+    ) -> Result<()> {
+        self.absorb_generated_on(0, cache, go, appended, first_pos)
+    }
+
     /// Merge a generate call's output state into `cache` and seed the next
-    /// call's image.
+    /// call's image on shard `shard` (the shard that ran the generate).
     ///
     /// **Device-resident path** (`go.device` set): only the `appended` rows
     /// are downloaded from the donated output buffers (one contiguous run
@@ -709,13 +997,15 @@ impl Runtime {
     /// **Host path**: the downloaded buffers are merged via
     /// [`KvCache::replace_from_device`] and adopted as the synced scratch
     /// image (taking `go.k` / `go.v`, leaving them empty).
-    pub fn absorb_generated(
+    pub fn absorb_generated_on(
         &self,
+        shard: usize,
         cache: &mut KvCache,
         go: &mut GenOut,
         appended: usize,
         first_pos: u64,
     ) -> Result<()> {
+        let sh = self.shard(shard)?;
         if let Some(dev) = go.device.take() {
             let (l, h, c, dh) = (cache.l, cache.h, cache.c, cache.dh);
             for layer in 0..l {
@@ -734,10 +1024,11 @@ impl Runtime {
             }
             let t0 = Instant::now();
             // download the appended rows, staged [H, appended, Dh] per layer
-            // (exactly append_layer's window layout) into the reusable call
-            // buffers — the donated decode path allocates nothing
+            // (exactly append_layer's window layout) into the shard's
+            // reusable call buffers — the donated decode path allocates
+            // nothing
             let n = appended * dh;
-            let mut bufs = lock_recover(&self.call_buf, "call buffers");
+            let mut bufs = lock_recover(&sh.call_buf, "call buffers");
             bufs.stage_k.clear();
             bufs.stage_k.resize(h * n, 0.0);
             bufs.stage_v.clear();
@@ -768,16 +1059,33 @@ impl Runtime {
                 st.bytes_d2h += (2 * 4 * l * h * appended * dh) as u64;
                 st.download_s += t0.elapsed().as_secs_f64();
             }
-            // lock order: device -> scratch
-            let mut device = lock_recover(&self.device, "device tier");
-            let mut pool = lock_recover(&self.scratch, "scratch pool");
+            // lock order: tier -> scratch
+            let mut device = lock_recover(&sh.tier, "device tier");
+            let mut pool = lock_recover(&sh.scratch, "scratch pool");
             device.install_absorbed(cache, dev.k, dev.v, &mut pool)?;
             return Ok(());
         }
         cache.replace_from_device(&go.k, &go.v, &go.lens, appended, first_pos)?;
         let k = std::mem::take(&mut go.k);
         let v = std::mem::take(&mut go.v);
-        lock_recover(&self.scratch, "scratch pool").absorb(cache, k, v);
+        lock_recover(&sh.scratch, "scratch pool").absorb(cache, k, v);
         Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::shard_slice_bytes;
+
+    #[test]
+    fn shard_slices_partition_the_pool_exactly() {
+        for (total, n) in [(0usize, 3usize), (10, 3), (256 << 20, 4), (7, 8), (5, 1)] {
+            let sum: usize = (0..n).map(|i| shard_slice_bytes(total, n, i)).sum();
+            assert_eq!(sum, total, "slices must sum to the pool ({total} over {n} shards)");
+        }
+        // remainder bytes land on the lowest-indexed shards
+        assert_eq!(shard_slice_bytes(10, 3, 0), 4);
+        assert_eq!(shard_slice_bytes(10, 3, 1), 3);
+        assert_eq!(shard_slice_bytes(10, 3, 2), 3);
     }
 }

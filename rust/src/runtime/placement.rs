@@ -1,0 +1,233 @@
+//! Shard placement policy: which [`DeviceShard`](crate::runtime::Runtime)
+//! a sequence is admitted onto.
+//!
+//! Placement is decided once, at admission, from a point-in-time load
+//! snapshot of every shard ([`ShardLoad`]). The policy is two-level:
+//!
+//! 1. **Prefix-local first.** If the radix prefix tree holds a snapshot for
+//!    the sequence's deepest prompt-prefix match, prefer that snapshot's
+//!    *home shard* — the shard whose residency tier and scratch pool already
+//!    serve that KV state — so a hot shared system prompt is served from one
+//!    shard instead of being duplicated N times. When the home shard is
+//!    unserviceable (degraded, or a zero-byte residency slice) the sequence
+//!    spills to another shard by load and the caller must **cold prefill**
+//!    there: snapshots are never migrated across devices implicitly, only
+//!    counted ([`PlacementKind::Spillover`]).
+//! 2. **Least-loaded-bytes otherwise.** No prefix preference → the
+//!    serviceable shard with the fewest device-resident bytes wins (ties
+//!    broken by in-flight calls, then by the lowest shard index, so
+//!    placement is deterministic for a given snapshot).
+//!
+//! If *every* shard is degraded or capacity-less the sequence is still
+//! assigned a shard — calls must route through some executor lane — but the
+//! decision is reported as [`PlacementKind::HostOnly`]: each tier is in its
+//! degraded bypass, so K/V state stays host-side and no residency is
+//! expected.
+
+/// Point-in-time load snapshot of one shard, fed to [`place`].
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardLoad {
+    /// Device ordinal backing this shard.
+    pub device: usize,
+    /// Device-resident K/V bytes currently held by the shard's tier.
+    pub resident_bytes: usize,
+    /// Calls in flight on the shard's executor lane.
+    pub inflight: usize,
+    /// Sticky per-shard degraded flag (tier bypasses residency).
+    pub degraded: bool,
+    /// The shard's `device_pool_bytes` slice; 0 means the shard can hold no
+    /// resident image and is skipped by placement.
+    pub capacity_bytes: usize,
+}
+
+impl ShardLoad {
+    fn serviceable(&self) -> bool {
+        !self.degraded && self.capacity_bytes > 0
+    }
+}
+
+/// Why a sequence landed on its shard (drives the `placement_*` counters).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlacementKind {
+    /// The preferred (prefix-home) shard was healthy: the snapshot is
+    /// adopted where it lives.
+    LocalPrefix,
+    /// No prefix preference — the least-loaded-bytes shard won.
+    LeastLoaded,
+    /// A prefix-home shard existed but was unserviceable: placed elsewhere
+    /// by load, and the caller must cold-prefill instead of migrating the
+    /// snapshot cross-device.
+    Spillover,
+    /// Every shard is degraded or capacity-less: a shard is still named
+    /// (calls route somewhere) but residency is host-only.
+    HostOnly,
+}
+
+/// A placement decision: shard index plus the rule that produced it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Placement {
+    /// Index into the `loads` slice passed to [`place`].
+    pub shard: usize,
+    pub kind: PlacementKind,
+}
+
+/// Decide the shard for one sequence. `preferred` is the home shard of the
+/// deepest prefix-tree match, if any. Never fails: with no serviceable
+/// shard the least-loaded shard overall is named with
+/// [`PlacementKind::HostOnly`] (an empty `loads` slice yields shard 0,
+/// which callers with at least one shard never observe).
+pub fn place(loads: &[ShardLoad], preferred: Option<usize>) -> Placement {
+    if let Some(p) = preferred {
+        if loads.get(p).map(ShardLoad::serviceable).unwrap_or(false) {
+            return Placement { shard: p, kind: PlacementKind::LocalPrefix };
+        }
+    }
+    if let Some(shard) = least_loaded(loads, true) {
+        let kind =
+            if preferred.is_some() { PlacementKind::Spillover } else { PlacementKind::LeastLoaded };
+        return Placement { shard, kind };
+    }
+    let shard = least_loaded(loads, false).unwrap_or(0);
+    Placement { shard, kind: PlacementKind::HostOnly }
+}
+
+/// Lowest `(resident_bytes, inflight, index)` shard, optionally restricted
+/// to serviceable shards.
+fn least_loaded(loads: &[ShardLoad], serviceable_only: bool) -> Option<usize> {
+    loads
+        .iter()
+        .enumerate()
+        .filter(|(_, l)| !serviceable_only || l.serviceable())
+        .min_by_key(|&(i, l)| (l.resident_bytes, l.inflight, i))
+        .map(|(i, _)| i)
+}
+
+/// Running totals of placement decisions, exported as `op:stats` counters
+/// (`placement_local_prefix`, `placement_spillover`, ...).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct PlacementStats {
+    /// Sequences placed on their prefix snapshot's home shard.
+    pub local_prefix: u64,
+    /// Sequences placed purely by least-loaded-bytes.
+    pub least_loaded: u64,
+    /// Cross-shard snapshot migrations *avoided*: the home shard was
+    /// unserviceable, so the sequence cold-prefilled elsewhere.
+    pub spillover: u64,
+    /// Placements made with every shard degraded or capacity-less.
+    pub host_only: u64,
+}
+
+impl PlacementStats {
+    pub fn note(&mut self, kind: PlacementKind) {
+        match kind {
+            PlacementKind::LocalPrefix => self.local_prefix += 1,
+            PlacementKind::LeastLoaded => self.least_loaded += 1,
+            PlacementKind::Spillover => self.spillover += 1,
+            PlacementKind::HostOnly => self.host_only += 1,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn shard(device: usize, resident: usize, cap: usize, degraded: bool) -> ShardLoad {
+        ShardLoad {
+            device,
+            resident_bytes: resident,
+            inflight: 0,
+            degraded,
+            capacity_bytes: cap,
+        }
+    }
+
+    #[test]
+    fn least_loaded_bytes_wins_without_preference() {
+        let loads = [shard(0, 900, 1024, false), shard(1, 100, 1024, false)];
+        assert_eq!(
+            place(&loads, None),
+            Placement { shard: 1, kind: PlacementKind::LeastLoaded }
+        );
+    }
+
+    #[test]
+    fn ties_break_by_inflight_then_index() {
+        let mut loads = [shard(0, 64, 1024, false), shard(1, 64, 1024, false)];
+        assert_eq!(place(&loads, None).shard, 0, "equal load resolves to the lowest index");
+        loads[0].inflight = 3;
+        assert_eq!(place(&loads, None).shard, 1, "in-flight calls break byte ties");
+    }
+
+    #[test]
+    fn healthy_home_shard_is_preferred_over_load() {
+        // shard 1 holds the prefix snapshot; it is busier but still wins
+        let loads = [shard(0, 0, 1024, false), shard(1, 1000, 1024, false)];
+        assert_eq!(
+            place(&loads, Some(1)),
+            Placement { shard: 1, kind: PlacementKind::LocalPrefix }
+        );
+    }
+
+    #[test]
+    fn zero_capacity_shard_is_skipped() {
+        // shard 0 has no residency slice: never placed on, even when idle
+        let loads = [shard(0, 0, 0, false), shard(1, 500, 1024, false)];
+        assert_eq!(
+            place(&loads, None),
+            Placement { shard: 1, kind: PlacementKind::LeastLoaded }
+        );
+        // ... including as a prefix home: spill, don't migrate
+        let p = place(&loads, Some(0));
+        assert_eq!(p, Placement { shard: 1, kind: PlacementKind::Spillover });
+    }
+
+    #[test]
+    fn degraded_home_shard_spills_without_migration() {
+        let loads = [shard(0, 0, 1024, true), shard(1, 500, 1024, false)];
+        let p = place(&loads, Some(0));
+        assert_eq!(p, Placement { shard: 1, kind: PlacementKind::Spillover });
+    }
+
+    #[test]
+    fn all_shards_degraded_falls_back_to_host_only() {
+        let loads = [shard(0, 700, 1024, true), shard(1, 300, 1024, true)];
+        let p = place(&loads, None);
+        assert_eq!(p.kind, PlacementKind::HostOnly);
+        assert_eq!(p.shard, 1, "host-only still routes by least resident bytes");
+        // a prefix preference cannot resurrect a degraded home shard
+        assert_eq!(place(&loads, Some(0)).kind, PlacementKind::HostOnly);
+    }
+
+    #[test]
+    fn single_shard_degenerates_to_shard_zero() {
+        let loads = [shard(0, 0, 1024, false)];
+        for preferred in [None, Some(0), Some(9)] {
+            assert_eq!(place(&loads, preferred).shard, 0);
+        }
+        assert_eq!(place(&loads, Some(0)).kind, PlacementKind::LocalPrefix);
+        assert_eq!(place(&loads, None).kind, PlacementKind::LeastLoaded);
+    }
+
+    #[test]
+    fn out_of_range_preference_is_ignored() {
+        let loads = [shard(0, 10, 1024, false), shard(1, 0, 1024, false)];
+        let p = place(&loads, Some(7));
+        assert_eq!(p.shard, 1, "stale home shard index falls back to load placement");
+        assert_eq!(p.kind, PlacementKind::Spillover);
+    }
+
+    #[test]
+    fn stats_note_buckets_by_kind() {
+        let mut s = PlacementStats::default();
+        s.note(PlacementKind::LocalPrefix);
+        s.note(PlacementKind::LocalPrefix);
+        s.note(PlacementKind::Spillover);
+        s.note(PlacementKind::LeastLoaded);
+        s.note(PlacementKind::HostOnly);
+        assert_eq!(
+            (s.local_prefix, s.least_loaded, s.spillover, s.host_only),
+            (2, 1, 1, 1)
+        );
+    }
+}

@@ -48,12 +48,25 @@ pub struct PrefixSnapshot {
     /// handles but each charges its full span — a simple over-count that
     /// keeps the eviction bound conservative.
     bytes: usize,
+    /// The shard whose residency/scratch tiers served this snapshot's donor.
+    /// The tree stays one LOGICAL index over all shards, but placement
+    /// prefers this shard so adoption stays device-local; an unserviceable
+    /// home shard means cold prefill elsewhere (a counted spillover), never
+    /// an implicit cross-device migration.
+    home_shard: usize,
 }
 
 impl PrefixSnapshot {
     /// Freeze `cache`'s current state (converting its pages to shared in
-    /// place; the cache keeps running over them through CoW).
+    /// place; the cache keeps running over them through CoW). Single-shard
+    /// convenience for [`Self::freeze_on`] with home shard 0.
     pub fn freeze(cache: &mut KvCache) -> Self {
+        Self::freeze_on(cache, 0)
+    }
+
+    /// Freeze `cache`, stamping the donor's `home_shard` for locality-aware
+    /// placement.
+    pub fn freeze_on(cache: &mut KvCache, home_shard: usize) -> Self {
         let pages = cache.freeze_pages();
         let per = Page::bytes(cache.row_width());
         let bytes = pages.iter().map(|t| t.len() * per).sum();
@@ -63,7 +76,13 @@ impl PrefixSnapshot {
             positions: cache.positions.clone(),
             mass: cache.mass.clone(),
             bytes,
+            home_shard,
         }
+    }
+
+    /// The shard this snapshot's KV state is local to.
+    pub fn home_shard(&self) -> usize {
+        self.home_shard
     }
 
     /// Install into an EMPTY cache (the fork path). Validates shape first;
@@ -390,6 +409,22 @@ mod tests {
         let st = pc.stats();
         assert_eq!((st.hits, st.misses), (2, 2));
         assert_eq!(st.tokens_reused, 12);
+    }
+
+    #[test]
+    fn snapshots_carry_their_home_shard() {
+        let arena = KvArena::new();
+        let mut donor = mk(&arena, 1, 1, 64, 2);
+        let mut pc = PrefixCache::new("sig".into(), 1 << 20);
+        let w = 4;
+        let mut pos = 0;
+        append_window(&mut donor, w, &mut pos, 3);
+        assert_eq!(PrefixSnapshot::freeze(&mut donor).home_shard(), 0, "freeze defaults to 0");
+        let prompt: Vec<i32> = (0..4).collect();
+        assert!(pc.insert_with(&prompt, w, || PrefixSnapshot::freeze_on(&mut donor, 2)));
+        let (m, snap) = pc.lookup(&prompt).unwrap();
+        assert_eq!(m, 4);
+        assert_eq!(snap.home_shard(), 2, "lookup hands back the donor's shard");
     }
 
     #[test]

@@ -140,6 +140,27 @@ pub struct Decoded {
 /// the sequence id, which is unique per request).
 pub type Ticket = u64;
 
+/// Per-shard health snapshot surfaced through `op:ping` and `op:stats`
+/// (see [`SeqBackend::shard_health`]): one entry per device shard, in shard
+/// order. `inflight` counts the calls currently on that shard's executor
+/// lane; the rest mirrors the runtime's per-shard gauges.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct ShardHealth {
+    /// PJRT device ordinal backing the shard.
+    pub device: usize,
+    /// Sticky per-shard degraded flag (this shard bypasses residency; the
+    /// rest of the fleet keeps serving).
+    pub degraded: bool,
+    /// Device calls in flight on this shard's lane.
+    pub inflight: usize,
+    /// Bytes resident in this shard's device tier.
+    pub resident_bytes: u64,
+    /// Calls this shard served from a resident image.
+    pub residency_hits: u64,
+    /// Spills from this shard's device tier.
+    pub spills: u64,
+}
+
 /// What a completed device call produced.
 pub enum CallOut {
     /// A prefill chunk was ingested (the scheduler advanced `pos` at
@@ -181,14 +202,18 @@ pub enum Submitted<S> {
 pub trait SeqBackend {
     type Seq;
     fn new_seq(&mut self) -> Result<Self::Seq>;
-    /// Cross-request prefix reuse, called once right after [`Self::new_seq`]
-    /// during admission (unless the request opted out): the backend may
-    /// install an already-computed KV prefix into the fresh sequence and
-    /// return how many leading prompt tokens it covers — the scheduler then
-    /// starts the sequence `prefilling` at that position, skipping their
-    /// device-side prefill entirely. 0 (the default) means a cold start.
-    fn adopt_prefix(&mut self, seq: &mut Self::Seq, prompt: &[i32]) -> usize {
-        let _ = (seq, prompt);
+    /// Placement plus cross-request prefix reuse, called once right after
+    /// [`Self::new_seq`] for EVERY admission. Sharded backends assign the
+    /// sequence's home shard here — a load/locality decision that must
+    /// happen even when reuse is declined — and, when `allow` is true
+    /// (protocol `prefix_hint`), may install an already-computed KV prefix
+    /// into the fresh sequence and return how many leading prompt tokens it
+    /// covers; the scheduler then starts the sequence `prefilling` at that
+    /// position, skipping their device-side prefill entirely. `allow ==
+    /// false` MUST return 0 (the request prefills cold) but still places
+    /// the sequence. 0 (the default) means a cold start.
+    fn adopt_prefix(&mut self, seq: &mut Self::Seq, prompt: &[i32], allow: bool) -> usize {
+        let _ = (seq, prompt, allow);
         0
     }
     /// Ingest a prompt chunk.
@@ -227,9 +252,18 @@ pub trait SeqBackend {
         let _ = (seq, pos);
     }
     /// Sticky degraded-mode flag (real backends surface the runtime's
-    /// device-tier state; see `op:ping`). Default: never degraded.
+    /// device-tier state; see `op:ping`). With device shards this is
+    /// FLEET-level: true only when every shard is degraded — a single lost
+    /// device degrades its shard ([`Self::shard_health`]) while the rest
+    /// keep serving. Default: never degraded.
     fn degraded(&self) -> bool {
         false
+    }
+    /// Per-shard health (one entry per device shard, shard order), exported
+    /// through `op:ping` / `op:stats`. Default: empty — single-tier mock
+    /// backends have no shard topology to report.
+    fn shard_health(&self) -> Vec<ShardHealth> {
+        Vec::new()
     }
     /// Non-blocking prefill: ownership of `seq` moves into the call and
     /// comes back through [`Self::reap`] (or immediately, via
@@ -725,13 +759,14 @@ impl<B: SeqBackend> Scheduler<B> {
             }
             match self.backend.new_seq() {
                 Ok(mut seq) => {
-                    // cross-request prefix reuse: start prefilling past the
-                    // span the backend served from its prefix cache
-                    let matched = if p.allow_prefix {
-                        self.backend.adopt_prefix(&mut seq, &p.prompt).min(p.prompt.len())
-                    } else {
-                        0
-                    };
+                    // placement + cross-request prefix reuse: every
+                    // admission is placed on a shard; with reuse allowed,
+                    // prefilling starts past the span the backend served
+                    // from its prefix cache
+                    let matched = self
+                        .backend
+                        .adopt_prefix(&mut seq, &p.prompt, p.allow_prefix)
+                        .min(p.prompt.len());
                     self.active.push(Active {
                         id: p.id,
                         prompt: p.prompt,
@@ -1208,7 +1243,10 @@ mod tests {
         fn new_seq(&mut self) -> Result<MockSeq> {
             self.inner.new_seq()
         }
-        fn adopt_prefix(&mut self, _seq: &mut MockSeq, prompt: &[i32]) -> usize {
+        fn adopt_prefix(&mut self, _seq: &mut MockSeq, prompt: &[i32], allow: bool) -> usize {
+            if !allow {
+                return 0; // placed, but the cache is never consulted
+            }
             self.adopt_calls += 1;
             self.matched.min(prompt.len())
         }
@@ -1835,6 +1873,137 @@ mod tests {
                 prop_assert!(
                     a.len() == trace.iter().filter(|&&(_, m)| m > 0).count(),
                     "each admitted sequence must record exactly one checksum"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    /// Multi-lane test backend mirroring the sharded serving shape: each
+    /// sequence is pinned to one lane (tag % lanes — the placement stand-in)
+    /// and every call ships on that lane; reap drains ALL lanes, blocking at
+    /// most once, exactly like the serving `EngineBackend`.
+    struct LaneBackend<'env> {
+        lanes: Vec<CallExecutor<'env, (TraceSeq, Result<CallOut>)>>,
+        new_fn: Box<dyn FnMut() -> Result<TraceSeq> + 'env>,
+    }
+
+    impl<'env> SeqBackend for LaneBackend<'env> {
+        type Seq = TraceSeq;
+        fn new_seq(&mut self) -> Result<TraceSeq> {
+            (self.new_fn)()
+        }
+        fn prefill_chunk(&mut self, seq: &mut TraceSeq, chunk: &[i32]) -> Result<()> {
+            trace_prefill(seq, chunk)
+        }
+        fn decode(&mut self, seq: &mut TraceSeq, n: usize) -> Result<Decoded> {
+            trace_decode(seq, n)
+        }
+        fn inflight_capacity(&self) -> usize {
+            self.lanes.iter().map(|ex| ex.workers()).sum()
+        }
+        fn submit_prefill(
+            &mut self,
+            ticket: Ticket,
+            mut seq: TraceSeq,
+            chunk: &[i32],
+        ) -> Submitted<TraceSeq> {
+            let lane = (seq.tag as usize) % self.lanes.len();
+            let chunk = chunk.to_vec();
+            self.lanes[lane].submit(ticket, move || {
+                let result = trace_prefill(&mut seq, &chunk).map(|()| CallOut::Prefill);
+                (seq, result)
+            });
+            Submitted::InFlight
+        }
+        fn submit_decode(&mut self, ticket: Ticket, mut seq: TraceSeq, n: usize) -> Submitted<TraceSeq> {
+            let lane = (seq.tag as usize) % self.lanes.len();
+            self.lanes[lane].submit(ticket, move || {
+                let result = trace_decode(&mut seq, n).map(CallOut::Decode);
+                (seq, result)
+            });
+            Submitted::InFlight
+        }
+        fn reap(&mut self, mut wait: Option<Duration>) -> Vec<CallDone<TraceSeq>> {
+            let mut done = Vec::new();
+            for ex in &mut self.lanes {
+                let w = if ex.inflight() > 0 { wait.take() } else { None };
+                done.extend(ex.reap(w).into_iter().map(|c| match c.out {
+                    Ok((seq, result)) => CallDone { ticket: c.ticket, seq: Some(seq), result },
+                    Err(panic) => CallDone {
+                        ticket: c.ticket,
+                        seq: None,
+                        result: Err(crate::runtime::CallError::fatal(format!(
+                            "worker panic: {panic}"
+                        ))),
+                    },
+                }));
+            }
+            done
+        }
+    }
+
+    #[test]
+    fn lane_fanout_matches_single_lane_byte_for_byte() {
+        // property: for the same seeded request trace, fanning calls out
+        // over N per-shard lanes produces the same per-request token streams
+        // and byte-identical final KV state as a single lane — sharding the
+        // call path must never change what any sequence computes. Traces of
+        // length 1 pin the `--devices N` == `--devices 1` single-sequence
+        // byte-identity claim.
+        PropRunner::new(10).run(
+            |rng| {
+                let n_req = 1 + rng.below(5) as usize;
+                (0..n_req)
+                    .map(|_| (1 + rng.below(40) as usize, rng.below(12) as usize))
+                    .collect::<Vec<(usize, usize)>>()
+            },
+            |trace| {
+                let run = |n_lanes: usize| {
+                    let sums: KvSums = KvSums::default();
+                    let mut tokens: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+                    let mut errors: Vec<String> = Vec::new();
+                    let mut drained = false;
+                    std::thread::scope(|scope| {
+                        let arena = KvArena::new();
+                        let seq_sums = Arc::clone(&sums);
+                        let mut tag = 0u64;
+                        let backend = LaneBackend {
+                            lanes: CallExecutor::lanes(scope, n_lanes, 2),
+                            new_fn: Box::new(move || {
+                                let t = tag;
+                                tag += 1;
+                                Ok(trace_seq(&arena, &seq_sums, t))
+                            }),
+                        };
+                        let mut s = Scheduler::new(backend, 8, 4, 4, 64);
+                        for &(p, m) in trace {
+                            s.submit(vec![1; p], m, CancelToken::new()).unwrap();
+                        }
+                        let mut guard = 0;
+                        while s.has_work() && guard < 100_000 {
+                            for f in s.step() {
+                                if let Some(e) = &f.error {
+                                    errors.push(e.clone());
+                                }
+                                tokens.insert(f.id, f.tokens);
+                            }
+                            guard += 1;
+                        }
+                        drained = !s.has_work();
+                    });
+                    let sums = sums.lock().unwrap().clone();
+                    (tokens, sums, errors, drained)
+                };
+                let (t1, k1, e1, d1) = run(1);
+                let (t3, k3, e3, d3) = run(3);
+                prop_assert!(e1.is_empty(), "single-lane errors: {e1:?}");
+                prop_assert!(e3.is_empty(), "three-lane errors: {e3:?}");
+                prop_assert!(d1 && d3, "a run did not drain (1 lane: {d1}, 3 lanes: {d3})");
+                prop_assert!(t1 == t3, "token streams diverge across lane counts");
+                prop_assert!(
+                    k1 == k3,
+                    "per-lane fan-out must be byte-identical to one lane: {k1:?} vs {k3:?}"
                 );
                 Ok(())
             },

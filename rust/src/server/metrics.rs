@@ -7,7 +7,8 @@
 
 use std::time::Instant;
 
-use crate::runtime::{ArenaStats, PrefixStats, RuntimeStats};
+use crate::runtime::{ArenaStats, PlacementStats, PrefixStats, RuntimeStats};
+use crate::server::batcher::ShardHealth;
 use crate::util::json::Json;
 use crate::util::stats::{Meter, Samples};
 
@@ -211,6 +212,41 @@ pub fn export_prefix(j: &mut Json, ps: &PrefixStats, resident_bytes: usize) {
     j.set("prefix_resident_bytes", resident_bytes.into());
 }
 
+/// Attach per-shard residency/health gauges as a `shards` array — one
+/// object per device shard, in device order. Aggregate counters
+/// (`device_resident_bytes` etc., [`export_runtime`]) stay fleet-wide; this
+/// breakdown is what shows one shard saturating or degrading while the
+/// rest keep serving.
+pub fn export_shards(j: &mut Json, shards: &[ShardHealth]) {
+    let arr: Vec<Json> = shards
+        .iter()
+        .map(|s| {
+            Json::from_pairs(vec![
+                ("device", (s.device as i64).into()),
+                ("degraded", s.degraded.into()),
+                ("inflight", (s.inflight as i64).into()),
+                ("resident_bytes", (s.resident_bytes as i64).into()),
+                ("residency_hits", (s.residency_hits as i64).into()),
+                ("spills", (s.spills as i64).into()),
+            ])
+        })
+        .collect();
+    j.set("shards", arr.into());
+}
+
+/// Attach the admission-time placement counters: `placement_local_prefix`
+/// counts sequences landed on their prefix snapshot's home shard (the
+/// locality win), `placement_least_loaded` cold placements by byte load,
+/// `placement_spillover` sequences whose home shard was unserviceable (they
+/// cold-prefill elsewhere instead of migrating pages cross-device), and
+/// `placement_host_only` admissions with no serviceable shard at all.
+pub fn export_placement(j: &mut Json, ps: &PlacementStats) {
+    j.set("placement_local_prefix", (ps.local_prefix as i64).into());
+    j.set("placement_least_loaded", (ps.least_loaded as i64).into());
+    j.set("placement_spillover", (ps.spillover as i64).into());
+    j.set("placement_host_only", (ps.host_only as i64).into());
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -381,6 +417,49 @@ mod tests {
         assert_eq!(j.usize_of("overloaded"), Some(3));
         assert_eq!(j.bool_of("device_degraded"), Some(true));
         assert_eq!(j.usize_of("lock_poisoned"), Some(4));
+    }
+
+    #[test]
+    fn exports_per_shard_health_array() {
+        let mut j = Json::obj();
+        let shards = vec![
+            ShardHealth {
+                device: 0,
+                degraded: false,
+                inflight: 2,
+                resident_bytes: 4096,
+                residency_hits: 9,
+                spills: 1,
+            },
+            ShardHealth { device: 1, degraded: true, ..Default::default() },
+        ];
+        export_shards(&mut j, &shards);
+        let arr = j.req("shards").as_arr().expect("shards must be an array");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].usize_of("device"), Some(0));
+        assert_eq!(arr[0].bool_of("degraded"), Some(false));
+        assert_eq!(arr[0].usize_of("inflight"), Some(2));
+        assert_eq!(arr[0].usize_of("resident_bytes"), Some(4096));
+        assert_eq!(arr[0].usize_of("residency_hits"), Some(9));
+        assert_eq!(arr[0].usize_of("spills"), Some(1));
+        assert_eq!(arr[1].usize_of("device"), Some(1));
+        assert_eq!(arr[1].bool_of("degraded"), Some(true));
+        // a single-device fleet still exports the (one-element) array so
+        // dashboards never branch on its presence
+        let mut j1 = Json::obj();
+        export_shards(&mut j1, &[ShardHealth::default()]);
+        assert_eq!(j1.req("shards").as_arr().map(|a| a.len()), Some(1));
+    }
+
+    #[test]
+    fn exports_placement_counters() {
+        let mut j = Json::obj();
+        let ps = PlacementStats { local_prefix: 5, least_loaded: 3, spillover: 2, host_only: 1 };
+        export_placement(&mut j, &ps);
+        assert_eq!(j.usize_of("placement_local_prefix"), Some(5));
+        assert_eq!(j.usize_of("placement_least_loaded"), Some(3));
+        assert_eq!(j.usize_of("placement_spillover"), Some(2));
+        assert_eq!(j.usize_of("placement_host_only"), Some(1));
     }
 
     #[test]

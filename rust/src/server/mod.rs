@@ -1,6 +1,9 @@
 //! The serving front-end: JSON-lines TCP listener + single-executor
-//! reactor (the PJRT client is single-device; concurrency is
-//! iteration-level interleaving, vLLM-style).
+//! reactor. Concurrency is iteration-level interleaving, vLLM-style, fanned
+//! out across the runtime's device shards: each PJRT device backs one
+//! [`crate::runtime::Runtime`] shard (its own residency tier, scratch pool,
+//! and compiled executables), and the backend gives each shard its own
+//! [`CallExecutor`] lane so per-device call queues drain in parallel.
 //!
 //! Control path: each connection runs a reader thread (parses lines,
 //! forwards [`Work`] to the executor, observes EOF = client disconnect) and
@@ -13,15 +16,26 @@
 //! requests once `op:shutdown` was accepted, then takes one scheduler step
 //! (reap completions / reap cancelled / admit / submit — see [`batcher`]).
 //!
+//! Sharding: sequences are assigned a shard at admission by the
+//! [`crate::runtime::placement`] policy — the shard already holding the
+//! sequence's deepest prefix-tree snapshot when it is serviceable,
+//! least-loaded-bytes otherwise. The radix prefix tree stays ONE logical
+//! index: snapshots record their home shard, adoption only happens on that
+//! shard, and an unserviceable home shard means a counted cold-prefill
+//! spillover, never an implicit cross-device page migration. One lost
+//! device degrades its shard only; the fleet keeps serving
+//! (`op:ping` reports per-shard health).
+//!
 //! Threads: N connection reader/writer pairs + 1 executor that owns the
-//! `Runtime` and drives the scheduler, plus (with `max_inflight_calls > 1`)
-//! a scoped [`CallExecutor`] worker pool the executor ships device calls
-//! to. The `Runtime` is `Sync` — workers borrow it directly — and each
-//! in-flight call OWNS the sequence it advances, so device-tier accounting
-//! never races (split-phase submit/reap, PERF.md "Async overlap"). The
-//! cross-request prefix cache is the one deliberately single-threaded
-//! piece: adoption and snapshot publishing both happen on the executor
-//! thread (publishing at reap), so it needs no locking.
+//! `Runtime` and drives the scheduler, plus per-shard scoped
+//! [`CallExecutor`] lanes the executor ships device calls to (a single lane
+//! with `max_inflight_calls > 1` on one device). The `Runtime` is `Sync` —
+//! workers borrow it directly — and each in-flight call OWNS the sequence
+//! it advances, so device-tier accounting never races (split-phase
+//! submit/reap, PERF.md "Async overlap"). The cross-request prefix cache
+//! and the placement counters are the deliberately single-threaded pieces:
+//! adoption, placement, and snapshot publishing all happen on the executor
+//! thread (publishing at reap), so they need no locking.
 
 pub mod batcher;
 pub mod metrics;
@@ -38,15 +52,18 @@ use std::time::Duration;
 
 use anyhow::Result;
 
-use batcher::{CallDone, CallOut, CancelToken, Decoded, Scheduler, SeqBackend, Submitted, Ticket};
+use batcher::{
+    CallDone, CallOut, CancelToken, Decoded, Scheduler, SeqBackend, ShardHealth, Submitted, Ticket,
+};
 pub use reactor::{Reactor, Work};
 
 use crate::cache::make_policy;
 use crate::config::ServeConfig;
 use crate::engine::{Engine, EngineOpts};
+use crate::runtime::manifest::serving_prog_names;
 use crate::runtime::{
-    admission_ok, seq_footprint_bytes, CallError, CallExecutor, KvArena, PrefixCache,
-    PrefixSnapshot, Runtime, RuntimeOpts,
+    admission_ok, place, seq_footprint_bytes, sharded_staging_bytes, CallError, CallExecutor,
+    KvArena, PlacementStats, PrefixCache, PrefixSnapshot, Runtime, RuntimeOpts, ShardLoad,
 };
 
 /// The determinism domain of a frozen prefix: the ladder (or any registered)
@@ -60,7 +77,8 @@ pub fn prefix_signature(cfg: &ServeConfig) -> String {
 
 /// One served sequence: the engine plus the prompt tokens it has ingested
 /// so far — the prefix tree's path key, extended at adoption and after
-/// every prefill chunk.
+/// every prefill chunk. The engine's `shard` field (set at admission by the
+/// placement policy) routes every device call and picks the executor lane.
 pub struct ServedSeq<'rt> {
     engine: Engine<'rt>,
     ingested: Vec<i32>,
@@ -72,17 +90,20 @@ pub type SeqCall<'rt> = (ServedSeq<'rt>, Result<CallOut>);
 
 /// Real backend: each sequence is an [`Engine`] (wrapped in [`ServedSeq`])
 /// with its own page tables in the shared paged-KV arena and a fresh policy
-/// instance; the `Runtime` (weights + compiled programs), the arena, and
-/// the cross-request [`PrefixCache`] are shared. The backend publishes
-/// every sequence's KV state at full-window prefill boundaries and adopts
-/// matching prefixes at admission, so a fleet of prompts sharing one system
-/// prompt prefills the shared span once.
+/// instance; the `Runtime` (weights + compiled programs, one shard per
+/// device), the arena, and the cross-request [`PrefixCache`] are shared.
+/// The backend places every sequence on a shard at admission
+/// (locality-aware: prefix home shard first, least-loaded-bytes otherwise),
+/// publishes every sequence's KV state at full-window prefill boundaries
+/// (stamped with its home shard), and adopts matching prefixes at
+/// admission, so a fleet of prompts sharing one system prompt prefills the
+/// shared span once — on one shard.
 pub struct EngineBackend<'rt> {
     pub rt: &'rt Runtime,
     pub cfg: ServeConfig,
     arena: KvArena,
     /// Cross-request prefix cache, shared with the executor's stats hook
-    /// ([`Self::prefix_handle`]).
+    /// ([`Self::prefix_handle`]). One logical tree across all shards.
     prefix: Rc<RefCell<PrefixCache>>,
     /// This backend's determinism signature ([`prefix_signature`]).
     prefix_sig: String,
@@ -91,22 +112,29 @@ pub struct EngineBackend<'rt> {
     /// case). Admission reserves this cap — not the current residency —
     /// because the tree fills AFTER sequences were admitted against it.
     prefix_cap: usize,
+    /// Placement decision counters (`op:stats` `placement_*`), shared with
+    /// the executor's stats hook ([`Self::placement_handle`]).
+    placement: Rc<RefCell<PlacementStats>>,
     /// Worst-case steady-state arena bytes for one sequence: policy budget
     /// plus one ingest window, clamped to capacity, in whole pages.
     est_seq_bytes: usize,
     /// One dense `[L, H, C, Dh]` K/V staging image — what a hot sequence
-    /// holds in the device tier (or, spilled, in the scratch pool).
+    /// holds in its shard's device tier (or, spilled, in its scratch pool).
     image_bytes: usize,
-    /// Global staging ceiling: the device tier's byte capacity plus the
-    /// scratch pool's worst case. Admission projects per-sequence staging
-    /// but never reserves beyond what the tiers can physically hold (LRU
-    /// evicts the rest).
+    /// Per-shard staging ceilings: each shard's residency-slice bytes plus
+    /// its scratch pool's worst case. Admission projects per-sequence
+    /// staging but charges each shard at most its own ceiling (LRU evicts
+    /// the rest) — one saturated shard cannot spend another shard's budget.
+    shard_staging_caps: Vec<usize>,
+    /// Global staging ceiling (the sum of [`Self::shard_staging_caps`]).
     staging_cap: usize,
     pool_budget: Option<usize>,
-    /// Worker pool for split-phase device calls ([`Self::with_executor`]).
-    /// `None` = the synchronous path: the scheduler's default submit shims
-    /// run every call inline on the executor thread.
-    executor: Option<CallExecutor<'rt, SeqCall<'rt>>>,
+    /// Per-shard worker lanes for split-phase device calls
+    /// ([`Self::with_executors`]): `seq.engine.shard` picks the lane, so a
+    /// stalled device only backs up its own queue. Empty = the synchronous
+    /// path: the scheduler's default submit shims run every call inline on
+    /// the executor thread.
+    executors: Vec<CallExecutor<'rt, SeqCall<'rt>>>,
 }
 
 impl<'rt> EngineBackend<'rt> {
@@ -117,9 +145,20 @@ impl<'rt> EngineBackend<'rt> {
         let slots = policy.budget().saturating_add(cfg.window).min(cfg.capacity);
         let est_seq_bytes = seq_footprint_bytes(l, h * dh, slots);
         let image_bytes = 2 * 4 * l * h * cfg.capacity * dh;
-        let staging_cap = cfg
-            .device_pool_bytes
-            .saturating_add(cfg.scratch_pool_entries.max(1).saturating_mul(image_bytes));
+        // mirror the runtime's partitioning: each shard gets a slice of the
+        // device pool and `scratch_pool_entries / shards` (min 1) scratch
+        // images, so each per-shard cap is what that shard's tiers can
+        // physically hold (with one shard this is exactly the pre-sharding
+        // `device_pool_bytes + entries.max(1) * image` ceiling)
+        let scratch_per_shard = (cfg.scratch_pool_entries / rt.shard_count().max(1)).max(1);
+        let shard_staging_caps: Vec<usize> = rt
+            .shard_stats()
+            .iter()
+            .map(|s| {
+                s.capacity_bytes.saturating_add(scratch_per_shard.saturating_mul(image_bytes))
+            })
+            .collect();
+        let staging_cap = shard_staging_caps.iter().fold(0usize, |a, &c| a.saturating_add(c));
         let pool_budget = (cfg.kv_pool_bytes > 0).then_some(cfg.kv_pool_bytes);
         let mut prefix_cap = cfg.prefix_pool_bytes;
         if let Some(limit) = pool_budget {
@@ -150,22 +189,26 @@ impl<'rt> EngineBackend<'rt> {
             prefix,
             prefix_sig,
             prefix_cap,
+            placement: Rc::new(RefCell::new(PlacementStats::default())),
             est_seq_bytes,
             image_bytes,
+            shard_staging_caps,
             staging_cap,
             pool_budget,
-            executor: None,
+            executors: Vec::new(),
         })
     }
 
     /// Enable split-phase dispatch: prefill/decode calls are shipped whole —
-    /// the [`ServedSeq`] moves into the job — onto `ex`'s worker pool and
-    /// come back through [`SeqBackend::reap`]. The pool size is the
-    /// in-flight capacity the scheduler sees. The `Runtime` is `Sync`, so
-    /// workers drive it concurrently; its device/scratch tiers serialize
-    /// internally (lock order: device before scratch).
-    pub fn with_executor(mut self, ex: CallExecutor<'rt, SeqCall<'rt>>) -> Self {
-        self.executor = Some(ex);
+    /// the [`ServedSeq`] moves into the job — onto the lane matching the
+    /// sequence's shard and come back through [`SeqBackend::reap`]. With one
+    /// lane per shard, per-device queues drain in parallel; the summed lane
+    /// widths are the in-flight capacity the scheduler sees. The `Runtime`
+    /// is `Sync`, so workers drive it concurrently; each shard's
+    /// device/scratch tiers serialize internally (lock order: device before
+    /// scratch, never across shards).
+    pub fn with_executors(mut self, lanes: Vec<CallExecutor<'rt, SeqCall<'rt>>>) -> Self {
+        self.executors = lanes;
         self
     }
 
@@ -175,11 +218,29 @@ impl<'rt> EngineBackend<'rt> {
         self.prefix.clone()
     }
 
+    /// Handle to the backend's placement counters (the executor's stats
+    /// hook exports them as `placement_*`).
+    pub fn placement_handle(&self) -> Rc<RefCell<PlacementStats>> {
+        self.placement.clone()
+    }
+
+    /// Point-in-time placement inputs: the runtime's per-shard load gauges
+    /// with each executor lane's in-flight count overlaid (the runtime
+    /// cannot see the lanes).
+    fn shard_loads(&self) -> Vec<ShardLoad> {
+        let mut loads = self.rt.shard_loads();
+        for (load, ex) in loads.iter_mut().zip(&self.executors) {
+            load.inflight = ex.inflight();
+        }
+        loads
+    }
+
     /// Publish a sequence's post-chunk KV state into the prefix tree at
     /// FULL-window boundaries only: an adopter re-chunks from the same
     /// offsets, so its eviction cadence (and therefore its ladder state) is
     /// identical to a cold prefill. `insert_with` freezes the engine's
-    /// pages only if the tree actually wants this boundary.
+    /// pages only if the tree actually wants this boundary; the snapshot is
+    /// stamped with the donor's shard, which placement later prefers.
     ///
     /// Runs on the executor thread exclusively — after an inline prefill,
     /// or at reap for a pool-dispatched one (the prefix cache is the
@@ -189,8 +250,11 @@ impl<'rt> EngineBackend<'rt> {
         let w = self.cfg.window;
         if !seq.ingested.is_empty() && seq.ingested.len() % w == 0 {
             let engine = &mut seq.engine;
+            let home = engine.shard;
             let mut prefix = self.prefix.borrow_mut();
-            prefix.insert_with(&seq.ingested, w, || PrefixSnapshot::freeze(&mut engine.cache));
+            prefix.insert_with(&seq.ingested, w, || {
+                PrefixSnapshot::freeze_on(&mut engine.cache, home)
+            });
         }
     }
 }
@@ -214,19 +278,38 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
         Ok(ServedSeq { engine, ingested: Vec::new() })
     }
 
-    /// Cross-request prefix adoption (called at admission): look the prompt
-    /// up in the radix tree and, on a hit, install the frozen KV state into
-    /// the fresh engine — the scheduler then skips prefill for the matched
-    /// span. Signature mismatch or a failed install degrade to a cold start.
-    fn adopt_prefix(&mut self, seq: &mut ServedSeq<'rt>, prompt: &[i32]) -> usize {
-        let mut prefix = self.prefix.borrow_mut();
-        if !prefix.enabled() || prefix.signature() != self.prefix_sig {
-            return 0;
-        }
-        let Some((matched, snap)) = prefix.lookup(prompt) else {
+    /// Placement plus cross-request prefix adoption (called at admission
+    /// for every sequence). With reuse allowed, the prompt's deepest
+    /// prefix-tree match supplies both the locality preference (its home
+    /// shard) and — when placement lands there — the frozen KV state to
+    /// install; the scheduler then skips prefill for the matched span. An
+    /// unserviceable home shard spills the sequence elsewhere by load and
+    /// cold-prefills (counted in `placement_spillover`): snapshots are
+    /// never migrated across devices. Signature mismatch or a failed
+    /// install likewise degrade to a cold start.
+    fn adopt_prefix(&mut self, seq: &mut ServedSeq<'rt>, prompt: &[i32], allow: bool) -> usize {
+        let hit = if allow {
+            let mut prefix = self.prefix.borrow_mut();
+            if prefix.enabled() && prefix.signature() == self.prefix_sig {
+                prefix.lookup(prompt)
+            } else {
+                None
+            }
+        } else {
+            None
+        };
+        let preferred = hit.as_ref().map(|(_, snap)| snap.home_shard());
+        let placement = place(&self.shard_loads(), preferred);
+        self.placement.borrow_mut().note(placement.kind);
+        seq.engine.shard = placement.shard;
+        let Some((matched, snap)) = hit else {
             return 0;
         };
-        drop(prefix);
+        if placement.shard != snap.home_shard() {
+            // spillover: the sequence lives elsewhere now, so the matched
+            // span prefills cold there rather than copying pages cross-device
+            return 0;
+        }
         match seq.engine.adopt_prefix(&snap, matched as u64, prompt[matched - 1]) {
             Ok(()) => {
                 seq.ingested.extend_from_slice(&prompt[..matched]);
@@ -249,19 +332,25 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
     }
 
     fn inflight_capacity(&self) -> usize {
-        self.executor.as_ref().map_or(1, |ex| ex.workers())
+        if self.executors.is_empty() {
+            1
+        } else {
+            self.executors.iter().map(|ex| ex.workers()).sum()
+        }
     }
 
-    /// Split-phase prefill: the whole [`ServedSeq`] moves into the job. The
-    /// job runs engine ingestion only; prefix-tree publishing (non-`Send`)
-    /// happens when the completion is reaped on the executor thread.
+    /// Split-phase prefill: the whole [`ServedSeq`] moves into the job on
+    /// its shard's lane. The job runs engine ingestion only; prefix-tree
+    /// publishing (non-`Send`) happens when the completion is reaped on the
+    /// executor thread.
     fn submit_prefill(
         &mut self,
         ticket: Ticket,
         mut seq: ServedSeq<'rt>,
         chunk: &[i32],
     ) -> Submitted<ServedSeq<'rt>> {
-        if let Some(ex) = self.executor.as_mut() {
+        let lane = seq.engine.shard;
+        if let Some(ex) = self.executors.get_mut(lane) {
             let chunk = chunk.to_vec();
             ex.submit(ticket, move || {
                 let result = seq.engine.prefill(&chunk).map(|()| CallOut::Prefill);
@@ -282,7 +371,8 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
         mut seq: ServedSeq<'rt>,
         n: usize,
     ) -> Submitted<ServedSeq<'rt>> {
-        if let Some(ex) = self.executor.as_mut() {
+        let lane = seq.engine.shard;
+        if let Some(ex) = self.executors.get_mut(lane) {
             ex.submit(ticket, move || {
                 let result = seq
                     .engine
@@ -296,14 +386,15 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
         Submitted::Done(CallDone { ticket, seq: Some(seq), result })
     }
 
-    fn reap(&mut self, wait: Option<Duration>) -> Vec<CallDone<ServedSeq<'rt>>> {
-        let Some(ex) = self.executor.as_mut() else {
-            return Vec::new();
-        };
-        let mut done: Vec<CallDone<ServedSeq<'rt>>> = ex
-            .reap(wait)
-            .into_iter()
-            .map(|c| match c.out {
+    fn reap(&mut self, mut wait: Option<Duration>) -> Vec<CallDone<ServedSeq<'rt>>> {
+        let mut done: Vec<CallDone<ServedSeq<'rt>>> = Vec::new();
+        for ex in &mut self.executors {
+            // block (at most once, on the first lane with work in flight)
+            // only when the caller asked to wait; every other lane is
+            // drained non-blocking so one idle shard never delays another's
+            // completions
+            let w = if ex.inflight() > 0 { wait.take() } else { None };
+            done.extend(ex.reap(w).into_iter().map(|c| match c.out {
                 Ok((seq, result)) => CallDone { ticket: c.ticket, seq: Some(seq), result },
                 // the job panicked: its ServedSeq (arena pages, residency)
                 // was dropped during unwind — surface a structured Fatal so
@@ -313,8 +404,8 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
                     seq: None,
                     result: Err(CallError::fatal(format!("worker panic: {panic}"))),
                 },
-            })
-            .collect();
+            }));
+        }
         // deferred prefix publishing for pool-dispatched prefills (see
         // publish_prefix: the prefix cache lives on this thread only)
         for c in &mut done {
@@ -335,17 +426,42 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
         self.rt.release_cache_state(seq.engine.cache.id());
     }
 
-    /// Sticky device-tier degraded flag (surfaced through `op:ping`).
+    /// FLEET-level degraded flag (surfaced through `op:ping`): true only
+    /// when every shard's device tier has tripped its sticky bypass. A
+    /// single lost device degrades its shard alone —
+    /// [`Self::shard_health`] carries the per-shard flags.
     fn degraded(&self) -> bool {
         self.rt.device_degraded()
+    }
+
+    /// Per-shard health: the runtime's residency gauges zipped with each
+    /// executor lane's in-flight count (`op:ping` / `op:stats` `shards`).
+    fn shard_health(&self) -> Vec<ShardHealth> {
+        self.rt
+            .shard_stats()
+            .into_iter()
+            .enumerate()
+            .map(|(i, s)| ShardHealth {
+                device: s.device,
+                degraded: s.degraded,
+                inflight: self.executors.get(i).map_or(0, |ex| ex.inflight()),
+                resident_bytes: s.resident_bytes,
+                residency_hits: s.residency_hits,
+                spills: s.spills,
+            })
+            .collect()
     }
 
     /// Admission control by real memory pressure: arena pages PLUS the
     /// runtime's staging tiers (device-resident K/V images and host scratch
     /// images, which exist per hot sequence) — a full device tier
-    /// back-pressures intake instead of OOMing. Sweeps dead staging entries
-    /// first, so a sequence cancelled last round has already released its
-    /// `device_resident_bytes` by the time this round admits.
+    /// back-pressures intake instead of OOMing. Staging is charged per
+    /// shard: each shard's measured bytes (or its share of the projection,
+    /// if larger) clamped to that shard's own ceiling, so one saturated
+    /// shard cannot borrow headroom another shard will never grant. Sweeps
+    /// dead staging entries first, so a sequence cancelled last round has
+    /// already released its `device_resident_bytes` by the time this round
+    /// admits.
     fn can_admit(&self, active: usize) -> bool {
         // sweep regardless of budget: a cancelled sequence's staging bytes
         // must not outlive it just because admission is unlimited (calls
@@ -354,13 +470,14 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
         match self.pool_budget {
             None => true,
             Some(limit) => {
-                // staging pressure is the measured bytes, or — if larger —
-                // the projection for every hot sequence ((active+1) images,
-                // admitted sequences may not have promoted yet), clamped to
-                // what the tiers can physically hold (LRU evicts beyond it)
-                let projected =
-                    (active + 1).saturating_mul(self.image_bytes).min(self.staging_cap);
-                let staging = self.rt.staging_bytes().max(projected);
+                // projection: every hot sequence plus the incoming one holds
+                // one image ((active+1) images; admitted sequences may not
+                // have promoted yet)
+                let projected = (active + 1).saturating_mul(self.image_bytes);
+                let staged: Vec<usize> = (0..self.rt.shard_count())
+                    .map(|i| self.rt.staging_bytes_on(i))
+                    .collect();
+                let staging = sharded_staging_bytes(&staged, &self.shard_staging_caps, projected);
                 // reserve the prefix pool's CAPACITY, not its current
                 // residency: snapshots are published while the admitted
                 // sequences prefill, so the tree grows (pinning pages the
@@ -458,30 +575,34 @@ fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::js
         RuntimeOpts {
             scratch_pool_entries: cfg.scratch_pool_entries,
             device_pool_bytes: cfg.device_pool_bytes,
+            devices: cfg.devices,
         },
     )?;
-    // pre-compile the serving programs so the first request isn't slow
-    let _ = rt.warmup(
-        &cfg.model,
-        &[
-            &format!("score_w{}_c{}", cfg.window, cfg.capacity),
-            &format!("generate_k16_c{}", cfg.capacity),
-            &format!("generate_k1_c{}", cfg.capacity),
-        ],
-    );
+    // pre-compile the serving programs on every shard so no device pays
+    // first-call compile latency
+    let progs = serving_prog_names(cfg.window, cfg.capacity);
+    let _ = rt.warmup(&cfg.model, &progs.iter().map(String::as_str).collect::<Vec<_>>());
     // unconditional: clears any stale budget from a previous run_server in
     // the same process when the new config says unlimited (0)
     KvArena::global().set_budget((cfg.kv_pool_bytes > 0).then_some(cfg.kv_pool_bytes));
     // the whole serving loop runs under a thread scope so the in-flight
-    // call pool (when enabled) can borrow the Runtime directly; dropping
-    // the scheduler (and with it the backend's executor) at the end of the
+    // call lanes (when enabled) can borrow the Runtime directly; dropping
+    // the scheduler (and with it the backend's executors) at the end of the
     // closure is what lets the scope join its workers
     std::thread::scope(|scope| {
         let mut backend = EngineBackend::new(&rt, cfg.clone())?;
-        if cfg.max_inflight_calls > 1 {
-            backend = backend.with_executor(CallExecutor::new(scope, cfg.max_inflight_calls));
+        let shards = rt.shard_count();
+        if shards > 1 {
+            // one lane per shard: a stalled device only backs up its own
+            // queue, and healthy shards keep draining in parallel
+            backend = backend
+                .with_executors(CallExecutor::lanes(scope, shards, cfg.max_inflight_calls.max(1)));
+        } else if cfg.max_inflight_calls > 1 {
+            backend =
+                backend.with_executors(vec![CallExecutor::new(scope, cfg.max_inflight_calls)]);
         }
         let prefix = backend.prefix_handle();
+        let placement = backend.placement_handle();
         let mut sched =
             Scheduler::new(backend, cfg.window, cfg.decode_quantum, cfg.max_active, cfg.max_queue);
         sched.retry = batcher::RetryPolicy {
@@ -494,6 +615,7 @@ fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::js
             metrics::export_arena(j, &KvArena::global().stats());
             let p = prefix.borrow();
             metrics::export_prefix(j, &p.stats(), p.resident_bytes());
+            metrics::export_placement(j, &placement.borrow());
         }))
     })
 }

@@ -31,7 +31,9 @@
 //!  "gen_tokens":M}
 //! {"id":3,"ok":true,"stats":{...}}
 //! {"id":8,"ok":true,"version":"...","degraded":false,"inflight":0,
-//!  "queue_depth":0,"active_seqs":0}
+//!  "queue_depth":0,"active_seqs":0,
+//!  "shards":[{"device":0,"degraded":false,"inflight":0,
+//!             "resident_bytes":0}, ...]}
 //! {"id":2,"ok":false,"error":"...","code":"..."}
 //! {"id":7,"ok":false,"error":"overloaded: ...","code":"overloaded",
 //!  "retry_after_ms":50}
@@ -48,8 +50,12 @@
 //! were generated), or a device-call classification
 //! (`"transient"` / `"device-lost"` / `"oom"` / `"fatal"`) once the retry
 //! budget is exhausted. `op:ping` is the health probe: `degraded` reports
-//! the sticky device-tier bypass (see PERF.md "Failure handling &
-//! recovery"), `inflight` / `queue_depth` / `active_seqs` the load.
+//! the FLEET-level sticky device-tier bypass — true only when every shard
+//! has tripped (see PERF.md "Failure handling & recovery") — `inflight` /
+//! `queue_depth` / `active_seqs` the load, and `shards` the per-device
+//! breakdown (one entry per shard, device order; a one-device server
+//! reports a one-element array), so orchestrators can see a single lost
+//! device while the fleet keeps serving.
 //!
 //! Connection semantics: closing (or half-closing) the connection's write
 //! side ABANDONS all of that connection's in-flight requests — the server
@@ -145,8 +151,11 @@ pub fn ok_stats(id: i64, stats: Json) -> String {
     Json::from_pairs(vec![("id", id.into()), ("ok", true.into()), ("stats", stats)]).to_string()
 }
 
-/// Health-probe reply (`op:ping`): build version, the sticky device-tier
-/// degraded flag, and the current load gauges.
+/// Health-probe reply (`op:ping`): build version, the fleet-level sticky
+/// degraded flag (true only when EVERY shard has tripped), the current load
+/// gauges, and the per-shard health breakdown — always emitted, even for a
+/// one-device fleet, so probes never branch on its presence.
+#[allow(clippy::too_many_arguments)]
 pub fn ok_ping(
     id: i64,
     version: &str,
@@ -154,7 +163,19 @@ pub fn ok_ping(
     inflight: usize,
     queue_depth: usize,
     active_seqs: usize,
+    shards: &[super::batcher::ShardHealth],
 ) -> String {
+    let shard_arr: Vec<Json> = shards
+        .iter()
+        .map(|s| {
+            Json::from_pairs(vec![
+                ("device", (s.device as i64).into()),
+                ("degraded", s.degraded.into()),
+                ("inflight", (s.inflight as i64).into()),
+                ("resident_bytes", (s.resident_bytes as i64).into()),
+            ])
+        })
+        .collect();
     Json::from_pairs(vec![
         ("id", id.into()),
         ("ok", true.into()),
@@ -163,6 +184,7 @@ pub fn ok_ping(
         ("inflight", inflight.into()),
         ("queue_depth", queue_depth.into()),
         ("active_seqs", active_seqs.into()),
+        ("shards", shard_arr.into()),
     ])
     .to_string()
 }
@@ -311,7 +333,19 @@ mod tests {
 
     #[test]
     fn ping_response_shape() {
-        let s = ok_ping(8, "0.1.0", true, 2, 3, 4);
+        use crate::server::batcher::ShardHealth;
+        let shards = [
+            ShardHealth {
+                device: 0,
+                degraded: false,
+                inflight: 1,
+                resident_bytes: 4096,
+                residency_hits: 7,
+                spills: 2,
+            },
+            ShardHealth { device: 1, degraded: true, ..Default::default() },
+        ];
+        let s = ok_ping(8, "0.1.0", true, 2, 3, 4, &shards);
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.bool_of("ok"), Some(true));
         assert_eq!(j.str_of("version"), Some("0.1.0"));
@@ -319,5 +353,16 @@ mod tests {
         assert_eq!(j.usize_of("inflight"), Some(2));
         assert_eq!(j.usize_of("queue_depth"), Some(3));
         assert_eq!(j.usize_of("active_seqs"), Some(4));
+        let arr = j.req("shards").as_arr().expect("shards array");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].usize_of("device"), Some(0));
+        assert_eq!(arr[0].bool_of("degraded"), Some(false));
+        assert_eq!(arr[0].usize_of("inflight"), Some(1));
+        assert_eq!(arr[0].usize_of("resident_bytes"), Some(4096));
+        assert_eq!(arr[1].bool_of("degraded"), Some(true));
+        // the shard array survives round-tripping even when empty
+        let empty = ok_ping(9, "0.1.0", false, 0, 0, 0, &[]);
+        let j = Json::parse(&empty).unwrap();
+        assert_eq!(j.req("shards").as_arr().map(|a| a.len()), Some(0));
     }
 }

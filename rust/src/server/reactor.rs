@@ -29,7 +29,7 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::time::Duration;
 
 use super::batcher::{CancelToken, Finished, Overloaded, Scheduler, SeqBackend};
-use super::metrics::{export_faults, Metrics};
+use super::metrics::{export_faults, export_shards, Metrics};
 use super::protocol::{
     err_full, err_response, ok_generate, ok_ping, ok_stats, parse_request, Op, SHUTTING_DOWN,
 };
@@ -176,6 +176,7 @@ impl<B: SeqBackend> Reactor<B> {
                     self.sched.backend().degraded(),
                     crate::runtime::lock_poisoned_total(),
                 );
+                export_shards(&mut j, &self.sched.backend().shard_health());
                 stats_hook(&mut j);
                 let _ = reply.send(ok_stats(req.id, j));
             }
@@ -188,6 +189,7 @@ impl<B: SeqBackend> Reactor<B> {
                     self.sched.inflight(),
                     q,
                     a,
+                    &self.sched.backend().shard_health(),
                 ));
             }
             Op::Shutdown => {
@@ -411,6 +413,70 @@ mod tests {
         assert_eq!(j.usize_of("inflight"), Some(0));
         assert_eq!(j.usize_of("queue_depth"), Some(0));
         assert_eq!(j.usize_of("active_seqs"), Some(0));
+        // shard array is always present; a backend without shard awareness
+        // (the trait default) reports an empty fleet
+        assert_eq!(j.req("shards").as_arr().map(|a| a.len()), Some(0));
+    }
+
+    /// Backend reporting a two-shard fleet with one degraded shard, to pin
+    /// the per-shard health wire format end to end.
+    struct TwoShards;
+
+    impl SeqBackend for TwoShards {
+        type Seq = NoSeq;
+        fn new_seq(&mut self) -> anyhow::Result<NoSeq> {
+            Ok(NoSeq)
+        }
+        fn prefill_chunk(&mut self, _s: &mut NoSeq, _c: &[i32]) -> anyhow::Result<()> {
+            Ok(())
+        }
+        fn decode(&mut self, _s: &mut NoSeq, n: usize) -> anyhow::Result<Decoded> {
+            Ok(Decoded { tokens: vec![17; n], t_first: None })
+        }
+        fn shard_health(&self) -> Vec<crate::server::batcher::ShardHealth> {
+            vec![
+                crate::server::batcher::ShardHealth {
+                    device: 0,
+                    degraded: false,
+                    inflight: 1,
+                    resident_bytes: 2048,
+                    residency_hits: 5,
+                    spills: 0,
+                },
+                crate::server::batcher::ShardHealth {
+                    device: 1,
+                    degraded: true,
+                    ..Default::default()
+                },
+            ]
+        }
+    }
+
+    #[test]
+    fn ping_and_stats_carry_per_shard_health() {
+        let sched = Scheduler::new(TwoShards, 128, 16, 16, 64);
+        let mut r = Reactor::new(sched, 64);
+        let (tx, rx) = mpsc::channel();
+        let ping = send(&tx, r#"{"op":"ping","id":11}"#.into());
+        let stats = send(&tx, r#"{"op":"stats","id":12}"#.into());
+        r.poll(&rx, &no_hook);
+        let j = Json::parse(&ping.recv().unwrap()).unwrap();
+        let shards = j.req("shards").as_arr().expect("ping shards array");
+        assert_eq!(shards.len(), 2);
+        assert_eq!(shards[0].usize_of("device"), Some(0));
+        assert_eq!(shards[0].bool_of("degraded"), Some(false));
+        assert_eq!(shards[0].usize_of("inflight"), Some(1));
+        assert_eq!(shards[0].usize_of("resident_bytes"), Some(2048));
+        assert_eq!(shards[1].bool_of("degraded"), Some(true));
+        // one degraded shard does NOT degrade the fleet flag
+        assert_eq!(j.bool_of("degraded"), Some(false));
+        let s = Json::parse(&stats.recv().unwrap()).unwrap();
+        let s = s.req("stats");
+        let sh = s.req("shards").as_arr().expect("stats shards array");
+        assert_eq!(sh.len(), 2);
+        assert_eq!(sh[1].usize_of("device"), Some(1));
+        assert_eq!(sh[0].usize_of("residency_hits"), Some(5));
+        assert_eq!(sh[0].usize_of("spills"), Some(0));
     }
 
     #[test]

@@ -65,15 +65,15 @@ impl Args {
     }
 
     pub fn usize_or(&self, name: &str, default: usize) -> usize {
-        self.get(name).map(|v| v.parse().expect("bad usize arg")).unwrap_or(default)
+        self.get(name).map(|v| exit_on_bad_value(parse_value(name, v, "integer"))).unwrap_or(default)
     }
 
     pub fn u64_or(&self, name: &str, default: u64) -> u64 {
-        self.get(name).map(|v| v.parse().expect("bad u64 arg")).unwrap_or(default)
+        self.get(name).map(|v| exit_on_bad_value(parse_value(name, v, "integer"))).unwrap_or(default)
     }
 
     pub fn f64_or(&self, name: &str, default: f64) -> f64 {
-        self.get(name).map(|v| v.parse().expect("bad f64 arg")).unwrap_or(default)
+        self.get(name).map(|v| exit_on_bad_value(parse_value(name, v, "number"))).unwrap_or(default)
     }
 
     /// Comma-separated list option.
@@ -86,7 +86,10 @@ impl Args {
 
     pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Vec<usize> {
         match self.get(name) {
-            Some(v) => v.split(',').map(|s| s.trim().parse().expect("bad usize list")).collect(),
+            Some(v) => v
+                .split(',')
+                .map(|s| exit_on_bad_value(parse_value(name, s.trim(), "comma-separated integer")))
+                .collect(),
             None => default.to_vec(),
         }
     }
@@ -94,6 +97,28 @@ impl Args {
     pub fn positional(&self) -> &[String] {
         &self.positional
     }
+}
+
+/// Fallible core of the typed getters: parse `raw` as `T` for flag
+/// `--name`, reporting the flag name and offending value on failure.
+/// Kept separate from the exiting wrapper so it is unit-testable.
+fn parse_value<T: std::str::FromStr>(
+    name: &str,
+    raw: &str,
+    expected: &str,
+) -> std::result::Result<T, String> {
+    raw.parse()
+        .map_err(|_| format!("error: invalid value '{raw}' for --{name} (expected {expected})"))
+}
+
+/// A malformed CLI value is a user error, not a bug: print the diagnostic
+/// from [`parse_value`] and exit with status 2 instead of panicking with a
+/// backtrace.
+fn exit_on_bad_value<T>(r: std::result::Result<T, String>) -> T {
+    r.unwrap_or_else(|msg| {
+        eprintln!("{msg}");
+        std::process::exit(2);
+    })
 }
 
 #[cfg(test)]
@@ -143,5 +168,37 @@ mod tests {
     fn usage_text() {
         let a = mk(&[]).describe("model", "model name", Some("base"));
         assert!(a.usage("prog").contains("--model"));
+    }
+
+    #[test]
+    fn usize_parser_names_flag_and_value() {
+        assert_eq!(parse_value::<usize>("budget", "128", "integer").unwrap(), 128);
+        let err = parse_value::<usize>("budget", "12x", "integer").unwrap_err();
+        assert!(err.contains("--budget"), "missing flag name: {err}");
+        assert!(err.contains("'12x'"), "missing offending value: {err}");
+        assert!(err.contains("integer"), "missing expected type: {err}");
+    }
+
+    #[test]
+    fn u64_parser_names_flag_and_value() {
+        assert_eq!(parse_value::<u64>("seed", "7", "integer").unwrap(), 7);
+        let err = parse_value::<u64>("seed", "-1", "integer").unwrap_err();
+        assert!(err.contains("--seed") && err.contains("'-1'"), "bad diagnostic: {err}");
+    }
+
+    #[test]
+    fn f64_parser_names_flag_and_value() {
+        assert_eq!(parse_value::<f64>("rate", "0.25", "number").unwrap(), 0.25);
+        let err = parse_value::<f64>("rate", "fast", "number").unwrap_err();
+        assert!(err.contains("--rate") && err.contains("'fast'"), "bad diagnostic: {err}");
+    }
+
+    #[test]
+    fn usize_list_parser_names_flag_and_element() {
+        let a = mk(&["--budgets", "32,64"]);
+        assert_eq!(a.usize_list_or("budgets", &[]), vec![32, 64]);
+        let err =
+            parse_value::<usize>("budgets", "sixty-four", "comma-separated integer").unwrap_err();
+        assert!(err.contains("--budgets") && err.contains("'sixty-four'"), "bad diagnostic: {err}");
     }
 }

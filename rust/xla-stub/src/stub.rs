@@ -11,7 +11,8 @@
 
 use std::fmt;
 use std::path::Path;
-use std::sync::Mutex;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
 
 pub type Result<T> = std::result::Result<T, Error>;
 
@@ -83,15 +84,29 @@ native_type!(i32, 4);
 native_type!(i64, 8);
 native_type!(u8, 1);
 
-pub struct PjRtClient;
+/// Stub client over N addressable "devices". The real bindings enumerate
+/// PJRT devices from the platform; the stub fabricates `n` independent
+/// device slots so the multi-shard runtime topology is exercisable offline.
+/// [`PjRtClient::kill_device`] marks one slot lost: every subsequent
+/// operation that targets it (uploads routed there, reads/writes of buffers
+/// that live there) fails with a `DEVICE_LOST` error, which the runtime's
+/// fault taxonomy classifies as retryable and — after the sticky threshold —
+/// degrades only that device's shard.
+pub struct PjRtClient {
+    alive: Arc<Vec<AtomicBool>>,
+}
 
 /// A "device" buffer: host-sourced bytes retained for the buffer's lifetime,
 /// so the residency tier can keep K/V state alive across program calls. The
 /// partial-update surface models the real bindings' aliased update path.
+/// Each buffer remembers the device it was placed on; once that device is
+/// killed every access reports `DEVICE_LOST`.
 pub struct PjRtBuffer {
     data: Mutex<Vec<u8>>,
     dims: Vec<usize>,
     elem_size: usize,
+    device: usize,
+    alive: Arc<Vec<AtomicBool>>,
 }
 
 pub struct PjRtLoadedExecutable;
@@ -109,21 +124,69 @@ pub struct Literal {
 
 impl PjRtClient {
     pub fn cpu() -> Result<PjRtClient> {
-        Ok(PjRtClient)
+        Self::cpu_with_devices(1)
+    }
+
+    /// Stub multi-device enumeration: a client with `n` (≥ 1) addressable
+    /// device slots. Real bindings enumerate platform devices instead and
+    /// expose the same `device_count` / per-upload device routing surface.
+    pub fn cpu_with_devices(n: usize) -> Result<PjRtClient> {
+        let n = n.max(1);
+        Ok(PjRtClient { alive: Arc::new((0..n).map(|_| AtomicBool::new(true)).collect()) })
+    }
+
+    /// Number of addressable devices on this client.
+    pub fn device_count(&self) -> usize {
+        self.alive.len()
+    }
+
+    /// Whether `device` is still serviceable (in range and not killed).
+    pub fn device_alive(&self, device: usize) -> bool {
+        self.alive.get(device).map(|a| a.load(Ordering::SeqCst)).unwrap_or(false)
+    }
+
+    /// Mark one device lost. Chaos/bench hook: every later operation that
+    /// touches this device reports `DEVICE_LOST`, modeling a mid-run device
+    /// failure without tearing down the whole client.
+    pub fn kill_device(&self, device: usize) {
+        if let Some(a) = self.alive.get(device) {
+            a.store(false, Ordering::SeqCst);
+        }
+    }
+
+    fn check_device(&self, device: usize) -> Result<()> {
+        if device >= self.alive.len() {
+            return Err(Error::msg(format!(
+                "device {device} out of range ({} device(s))",
+                self.alive.len()
+            )));
+        }
+        if !self.alive[device].load(Ordering::SeqCst) {
+            return Err(Error::msg(format!("DEVICE_LOST: stub device {device} was killed")));
+        }
+        Ok(())
     }
 
     pub fn buffer_from_host_buffer<T: NativeType>(
         &self,
         data: &[T],
         dims: &[usize],
-        _device: Option<usize>,
+        device: Option<usize>,
     ) -> Result<PjRtBuffer> {
         faultpoint("upload")?;
+        let device = device.unwrap_or(0);
+        self.check_device(device)?;
         let mut bytes = vec![0u8; data.len() * T::SIZE];
         for (x, chunk) in data.iter().zip(bytes.chunks_exact_mut(T::SIZE)) {
             x.write_le(chunk);
         }
-        Ok(PjRtBuffer { data: Mutex::new(bytes), dims: dims.to_vec(), elem_size: T::SIZE })
+        Ok(PjRtBuffer {
+            data: Mutex::new(bytes),
+            dims: dims.to_vec(),
+            elem_size: T::SIZE,
+            device,
+            alive: Arc::clone(&self.alive),
+        })
     }
 
     pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
@@ -175,6 +238,21 @@ impl PjRtBuffer {
         self.data.lock().unwrap_or_else(|p| p.into_inner())
     }
 
+    /// The device slot this buffer lives on.
+    pub fn device(&self) -> usize {
+        self.device
+    }
+
+    fn check_alive(&self) -> Result<()> {
+        if !self.alive.get(self.device).map(|a| a.load(Ordering::SeqCst)).unwrap_or(false) {
+            return Err(Error::msg(format!(
+                "DEVICE_LOST: stub device {} was killed",
+                self.device
+            )));
+        }
+        Ok(())
+    }
+
     /// Bytes this buffer occupies on the (stub) device.
     pub fn on_device_size_bytes(&self) -> usize {
         self.bytes().len()
@@ -199,6 +277,7 @@ impl PjRtBuffer {
         elem_offset: usize,
     ) -> Result<()> {
         faultpoint("download")?;
+        self.check_alive()?;
         if T::SIZE != self.elem_size {
             return Err(Error::msg(format!(
                 "copy_to_host_partial: element size {} != buffer element size {}",
@@ -231,6 +310,7 @@ impl PjRtBuffer {
         elem_offset: usize,
     ) -> Result<()> {
         faultpoint("overwrite")?;
+        self.check_alive()?;
         if T::SIZE != self.elem_size {
             return Err(Error::msg(format!(
                 "overwrite_from_host_partial: element size {} != buffer element size {}",
@@ -258,6 +338,7 @@ impl PjRtBuffer {
     /// host-sourced buffers read back fine.)
     pub fn to_literal_sync(&self) -> Result<Literal> {
         faultpoint("download")?;
+        self.check_alive()?;
         Ok(Literal { data: self.bytes().clone(), elem_size: self.elem_size })
     }
 }
@@ -322,6 +403,39 @@ mod tests {
         // out-of-bounds and type mismatches are rejected
         assert!(buf.overwrite_from_host_partial(&[1.0f32; 4], 6).is_err());
         assert!(buf.copy_to_host_partial(&mut [0u8; 2], 0).is_err());
+    }
+
+    #[test]
+    fn multi_device_enumeration_and_kill() {
+        let client = PjRtClient::cpu_with_devices(3).unwrap();
+        assert_eq!(client.device_count(), 3);
+        let b0 = client.buffer_from_host_buffer(&[1.0f32], &[1], Some(0)).unwrap();
+        let b2 = client.buffer_from_host_buffer(&[2.0f32], &[1], Some(2)).unwrap();
+        assert_eq!(b0.device(), 0);
+        assert_eq!(b2.device(), 2);
+        assert!(client.buffer_from_host_buffer(&[0.0f32], &[1], Some(3)).is_err());
+
+        client.kill_device(2);
+        assert!(!client.device_alive(2));
+        assert!(client.device_alive(0));
+        let err = b2.to_literal_sync().unwrap_err();
+        assert!(format!("{err}").contains("DEVICE_LOST"));
+        let err = b2.overwrite_from_host_partial(&[9.0f32], 0).unwrap_err();
+        assert!(format!("{err}").contains("DEVICE_LOST"));
+        let err = client.buffer_from_host_buffer(&[0.0f32], &[1], Some(2)).unwrap_err();
+        assert!(format!("{err}").contains("DEVICE_LOST"));
+        // the surviving device is unaffected
+        assert_eq!(b0.to_literal_sync().unwrap().to_vec::<f32>().unwrap(), vec![1.0]);
+    }
+
+    #[test]
+    fn single_device_client_defaults_to_device_zero() {
+        let client = PjRtClient::cpu().unwrap();
+        assert_eq!(client.device_count(), 1);
+        let b = client.buffer_from_host_buffer(&[1i32], &[1], None).unwrap();
+        assert_eq!(b.device(), 0);
+        assert!(client.device_alive(0));
+        assert!(!client.device_alive(1));
     }
 
     #[test]
