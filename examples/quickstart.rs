@@ -25,7 +25,13 @@ fn main() -> Result<()> {
     println!("policy: {}", policy.name());
     let mut eng = Engine::new(
         &rt,
-        EngineOpts { model: "base".into(), w: 128, c: 256, memory_budget_bytes: None },
+        EngineOpts {
+            model: "base".into(),
+            w: 128,
+            c: 256,
+            memory_budget_bytes: None,
+            quantize_after_windows: None,
+        },
         policy,
     )?;
 

@@ -28,7 +28,13 @@ fn main() -> anyhow::Result<()> {
         let policy = make_policy(spec, cfg.n_layers)?;
         let mut eng = Engine::new(
             &rt,
-            EngineOpts { model: "base".into(), w: 128, c: 256, memory_budget_bytes: None },
+            EngineOpts {
+                model: "base".into(),
+                w: 128,
+                c: 256,
+                memory_budget_bytes: None,
+                quantize_after_windows: None,
+            },
             policy,
         )?;
         let ctx = Stream::default_eval(3).take_n(256);
@@ -43,7 +49,13 @@ fn main() -> anyhow::Result<()> {
         let policy = make_policy("lacache:budget=128,span=2", cfg.n_layers)?;
         let mut eng = Engine::new(
             &rt,
-            EngineOpts { model: "base".into(), w: 128, c: 256, memory_budget_bytes: None },
+            EngineOpts {
+                model: "base".into(),
+                w: 128,
+                c: 256,
+                memory_budget_bytes: None,
+                quantize_after_windows: None,
+            },
             policy,
         )?;
         let ctx = Stream::default_eval(3).take_n(256);
@@ -59,7 +71,13 @@ fn main() -> anyhow::Result<()> {
         let policy = make_policy("h2o:budget=128", cfg.n_layers)?;
         let mut eng = Engine::new(
             &rt,
-            EngineOpts { model: "base".into(), w: 128, c: 256, memory_budget_bytes: None },
+            EngineOpts {
+                model: "base".into(),
+                w: 128,
+                c: 256,
+                memory_budget_bytes: None,
+                quantize_after_windows: None,
+            },
             policy,
         )?;
         let ctx = Stream::default_eval(3).take_n(256);
@@ -78,7 +96,13 @@ fn main() -> anyhow::Result<()> {
         let policy = make_policy(spec, cfg.n_layers)?;
         let mut eng = Engine::new(
             &rt,
-            EngineOpts { model: "base".into(), w, c: 256, memory_budget_bytes: None },
+            EngineOpts {
+                model: "base".into(),
+                w,
+                c: 256,
+                memory_budget_bytes: None,
+                quantize_after_windows: None,
+            },
             policy,
         )?;
         let mut stream = Stream::default_eval(5);

@@ -19,12 +19,16 @@
 //! aggregate resident bytes must exceed any single shard's cap, prefix hits
 //! must equal the single-device run, and killing one stub device must
 //! degrade only its own shard while later sequences spill over with a cold
-//! prefill; writes `BENCH_shard.json`) — see PERF.md.
+//! prefill; writes `BENCH_shard.json`), and the tiered-compression capacity
+//! scenario (same `kv_pool_bytes` budget, `--kv-quant cold-q8` vs `off`:
+//! cold-page Q8 demotion must admit >= 3x the concurrent sequences with
+//! prefix-hit parity and a bounded worst-case dequantization delta; writes
+//! `BENCH_quant.json`) — see PERF.md.
 //!
 //! Set `LACACHE_BENCH_SMOKE=1` (exactly) for the short CI mode; `BENCH_JSON`
-//! / `BENCH_SERVING_JSON` / `BENCH_CHAOS_JSON` / `BENCH_SHARD_JSON` override
-//! the JSON output paths, `LACACHE_FAULT_SEED` / `LACACHE_FAULT_RATE` the
-//! chaos plan.
+//! / `BENCH_SERVING_JSON` / `BENCH_CHAOS_JSON` / `BENCH_SHARD_JSON` /
+//! `BENCH_QUANT_JSON` override the JSON output paths, `LACACHE_FAULT_SEED` /
+//! `LACACHE_FAULT_RATE` the chaos plan.
 
 use std::collections::BTreeMap;
 use std::sync::mpsc;
@@ -32,9 +36,9 @@ use std::time::Duration;
 
 use lacache::cache::{make_policy, CachePolicy};
 use lacache::runtime::{
-    admission_ok, place, seq_footprint_bytes, Acquired, CallError, CallExecutor, Completion,
-    DeviceTier, KvArena, KvCache, PlacementStats, PrefixCache, PrefixSnapshot, ScratchPool,
-    ShardLoad,
+    admission_ok, place, seq_footprint_bytes, seq_footprint_bytes_mixed, Acquired, CallError,
+    CallExecutor, Completion, DeviceTier, KvArena, KvCache, PlacementStats, PrefixCache,
+    PrefixSnapshot, ScratchPool, ShardLoad, PAGE_SLOTS,
 };
 use lacache::server::batcher::{
     CallDone, CallOut, CancelToken, Decoded, FaultStats, Finished, Scheduler, SeqBackend,
@@ -103,6 +107,7 @@ fn main() -> anyhow::Result<()> {
     shared_prefix_scenario(smoke)?;
     chaos_scenario(smoke)?;
     shard_scenario(smoke)?;
+    quant_capacity_scenario(smoke)?;
     Ok(())
 }
 
@@ -1725,6 +1730,397 @@ fn shard_scenario(smoke: bool) -> anyhow::Result<()> {
         ("shard1_degraded", s.backend().tiers[1].degraded().into()),
     ]);
     let path = std::env::var("BENCH_SHARD_JSON").unwrap_or_else(|_| "BENCH_shard.json".into());
+    std::fs::write(&path, out.to_string() + "\n")?;
+    println!("wrote {path}");
+    Ok(())
+}
+
+/// Tiered-compression sequence backend: the [`ArenaBackend`] storage path
+/// plus the engine's `--kv-quant cold-q8` cadence — after every append the
+/// ladder policy compacts, a simulated transfer sync clears the dirty
+/// ranges (this backend is device-free, so it stands in for the gather the
+/// device path performs), and [`KvCache::demote_cold`] quantizes pages
+/// older than the demotion horizon. Full-window prefill boundaries publish
+/// frozen snapshots (Q8 under `cold-q8`) and admission adopts the deepest
+/// match, so one backend drives both the capacity and the prefix-parity
+/// measurements of [`quant_capacity_scenario`].
+struct QuantBenchBackend {
+    arena: KvArena,
+    prefix: PrefixCache,
+    policy: Box<dyn CachePolicy>,
+    l: usize,
+    h: usize,
+    c: usize,
+    dh: usize,
+    window: usize,
+    /// `Some(n)` = `--kv-quant cold-q8 --quantize-after-windows n`;
+    /// `None` = `--kv-quant off`.
+    after: Option<usize>,
+    est_seq_bytes: usize,
+    budget_bytes: usize,
+    /// Tokens actually prefilled (adopted spans never count).
+    prefill_tokens: u64,
+}
+
+struct QuantSeq {
+    kv: KvCache,
+    ingested: Vec<i32>,
+    next_pos: u64,
+}
+
+impl QuantBenchBackend {
+    fn fill_row(&self, row: &mut [f32], n: usize, i: usize, tok: i32, pos: u64) {
+        let v = tok as f32 * 1e-3 + pos as f32 * 1e-6;
+        for hh in 0..self.h {
+            for d in 0..self.dh {
+                row[(hh * n + i) * self.dh + d] = v;
+            }
+        }
+    }
+
+    /// The engine's per-round cadence after an append: compact, then let
+    /// the transfer layer sync the dirty ranges, then demote everything
+    /// older than `quantize_after_windows` full windows.
+    fn settle(&self, seq: &mut QuantSeq) -> anyhow::Result<()> {
+        self.policy.evict(&mut seq.kv)?;
+        if let Some(after) = self.after {
+            seq.kv.mark_synced();
+            seq.kv.demote_cold(seq.next_pos.saturating_sub((after * self.window) as u64));
+        }
+        Ok(())
+    }
+}
+
+impl SeqBackend for QuantBenchBackend {
+    type Seq = QuantSeq;
+
+    fn new_seq(&mut self) -> anyhow::Result<QuantSeq> {
+        let mut kv = KvCache::with_arena(self.arena.clone(), self.l, self.h, self.c, self.dh);
+        kv.set_quant(self.after.is_some());
+        Ok(QuantSeq { kv, ingested: Vec::new(), next_pos: 0 })
+    }
+
+    fn adopt_prefix(&mut self, seq: &mut QuantSeq, prompt: &[i32], allow: bool) -> usize {
+        if !allow {
+            return 0;
+        }
+        let Some((matched, snap)) = self.prefix.lookup(prompt) else {
+            return 0;
+        };
+        if snap.apply(&mut seq.kv).is_err() {
+            return 0;
+        }
+        seq.ingested.extend_from_slice(&prompt[..matched]);
+        seq.next_pos = matched as u64;
+        matched
+    }
+
+    fn prefill_chunk(&mut self, seq: &mut QuantSeq, chunk: &[i32]) -> anyhow::Result<()> {
+        let n = chunk.len();
+        let mut row = vec![0.0f32; self.h * n * self.dh];
+        for (i, &tok) in chunk.iter().enumerate() {
+            self.fill_row(&mut row, n, i, tok, seq.next_pos + i as u64);
+        }
+        for layer in 0..self.l {
+            seq.kv.append_layer(layer, &row, &row, n, n, seq.next_pos)?;
+        }
+        seq.next_pos += n as u64;
+        self.prefill_tokens += n as u64;
+        seq.ingested.extend_from_slice(chunk);
+        self.settle(seq)?;
+        let w = self.window;
+        if !seq.ingested.is_empty() && seq.ingested.len() % w == 0 {
+            let kv = &mut seq.kv;
+            self.prefix.insert_with(&seq.ingested, w, || PrefixSnapshot::freeze(kv));
+        }
+        Ok(())
+    }
+
+    fn decode(&mut self, seq: &mut QuantSeq, n: usize) -> anyhow::Result<Decoded> {
+        let mut row = vec![0.0f32; self.h * self.dh];
+        for _ in 0..n {
+            let tok = 1000 + seq.next_pos as i32;
+            self.fill_row(&mut row, 1, 0, tok, seq.next_pos);
+            for layer in 0..self.l {
+                seq.kv.append_layer(layer, &row, &row, 1, 1, seq.next_pos)?;
+            }
+            seq.next_pos += 1;
+        }
+        self.settle(seq)?;
+        Ok(Decoded { tokens: vec![7; n], t_first: None })
+    }
+
+    fn can_admit(&self, active: usize) -> bool {
+        admission_ok(
+            &self.arena.stats(),
+            active,
+            self.est_seq_bytes,
+            self.budget_bytes,
+            0,
+            self.prefix.resident_bytes(),
+        )
+    }
+}
+
+/// One capacity run of [`quant_capacity_scenario`]'s fixed workload at a
+/// fixed byte budget and precision mode.
+struct QuantRunOut {
+    peak_active: usize,
+    finished: usize,
+    high_water: usize,
+    peak_quant_pages: usize,
+    peak_quant_bytes: usize,
+    compaction_ratio: f64,
+}
+
+fn quant_capacity_run(
+    after: Option<usize>,
+    est_seq_bytes: usize,
+    budget_bytes: usize,
+) -> anyhow::Result<QuantRunOut> {
+    let (l, h, c, dh) = (2usize, 2usize, 1024usize, 16usize);
+    let (window, quantum) = (16usize, 8usize);
+    let arena = KvArena::new();
+    arena.set_budget(Some(budget_bytes));
+    let backend = QuantBenchBackend {
+        arena: arena.clone(),
+        // capacity 0 disables the tree: concurrency is measured without
+        // cross-request sharing (the parity runs cover that axis)
+        prefix: PrefixCache::new("bench-quant".into(), 0),
+        policy: make_policy("lacache:budget=1008,span=2", l)?,
+        l,
+        h,
+        c,
+        dh,
+        window,
+        after,
+        est_seq_bytes,
+        budget_bytes,
+        prefill_tokens: 0,
+    };
+    let n_requests = 48usize;
+    let prompt: Vec<i32> = (0..992).map(|t| (t % 251) as i32).collect();
+    let mut s = Scheduler::new(backend, window, quantum, usize::MAX, n_requests);
+    for _ in 0..n_requests {
+        s.submit(prompt.clone(), 16, CancelToken::new())?;
+    }
+    let mut out = QuantRunOut {
+        peak_active: 0,
+        finished: 0,
+        high_water: 0,
+        peak_quant_pages: 0,
+        peak_quant_bytes: 0,
+        compaction_ratio: 0.0,
+    };
+    let mut rounds = 0usize;
+    while s.has_work() && rounds < 200_000 {
+        out.finished += s.step().len();
+        out.peak_active = out.peak_active.max(s.depth().1);
+        let st = s.backend().arena.stats();
+        out.peak_quant_pages = out.peak_quant_pages.max(st.quant_pages);
+        out.peak_quant_bytes = out.peak_quant_bytes.max(st.quant_bytes);
+        out.compaction_ratio = out.compaction_ratio.max(st.quant_compaction_ratio);
+        rounds += 1;
+    }
+    out.high_water = s.backend().arena.stats().high_water;
+    Ok(out)
+}
+
+/// One prefix-parity run: a cold leader prefills an 8-window shared prompt
+/// (publishing a snapshot at every boundary), then 7 followers adopt it at
+/// admission. Returns (prefix hits, tokens reused, prefix resident bytes,
+/// tokens actually prefilled).
+fn quant_prefix_run(after: Option<usize>) -> anyhow::Result<(u64, u64, usize, u64)> {
+    let (l, h, c, dh) = (2usize, 2usize, 512usize, 16usize);
+    let (window, quantum) = (16usize, 8usize);
+    let arena = KvArena::new();
+    let backend = QuantBenchBackend {
+        arena: arena.clone(),
+        prefix: PrefixCache::new("bench-quant".into(), 64 << 20),
+        policy: make_policy("lacache:budget=256,span=2", l)?,
+        l,
+        h,
+        c,
+        dh,
+        window,
+        after,
+        est_seq_bytes: seq_footprint_bytes(l, h * dh, c),
+        budget_bytes: usize::MAX,
+        prefill_tokens: 0,
+    };
+    let prompt: Vec<i32> = (0..128).map(|t| (t % 251) as i32).collect();
+    let mut s = Scheduler::new(backend, window, quantum, 8, 16);
+    s.submit(prompt.clone(), 8, CancelToken::new())?;
+    while s.has_work() {
+        let _ = s.step();
+    }
+    for _ in 0..7 {
+        s.submit(prompt.clone(), 8, CancelToken::new())?;
+    }
+    while s.has_work() {
+        let _ = s.step();
+    }
+    let st = s.backend().prefix.stats();
+    let resident = s.backend().prefix.resident_bytes();
+    Ok((st.hits, st.tokens_reused, resident, s.backend().prefill_tokens))
+}
+
+/// Drive one exact (f32) and one cold-q8 twin through an identical
+/// append/compact/demote trace and measure the worst per-element divergence
+/// of the gathered dense images — the bench's ppl/logit-delta proxy (same
+/// occupancy, bounded value error). Returns (absmax of the exact image, max
+/// abs delta, quantized pages in the cold-q8 twin).
+fn quant_tolerance_probe() -> anyhow::Result<(f64, f64, usize)> {
+    let (l, h, c, dh) = (2usize, 2usize, 128usize, 16usize);
+    let w = 16usize;
+    let policy = make_policy("lacache:budget=96,span=2", l)?;
+    let mut exact = KvCache::with_arena(KvArena::new(), l, h, c, dh);
+    let mut quant = KvCache::with_arena(KvArena::new(), l, h, c, dh);
+    quant.set_quant(true);
+    let mut pos = 0u64;
+    for _ in 0..20 {
+        let mut row = vec![0.0f32; h * w * dh];
+        for i in 0..w {
+            let val = ((pos + i as u64) * 7 % 251) as f32 * 1e-3;
+            for hh in 0..h {
+                for d in 0..dh {
+                    row[(hh * w + i) * dh + d] = val;
+                }
+            }
+        }
+        for layer in 0..l {
+            exact.append_layer(layer, &row, &row, w, w, pos)?;
+            quant.append_layer(layer, &row, &row, w, w, pos)?;
+        }
+        pos += w as u64;
+        policy.evict(&mut exact)?;
+        policy.evict(&mut quant)?;
+        quant.mark_synced();
+        quant.demote_cold(pos.saturating_sub(w as u64));
+    }
+    assert_eq!(exact.lens_i32(), quant.lens_i32(), "demotion must not change occupancy");
+    let n_q8: usize = (0..l).map(|layer| quant.n_quant_pages(layer)).sum();
+    assert_eq!((0..l).map(|layer| exact.n_quant_pages(layer)).sum::<usize>(), 0);
+    let (ek, ev) = exact.gather_dense();
+    let (qk, qv) = quant.gather_dense();
+    let mut absmax = 0f64;
+    let mut delta = 0f64;
+    for (e, q) in ek.iter().zip(&qk).chain(ev.iter().zip(&qv)) {
+        absmax = absmax.max((*e as f64).abs());
+        delta = delta.max((*e as f64 - *q as f64).abs());
+    }
+    Ok((absmax, delta, n_q8))
+}
+
+/// Tiered-compression capacity scenario (`--kv-quant cold-q8` vs `off` at
+/// the SAME `kv_pool_bytes`): cold ladder pages demote to per-head
+/// symmetric int8, so the same pool admits several times the concurrent
+/// sequences. Asserts the subsystem's serving guarantees:
+///
+/// 1. cold-q8 admits >= 3x the concurrent sequences of the fp32 run under
+///    one byte budget (both runs drain fully and stay inside the budget,
+///    and `--kv-quant off` never quantizes a page);
+/// 2. prefix-hit parity: the shared-prefix workload produces identical
+///    hit/reuse counts in both modes, with the Q8 snapshots holding the
+///    same prefixes in <= 1/3 the pool bytes;
+/// 3. a bounded dequantization delta: an exact/cold-q8 twin pair driven
+///    through one append/compact/demote trace keeps identical occupancy
+///    and a worst-case per-element error under the symmetric-absmax bound.
+///
+/// Emits machine-readable `BENCH_quant.json` (path override:
+/// `BENCH_QUANT_JSON`) for the CI perf trajectory.
+fn quant_capacity_scenario(smoke: bool) -> anyhow::Result<()> {
+    let (l, h, c, dh) = (2usize, 2usize, 1024usize, 16usize);
+    let (window, after) = (16usize, 1usize);
+    let policy = make_policy("lacache:budget=1008,span=2", l)?;
+    let slots = policy.budget().saturating_add(window).min(c);
+    let est_f32 = seq_footprint_bytes(l, h * dh, slots);
+    // the serving projection: sinks + hot tail + demotion lag stay f32
+    let fp32_slots = ((after + 2) * window + 2 * PAGE_SLOTS).min(slots);
+    let est_q8 = seq_footprint_bytes_mixed(l, h * dh, h, slots, fp32_slots);
+    let budget_bytes = 8 * est_f32;
+
+    let off = quant_capacity_run(None, est_f32, budget_bytes)?;
+    let q8 = quant_capacity_run(Some(after), est_q8, budget_bytes)?;
+    assert_eq!(off.finished, 48, "off run did not drain");
+    assert_eq!(q8.finished, 48, "cold-q8 run did not drain");
+    assert!(off.high_water <= budget_bytes, "off run exceeded the pool budget");
+    assert!(q8.high_water <= budget_bytes, "cold-q8 run exceeded the pool budget");
+    assert_eq!(off.peak_quant_pages, 0, "--kv-quant off must never quantize a page");
+    assert!(q8.peak_quant_pages > 0, "cold-q8 run never demoted a page");
+    let capacity_ratio = q8.peak_active as f64 / off.peak_active.max(1) as f64;
+    assert!(
+        capacity_ratio >= 3.0,
+        "cold-q8 must admit >=3x the concurrent sequences of fp32 at the same budget \
+         (got {} vs {} = {capacity_ratio:.2}x)",
+        q8.peak_active,
+        off.peak_active
+    );
+    assert!(
+        q8.compaction_ratio >= 3.0,
+        "Q8 pages must replace >=3x their own bytes of f32 state, got {:.2}x",
+        q8.compaction_ratio
+    );
+
+    let (hits_off, reused_off, prefix_bytes_off, prefilled_off) = quant_prefix_run(None)?;
+    let (hits_q8, reused_q8, prefix_bytes_q8, prefilled_q8) = quant_prefix_run(Some(after))?;
+    assert_eq!(hits_off, 7, "every follower must hit the shared prefix");
+    assert_eq!(hits_q8, hits_off, "prefix-hit parity with --kv-quant off");
+    assert_eq!(reused_q8, reused_off, "prefix tokens-reused parity with --kv-quant off");
+    assert_eq!(prefilled_off, 128, "the shared span must prefill exactly once");
+    assert_eq!(prefilled_q8, prefilled_off, "prefill-once parity with --kv-quant off");
+    assert!(
+        3 * prefix_bytes_q8 <= prefix_bytes_off,
+        "Q8 snapshots must hold the same prefixes in <=1/3 the pool bytes \
+         ({prefix_bytes_q8} B vs f32 {prefix_bytes_off} B)"
+    );
+
+    let (absmax, delta, n_q8_pages) = quant_tolerance_probe()?;
+    let bound = 0.05 * absmax + 1e-6;
+    assert!(n_q8_pages > 0, "tolerance probe must actually quantize");
+    assert!(delta <= bound, "dequantization error {delta:.6} exceeds tolerance bound {bound:.6}");
+
+    println!(
+        "\nquant-capacity: pool {:.1} MiB | off peak {} concurrent | cold-q8 peak {} \
+         ({capacity_ratio:.2}x, floor 3.0x) | peak {} quant pages replacing {:.2}x their bytes | \
+         prefix hits {hits_q8} (off run {hits_off}), snapshots {prefix_bytes_q8} B vs f32 \
+         {prefix_bytes_off} B | kv delta {delta:.2e} <= bound {bound:.2e}",
+        budget_bytes as f64 / (1 << 20) as f64,
+        off.peak_active,
+        q8.peak_active,
+        q8.peak_quant_pages,
+        q8.compaction_ratio,
+    );
+
+    let out = Json::from_pairs(vec![
+        ("bench", "quant_capacity".into()),
+        ("smoke", smoke.into()),
+        ("shape_lhcd", vec![l, h, c, dh].into()),
+        ("window", window.into()),
+        ("quantize_after_windows", after.into()),
+        ("kv_pool_bytes", budget_bytes.into()),
+        ("est_seq_bytes_f32", est_f32.into()),
+        ("est_seq_bytes_q8", est_q8.into()),
+        ("peak_active_off", off.peak_active.into()),
+        ("peak_active_q8", q8.peak_active.into()),
+        ("capacity_ratio", capacity_ratio.into()),
+        ("high_water_off", off.high_water.into()),
+        ("high_water_q8", q8.high_water.into()),
+        ("peak_quant_pages", q8.peak_quant_pages.into()),
+        ("peak_quant_bytes", q8.peak_quant_bytes.into()),
+        ("quant_compaction_ratio", q8.compaction_ratio.into()),
+        ("prefix_hits_off", (hits_off as i64).into()),
+        ("prefix_hits_q8", (hits_q8 as i64).into()),
+        ("prefix_tokens_reused_off", (reused_off as i64).into()),
+        ("prefix_tokens_reused_q8", (reused_q8 as i64).into()),
+        ("prefix_resident_bytes_off", prefix_bytes_off.into()),
+        ("prefix_resident_bytes_q8", prefix_bytes_q8.into()),
+        ("kv_absmax", absmax.into()),
+        ("kv_delta_max_abs", delta.into()),
+        ("kv_delta_bound", bound.into()),
+        ("tolerance_ok", true.into()),
+    ]);
+    let path = std::env::var("BENCH_QUANT_JSON").unwrap_or_else(|_| "BENCH_quant.json".into());
     std::fs::write(&path, out.to_string() + "\n")?;
     println!("wrote {path}");
     Ok(())

@@ -8,6 +8,35 @@ use anyhow::{Context, Result};
 use crate::util::args::Args;
 use crate::util::json::Json;
 
+/// KV storage precision mode (`--kv-quant`).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum KvQuantMode {
+    /// Every page stays f32 — byte-identical to the pre-quantization store
+    /// (the exact-mode escape hatch for the tolerance tests).
+    Off,
+    /// Cold ladder pages demote to per-head symmetric int8 (~4x KV capacity
+    /// per byte at a bounded dequantization error). The default.
+    #[default]
+    ColdQ8,
+}
+
+impl KvQuantMode {
+    pub fn parse(s: &str) -> Result<Self> {
+        match s {
+            "off" => Ok(Self::Off),
+            "cold-q8" => Ok(Self::ColdQ8),
+            other => anyhow::bail!("unknown --kv-quant mode {other:?} (expected off|cold-q8)"),
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Self::Off => "off",
+            Self::ColdQ8 => "cold-q8",
+        }
+    }
+}
+
 /// Serving configuration (`lacache-serve --config serve.json`).
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -70,6 +99,15 @@ pub struct ServeConfig {
     /// device slots; under `real-pjrt` the client enumerates platform
     /// devices and this is clamped to what exists.
     pub devices: usize,
+    /// KV storage precision: `off` keeps every page f32; `cold-q8` (the
+    /// default) demotes cold ladder pages to per-head symmetric int8, so the
+    /// same `kv_pool_bytes` admits several times more concurrent sequences
+    /// and `prefix_pool_bytes` holds several times more frozen prefixes.
+    pub kv_quant: KvQuantMode,
+    /// Demotion distance for `cold-q8`: a page quantizes once every one of
+    /// its tokens is at least this many full ladder windows behind the
+    /// stream head (clamped to >= 1 — the hot window never demotes).
+    pub quantize_after_windows: usize,
 }
 
 impl Default for ServeConfig {
@@ -92,6 +130,8 @@ impl Default for ServeConfig {
             call_retries: 4,
             retry_backoff_ms: 5,
             devices: 1,
+            kv_quant: KvQuantMode::ColdQ8,
+            quantize_after_windows: 2,
         }
     }
 }
@@ -119,6 +159,14 @@ impl ServeConfig {
             call_retries: j.usize_of("call_retries").unwrap_or(d.call_retries),
             retry_backoff_ms: j.usize_of("retry_backoff_ms").unwrap_or(d.retry_backoff_ms),
             devices: j.usize_of("devices").unwrap_or(d.devices).max(1),
+            kv_quant: match j.str_of("kv_quant") {
+                Some(s) => KvQuantMode::parse(s)?,
+                None => d.kv_quant,
+            },
+            quantize_after_windows: j
+                .usize_of("quantize_after_windows")
+                .unwrap_or(d.quantize_after_windows)
+                .max(1),
         })
     }
 
@@ -155,6 +203,11 @@ impl ServeConfig {
         cfg.call_retries = args.usize_or("call-retries", cfg.call_retries);
         cfg.retry_backoff_ms = args.usize_or("retry-backoff-ms", cfg.retry_backoff_ms);
         cfg.devices = args.usize_or("devices", cfg.devices).max(1);
+        if let Some(q) = args.get("kv-quant") {
+            cfg.kv_quant = KvQuantMode::parse(q)?;
+        }
+        cfg.quantize_after_windows =
+            args.usize_or("quantize-after-windows", cfg.quantize_after_windows).max(1);
         Ok(cfg)
     }
 
@@ -177,6 +230,8 @@ impl ServeConfig {
             ("call_retries", self.call_retries.into()),
             ("retry_backoff_ms", self.retry_backoff_ms.into()),
             ("devices", self.devices.into()),
+            ("kv_quant", self.kv_quant.as_str().into()),
+            ("quantize_after_windows", self.quantize_after_windows.into()),
         ])
     }
 }
@@ -242,6 +297,32 @@ mod tests {
         assert_eq!(back.call_retries, 4);
         assert_eq!(back.retry_backoff_ms, 5);
         assert_eq!(back.devices, 1, "sharding defaults to a single device");
+        assert_eq!(back.kv_quant, KvQuantMode::ColdQ8, "tiered compression ships on by default");
+        assert_eq!(back.quantize_after_windows, 2);
+    }
+
+    #[test]
+    fn serve_config_kv_quant_roundtrip_and_clamp() {
+        let cfg = ServeConfig {
+            kv_quant: KvQuantMode::Off,
+            quantize_after_windows: 5,
+            ..Default::default()
+        };
+        let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.kv_quant, KvQuantMode::Off, "exact mode must round-trip");
+        assert_eq!(back.quantize_after_windows, 5);
+        // 0 windows would demote the hot window itself: clamped to 1 from
+        // both JSON and CLI
+        let zero = ServeConfig { quantize_after_windows: 0, ..Default::default() };
+        assert_eq!(ServeConfig::from_json(&zero.to_json()).unwrap().quantize_after_windows, 1);
+        let args = Args::parse(vec!["--quantize-after-windows".into(), "0".into()]);
+        assert_eq!(ServeConfig::from_args(&args).unwrap().quantize_after_windows, 1);
+        // CLI mode override + bad values rejected with a parse error
+        let args = Args::parse(vec!["--kv-quant".into(), "off".into()]);
+        assert_eq!(ServeConfig::from_args(&args).unwrap().kv_quant, KvQuantMode::Off);
+        let args = Args::parse(vec!["--kv-quant".into(), "q4".into()]);
+        let err = ServeConfig::from_args(&args).unwrap_err();
+        assert!(format!("{err}").contains("kv-quant"), "{err}");
     }
 
     #[test]
@@ -284,6 +365,10 @@ mod tests {
                 "7",
                 "--retry-backoff-ms",
                 "20",
+                "--kv-quant",
+                "off",
+                "--quantize-after-windows",
+                "3",
             ]
             .iter()
             .map(|s| s.to_string())
@@ -302,6 +387,8 @@ mod tests {
         assert_eq!(cfg.max_inflight_calls, 3);
         assert_eq!(cfg.call_retries, 7);
         assert_eq!(cfg.retry_backoff_ms, 20);
+        assert_eq!(cfg.kv_quant, KvQuantMode::Off);
+        assert_eq!(cfg.quantize_after_windows, 3);
     }
 
     #[test]

@@ -22,6 +22,12 @@ pub struct EngineOpts {
     pub c: usize,
     /// Simulated device-memory budget for resident KV bytes.
     pub memory_budget_bytes: Option<usize>,
+    /// Cold-page Q8 demotion distance (`--kv-quant cold-q8`): pages whose
+    /// every token is at least this many full ladder windows behind the
+    /// stream head quantize to int8 after each eviction pass. `None` is
+    /// `--kv-quant off` — the store stays byte-identical to pre-quantization
+    /// behavior.
+    pub quantize_after_windows: Option<usize>,
 }
 
 pub struct Engine<'rt> {
@@ -54,7 +60,8 @@ impl<'rt> Engine<'rt> {
                 opts.c
             );
         }
-        let cache = KvCache::new(cfg.n_layers, cfg.n_heads, opts.c, cfg.head_dim);
+        let mut cache = KvCache::new(cfg.n_layers, cfg.n_heads, opts.c, cfg.head_dim);
+        cache.set_quant(opts.quantize_after_windows.is_some());
         Ok(Self {
             rt,
             opts,
@@ -76,6 +83,7 @@ impl<'rt> Engine<'rt> {
         // leave stale staging bytes until the next sweep point)
         self.rt.release_cache_state(self.cache.id());
         self.cache = KvCache::new(l, h, c, dh);
+        self.cache.set_quant(self.opts.quantize_after_windows.is_some());
         self.n_tokens = 0;
         self.last_token = crate::data::corpus::BOS;
         self.n_evicted = 0;
@@ -148,6 +156,18 @@ impl<'rt> Engine<'rt> {
         Ok(())
     }
 
+    /// Cold-page demotion hook (`--kv-quant cold-q8`): after each eviction
+    /// pass, quantize every page all of whose tokens are at least
+    /// `quantize_after_windows` full ladder windows behind the stream head.
+    /// Pages touched this window are inside the open dirty ranges and are
+    /// skipped until the next sync point, so demotion trails the hot tail.
+    fn demote_cold(&mut self) {
+        if let Some(after) = self.opts.quantize_after_windows {
+            let cutoff = self.n_tokens.saturating_sub((after * self.opts.w) as u64);
+            self.cache.demote_cold(cutoff);
+        }
+    }
+
     /// Teacher-forced scoring of a token stream continuation: returns the
     /// per-token logprobs of `targets[i] = stream[i+1]` for the provided
     /// `tokens`. Applies the eviction policy every window (the iterative
@@ -205,6 +225,7 @@ impl<'rt> Engine<'rt> {
             self.n_tokens += n_valid as u64;
             self.last_token = *chunk_t.last().unwrap();
             self.evict()?;
+            self.demote_cold();
         }
         Ok(out)
     }
@@ -287,6 +308,7 @@ impl<'rt> Engine<'rt> {
             self.n_tokens += take as u64;
             remaining -= take;
             self.evict()?;
+            self.demote_cold();
         }
         Ok((out, t_first))
     }
@@ -307,6 +329,7 @@ impl<'rt> Engine<'rt> {
         self.last_token = go.tokens[0];
         self.n_tokens += 1;
         self.evict()?;
+        self.demote_cold();
         Ok(go.last_logits)
     }
 

@@ -30,7 +30,8 @@ pub fn decode_ppl(
 ) -> Result<Vec<PplPoint>> {
     let cfg = rt.model(model)?.cfg.clone();
     let policy = make_policy(policy_spec, cfg.n_layers)?;
-    let opts = EngineOpts { model: model.into(), w, c, memory_budget_bytes };
+    let opts =
+        EngineOpts { model: model.into(), w, c, memory_budget_bytes, quantize_after_windows: None };
     let mut eng = Engine::new(rt, opts, policy)?;
 
     let max_len = *lengths.iter().max().unwrap();
@@ -98,7 +99,8 @@ pub fn stream_ppl_curve(
 ) -> Result<Vec<(usize, f64)>> {
     let cfg = rt.model(model)?.cfg.clone();
     let policy = make_policy(policy_spec, cfg.n_layers)?;
-    let opts = EngineOpts { model: model.into(), w, c, memory_budget_bytes };
+    let opts =
+        EngineOpts { model: model.into(), w, c, memory_budget_bytes, quantize_after_windows: None };
     let mut eng = Engine::new(rt, opts, policy)?;
 
     let mut stream = Stream::new(seed, 1024, 4096, 8); // book-like long docs

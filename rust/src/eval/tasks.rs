@@ -31,7 +31,13 @@ pub fn run_task(
 ) -> Result<TaskResult> {
     let cfg = rt.model(model)?.cfg.clone();
     let policy = make_policy(policy_spec, cfg.n_layers)?;
-    let opts = EngineOpts { model: model.into(), w, c, memory_budget_bytes: None };
+    let opts = EngineOpts {
+        model: model.into(),
+        w,
+        c,
+        memory_budget_bytes: None,
+        quantize_after_windows: None,
+    };
     let mut eng = Engine::new(rt, opts, policy)?;
     let t0 = Instant::now();
     eng.prefill(&task.prompt)?;

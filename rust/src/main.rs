@@ -35,7 +35,9 @@ fn main() -> Result<()> {
         .describe("devices", "device shards to partition the runtime across", Some("1"))
         .describe("max-inflight-calls", "device calls in flight at once, per shard (1 = sync)", Some("1"))
         .describe("call-retries", "retry budget per failed device call", Some("4"))
-        .describe("retry-backoff-ms", "base retry backoff, doubles per attempt", Some("5"));
+        .describe("retry-backoff-ms", "base retry backoff, doubles per attempt", Some("5"))
+        .describe("kv-quant", "KV precision: off | cold-q8 (int8 cold pages)", Some("cold-q8"))
+        .describe("quantize-after-windows", "ladder windows a page stays f32 before demotion", Some("2"));
     if args.flag("help") {
         print!("{}", args.usage("lacache-serve"));
         return Ok(());

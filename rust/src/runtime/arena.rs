@@ -8,11 +8,19 @@
 //! KV management idea from vLLM-style serving stacks, applied under the
 //! paper's compaction policies.
 //!
-//! The pool is keyed by row width (`H * Dh`) so models of different shapes
-//! can share one process-wide arena. An optional byte budget turns the
-//! arena into the serving-path admission signal: allocations that would
-//! exceed it fail with [`ARENA_OOM_MARKER`], and the scheduler consults
-//! [`KvArena::stats`] before admitting new sequences.
+//! Pages come in two precisions (see [`PageData`]): full `f32` for hot,
+//! still-mutating slots, and **Q8** — symmetric-absmax int8 with per-head,
+//! per-page f32 scales — for cold read-mostly slots (~4x capacity per
+//! byte). The head-major page layout keeps each head's slots contiguous, so
+//! one scale covers one contiguous run and dequantize-on-gather streams
+//! straight through it. The pool free-list is keyed by
+//! `(row_width, precision)` so mixed-precision pooling never double-counts
+//! reclaimed bytes.
+//!
+//! An optional byte budget turns the arena into the serving-path admission
+//! signal: allocations that would exceed it fail with [`ARENA_OOM_MARKER`],
+//! and the scheduler consults [`KvArena::stats`] before admitting new
+//! sequences.
 //!
 //! Pages can also be **frozen** into refcounted [`SharedPage`]s (the
 //! cross-request prefix cache pins them, and every cache that adopts a
@@ -34,6 +42,19 @@ pub const PAGE_SLOTS: usize = 16;
 /// allocation would push the pool past its byte budget.
 pub const ARENA_OOM_MARKER: &str = "kv-arena-OOM";
 
+/// Storage precision of one arena page — the pool free-list key alongside
+/// row width.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub enum Precision {
+    /// Full precision, 4 bytes/element. All writes happen at f32.
+    #[default]
+    F32,
+    /// Symmetric-absmax int8 with per-head, per-page f32 scales
+    /// (1 byte/element + `2 * H * 4` scale bytes). Read-only: the cache
+    /// re-materializes f32 before any in-place write.
+    Q8,
+}
+
 /// One page: `PAGE_SLOTS` KV rows for one layer, stored **head-major**
 /// `[H, PAGE_SLOTS, Dh]` — one head's slots are contiguous, matching the
 /// device-contiguous `[L, H, C, Dh]` image layout so gather/scatter move
@@ -50,16 +71,186 @@ impl Page {
         Page { k: vec![0.0; PAGE_SLOTS * row_width], v: vec![0.0; PAGE_SLOTS * row_width] }
     }
 
-    /// Bytes held by one page of the given row width (K + V, f32).
+    /// Bytes held by one full-precision page of the given row width
+    /// (K + V, f32). Quantized pages are smaller — see
+    /// [`QuantPage::bytes_for`] and [`PageData::bytes`] for the
+    /// precision-aware accounting.
     pub fn bytes(row_width: usize) -> usize {
         2 * PAGE_SLOTS * row_width * 4
     }
 }
 
+/// A quantized arena page: int8 K/V in the same head-major layout as
+/// [`Page`], plus one symmetric-absmax f32 scale per head per tensor
+/// (`deq(x) = q * scale`, `scale = absmax / 127` over the head's valid
+/// slots). ~4x smaller than the f32 page it replaces.
+pub struct QuantPage {
+    pub k: Vec<i8>,
+    pub v: Vec<i8>,
+    /// Per-head K scales, length `H`.
+    pub k_scales: Vec<f32>,
+    /// Per-head V scales, length `H`.
+    pub v_scales: Vec<f32>,
+}
+
+impl QuantPage {
+    fn new(row_width: usize, heads: usize) -> Self {
+        QuantPage {
+            k: vec![0; PAGE_SLOTS * row_width],
+            v: vec![0; PAGE_SLOTS * row_width],
+            k_scales: vec![0.0; heads],
+            v_scales: vec![0.0; heads],
+        }
+    }
+
+    /// Heads covered by the per-head scales.
+    pub fn heads(&self) -> usize {
+        self.k_scales.len()
+    }
+
+    /// Bytes held by one Q8 page: int8 K + V plus the per-head f32 scales.
+    pub fn bytes_for(row_width: usize, heads: usize) -> usize {
+        2 * PAGE_SLOTS * row_width + 2 * heads * 4
+    }
+
+    /// Quantize `page` into this buffer. Only the first `valid_slots` slots
+    /// of each head run participate in the absmax and are encoded — slots
+    /// beyond the sequence length hold recycled junk that must not inflate
+    /// the scale (they are zeroed here and never read back).
+    pub fn encode(&mut self, page: &Page, valid_slots: usize) {
+        let heads = self.heads();
+        let dh = page.k.len() / (heads * PAGE_SLOTS);
+        let valid = valid_slots.min(PAGE_SLOTS) * dh;
+        encode_tensor(&page.k, &mut self.k, &mut self.k_scales, dh, valid);
+        encode_tensor(&page.v, &mut self.v, &mut self.v_scales, dh, valid);
+    }
+
+    /// Dequantize the whole page into `page` (all `PAGE_SLOTS` slots; slots
+    /// beyond the sequence length decode to zeros from [`Self::encode`]).
+    pub fn decode_into(&self, page: &mut Page) {
+        let heads = self.heads();
+        let dh = page.k.len() / (heads * PAGE_SLOTS);
+        for h in 0..heads {
+            let lo = h * PAGE_SLOTS * dh;
+            let hi = (h + 1) * PAGE_SLOTS * dh;
+            let (ks, vs) = (self.k_scales[h], self.v_scales[h]);
+            for (o, &q) in page.k[lo..hi].iter_mut().zip(&self.k[lo..hi]) {
+                *o = q as f32 * ks;
+            }
+            for (o, &q) in page.v[lo..hi].iter_mut().zip(&self.v[lo..hi]) {
+                *o = q as f32 * vs;
+            }
+        }
+    }
+
+    /// Dequantize `out.len()` K elements starting at flat offset `src`. The
+    /// run must lie within head `head`'s region (the cache's copy loops are
+    /// per-head, so this always holds).
+    pub fn k_run_into(&self, head: usize, src: usize, out: &mut [f32]) {
+        let s = self.k_scales[head];
+        for (o, &q) in out.iter_mut().zip(&self.k[src..src + out.len()]) {
+            *o = q as f32 * s;
+        }
+    }
+
+    /// Dequantize `out.len()` V elements starting at flat offset `src`.
+    pub fn v_run_into(&self, head: usize, src: usize, out: &mut [f32]) {
+        let s = self.v_scales[head];
+        for (o, &q) in out.iter_mut().zip(&self.v[src..src + out.len()]) {
+            *o = q as f32 * s;
+        }
+    }
+}
+
+/// Quantize one head-major tensor: per head, symmetric-absmax scale over
+/// the first `valid` elements of the head's run, int8 encode, zero-fill the
+/// (never read) junk tail so recycled garbage can neither inflate the scale
+/// nor survive a whole-page decode.
+fn encode_tensor(src: &[f32], dst: &mut [i8], scales: &mut [f32], dh: usize, valid: usize) {
+    for (h, scale) in scales.iter_mut().enumerate() {
+        let run = &src[h * PAGE_SLOTS * dh..(h + 1) * PAGE_SLOTS * dh];
+        let out = &mut dst[h * PAGE_SLOTS * dh..(h + 1) * PAGE_SLOTS * dh];
+        let absmax = run[..valid].iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+        *scale = absmax / 127.0;
+        let inv = if *scale > 0.0 { 1.0 / *scale } else { 0.0 };
+        for (o, &x) in out[..valid].iter_mut().zip(&run[..valid]) {
+            *o = (x * inv).round().clamp(-127.0, 127.0) as i8;
+        }
+        out[valid..].fill(0);
+    }
+}
+
+/// Precision-tagged page payload: what the pool actually stores and what
+/// every [`super::KvCache`] page entry holds. Hot pages are `F32`; the
+/// demotion policy rewrites cold pages as `Q8` (and the prefix tree freezes
+/// snapshots directly to `Q8`). All mutation paths re-materialize `F32`
+/// first — a quantized page is never written in place.
+pub enum PageData {
+    F32(Page),
+    Q8(QuantPage),
+}
+
+impl PageData {
+    pub fn precision(&self) -> Precision {
+        match self {
+            PageData::F32(_) => Precision::F32,
+            PageData::Q8(_) => Precision::Q8,
+        }
+    }
+
+    /// Actual bytes held by this page at the given row width.
+    pub fn bytes(&self, row_width: usize) -> usize {
+        match self {
+            PageData::F32(_) => Page::bytes(row_width),
+            PageData::Q8(q) => QuantPage::bytes_for(row_width, q.heads()),
+        }
+    }
+
+    pub fn as_f32(&self) -> Option<&Page> {
+        match self {
+            PageData::F32(p) => Some(p),
+            PageData::Q8(_) => None,
+        }
+    }
+
+    /// The f32 payload; panics on a quantized page — callers must promote
+    /// (dequantize into a fresh f32 page) before touching bytes in place.
+    pub fn expect_f32(&self) -> &Page {
+        match self {
+            PageData::F32(p) => p,
+            PageData::Q8(_) => panic!("expected f32 page, found Q8 (promote before writing)"),
+        }
+    }
+
+    /// Mutable f32 payload; panics on a quantized page (see
+    /// [`Self::expect_f32`] — no quantized page is ever written in place).
+    pub fn expect_f32_mut(&mut self) -> &mut Page {
+        match self {
+            PageData::F32(p) => p,
+            PageData::Q8(_) => panic!("expected f32 page, found Q8 (promote before writing)"),
+        }
+    }
+}
+
+impl From<Page> for PageData {
+    fn from(p: Page) -> Self {
+        PageData::F32(p)
+    }
+}
+
+impl From<QuantPage> for PageData {
+    fn from(q: QuantPage) -> Self {
+        PageData::Q8(q)
+    }
+}
+
 #[derive(Default)]
 struct Pool {
-    /// Free pages keyed by row width (`H * Dh`), recycled across sequences.
-    free: BTreeMap<usize, Vec<Page>>,
+    /// Free pages keyed by `(row_width, precision)`, recycled across
+    /// sequences. Separate keys per precision keep the byte accounting of
+    /// mixed pools exact (a pooled Q8 page is ~4x smaller than a pooled f32
+    /// page of the same row width).
+    free: BTreeMap<(usize, Precision), Vec<PageData>>,
     bytes_in_use: usize,
     bytes_pooled: usize,
     high_water: usize,
@@ -68,6 +259,10 @@ struct Pool {
     pool_hits: u64,
     pages_freed: u64,
     cow_copies: u64,
+    /// Live Q8 pages / their bytes / the f32 bytes they replace.
+    quant_pages: usize,
+    quant_bytes: usize,
+    quant_fp32_equiv: usize,
 }
 
 /// Cheaply cloneable handle to a shared page pool.
@@ -82,7 +277,8 @@ pub struct KvArena {
 #[derive(Clone, Copy, Debug, Default)]
 pub struct ArenaStats {
     /// Bytes currently held by live caches (shared pages count once,
-    /// however many readers pin them).
+    /// however many readers pin them). Mixed-precision: Q8 pages contribute
+    /// their actual (compressed) size.
     pub bytes_in_use: usize,
     /// Bytes parked on the free lists, ready for reuse.
     pub bytes_pooled: usize,
@@ -91,18 +287,27 @@ pub struct ArenaStats {
     /// Configured pool budget (None = unlimited).
     pub budget: Option<usize>,
     /// Pages currently parked on the free lists (gauge form of
-    /// `bytes_pooled`, across row widths).
+    /// `bytes_pooled`, across `(row_width, precision)` keys).
     pub pages_pooled: usize,
     /// Total page allocations served (pool recycles + fresh constructions).
     pub pages_allocated: u64,
-    /// Allocations served by recycling a pooled page instead of
-    /// constructing a fresh one.
+    /// Allocations served by recycling a pooled page of the same
+    /// `(row_width, precision)` instead of constructing a fresh one.
     pub pool_hits: u64,
     /// Pages returned to the free lists.
     pub pages_freed: u64,
     /// Copy-on-write materializations: a shared page was about to be
     /// mutated and a private copy was allocated instead.
     pub cow_copies: u64,
+    /// Live quantized (Q8) pages across all caches and frozen snapshots.
+    pub quant_pages: usize,
+    /// Bytes held by live Q8 pages (subset of `bytes_in_use`).
+    pub quant_bytes: usize,
+    /// Bytes held by live f32 pages (`bytes_in_use - quant_bytes`).
+    pub fp32_bytes: usize,
+    /// f32 bytes the live Q8 pages replace divided by their actual bytes
+    /// (~4 at steady state; 0.0 when nothing is quantized).
+    pub quant_compaction_ratio: f64,
 }
 
 impl KvArena {
@@ -134,11 +339,20 @@ impl KvArena {
             pool_hits: p.pool_hits,
             pages_freed: p.pages_freed,
             cow_copies: p.cow_copies,
+            quant_pages: p.quant_pages,
+            quant_bytes: p.quant_bytes,
+            fp32_bytes: p.bytes_in_use.saturating_sub(p.quant_bytes),
+            quant_compaction_ratio: if p.quant_bytes > 0 {
+                p.quant_fp32_equiv as f64 / p.quant_bytes as f64
+            } else {
+                0.0
+            },
         }
     }
 
-    /// Allocate one page (recycled from the free list when possible). Fails
-    /// with [`ARENA_OOM_MARKER`] when the pool budget would be exceeded.
+    /// Allocate one f32 page (recycled from the free list when possible).
+    /// Fails with [`ARENA_OOM_MARKER`] when the pool budget would be
+    /// exceeded.
     pub fn alloc(&self, row_width: usize) -> Result<Page> {
         let bytes = Page::bytes(row_width);
         let mut p = super::error::lock_recover(&self.pool, "kv arena pool");
@@ -151,12 +365,13 @@ impl KvArena {
                 );
             }
         }
-        let page = match p.free.get_mut(&row_width).and_then(|v| v.pop()) {
-            Some(page) => {
+        let page = match p.free.get_mut(&(row_width, Precision::F32)).and_then(|v| v.pop()) {
+            Some(PageData::F32(page)) => {
                 p.bytes_pooled -= bytes;
                 p.pool_hits += 1;
                 page
             }
+            Some(PageData::Q8(_)) => unreachable!("f32 free list holds only f32 pages"),
             None => Page::new(row_width),
         };
         p.pages_allocated += 1;
@@ -165,14 +380,63 @@ impl KvArena {
         Ok(page)
     }
 
-    /// Return a page to the free list for reuse.
-    pub fn free(&self, row_width: usize, page: Page) {
-        let bytes = Page::bytes(row_width);
+    /// Allocate one Q8 page (recycled when possible). `checked` gates the
+    /// budget test: demotion passes `false` — replacing a live f32 page
+    /// with its Q8 form shrinks net usage, so it must not fail at the very
+    /// moment the pool is full — while clone/fork paths pass `true` and can
+    /// OOM like any other growth.
+    pub fn alloc_q8(&self, row_width: usize, heads: usize, checked: bool) -> Result<QuantPage> {
+        let bytes = QuantPage::bytes_for(row_width, heads);
+        let mut p = super::error::lock_recover(&self.pool, "kv arena pool");
+        if checked {
+            if let Some(limit) = p.budget {
+                if p.bytes_in_use + bytes > limit {
+                    bail!(
+                        "{ARENA_OOM_MARKER}: q8 page alloc {bytes} B would exceed pool budget \
+                         {limit} B ({} B in use)",
+                        p.bytes_in_use
+                    );
+                }
+            }
+        }
+        let page = match p.free.get_mut(&(row_width, Precision::Q8)).and_then(|v| v.pop()) {
+            Some(PageData::Q8(mut q)) => {
+                // Pooled Q8 pages of this row width may carry a different
+                // head count (different scale-vector length => different
+                // byte size): credit what was parked, reshape, charge the
+                // requested shape.
+                p.bytes_pooled -= QuantPage::bytes_for(row_width, q.heads());
+                p.pool_hits += 1;
+                q.k_scales.resize(heads, 0.0);
+                q.v_scales.resize(heads, 0.0);
+                q
+            }
+            Some(PageData::F32(_)) => unreachable!("q8 free list holds only q8 pages"),
+            None => QuantPage::new(row_width, heads),
+        };
+        p.pages_allocated += 1;
+        p.bytes_in_use += bytes;
+        p.quant_pages += 1;
+        p.quant_bytes += bytes;
+        p.quant_fp32_equiv += Page::bytes(row_width);
+        p.high_water = p.high_water.max(p.bytes_in_use);
+        Ok(page)
+    }
+
+    /// Return a page (either precision) to its free list for reuse.
+    pub fn free(&self, row_width: usize, page: PageData) {
+        let bytes = page.bytes(row_width);
+        let precision = page.precision();
         let mut p = super::error::lock_recover(&self.pool, "kv arena pool");
         p.bytes_in_use = p.bytes_in_use.saturating_sub(bytes);
         p.bytes_pooled += bytes;
         p.pages_freed += 1;
-        p.free.entry(row_width).or_default().push(page);
+        if precision == Precision::Q8 {
+            p.quant_pages = p.quant_pages.saturating_sub(1);
+            p.quant_bytes = p.quant_bytes.saturating_sub(bytes);
+            p.quant_fp32_equiv = p.quant_fp32_equiv.saturating_sub(Page::bytes(row_width));
+        }
+        p.free.entry((row_width, precision)).or_default().push(page);
     }
 
     /// Record one copy-on-write materialization (a shared page was about to
@@ -194,7 +458,7 @@ pub struct SharedPage {
 
 struct SharedInner {
     /// `None` only after [`SharedPage::try_unshare`] reclaimed the page.
-    page: Option<Page>,
+    page: Option<PageData>,
     row_width: usize,
     arena: KvArena,
 }
@@ -208,20 +472,26 @@ impl Drop for SharedInner {
 }
 
 impl SharedPage {
-    /// Freeze an owned page. No bytes move and no accounting changes: the
-    /// page stays `bytes_in_use` until the last handle drops.
-    pub fn freeze(arena: KvArena, row_width: usize, page: Page) -> Self {
+    /// Freeze an owned page (either precision). No bytes move and no
+    /// accounting changes: the page stays `bytes_in_use` until the last
+    /// handle drops.
+    pub fn freeze(arena: KvArena, row_width: usize, page: PageData) -> Self {
         Self { inner: Arc::new(SharedInner { page: Some(page), row_width, arena }) }
     }
 
     /// The frozen page contents (valid until the last handle drops).
-    pub fn page(&self) -> &Page {
+    pub fn page(&self) -> &PageData {
         self.inner.page.as_ref().expect("shared page present until last drop")
     }
 
     /// Floats per slot row (`H * Dh`) — the arena pooling key.
     pub fn row_width(&self) -> usize {
         self.inner.row_width
+    }
+
+    /// Actual bytes this frozen page holds (precision-aware).
+    pub fn bytes(&self) -> usize {
+        self.page().bytes(self.inner.row_width)
     }
 
     /// Handles currently pinning this page (prefix-tree leaves + caches).
@@ -233,7 +503,7 @@ impl SharedPage {
     /// the last reader, in which case the page moves back out un-shared
     /// (accounting unchanged — it stays in use). Otherwise the handle is
     /// returned and the caller must copy (the CoW path).
-    pub fn try_unshare(self) -> Result<Page, SharedPage> {
+    pub fn try_unshare(self) -> Result<PageData, SharedPage> {
         match Arc::try_unwrap(self.inner) {
             Ok(mut inner) => Ok(inner.page.take().expect("page present until last drop")),
             Err(inner) => Err(SharedPage { inner }),
@@ -242,9 +512,29 @@ impl SharedPage {
 }
 
 /// Page-granular worst-case footprint of one sequence holding `slots` slots
-/// in every one of `n_layers` layers at row width `H * Dh`.
+/// in every one of `n_layers` layers at row width `H * Dh`, all at f32 (the
+/// quantization-off projection).
 pub fn seq_footprint_bytes(n_layers: usize, row_width: usize, slots: usize) -> usize {
     n_layers * slots.div_ceil(PAGE_SLOTS) * Page::bytes(row_width)
+}
+
+/// Mixed-precision footprint under cold-Q8 demotion: the first `fp32_slots`
+/// slots' worth of pages (attention sinks + the hot tail + demotion lag)
+/// stay f32; everything older is Q8. This is the admission projection when
+/// `--kv-quant cold-q8` is active — actual bytes, not logical f32 bytes.
+pub fn seq_footprint_bytes_mixed(
+    n_layers: usize,
+    row_width: usize,
+    heads: usize,
+    slots: usize,
+    fp32_slots: usize,
+) -> usize {
+    let total_pages = slots.div_ceil(PAGE_SLOTS);
+    let fp32_pages = fp32_slots.min(slots).div_ceil(PAGE_SLOTS).min(total_pages);
+    let q8_pages = total_pages - fp32_pages;
+    n_layers
+        * (fp32_pages * Page::bytes(row_width)
+            + q8_pages * QuantPage::bytes_for(row_width, heads))
 }
 
 /// Shared admission gate (server + benches): measured arena pressure plus
@@ -300,7 +590,7 @@ mod tests {
         let a = arena.alloc(rw).unwrap();
         let b = arena.alloc(rw).unwrap();
         assert_eq!(arena.stats().bytes_in_use, 2 * Page::bytes(rw));
-        arena.free(rw, a);
+        arena.free(rw, a.into());
         let st = arena.stats();
         assert_eq!(st.bytes_in_use, Page::bytes(rw));
         assert_eq!(st.bytes_pooled, Page::bytes(rw));
@@ -310,8 +600,8 @@ mod tests {
         let st = arena.stats();
         assert_eq!(st.bytes_pooled, 0);
         assert_eq!(st.bytes_in_use, 2 * Page::bytes(rw));
-        arena.free(rw, b);
-        arena.free(rw, c);
+        arena.free(rw, b.into());
+        arena.free(rw, c.into());
         assert_eq!(arena.stats().bytes_in_use, 0);
     }
 
@@ -324,7 +614,7 @@ mod tests {
         let err = arena.alloc(rw).unwrap_err();
         assert!(format!("{err}").contains(ARENA_OOM_MARKER), "{err}");
         // freeing makes room again
-        arena.free(rw, a);
+        arena.free(rw, a.into());
         arena.alloc(rw).unwrap();
     }
 
@@ -348,6 +638,27 @@ mod tests {
         assert!(admission_ok(&empty, 1, est, 2 * est, 0, 0));
         assert!(!admission_ok(&empty, 1, est, 2 * est, 0, 1));
         assert!(admission_ok(&empty, 1, est, 3 * est, 0, est));
+    }
+
+    #[test]
+    fn mixed_footprint_interpolates_between_precisions() {
+        let (l, rw, h) = (2, 8, 2);
+        // all slots hot => identical to the f32 projection
+        assert_eq!(seq_footprint_bytes_mixed(l, rw, h, 40, 40), seq_footprint_bytes(l, rw, 40));
+        assert_eq!(seq_footprint_bytes_mixed(l, rw, h, 40, 999), seq_footprint_bytes(l, rw, 40));
+        // no slots hot => every page at the Q8 rate
+        assert_eq!(
+            seq_footprint_bytes_mixed(l, rw, h, 40, 0),
+            l * 3 * QuantPage::bytes_for(rw, h)
+        );
+        // mixed: 1 hot page + 2 cold pages per layer
+        assert_eq!(
+            seq_footprint_bytes_mixed(l, rw, h, 40, PAGE_SLOTS),
+            l * (Page::bytes(rw) + 2 * QuantPage::bytes_for(rw, h))
+        );
+        // Q8 pages are ~4x smaller: 4 Q8 pages cost one f32 page plus
+        // exactly their scale vectors (2 tensors x h heads x 4 bytes each)
+        assert_eq!(4 * QuantPage::bytes_for(rw, h), Page::bytes(rw) + 4 * (2 * h * 4));
     }
 
     #[test]
@@ -382,8 +693,9 @@ mod tests {
         let arena = KvArena::new();
         let rw = 8;
         let page = arena.alloc(rw).unwrap();
-        let sp = SharedPage::freeze(arena.clone(), rw, page);
+        let sp = SharedPage::freeze(arena.clone(), rw, page.into());
         assert_eq!(sp.row_width(), rw);
+        assert_eq!(sp.bytes(), Page::bytes(rw));
         assert_eq!(arena.stats().bytes_in_use, Page::bytes(rw), "freeze keeps bytes charged");
         let sp2 = sp.clone();
         assert_eq!(sp2.readers(), 2);
@@ -404,7 +716,7 @@ mod tests {
         let rw = 4;
         let mut page = arena.alloc(rw).unwrap();
         page.k[0] = 7.0;
-        let sp = SharedPage::freeze(arena.clone(), rw, page);
+        let sp = SharedPage::freeze(arena.clone(), rw, page.into());
         let sp2 = sp.clone();
         // two readers: un-sharing must fail and hand the handle back
         let sp2 = match sp2.try_unshare() {
@@ -418,7 +730,7 @@ mod tests {
             Ok(page) => page,
             Err(_) => panic!("sole reader reclaims"),
         };
-        assert_eq!(page.k[0], 7.0);
+        assert_eq!(page.expect_f32().k[0], 7.0);
         let st = arena.stats();
         assert_eq!(st.bytes_in_use, before.bytes_in_use);
         assert_eq!(st.pages_allocated, before.pages_allocated);
@@ -435,7 +747,7 @@ mod tests {
         let st = arena.stats();
         assert_eq!((st.pages_allocated, st.pool_hits, st.pages_freed), (1, 0, 0));
         assert_eq!(st.pages_pooled, 0);
-        arena.free(rw, a);
+        arena.free(rw, a.into());
         let st = arena.stats();
         assert_eq!(st.pages_freed, 1);
         assert_eq!(st.pages_pooled, 1);
@@ -446,17 +758,132 @@ mod tests {
         assert_eq!(st.pages_pooled, 0);
         arena.note_cow();
         assert_eq!(arena.stats().cow_copies, 1);
-        arena.free(rw, b);
+        arena.free(rw, b.into());
     }
 
     #[test]
     fn row_widths_pool_independently() {
         let arena = KvArena::new();
         let a = arena.alloc(4).unwrap();
-        arena.free(4, a);
+        arena.free(4, a.into());
         // a different row width must not receive the pooled page
         let b = arena.alloc(8).unwrap();
         assert_eq!(b.k.len(), PAGE_SLOTS * 8);
         assert_eq!(arena.stats().bytes_pooled, Page::bytes(4));
+    }
+
+    #[test]
+    fn precisions_pool_independently() {
+        let arena = KvArena::new();
+        let (rw, h) = (8, 2);
+        let a = arena.alloc(rw).unwrap();
+        arena.free(rw, a.into());
+        // a Q8 request at the same row width must not receive the f32 page
+        let q = arena.alloc_q8(rw, h, true).unwrap();
+        let st = arena.stats();
+        assert_eq!(st.pool_hits, 0, "pooled f32 page is not a q8 hit");
+        assert_eq!(st.bytes_pooled, Page::bytes(rw));
+        assert_eq!(st.bytes_in_use, QuantPage::bytes_for(rw, h));
+        // ...and vice versa: a freed q8 page only serves q8 requests
+        arena.free(rw, q.into());
+        let b = arena.alloc(rw).unwrap();
+        let st = arena.stats();
+        assert_eq!(st.pool_hits, 1, "the f32 page parked above is recycled");
+        assert_eq!(st.bytes_pooled, QuantPage::bytes_for(rw, h));
+        let q2 = arena.alloc_q8(rw, h, true).unwrap();
+        assert_eq!(arena.stats().pool_hits, 2, "the q8 page is recycled for q8");
+        arena.free(rw, b.into());
+        arena.free(rw, q2.into());
+    }
+
+    #[test]
+    fn quant_gauges_and_compaction_ratio() {
+        let arena = KvArena::new();
+        let (rw, h) = (8, 2);
+        let f = arena.alloc(rw).unwrap();
+        let q = arena.alloc_q8(rw, h, true).unwrap();
+        let st = arena.stats();
+        assert_eq!(st.quant_pages, 1);
+        assert_eq!(st.quant_bytes, QuantPage::bytes_for(rw, h));
+        assert_eq!(st.fp32_bytes, Page::bytes(rw));
+        assert_eq!(st.bytes_in_use, st.quant_bytes + st.fp32_bytes);
+        let ratio = Page::bytes(rw) as f64 / QuantPage::bytes_for(rw, h) as f64;
+        assert!((st.quant_compaction_ratio - ratio).abs() < 1e-9);
+        arena.free(rw, q.into());
+        let st = arena.stats();
+        assert_eq!((st.quant_pages, st.quant_bytes), (0, 0));
+        assert_eq!(st.quant_compaction_ratio, 0.0);
+        arena.free(rw, f.into());
+    }
+
+    #[test]
+    fn q8_budget_check_only_when_asked() {
+        let arena = KvArena::new();
+        let (rw, h) = (8, 2);
+        arena.set_budget(Some(Page::bytes(rw)));
+        let a = arena.alloc(rw).unwrap();
+        // checked q8 alloc fails like any other growth...
+        let err = arena.alloc_q8(rw, h, true).unwrap_err();
+        assert!(format!("{err}").contains(ARENA_OOM_MARKER), "{err}");
+        // ...but the demotion path (unchecked) succeeds even at the limit:
+        // the f32 page it replaces frees right after, shrinking net usage
+        let q = arena.alloc_q8(rw, h, false).unwrap();
+        arena.free(rw, a.into());
+        assert!(arena.stats().bytes_in_use <= Page::bytes(rw));
+        arena.free(rw, q.into());
+    }
+
+    #[test]
+    fn quantize_roundtrip_exact_for_representable_values() {
+        let arena = KvArena::new();
+        let (rw, h) = (8, 2); // dh = 4
+        let mut page = arena.alloc(rw).unwrap();
+        // values that are exact multiples of absmax/127 survive the
+        // round-trip bit-exactly (q = round(x/s) lands on an integer):
+        // every head run here spans the full integer range [-127, 127], so
+        // absmax = 127 => scale 1.0 and q = x for every element
+        for (i, x) in page.k.iter_mut().enumerate() {
+            *x = ((i * 3) % 255) as f32 - 127.0;
+        }
+        for (i, x) in page.v.iter_mut().enumerate() {
+            *x = -((i % 64) as f32) * 2.0; // absmax 126 => scale 126/127
+        }
+        let mut q = arena.alloc_q8(rw, h, true).unwrap();
+        q.encode(&page, PAGE_SLOTS);
+        let mut back = arena.alloc(rw).unwrap();
+        q.decode_into(&mut back);
+        assert_eq!(page.k, back.k);
+        for (a, b) in page.v.iter().zip(&back.v) {
+            assert!((a - b).abs() <= q.v_scales[0].max(q.v_scales[1]) / 2.0 + 1e-6, "{a} {b}");
+        }
+        arena.free(rw, page.into());
+        arena.free(rw, back.into());
+        arena.free(rw, q.into());
+    }
+
+    #[test]
+    fn quantize_excludes_junk_slots_from_scale() {
+        let arena = KvArena::new();
+        let (rw, h) = (4, 1); // dh = 4, one head
+        let mut page = arena.alloc(rw).unwrap();
+        page.k.fill(1.0);
+        // slots >= 2 hold recycled junk with a huge magnitude; with
+        // valid_slots = 2 it must not inflate the scale
+        for x in page.k[2 * 4..].iter_mut() {
+            *x = 1.0e6;
+        }
+        let mut q = arena.alloc_q8(rw, h, true).unwrap();
+        q.encode(&page, 2);
+        assert!((q.k_scales[0] - 1.0 / 127.0).abs() < 1e-9, "scale from valid slots only");
+        let mut out = [0.0f32; 4];
+        q.k_run_into(0, 0, &mut out);
+        for x in out {
+            assert!((x - 1.0).abs() < 1e-5);
+        }
+        // junk region decodes to zeros, not garbage
+        q.k_run_into(0, 3 * 4, &mut out);
+        assert_eq!(out, [0.0; 4]);
+        arena.free(rw, page.into());
+        arena.free(rw, q.into());
     }
 }

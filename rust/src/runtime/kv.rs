@@ -29,13 +29,29 @@
 //! content-preserving, so it needs no dirty marking of its own — the
 //! triggering mutation marks its ranges exactly as on owned pages, and the
 //! `(id, sync_gen)` stamps stay valid. See PERF.md "Prefix sharing".
+//!
+//! # Tiered compression
+//!
+//! With quantization enabled ([`KvCache::set_quant`], the serving
+//! `--kv-quant cold-q8` default), cold pages demote to int8
+//! ([`KvCache::demote_cold`]): pages whose every token is older than the
+//! engine's cutoff are re-encoded as [`super::arena::QuantPage`]s (~4x
+//! smaller), skipping the attention-sink page, the hot tail page, and any
+//! page overlapping an open dirty range. A demotion changes stored values,
+//! so it marks the page's slots dirty exactly once; gather paths dequantize
+//! per-head runs transparently. **No quantized page is ever written in
+//! place** — every mutation path re-materializes f32 first ([`owned_page`]
+//! promotes on CoW un-share and on owned Q8 entries alike), and compaction
+//! re-demotes pages that were cold before it ran, bounding the transient
+//! f32 spike to the slots actually moved. See PERF.md "Tiered compression".
 
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Weak};
+use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use super::arena::{KvArena, Page, SharedPage, PAGE_SLOTS};
+use super::arena::{KvArena, Page, PageData, Precision, SharedPage, PAGE_SLOTS};
 use super::error::CallError;
 
 /// Unique-per-instance cache ids: the scratch-pool key that makes a dense
@@ -49,6 +65,9 @@ pub struct GatherBytes {
     pub copied: u64,
     /// Bytes zero-filled where the cache shrank below the old image (K + V).
     pub zeroed: u64,
+    /// Wall-clock nanoseconds spent dequantizing Q8 pages during the copy
+    /// (zero when every touched page is f32).
+    pub dequant_ns: u64,
 }
 
 impl GatherBytes {
@@ -57,17 +76,18 @@ impl GatherBytes {
     }
 }
 
-/// One page-table slot: a privately owned page (mutable in place) or a
-/// frozen shared page (copy-on-write on the first mutation).
+/// One page-table slot: a privately owned page (mutable in place once f32)
+/// or a frozen shared page (copy-on-write on the first mutation). Either
+/// variant may hold f32 or Q8 data — see [`PageData`].
 enum PageEntry {
-    Owned(Page),
+    Owned(PageData),
     Shared(SharedPage),
 }
 
 impl PageEntry {
     /// Read access, whichever variant.
     #[inline]
-    fn page(&self) -> &Page {
+    fn page(&self) -> &PageData {
         match self {
             PageEntry::Owned(p) => p,
             PageEntry::Shared(s) => s.page(),
@@ -78,12 +98,23 @@ impl PageEntry {
         matches!(self, PageEntry::Shared(_))
     }
 
-    /// Mutable access to an entry the caller has already made owned (via
-    /// [`owned_page`]). Panics on a shared entry — that would be a missed
-    /// CoW, i.e. silent corruption of every other reader.
+    /// Storage precision of the underlying page, whichever variant.
+    fn precision(&self) -> Precision {
+        self.page().precision()
+    }
+
+    /// Actual bytes held by the underlying page (precision-aware).
+    fn bytes(&self, row_width: usize) -> usize {
+        self.page().bytes(row_width)
+    }
+
+    /// Mutable access to an entry the caller has already made owned f32
+    /// (via [`owned_page`]). Panics on a shared entry — that would be a
+    /// missed CoW, i.e. silent corruption of every other reader — and on a
+    /// quantized entry — no quantized page is ever written in place.
     fn owned_mut(&mut self) -> &mut Page {
         match self {
-            PageEntry::Owned(p) => p,
+            PageEntry::Owned(p) => p.expect_f32_mut(),
             PageEntry::Shared(_) => panic!("mutation of a shared page without CoW"),
         }
     }
@@ -95,7 +126,7 @@ impl PageEntry {
         if let PageEntry::Shared(sp) = self {
             return sp.clone();
         }
-        let placeholder = PageEntry::Owned(Page { k: Vec::new(), v: Vec::new() });
+        let placeholder = PageEntry::Owned(PageData::F32(Page { k: Vec::new(), v: Vec::new() }));
         let PageEntry::Owned(page) = std::mem::replace(self, placeholder) else {
             unreachable!("shared handled above");
         };
@@ -105,11 +136,13 @@ impl PageEntry {
     }
 }
 
-/// Make `table[pi]` privately owned and return the mutable page. A shared
-/// entry whose other readers all dropped is reclaimed in place (free); one
-/// that is still shared is copied into a freshly allocated page first
-/// (copy-on-write, counted in `ArenaStats::cow_copies`). On allocation
-/// failure the shared entry is restored untouched.
+/// Make `table[pi]` privately owned **f32** and return the mutable page —
+/// the single choke point every mutation goes through. A shared entry whose
+/// other readers all dropped is reclaimed in place (free); one that is
+/// still shared is copied into a freshly allocated f32 page (copy-on-write,
+/// counted in `ArenaStats::cow_copies`; a Q8 source dequantizes during the
+/// copy). An owned Q8 entry is promoted: dequantized into a fresh f32 page,
+/// the Q8 page freed. On allocation failure the entry is left untouched.
 fn owned_page<'a>(
     arena: &KvArena,
     row_width: usize,
@@ -117,7 +150,7 @@ fn owned_page<'a>(
     pi: usize,
 ) -> Result<&'a mut Page> {
     if table[pi].is_shared() {
-        let placeholder = PageEntry::Owned(Page { k: Vec::new(), v: Vec::new() });
+        let placeholder = PageEntry::Owned(PageData::F32(Page { k: Vec::new(), v: Vec::new() }));
         let PageEntry::Shared(shared) = std::mem::replace(&mut table[pi], placeholder) else {
             unreachable!("checked shared above");
         };
@@ -131,13 +164,32 @@ fn owned_page<'a>(
                         return Err(e);
                     }
                 };
-                copy.k.copy_from_slice(&shared.page().k);
-                copy.v.copy_from_slice(&shared.page().v);
+                match shared.page() {
+                    PageData::F32(p) => {
+                        copy.k.copy_from_slice(&p.k);
+                        copy.v.copy_from_slice(&p.v);
+                    }
+                    PageData::Q8(q) => q.decode_into(&mut copy),
+                }
                 arena.note_cow();
-                copy
+                PageData::F32(copy)
             }
         };
         table[pi] = PageEntry::Owned(owned);
+    }
+    if table[pi].precision() == Precision::Q8 {
+        // promote: a write follows, and quantized pages are never written
+        // in place (alloc first so failure leaves the Q8 entry intact)
+        let mut promoted = arena.alloc(row_width)?;
+        let PageEntry::Owned(PageData::Q8(q)) = &table[pi] else {
+            unreachable!("entry is owned (un-shared above) and Q8 (checked)");
+        };
+        q.decode_into(&mut promoted);
+        let old = std::mem::replace(&mut table[pi], PageEntry::Owned(PageData::F32(promoted)));
+        let PageEntry::Owned(data) = old else {
+            unreachable!("owned checked above");
+        };
+        arena.free(row_width, data);
     }
     Ok(table[pi].owned_mut())
 }
@@ -169,6 +221,15 @@ pub struct KvCache {
     /// appends/evictions/truncations are all tail-heavy, so the union of the
     /// true dirty set stays tight in practice.
     dirty: Vec<Option<(usize, usize)>>,
+    /// Cold-page quantization enabled (`--kv-quant cold-q8`). Off by
+    /// default: every page stays f32 and [`Self::demote_cold`] is a no-op,
+    /// keeping the exact-mode path byte-identical to pre-quantization
+    /// behavior.
+    quant: bool,
+    /// High-water demotion cutoff: tokens at positions strictly below this
+    /// are cold. Compaction uses it to re-demote pages that were Q8 before
+    /// the move pass promoted them.
+    quant_cutoff: u64,
     /// Liveness token: staging tiers (scratch pool, device tier) hold a
     /// [`Weak`] to it and drop their entries once the cache is gone — the
     /// same lifecycle as the Drop → arena page return path, extended to
@@ -197,8 +258,22 @@ impl KvCache {
             id: NEXT_CACHE_ID.fetch_add(1, Ordering::Relaxed),
             sync_gen: 0,
             dirty: vec![None; l],
+            quant: false,
+            quant_cutoff: 0,
             alive: Arc::new(()),
         }
+    }
+
+    /// Enable/disable cold-page Q8 demotion for this cache (the engine sets
+    /// this from `--kv-quant`). Existing pages keep their precision; only
+    /// future [`Self::demote_cold`] / [`Self::freeze_pages`] calls quantize.
+    pub fn set_quant(&mut self, on: bool) {
+        self.quant = on;
+    }
+
+    /// Whether cold-page Q8 demotion is enabled.
+    pub fn quant_enabled(&self) -> bool {
+        self.quant
     }
 
     /// Floats per slot row (`H * Dh`) — the arena pooling key.
@@ -274,11 +349,17 @@ impl KvCache {
         self.lens.iter().map(|&n| 2 * self.h * n * self.dh * 4).sum()
     }
 
-    /// Actual bytes held in the arena (page-granular occupancy — what the
-    /// serving admission control sees).
+    /// Actual bytes held in the arena (page-granular, mixed-precision
+    /// occupancy — what the serving admission control sees; a demoted Q8
+    /// page contributes ~1/4 of an f32 page).
     pub fn resident_bytes(&self) -> usize {
-        let per = Page::bytes(self.row_width());
-        self.pages.iter().map(|t| t.len() * per).sum()
+        let rw = self.row_width();
+        self.pages.iter().flat_map(|t| t.iter()).map(|e| e.bytes(rw)).sum()
+    }
+
+    /// Pages of one layer currently held quantized (tests and diagnostics).
+    pub fn n_quant_pages(&self, layer: usize) -> usize {
+        self.pages[layer].iter().filter(|e| e.precision() == Precision::Q8).count()
     }
 
     /// Pages currently mapped for one layer.
@@ -297,16 +378,19 @@ impl KvCache {
         (head * PAGE_SLOTS + slot_in_page) * self.dh
     }
 
-    /// One slot's K row for one head (`Dh` floats).
+    /// One slot's K row for one head (`Dh` floats). Borrowed straight from
+    /// the page, so only valid on f32 pages (tests/diagnostics; quantized
+    /// slots are read through the dequantizing gather paths).
     pub fn row_k(&self, layer: usize, head: usize, slot: usize) -> &[f32] {
         let off = self.page_off(head, slot % PAGE_SLOTS);
-        &self.pages[layer][slot / PAGE_SLOTS].page().k[off..off + self.dh]
+        &self.pages[layer][slot / PAGE_SLOTS].page().expect_f32().k[off..off + self.dh]
     }
 
-    /// One slot's V row for one head (`Dh` floats).
+    /// One slot's V row for one head (`Dh` floats; f32 pages only, see
+    /// [`Self::row_k`]).
     pub fn row_v(&self, layer: usize, head: usize, slot: usize) -> &[f32] {
         let off = self.page_off(head, slot % PAGE_SLOTS);
-        &self.pages[layer][slot / PAGE_SLOTS].page().v[off..off + self.dh]
+        &self.pages[layer][slot / PAGE_SLOTS].page().expect_f32().v[off..off + self.dh]
     }
 
     /// Pages of one layer currently held as frozen shared pages (tests and
@@ -319,7 +403,7 @@ impl KvCache {
         let needed = new_len.div_ceil(PAGE_SLOTS);
         while self.pages[layer].len() < needed {
             let page = self.arena.alloc(self.row_width())?;
-            self.pages[layer].push(PageEntry::Owned(page));
+            self.pages[layer].push(PageEntry::Owned(page.into()));
         }
         Ok(())
     }
@@ -409,6 +493,15 @@ impl KvCache {
             .unwrap_or(keep.len());
         let (h, dh) = (self.h, self.dh);
         let rw = self.row_width();
+        // compaction is precision-preserving: remember which pages were Q8
+        // on entry so the move pass (which promotes its destinations to
+        // f32) can re-demote them afterwards — without this, every
+        // compaction would thaw the whole cold region back to f32
+        let prior_q8: Vec<bool> = if self.quant {
+            self.pages[layer].iter().map(|e| e.precision() == Precision::Q8).collect()
+        } else {
+            Vec::new()
+        };
         // copy-on-write every page a move will write into, BEFORE moving:
         // CoW preserves content, so doing it up front (even on alloc
         // failure partway) never leaves a half-moved layer
@@ -439,8 +532,18 @@ impl KvCache {
                 for hh in 0..h {
                     let s = (hh * PAGE_SLOTS + so) * dh;
                     let d = (hh * PAGE_SLOTS + dof) * dh;
-                    dpage.k[d..d + dh].copy_from_slice(&spage.k[s..s + dh]);
-                    dpage.v[d..d + dh].copy_from_slice(&spage.v[s..s + dh]);
+                    match spage {
+                        PageData::F32(sp) => {
+                            dpage.k[d..d + dh].copy_from_slice(&sp.k[s..s + dh]);
+                            dpage.v[d..d + dh].copy_from_slice(&sp.v[s..s + dh]);
+                        }
+                        PageData::Q8(q) => {
+                            // a cold source row moving down: dequantize on
+                            // read (the source page itself is untouched)
+                            q.k_run_into(hh, s, &mut dpage.k[d..d + dh]);
+                            q.v_run_into(hh, s, &mut dpage.v[d..d + dh]);
+                        }
+                    }
                 }
             }
         }
@@ -449,6 +552,22 @@ impl KvCache {
         self.lens[layer] = keep.len();
         self.mark_dirty(layer, first_change, len);
         self.release_excess(layer);
+        // re-demote the cold region the move pass promoted (still guarded
+        // by the cutoff/sink/tail rules — a page that pulled hot-tail slots
+        // down stays f32 until it ages out again). Compaction shifts content
+        // toward lower page indexes, so this scans every page from the first
+        // changed one rather than trusting old indexes; each re-encode
+        // changes stored bytes (fresh scales), so it marks the whole page
+        // dirty like any other demotion. Skipped entirely when no page was
+        // Q8 on entry — a plain compaction never quantizes ahead of
+        // [`Self::demote_cold`].
+        if prior_q8.iter().any(|&b| b) {
+            for pi in first_change / PAGE_SLOTS..self.pages[layer].len() {
+                if self.try_demote_page(layer, pi, self.quant_cutoff) {
+                    self.mark_dirty(layer, pi * PAGE_SLOTS, (pi + 1) * PAGE_SLOTS);
+                }
+            }
+        }
         Ok(())
     }
 
@@ -529,7 +648,10 @@ impl KvCache {
     /// Copy slots `[lo, hi)` of one layer (all heads) into a dense
     /// `[L, H, C, Dh]` image; `hi <= lens[layer]`. Head-major pages make each
     /// (page-run, head) transfer one contiguous `run * Dh` block on both
-    /// sides. Returns f32 elements copied per buffer side (K and V each).
+    /// sides; Q8 pages dequantize into the image (per-head contiguous runs —
+    /// one scale lookup per run) instead of memcpy. Returns f32 elements
+    /// copied per buffer side (K and V each) plus nanoseconds spent
+    /// dequantizing.
     fn copy_slots_into(
         &self,
         layer: usize,
@@ -537,24 +659,38 @@ impl KvCache {
         hi: usize,
         k_out: &mut [f32],
         v_out: &mut [f32],
-    ) -> u64 {
+    ) -> (u64, u64) {
         let (h, c, dh) = (self.h, self.c, self.dh);
         let mut copied = 0u64;
+        let mut dequant_ns = 0u64;
         let mut slot = lo;
         while slot < hi {
             let sp = slot % PAGE_SLOTS;
             let run = (PAGE_SLOTS - sp).min(hi - slot);
-            let page = self.pages[layer][slot / PAGE_SLOTS].page();
-            for hh in 0..h {
-                let src = (hh * PAGE_SLOTS + sp) * dh;
-                let dst = ((layer * h + hh) * c + slot) * dh;
-                k_out[dst..dst + run * dh].copy_from_slice(&page.k[src..src + run * dh]);
-                v_out[dst..dst + run * dh].copy_from_slice(&page.v[src..src + run * dh]);
+            match self.pages[layer][slot / PAGE_SLOTS].page() {
+                PageData::F32(page) => {
+                    for hh in 0..h {
+                        let src = (hh * PAGE_SLOTS + sp) * dh;
+                        let dst = ((layer * h + hh) * c + slot) * dh;
+                        k_out[dst..dst + run * dh].copy_from_slice(&page.k[src..src + run * dh]);
+                        v_out[dst..dst + run * dh].copy_from_slice(&page.v[src..src + run * dh]);
+                    }
+                }
+                PageData::Q8(q) => {
+                    let t0 = Instant::now();
+                    for hh in 0..h {
+                        let src = (hh * PAGE_SLOTS + sp) * dh;
+                        let dst = ((layer * h + hh) * c + slot) * dh;
+                        q.k_run_into(hh, src, &mut k_out[dst..dst + run * dh]);
+                        q.v_run_into(hh, src, &mut v_out[dst..dst + run * dh]);
+                    }
+                    dequant_ns += t0.elapsed().as_nanos() as u64;
+                }
             }
             copied += (h * run * dh) as u64;
             slot += run;
         }
-        copied
+        (copied, dequant_ns)
     }
 
     /// Zero slots `[lo, hi)` of one layer (all heads) in a dense image.
@@ -605,11 +741,18 @@ impl KvCache {
         while slot < valid_hi {
             let sp = slot % PAGE_SLOTS;
             let run = (PAGE_SLOTS - sp).min(valid_hi - slot);
-            let page = self.pages[layer][slot / PAGE_SLOTS].page();
             let src = (head * PAGE_SLOTS + sp) * dh;
             let dst = (slot - lo) * dh;
-            k_out[dst..dst + run * dh].copy_from_slice(&page.k[src..src + run * dh]);
-            v_out[dst..dst + run * dh].copy_from_slice(&page.v[src..src + run * dh]);
+            match self.pages[layer][slot / PAGE_SLOTS].page() {
+                PageData::F32(page) => {
+                    k_out[dst..dst + run * dh].copy_from_slice(&page.k[src..src + run * dh]);
+                    v_out[dst..dst + run * dh].copy_from_slice(&page.v[src..src + run * dh]);
+                }
+                PageData::Q8(q) => {
+                    q.k_run_into(head, src, &mut k_out[dst..dst + run * dh]);
+                    q.v_run_into(head, src, &mut v_out[dst..dst + run * dh]);
+                }
+            }
             slot += run;
         }
         let zero_from = (valid_hi.max(lo) - lo) * dh;
@@ -627,7 +770,9 @@ impl KvCache {
         let mut out = GatherBytes::default();
         for l in 0..self.l {
             let len = self.lens[l];
-            out.copied += 2 * 4 * self.copy_slots_into(l, 0, len, k_out, v_out);
+            let (copied, ns) = self.copy_slots_into(l, 0, len, k_out, v_out);
+            out.copied += 2 * 4 * copied;
+            out.dequant_ns += ns;
             out.zeroed += 2 * 4 * self.zero_slots_in(l, len, self.c, k_out, v_out);
         }
         out
@@ -650,7 +795,9 @@ impl KvCache {
             let len = self.lens[l];
             let copy_hi = hi.min(len);
             if lo < copy_hi {
-                out.copied += 2 * 4 * self.copy_slots_into(l, lo, copy_hi, k_out, v_out);
+                let (copied, ns) = self.copy_slots_into(l, lo, copy_hi, k_out, v_out);
+                out.copied += 2 * 4 * copied;
+                out.dequant_ns += ns;
             }
             let zero_lo = lo.max(len);
             if zero_lo < hi {
@@ -669,7 +816,7 @@ impl KvCache {
         let mut k = vec![0.0f32; n];
         let mut v = vec![0.0f32; n];
         for l in 0..self.l {
-            self.copy_slots_into(l, 0, self.lens[l], &mut k, &mut v);
+            let _ = self.copy_slots_into(l, 0, self.lens[l], &mut k, &mut v);
         }
         (k, v)
     }
@@ -684,12 +831,111 @@ impl KvCache {
         }
     }
 
+    /// Quantize one eligible page in place: owned f32, not the attention
+    /// sink (page 0), not the hot tail (the last or partial page), and
+    /// every resident token strictly older than `cutoff`. Returns whether
+    /// it demoted. Does NOT consult or mark dirty state — callers own
+    /// that: [`Self::demote_cold`] checks its dirty snapshot first and
+    /// marks after; compaction's re-demote pass runs inside an interval it
+    /// already marked.
+    fn try_demote_page(&mut self, layer: usize, pi: usize, cutoff: u64) -> bool {
+        if !self.quant || pi == 0 {
+            return false;
+        }
+        let n_pages = self.pages[layer].len();
+        if pi + 1 >= n_pages || (pi + 1) * PAGE_SLOTS > self.lens[layer] {
+            return false;
+        }
+        let entry = &self.pages[layer][pi];
+        if entry.is_shared() || entry.precision() != Precision::F32 {
+            return false;
+        }
+        if self.positions[layer][(pi + 1) * PAGE_SLOTS - 1] >= cutoff {
+            return false;
+        }
+        self.quantize_owned_page(layer, pi, PAGE_SLOTS);
+        true
+    }
+
+    /// Replace an owned f32 page with its Q8 encoding (unchecked arena
+    /// alloc: the f32 page freed right after makes this a net shrink).
+    fn quantize_owned_page(&mut self, layer: usize, pi: usize, valid_slots: usize) {
+        let rw = self.row_width();
+        let mut q =
+            self.arena.alloc_q8(rw, self.h, false).expect("unchecked q8 alloc cannot fail");
+        q.encode(self.pages[layer][pi].page().expect_f32(), valid_slots);
+        let old =
+            std::mem::replace(&mut self.pages[layer][pi], PageEntry::Owned(PageData::Q8(q)));
+        let PageEntry::Owned(data) = old else {
+            unreachable!("caller checked owned");
+        };
+        self.arena.free(rw, data);
+    }
+
+    /// Distance-based demotion (the `--kv-quant cold-q8` engine hook):
+    /// quantize every eligible page whose tokens are all strictly older
+    /// than `cutoff` (the engine passes
+    /// `stream_pos - quantize_after_windows * w`). Skips the attention-sink
+    /// page (page 0), the hot tail (last/partial page), shared pages
+    /// (frozen snapshots quantize at freeze time), already-Q8 pages, and
+    /// any page overlapping an open dirty range — its slots were never
+    /// materialized into a synced image, so re-encoding them now would
+    /// conflate two generations; they demote after the next sync point.
+    /// Each demotion changes stored values and therefore marks the page's
+    /// slots dirty exactly once. Returns the number of pages demoted. A
+    /// no-op (returning 0) when quantization is off.
+    pub fn demote_cold(&mut self, cutoff: u64) -> usize {
+        if !self.quant {
+            return 0;
+        }
+        self.quant_cutoff = self.quant_cutoff.max(cutoff);
+        let cutoff = self.quant_cutoff;
+        let mut demoted = 0;
+        for layer in 0..self.l {
+            let dirty0 = self.dirty[layer];
+            let n_pages = self.pages[layer].len();
+            for pi in 1..n_pages.saturating_sub(1) {
+                if let Some((lo, hi)) = dirty0 {
+                    if lo < (pi + 1) * PAGE_SLOTS && hi > pi * PAGE_SLOTS {
+                        continue;
+                    }
+                }
+                if self.try_demote_page(layer, pi, cutoff) {
+                    self.mark_dirty(layer, pi * PAGE_SLOTS, (pi + 1) * PAGE_SLOTS);
+                    demoted += 1;
+                }
+            }
+        }
+        demoted
+    }
+
     /// Freeze every page of this cache into refcounted shared pages (in
     /// place — this cache keeps using them; its next mutation of any frozen
     /// page goes through CoW) and return per-layer handles for the prefix
     /// tree. Pages already shared just hand out another handle. No bytes
     /// move and arena accounting is unchanged.
+    ///
+    /// With quantization enabled, owned f32 pages are quantized FIRST, so
+    /// prefix snapshots freeze directly to Q8 (~4x more reusable prefixes
+    /// under the same `prefix_pool_bytes`) — frozen pages are immutable and
+    /// read-mostly, exactly the cold tier. The re-encoded slots are marked
+    /// dirty (once) for the donor's own next gather.
     pub fn freeze_pages(&mut self) -> Vec<Vec<SharedPage>> {
+        if self.quant {
+            for layer in 0..self.l {
+                for pi in 0..self.pages[layer].len() {
+                    let entry = &self.pages[layer][pi];
+                    if entry.is_shared() || entry.precision() == Precision::Q8 {
+                        continue;
+                    }
+                    let lo = pi * PAGE_SLOTS;
+                    let hi = ((pi + 1) * PAGE_SLOTS).min(self.c);
+                    let valid = self.lens[layer].saturating_sub(lo).min(PAGE_SLOTS);
+                    self.quantize_owned_page(layer, pi, valid);
+                    self.mark_dirty(layer, lo, hi);
+                }
+            }
+        }
         let rw = self.row_width();
         let arena = self.arena.clone();
         self.pages
@@ -790,16 +1036,33 @@ impl KvCache {
     /// and the partially built clone's pages return to the arena via `Drop`.
     pub fn try_clone(&self) -> Result<Self> {
         let mut out = KvCache::with_arena(self.arena.clone(), self.l, self.h, self.c, self.dh);
+        out.quant = self.quant;
+        out.quant_cutoff = self.quant_cutoff;
         let rw = self.row_width();
+        let oom =
+            |e| CallError::oom(format!("kv-arena budget exceeded while cloning KvCache: {e}"));
         for l in 0..self.l {
             for entry in &self.pages[l] {
-                let page = entry.page();
-                let mut p = out.arena.alloc(rw).map_err(|e| {
-                    CallError::oom(format!("kv-arena budget exceeded while cloning KvCache: {e}"))
-                })?;
-                p.k.copy_from_slice(&page.k);
-                p.v.copy_from_slice(&page.v);
-                out.pages[l].push(PageEntry::Owned(p));
+                // clones preserve each page's precision tier: a cold Q8
+                // page stays Q8 (same bytes, no extra error — the int8
+                // payload and scales copy verbatim)
+                let data = match entry.page() {
+                    PageData::F32(page) => {
+                        let mut p = out.arena.alloc(rw).map_err(oom)?;
+                        p.k.copy_from_slice(&page.k);
+                        p.v.copy_from_slice(&page.v);
+                        PageData::F32(p)
+                    }
+                    PageData::Q8(q) => {
+                        let mut p = out.arena.alloc_q8(rw, self.h, true).map_err(oom)?;
+                        p.k.copy_from_slice(&q.k);
+                        p.v.copy_from_slice(&q.v);
+                        p.k_scales.copy_from_slice(&q.k_scales);
+                        p.v_scales.copy_from_slice(&q.v_scales);
+                        PageData::Q8(p)
+                    }
+                };
+                out.pages[l].push(PageEntry::Owned(data));
             }
         }
         out.lens = self.lens.clone();
@@ -1388,5 +1651,382 @@ mod tests {
                 Ok(())
             },
         );
+    }
+
+    // ---- tiered compression (cold-q8) ----
+
+    use crate::runtime::arena::QuantPage;
+
+    /// Append `n` rows of bounded random values (|x| <= 1000) to every layer.
+    fn fill_layers(kv: &mut KvCache, n: usize, first_pos: u64, seed: u64) {
+        let (l, h, dh) = (kv.l, kv.h, kv.dh);
+        let mut rng = Xoshiro256::new(seed);
+        for layer in 0..l {
+            let wk: Vec<f32> =
+                (0..h * n * dh).map(|_| rng.below(2001) as f32 - 1000.0).collect();
+            let wv: Vec<f32> =
+                (0..h * n * dh).map(|_| rng.below(2001) as f32 - 1000.0).collect();
+            kv.append_layer(layer, &wk, &wv, n, n, first_pos).unwrap();
+        }
+    }
+
+    #[test]
+    fn demote_cold_quantizes_only_cold_middle_pages() {
+        let arena = KvArena::new();
+        let mut kv = KvCache::with_arena(arena.clone(), 1, 2, 128, 4);
+        kv.set_quant(true);
+        let n = 4 * PAGE_SLOTS; // four full pages, positions 0..64
+        fill_layers(&mut kv, n, 0, 42);
+        kv.mark_synced();
+        let fp32_resident = kv.resident_bytes();
+        let (k_ref, v_ref) = kv.gather_dense();
+
+        // cutoff 48: pages 1..=2 are entirely older; page 0 is the sink,
+        // page 3 is the hot tail
+        let demoted = kv.demote_cold(3 * PAGE_SLOTS as u64);
+        assert_eq!(demoted, 2);
+        assert_eq!(kv.n_quant_pages(0), 2);
+        assert_eq!(
+            kv.dirty_range(0),
+            Some((PAGE_SLOTS, 3 * PAGE_SLOTS)),
+            "each demotion marks exactly its page dirty, once"
+        );
+        let rw = kv.row_width();
+        assert_eq!(kv.resident_bytes(), 2 * Page::bytes(rw) + 2 * QuantPage::bytes_for(rw, 2));
+        assert!(kv.resident_bytes() < fp32_resident);
+        let st = arena.stats();
+        assert_eq!(st.quant_pages, 2);
+        assert_eq!(st.quant_bytes, 2 * QuantPage::bytes_for(rw, 2));
+        assert!(st.quant_compaction_ratio > 3.0, "ratio {}", st.quant_compaction_ratio);
+
+        // idempotent: a second clean sweep has nothing left to do
+        kv.mark_synced();
+        assert_eq!(kv.demote_cold(3 * PAGE_SLOTS as u64), 0);
+
+        // sink + tail read back exactly; demoted pages within quant tolerance
+        let (kq, vq) = kv.gather_dense();
+        let (h, c, dh) = (kv.h, kv.c, kv.dh);
+        let tol = 1000.0 / 254.0 + 1e-6;
+        for hh in 0..h {
+            for slot in 0..n {
+                for d in 0..dh {
+                    let i = (hh * c + slot) * dh + d;
+                    let t = if (PAGE_SLOTS..3 * PAGE_SLOTS).contains(&slot) { tol } else { 0.0 };
+                    assert!((kq[i] - k_ref[i]).abs() <= t, "K slot {slot} head {hh} d {d}");
+                    assert!((vq[i] - v_ref[i]).abs() <= t, "V slot {slot} head {hh} d {d}");
+                }
+            }
+        }
+        kv.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn demote_cold_skips_dirty_and_shared_pages() {
+        let arena = KvArena::new();
+        let mut kv = KvCache::with_arena(arena.clone(), 1, 1, 128, 2);
+        kv.set_quant(true);
+        fill_layers(&mut kv, 4 * PAGE_SLOTS, 0, 7);
+        // never synced: every page overlaps the open dirty range
+        assert_eq!(kv.demote_cold(u64::MAX / 2), 0, "dirty pages must not demote");
+        kv.mark_synced();
+        assert_eq!(kv.demote_cold(u64::MAX / 2), 2, "clean sweep demotes the middle pages");
+
+        // a fork holding only shared (frozen f32) pages demotes nothing
+        let mut donor = KvCache::with_arena(arena.clone(), 1, 1, 128, 2);
+        fill_layers(&mut donor, 4 * PAGE_SLOTS, 0, 9);
+        let shared = donor.freeze_pages(); // donor has quant off: stays f32
+        let mut fork = KvCache::with_arena(arena.clone(), 1, 1, 128, 2);
+        fork.adopt_shared(&shared, &donor.lens, &donor.positions, &donor.mass).unwrap();
+        fork.set_quant(true);
+        fork.mark_synced();
+        assert_eq!(fork.demote_cold(u64::MAX / 2), 0, "shared pages must not demote in place");
+        assert_eq!(fork.n_quant_pages(0), 0);
+    }
+
+    #[test]
+    fn freeze_quantizes_snapshots_and_cow_promotes_on_write() {
+        let arena = KvArena::new();
+        let mut donor = KvCache::with_arena(arena.clone(), 1, 2, 64, 4);
+        donor.set_quant(true);
+        let n = 2 * PAGE_SLOTS;
+        fill_layers(&mut donor, n, 0, 21);
+        donor.mark_synced();
+        let (k_ref, _) = donor.gather_dense();
+        let before = arena.stats().bytes_in_use;
+
+        let shared = donor.freeze_pages();
+        let after = arena.stats().bytes_in_use;
+        assert!(after < before / 3, "frozen snapshot must be ~4x smaller: {after} vs {before}");
+        assert_eq!(donor.n_quant_pages(0), 2);
+        let rw = donor.row_width();
+        let snap_bytes: usize = shared.iter().flat_map(|t| t.iter()).map(|sp| sp.bytes()).sum();
+        assert_eq!(snap_bytes, 2 * QuantPage::bytes_for(rw, 2));
+        assert_eq!(
+            donor.dirty_range(0),
+            Some((0, n)),
+            "re-encoded slots are dirty for the donor's next gather"
+        );
+
+        // a fork adopts the Q8 snapshot and reads it within tolerance
+        let mut fork = KvCache::with_arena(arena.clone(), 1, 2, 64, 4);
+        fork.adopt_shared(&shared, &donor.lens, &donor.positions, &donor.mass).unwrap();
+        let (fk, _) = fork.gather_dense();
+        let tol = (1000.0 / 254.0 + 1e-6) as f32;
+        for (a, b) in fk.iter().zip(k_ref.iter()) {
+            assert!((a - b).abs() <= tol, "{a} vs {b}");
+        }
+
+        // the first write CoWs the shared Q8 page into a private f32 copy —
+        // no quantized page is ever written in place
+        let cows = arena.stats().cow_copies;
+        fork.retain_slots(0, &[0, 5, 9]).unwrap();
+        let st = arena.stats();
+        assert_eq!(st.cow_copies, cows + 1, "write into a shared Q8 page copies once");
+        assert_eq!(fork.n_shared_pages(0), 0);
+        assert_eq!(fork.n_quant_pages(0), 0, "the private copy is f32");
+        // the moved rows carry (dequantized) values within tolerance
+        assert!((fork.row_k(0, 1, 1)[0] - k_ref[(64 + 5) * 4]).abs() <= tol);
+        donor.check_invariants().unwrap();
+        fork.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn compaction_promotes_then_redemotes_cold_pages() {
+        let arena = KvArena::new();
+        let mut kv = KvCache::with_arena(arena.clone(), 1, 1, 128, 2);
+        kv.set_quant(true);
+        fill_layers(&mut kv, 4 * PAGE_SLOTS, 0, 33);
+        kv.mark_synced();
+        assert_eq!(kv.demote_cold(3 * PAGE_SLOTS as u64), 2);
+        kv.mark_synced();
+
+        // evict one slot from page 1: the move pass promotes the Q8 pages it
+        // writes to f32, then re-demotes whatever is still entirely cold.
+        // Page 1 now ends at original position 32 (< cutoff 48): re-demoted.
+        // Page 2 pulled original position 48 into its last slot: no longer
+        // entirely cold, so it stays f32 until the cutoff advances.
+        let keep: Vec<usize> = (0..4 * PAGE_SLOTS).filter(|&s| s != PAGE_SLOTS).collect();
+        kv.retain_slots(0, &keep).unwrap();
+        kv.check_invariants().unwrap();
+        assert_eq!(kv.n_quant_pages(0), 1);
+
+        // a higher cutoff re-cools page 2 on the next clean sweep
+        kv.mark_synced();
+        assert_eq!(kv.demote_cold(4 * PAGE_SLOTS as u64), 1);
+        assert_eq!(kv.n_quant_pages(0), 2);
+    }
+
+    #[derive(Debug, Clone, Copy)]
+    enum QOp {
+        Append { n: usize, seed: u64 },
+        Retain { seed: u64 },
+        Truncate { seed: u64 },
+        Demote,
+        Freeze,
+        Sync,
+    }
+
+    #[test]
+    fn quantized_store_stays_within_tolerance_property() {
+        // a quant-on cache must track a quant-off twin through arbitrary
+        // append/compact/evict/freeze/CoW-unshare interleavings within the
+        // symmetric-int8 error bound (5% of the per-(layer, head) high-water
+        // absmax — each re-quantization cycle contributes at most
+        // absmax / 254), with identical lens/positions and exact zero padding
+        PropRunner::new(30).run(
+            |rng: &mut Xoshiro256| {
+                let h = 1 + rng.below(2) as usize;
+                let dh = 1 + rng.below(3) as usize;
+                let ops: Vec<QOp> = (0..14)
+                    .map(|_| match rng.below(8) {
+                        0 | 1 | 2 => QOp::Append {
+                            n: 1 + rng.below(24) as usize,
+                            seed: rng.below(u64::MAX),
+                        },
+                        3 => QOp::Retain { seed: rng.below(u64::MAX) },
+                        4 => QOp::Truncate { seed: rng.below(u64::MAX) },
+                        5 | 6 => QOp::Demote,
+                        _ => {
+                            if rng.below(2) == 0 {
+                                QOp::Freeze
+                            } else {
+                                QOp::Sync
+                            }
+                        }
+                    })
+                    .collect();
+                (h, dh, ops)
+            },
+            |(h, dh, ops)| {
+                let (h, dh) = (*h, *dh);
+                let (l, c) = (2usize, 96usize);
+                let mut q = KvCache::with_arena(KvArena::new(), l, h, c, dh);
+                q.set_quant(true);
+                let mut f = KvCache::with_arena(KvArena::new(), l, h, c, dh);
+                let mut next_pos = 0u64;
+                let mut frozen: Vec<Vec<Vec<SharedPage>>> = Vec::new();
+                // per-(layer, head) high-water absmax of the exact twin: the
+                // tolerance reference (a later eviction of the largest values
+                // must not retroactively tighten the bound already baked into
+                // surviving quantized rows)
+                let mut hw = vec![0.0f32; l * h];
+                for op in ops {
+                    match *op {
+                        QOp::Append { n, seed } => {
+                            if q.max_len() + n > c {
+                                continue;
+                            }
+                            let mut vrng = Xoshiro256::new(seed);
+                            for layer in 0..l {
+                                let wk: Vec<f32> = (0..h * n * dh)
+                                    .map(|_| vrng.below(2001) as f32 - 1000.0)
+                                    .collect();
+                                let wv: Vec<f32> = (0..h * n * dh)
+                                    .map(|_| vrng.below(2001) as f32 - 1000.0)
+                                    .collect();
+                                q.append_layer(layer, &wk, &wv, n, n, next_pos).unwrap();
+                                f.append_layer(layer, &wk, &wv, n, n, next_pos).unwrap();
+                            }
+                            next_pos += n as u64;
+                        }
+                        QOp::Retain { seed } => {
+                            for layer in 0..l {
+                                let mut krng = Xoshiro256::new(seed + layer as u64);
+                                let n = q.lens[layer];
+                                let keep: Vec<usize> =
+                                    (0..n).filter(|_| krng.below(4) > 0).collect();
+                                q.retain_slots(layer, &keep).unwrap();
+                                f.retain_slots(layer, &keep).unwrap();
+                            }
+                        }
+                        QOp::Truncate { seed } => {
+                            let mut trng = Xoshiro256::new(seed);
+                            for layer in 0..l {
+                                let new_len = trng.below(q.lens[layer] as u64 + 1) as usize;
+                                q.truncate_layer(layer, new_len).unwrap();
+                                f.truncate_layer(layer, new_len).unwrap();
+                            }
+                        }
+                        QOp::Demote => {
+                            let cutoff = next_pos.saturating_sub(PAGE_SLOTS as u64);
+                            q.demote_cold(cutoff);
+                            prop_assert!(
+                                f.demote_cold(cutoff) == 0,
+                                "quant-off demote must be a no-op"
+                            );
+                        }
+                        QOp::Freeze => {
+                            // hold the previous snapshot so mutations exercise
+                            // both CoW (still shared) and sole-reader
+                            // un-share (handle dropped) on Q8 pages
+                            frozen.push(q.freeze_pages());
+                            let _ = f.freeze_pages();
+                            if frozen.len() > 1 {
+                                frozen.remove(0);
+                            }
+                        }
+                        QOp::Sync => {
+                            q.mark_synced();
+                            f.mark_synced();
+                        }
+                    }
+                    prop_assert!(q.check_invariants().is_ok(), "quant invariants broken");
+                    prop_assert!(q.lens == f.lens, "lens diverged");
+                    prop_assert!(q.positions == f.positions, "positions diverged");
+                    let (qk, qv) = q.gather_dense();
+                    let (fk, fv) = f.gather_dense();
+                    for layer in 0..l {
+                        for hh in 0..h {
+                            let base = (layer * h + hh) * c * dh;
+                            let row = base..base + c * dh;
+                            let absmax = fk[row.clone()]
+                                .iter()
+                                .chain(fv[row.clone()].iter())
+                                .fold(0.0f32, |m, x| m.max(x.abs()));
+                            hw[layer * h + hh] = hw[layer * h + hh].max(absmax);
+                            let tol = 0.05 * hw[layer * h + hh] + 1e-6;
+                            for i in row {
+                                prop_assert!(
+                                    (qk[i] - fk[i]).abs() <= tol,
+                                    "K out of tolerance at {i}: {} vs {} (tol {tol})",
+                                    qk[i],
+                                    fk[i]
+                                );
+                                prop_assert!(
+                                    (qv[i] - fv[i]).abs() <= tol,
+                                    "V out of tolerance at {i}: {} vs {} (tol {tol})",
+                                    qv[i],
+                                    fv[i]
+                                );
+                            }
+                        }
+                    }
+                    // padding beyond lens stays exactly zero even in quant mode
+                    for layer in 0..l {
+                        for hh in 0..h {
+                            for slot in q.lens[layer]..c {
+                                let i = ((layer * h + hh) * c + slot) * dh;
+                                prop_assert!(
+                                    qk[i..i + dh].iter().all(|&x| x == 0.0),
+                                    "quant padding not zero at slot {slot}"
+                                );
+                            }
+                        }
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn quant_off_is_byte_identical_to_baseline() {
+        // `--kv-quant off` must leave the store bit-for-bit as before the
+        // quantization feature existed: a cache with the demotion hook wired
+        // (but off) checksums identically to one that never touches any
+        // quant API, and the arena never sees a Q8 page
+        fn fnv1a(data: &[f32]) -> u64 {
+            let mut h = 0xcbf29ce484222325u64;
+            for x in data {
+                for b in x.to_le_bytes() {
+                    h ^= b as u64;
+                    h = h.wrapping_mul(0x100000001b3);
+                }
+            }
+            h
+        }
+        let arena = KvArena::new();
+        let mut hooked = KvCache::with_arena(arena.clone(), 2, 2, 64, 3);
+        hooked.set_quant(false); // explicit off (the serving `--kv-quant off` path)
+        let mut baseline = KvCache::with_arena(KvArena::new(), 2, 2, 64, 3);
+        let mut pos = 0u64;
+        for step in 0..6u64 {
+            let n = 7 + step as usize;
+            let mut vrng = Xoshiro256::new(step * 97 + 5);
+            for layer in 0..2 {
+                let wk: Vec<f32> =
+                    (0..2 * n * 3).map(|_| vrng.below(1000) as f32 * 0.5).collect();
+                let wv: Vec<f32> =
+                    (0..2 * n * 3).map(|_| vrng.below(1000) as f32 * -0.5).collect();
+                hooked.append_layer(layer, &wk, &wv, n, n, pos).unwrap();
+                baseline.append_layer(layer, &wk, &wv, n, n, pos).unwrap();
+            }
+            pos += n as u64;
+            // the serving loop's demotion hook: a no-op with quant off
+            assert_eq!(hooked.demote_cold(pos), 0);
+            hooked.mark_synced();
+            let keep: Vec<usize> = (0..hooked.lens[0]).filter(|s| s % 5 != 3).collect();
+            hooked.retain_slots(0, &keep).unwrap();
+            baseline.retain_slots(0, &keep).unwrap();
+        }
+        let _ = hooked.freeze_pages(); // freeze with quant off stays f32
+        assert_eq!(hooked.n_quant_pages(0), 0);
+        let (hk, hv) = hooked.gather_dense();
+        let (bk, bv) = baseline.gather_dense();
+        assert_eq!(fnv1a(&hk), fnv1a(&bk), "K image diverged with quant off");
+        assert_eq!(fnv1a(&hv), fnv1a(&bv), "V image diverged with quant off");
+        let st = arena.stats();
+        assert_eq!(st.quant_pages, 0, "quant-off arena must never hold a Q8 page");
+        assert_eq!(st.quant_bytes, 0);
     }
 }

@@ -57,8 +57,9 @@ use std::time::Instant;
 use anyhow::{bail, Context, Result};
 
 pub use arena::{
-    admission_ok, seq_footprint_bytes, sharded_staging_bytes, ArenaStats, KvArena, Page,
-    SharedPage, ARENA_OOM_MARKER, PAGE_SLOTS,
+    admission_ok, seq_footprint_bytes, seq_footprint_bytes_mixed, sharded_staging_bytes,
+    ArenaStats, KvArena, Page, PageData, Precision, QuantPage, SharedPage, ARENA_OOM_MARKER,
+    PAGE_SLOTS,
 };
 pub use device::{Acquired, DeviceKvState, DeviceStats, DeviceTier};
 pub use error::{classify, lock_poisoned_total, lock_recover, CallError, CallErrorKind};
@@ -125,6 +126,9 @@ pub struct RuntimeStats {
     pub bytes_d2h: u64,
     /// Host-side gather wall-clock (pages -> dense scratch image).
     pub gather_s: f64,
+    /// Wall-clock spent dequantizing Q8 pages inside gathers (subset of
+    /// `gather_s`; zero with `--kv-quant off`).
+    pub dequant_s: f64,
     /// Bytes written into scratch images (dirty copies + zero-fill) — the
     /// number the incremental path drives toward zero per decode step.
     pub gathered_bytes: u64,
@@ -423,6 +427,7 @@ impl Runtime {
                 let pool = lock_recover(&sh.scratch, "scratch pool");
                 let ts = pool.stats();
                 st.gather_s += ts.gather_s;
+                st.dequant_s += ts.dequant_s;
                 st.gathered_bytes += ts.gathered_bytes + ts.zeroed_bytes;
                 st.gathers_full += ts.gathers_full;
                 st.gathers_incremental += ts.gathers_incremental;

@@ -32,7 +32,7 @@
 
 use anyhow::Result;
 
-use super::arena::{Page, SharedPage};
+use super::arena::SharedPage;
 use super::kv::KvCache;
 
 /// A frozen cache state at one prefill-chunk boundary: shared page handles
@@ -68,8 +68,10 @@ impl PrefixSnapshot {
     /// placement.
     pub fn freeze_on(cache: &mut KvCache, home_shard: usize) -> Self {
         let pages = cache.freeze_pages();
-        let per = Page::bytes(cache.row_width());
-        let bytes = pages.iter().map(|t| t.len() * per).sum();
+        // per-page actual bytes: with `--kv-quant cold-q8` the donor froze
+        // straight to Q8, so the same `prefix_pool_bytes` budget holds ~4x
+        // more reusable prefixes
+        let bytes = pages.iter().flat_map(|t| t.iter()).map(|sp| sp.bytes()).sum();
         Self {
             pages,
             lens: cache.lens.clone(),
@@ -353,7 +355,7 @@ fn evict_lru_leaf(root: &mut Node) -> Option<usize> {
 mod tests {
     use super::*;
     use crate::prop_assert;
-    use crate::runtime::arena::{KvArena, PAGE_SLOTS};
+    use crate::runtime::arena::{KvArena, Page, PAGE_SLOTS};
     use crate::util::prop::PropRunner;
     use crate::util::rng::Xoshiro256;
 

@@ -63,6 +63,9 @@ pub struct TransferStats {
     pub zeroed_bytes: u64,
     /// Wall-clock seconds spent gathering.
     pub gather_s: f64,
+    /// Wall-clock seconds spent dequantizing Q8 pages during gathers
+    /// (subset of `gather_s`; zero when `--kv-quant off`).
+    pub dequant_s: f64,
     /// Dense-buffer allocations (or regrowths) performed by the pool — zero
     /// in steady state.
     pub dense_allocs: u64,
@@ -130,6 +133,7 @@ impl ScratchPool {
                     self.stats.gathers_incremental += 1;
                     self.stats.gathered_bytes += gb.copied;
                     self.stats.zeroed_bytes += gb.zeroed;
+                    self.stats.dequant_s += gb.dequant_ns as f64 * 1e-9;
                 }
                 i
             }
@@ -144,6 +148,7 @@ impl ScratchPool {
                 self.stats.gathers_full += 1;
                 self.stats.gathered_bytes += gb.copied;
                 self.stats.zeroed_bytes += gb.zeroed;
+                self.stats.dequant_s += gb.dequant_ns as f64 * 1e-9;
                 i
             }
         };

@@ -145,6 +145,7 @@ pub fn export_runtime(j: &mut Json, rs: &RuntimeStats) {
     j.set("bytes_h2d", (rs.bytes_h2d as i64).into());
     j.set("bytes_d2h", (rs.bytes_d2h as i64).into());
     j.set("gather_s", rs.gather_s.into());
+    j.set("dequant_s", rs.dequant_s.into());
     j.set("gathered_bytes", (rs.gathered_bytes as i64).into());
     j.set("gathers_full", (rs.gathers_full as i64).into());
     j.set("gathers_incremental", (rs.gathers_incremental as i64).into());
@@ -164,7 +165,10 @@ pub fn export_runtime(j: &mut Json, rs: &RuntimeStats) {
 /// with real page traffic: `kv_arena_pool_hits` / `kv_arena_pages_allocated`
 /// show recycling efficiency, and `cow_copies` counts shared pages that had
 /// to be materialized privately before a mutation (the cost side of
-/// cross-request sharing).
+/// cross-request sharing). The tiered-compression gauges (`quant_pages`,
+/// `quant_bytes`, `fp32_bytes`, `quant_compaction_ratio`) split occupancy
+/// by precision so deployments can watch how much of the pool the cold-page
+/// Q8 demotions reclaim.
 pub fn export_arena(j: &mut Json, ast: &ArenaStats) {
     j.set("kv_arena_bytes_in_use", ast.bytes_in_use.into());
     j.set("kv_arena_bytes_pooled", ast.bytes_pooled.into());
@@ -174,6 +178,10 @@ pub fn export_arena(j: &mut Json, ast: &ArenaStats) {
     j.set("kv_arena_pages_freed", (ast.pages_freed as i64).into());
     j.set("kv_arena_pool_hits", (ast.pool_hits as i64).into());
     j.set("cow_copies", (ast.cow_copies as i64).into());
+    j.set("quant_pages", ast.quant_pages.into());
+    j.set("quant_bytes", ast.quant_bytes.into());
+    j.set("fp32_bytes", ast.fp32_bytes.into());
+    j.set("quant_compaction_ratio", ast.quant_compaction_ratio.into());
 }
 
 /// Attach the scheduler's fault-handling counters plus the process-wide
@@ -347,6 +355,7 @@ mod tests {
             bytes_h2d: 1024,
             bytes_d2h: 2048,
             gather_s: 0.25,
+            dequant_s: 0.05,
             gathered_bytes: 96,
             gathers_full: 1,
             gathers_incremental: 1,
@@ -376,6 +385,7 @@ mod tests {
         assert_eq!(j.usize_of("donations"), Some(7));
         assert_eq!(j.usize_of("reconciled_bytes"), Some(320));
         assert!(j.f64_of("gather_s").unwrap() > 0.2);
+        assert_eq!(j.f64_of("dequant_s"), Some(0.05));
     }
 
     #[test]
@@ -391,6 +401,10 @@ mod tests {
             pool_hits: 4,
             pages_freed: 6,
             cow_copies: 3,
+            quant_pages: 5,
+            quant_bytes: 320,
+            fp32_bytes: 704,
+            quant_compaction_ratio: 3.75,
         };
         export_arena(&mut j, &ast);
         assert_eq!(j.usize_of("kv_arena_bytes_in_use"), Some(1024));
@@ -399,6 +413,10 @@ mod tests {
         assert_eq!(j.usize_of("kv_arena_pool_hits"), Some(4));
         assert_eq!(j.usize_of("kv_arena_pages_freed"), Some(6));
         assert_eq!(j.usize_of("cow_copies"), Some(3));
+        assert_eq!(j.usize_of("quant_pages"), Some(5));
+        assert_eq!(j.usize_of("quant_bytes"), Some(320));
+        assert_eq!(j.usize_of("fp32_bytes"), Some(704));
+        assert_eq!(j.f64_of("quant_compaction_ratio"), Some(3.75));
     }
 
     #[test]

@@ -58,21 +58,32 @@ use batcher::{
 pub use reactor::{Reactor, Work};
 
 use crate::cache::make_policy;
-use crate::config::ServeConfig;
+use crate::config::{KvQuantMode, ServeConfig};
 use crate::engine::{Engine, EngineOpts};
 use crate::runtime::manifest::serving_prog_names;
 use crate::runtime::{
-    admission_ok, place, seq_footprint_bytes, sharded_staging_bytes, CallError, CallExecutor,
-    KvArena, PlacementStats, PrefixCache, PrefixSnapshot, Runtime, RuntimeOpts, ShardLoad,
+    admission_ok, place, seq_footprint_bytes, seq_footprint_bytes_mixed, sharded_staging_bytes,
+    CallError, CallExecutor, KvArena, PlacementStats, PrefixCache, PrefixSnapshot, Runtime,
+    RuntimeOpts, ShardLoad, PAGE_SLOTS,
 };
 
 /// The determinism domain of a frozen prefix: the ladder (or any registered)
 /// policy produces byte-identical KV state at every ingestion-window
-/// boundary only for the same model, policy spec, window, and compiled
-/// capacity — reuse across any difference is unsound, so the prefix cache
-/// carries this signature and the backend validates it before adopting.
+/// boundary only for the same model, policy spec, window, compiled
+/// capacity, and KV precision mode (snapshots freeze straight to Q8 under
+/// `cold-q8`, and the demotion horizon changes which pages carry rounding) —
+/// reuse across any difference is unsound, so the prefix cache carries this
+/// signature and the backend validates it before adopting.
 pub fn prefix_signature(cfg: &ServeConfig) -> String {
-    format!("{}|{}|w{}|c{}", cfg.model, cfg.policy, cfg.window, cfg.capacity)
+    format!(
+        "{}|{}|w{}|c{}|q{}-{}",
+        cfg.model,
+        cfg.policy,
+        cfg.window,
+        cfg.capacity,
+        cfg.kv_quant.as_str(),
+        cfg.quantize_after_windows
+    )
 }
 
 /// One served sequence: the engine plus the prompt tokens it has ingested
@@ -143,7 +154,20 @@ impl<'rt> EngineBackend<'rt> {
         let (l, h, dh) = (m.cfg.n_layers, m.cfg.n_heads, m.cfg.head_dim);
         let policy = make_policy(&cfg.policy, l)?;
         let slots = policy.budget().saturating_add(cfg.window).min(cfg.capacity);
-        let est_seq_bytes = seq_footprint_bytes(l, h * dh, slots);
+        let est_seq_bytes = match cfg.kv_quant {
+            KvQuantMode::Off => seq_footprint_bytes(l, h * dh, slots),
+            KvQuantMode::ColdQ8 => {
+                // steady state under tiered compression: the hot tail (the
+                // demotion horizon plus the ingest window in flight plus the
+                // f32-pinned sink page and a partial tail page) stays f32,
+                // every colder slot is Q8 — admission charges actual
+                // mixed-precision bytes, which is what buys the ~4x
+                // concurrent-sequence capacity under the same pool budget
+                let fp32_slots =
+                    ((cfg.quantize_after_windows + 2) * cfg.window + 2 * PAGE_SLOTS).min(slots);
+                seq_footprint_bytes_mixed(l, h * dh, h, slots, fp32_slots)
+            }
+        };
         let image_bytes = 2 * 4 * l * h * cfg.capacity * dh;
         // mirror the runtime's partitioning: each shard gets a slice of the
         // device pool and `scratch_pool_entries / shards` (min 1) scratch
@@ -272,6 +296,8 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
                 w: self.cfg.window,
                 c: self.cfg.capacity,
                 memory_budget_bytes: None,
+                quantize_after_windows: (self.cfg.kv_quant == KvQuantMode::ColdQ8)
+                    .then_some(self.cfg.quantize_after_windows),
             },
             policy,
         )?;

@@ -49,7 +49,18 @@
 //! `"deadline-exceeded"` (partial `tokens`/`text` are included when any
 //! were generated), or a device-call classification
 //! (`"transient"` / `"device-lost"` / `"oom"` / `"fatal"`) once the retry
-//! budget is exhausted. `op:ping` is the health probe: `degraded` reports
+//! budget is exhausted.
+//!
+//! `op:stats` includes the tiered-compression gauges alongside the arena
+//! and transfer counters: `quant_pages` / `quant_bytes` (live int8 cold
+//! pages and their actual bytes), `fp32_bytes` (the full-precision
+//! remainder of `kv_arena_bytes_in_use`), `quant_compaction_ratio` (f32
+//! bytes the quantized pages replace over their actual bytes, ~4 at steady
+//! state with `--kv-quant cold-q8`, 0 when nothing is quantized), and
+//! `dequant_s` (cumulative seconds spent dequantizing Q8 pages during
+//! gathers — a subset of `gather_s`, 0 with `--kv-quant off`).
+//!
+//! `op:ping` is the health probe: `degraded` reports
 //! the FLEET-level sticky device-tier bypass — true only when every shard
 //! has tripped (see PERF.md "Failure handling & recovery") — `inflight` /
 //! `queue_depth` / `active_seqs` the load, and `shards` the per-device

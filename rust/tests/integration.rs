@@ -25,8 +25,14 @@ macro_rules! need_artifacts {
 fn mini_engine<'rt>(rt: &'rt Runtime, policy_spec: &str, w: usize, c: usize) -> Engine<'rt> {
     let cfg = rt.model("mini").unwrap().cfg.clone();
     let policy = make_policy(policy_spec, cfg.n_layers).unwrap();
-    Engine::new(rt, EngineOpts { model: "mini".into(), w, c, memory_budget_bytes: None }, policy)
-        .unwrap()
+    let opts = EngineOpts {
+        model: "mini".into(),
+        w,
+        c,
+        memory_budget_bytes: None,
+        quantize_after_windows: None,
+    };
+    Engine::new(rt, opts, policy).unwrap()
 }
 
 #[test]
@@ -150,7 +156,13 @@ fn full_cache_hits_simulated_oom() {
     let policy = make_policy("full", cfg.n_layers).unwrap();
     let mut eng = Engine::new(
         &rt,
-        EngineOpts { model: "mini".into(), w: 128, c: 256, memory_budget_bytes: None },
+        EngineOpts {
+            model: "mini".into(),
+            w: 128,
+            c: 256,
+            memory_budget_bytes: None,
+            quantize_after_windows: None,
+        },
         policy,
     )
     .unwrap();
