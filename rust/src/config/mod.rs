@@ -108,6 +108,15 @@ pub struct ServeConfig {
     /// its tokens is at least this many full ladder windows behind the
     /// stream head (clamped to >= 1 — the hot window never demotes).
     pub quantize_after_windows: usize,
+    /// Flight-recorder sampling stride (`--trace-sample-every`): record
+    /// every Nth event per kind. 1 (the default) records everything, 0
+    /// disables tracing entirely; `op:trace` serves whatever was kept.
+    pub trace_sample_every: usize,
+    /// Flight-recorder ring capacity in events (`--trace-buffer-events`):
+    /// the bounded in-memory trace buffer. When full the oldest events are
+    /// overwritten (counted in `trace_dropped_total`); clamped to a small
+    /// minimum so the ring is never useless.
+    pub trace_buffer_events: usize,
 }
 
 impl Default for ServeConfig {
@@ -132,6 +141,8 @@ impl Default for ServeConfig {
             devices: 1,
             kv_quant: KvQuantMode::ColdQ8,
             quantize_after_windows: 2,
+            trace_sample_every: 1,
+            trace_buffer_events: crate::obs::DEFAULT_CAPACITY,
         }
     }
 }
@@ -167,6 +178,10 @@ impl ServeConfig {
                 .usize_of("quantize_after_windows")
                 .unwrap_or(d.quantize_after_windows)
                 .max(1),
+            trace_sample_every: j.usize_of("trace_sample_every").unwrap_or(d.trace_sample_every),
+            trace_buffer_events: j
+                .usize_of("trace_buffer_events")
+                .unwrap_or(d.trace_buffer_events),
         })
     }
 
@@ -208,6 +223,8 @@ impl ServeConfig {
         }
         cfg.quantize_after_windows =
             args.usize_or("quantize-after-windows", cfg.quantize_after_windows).max(1);
+        cfg.trace_sample_every = args.usize_or("trace-sample-every", cfg.trace_sample_every);
+        cfg.trace_buffer_events = args.usize_or("trace-buffer-events", cfg.trace_buffer_events);
         Ok(cfg)
     }
 
@@ -232,6 +249,8 @@ impl ServeConfig {
             ("devices", self.devices.into()),
             ("kv_quant", self.kv_quant.as_str().into()),
             ("quantize_after_windows", self.quantize_after_windows.into()),
+            ("trace_sample_every", self.trace_sample_every.into()),
+            ("trace_buffer_events", self.trace_buffer_events.into()),
         ])
     }
 }
@@ -415,6 +434,32 @@ mod tests {
         assert_eq!(back.max_inflight_calls, 4, "in-flight capacity must round-trip");
         assert_eq!(back.call_retries, 0, "0 (retries disabled) must round-trip");
         assert_eq!(back.retry_backoff_ms, 50);
+    }
+
+    #[test]
+    fn serve_config_trace_fields_roundtrip() {
+        let d = ServeConfig::default();
+        assert_eq!(d.trace_sample_every, 1, "tracing defaults to record-everything");
+        assert_eq!(d.trace_buffer_events, crate::obs::DEFAULT_CAPACITY);
+        // 0 (tracing off) and a custom ring size must round-trip via JSON
+        let cfg = ServeConfig {
+            trace_sample_every: 0,
+            trace_buffer_events: 1024,
+            ..Default::default()
+        };
+        let back = ServeConfig::from_json(&cfg.to_json()).unwrap();
+        assert_eq!(back.trace_sample_every, 0, "0 (tracing disabled) must round-trip");
+        assert_eq!(back.trace_buffer_events, 1024);
+        // CLI overrides
+        let args = Args::parse(
+            ["--trace-sample-every", "8", "--trace-buffer-events", "2048"]
+                .iter()
+                .map(|s| s.to_string())
+                .collect(),
+        );
+        let cfg = ServeConfig::from_args(&args).unwrap();
+        assert_eq!(cfg.trace_sample_every, 8);
+        assert_eq!(cfg.trace_buffer_events, 2048);
     }
 
     #[test]

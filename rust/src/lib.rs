@@ -25,6 +25,7 @@ pub mod config;
 pub mod data;
 pub mod engine;
 pub mod eval;
+pub mod obs;
 pub mod runtime;
 pub mod server;
 pub mod util;

@@ -37,7 +37,9 @@ fn main() -> Result<()> {
         .describe("call-retries", "retry budget per failed device call", Some("4"))
         .describe("retry-backoff-ms", "base retry backoff, doubles per attempt", Some("5"))
         .describe("kv-quant", "KV precision: off | cold-q8 (int8 cold pages)", Some("cold-q8"))
-        .describe("quantize-after-windows", "ladder windows a page stays f32 before demotion", Some("2"));
+        .describe("quantize-after-windows", "ladder windows a page stays f32 before demotion", Some("2"))
+        .describe("trace-sample-every", "record every Nth flight-recorder event per kind (0 = off)", Some("1"))
+        .describe("trace-buffer-events", "flight-recorder ring capacity in events", Some("65536"));
     if args.flag("help") {
         print!("{}", args.usage("lacache-serve"));
         return Ok(());

@@ -1,0 +1,526 @@
+//! Flight recorder: a bounded, always-on ring buffer of structured serving
+//! events, recorded at every request-lifecycle edge across the scheduler,
+//! runtime, and wire layers.
+//!
+//! Aggregate counters (`op:stats`) say *how much*; the flight recorder says
+//! *in what order, for which request*. Every significant edge — queued /
+//! admitted / placed, each prefill window, submit/reap of device calls,
+//! retry / quarantine, residency hit / spill / donation, prefix adopt /
+//! freeze / evict, quant demote / promote, cancellation / deadline — emits
+//! one fixed-size [`Event`] into a global fixed-capacity ring. `op:trace`
+//! dumps the recent window (filterable by `seq`, `kind`, `since`), and a
+//! `trace: true` generate request gets its own phase-timing breakdown
+//! attached to the reply.
+//!
+//! Design constraints (and how they are met):
+//!
+//! - **Bounded.** The ring is preallocated once ([`FlightRecorder::configure`],
+//!   default [`DEFAULT_CAPACITY`] events); on overflow the oldest event is
+//!   overwritten and `trace_dropped_total` incremented. Memory is
+//!   `capacity * size_of::<Event>()`, independent of uptime.
+//! - **Non-blocking on the hot path.** Recording never allocates (events are
+//!   plain `Copy` structs with two integer payload slots instead of strings)
+//!   and never waits: the ring is guarded by a `try_lock` — a contended
+//!   record is *dropped and counted*, not queued. Sequencing is one relaxed
+//!   atomic `fetch_add`.
+//! - **`Send`/`Sync`.** The recorder is a process-global singleton
+//!   ([`recorder`]); worker-pool call sites record through the same handle.
+//! - **Byte-invisible to generation.** Recording touches no KV state; the
+//!   scheduler property test pins token streams and FNV-1a KV checksums
+//!   identical with tracing on vs off (see `server::batcher` tests).
+//!
+//! Sampling: `--trace-sample-every N` keeps every Nth event *per kind* (so a
+//! chatty kind cannot starve rare kinds out of the sample), `1` records
+//! everything (default), `0` disables recording entirely.
+//!
+//! Event keying: scheduler lifecycle events (`queued` … `finished`) carry
+//! the request id in `seq`, so a request's whole phase chain is one `seq`
+//! filter away. Runtime-layer events (residency, prefix, quant) happen below
+//! the request boundary and carry the KV cache id (residency/quant) or the
+//! prefix tree's LRU clock tick (prefix) instead — see the taxonomy table
+//! in PERF.md "Observability".
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock, TryLockError};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Default ring capacity in events (~3 MiB at 48 B/event).
+pub const DEFAULT_CAPACITY: usize = 65_536;
+
+/// What happened at a lifecycle edge. Payload slots `a`/`b` are
+/// kind-specific (documented per variant); unused slots are 0.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+#[repr(u8)]
+pub enum EventKind {
+    /// Request entered the scheduler queue. `a` = prompt tokens,
+    /// `b` = max_new_tokens.
+    Queued = 0,
+    /// Request left the queue for the active set. `a` = prompt tokens
+    /// remaining to prefill (after prefix adoption), `b` = adopted prefix
+    /// tokens.
+    Admitted,
+    /// Placement decided the request's shard (recorded in `shard`).
+    /// `a` = adopted prefix tokens, `b` = placement kind code (see
+    /// `PlacementKind::code`: 0 local-prefix, 1 least-loaded, 2 spillover,
+    /// 3 host-only).
+    Placed,
+    /// One prefill window submitted. `a` = window start position,
+    /// `b` = window length in tokens.
+    PrefillWindow,
+    /// First generated token observed. `a` = microseconds since queued
+    /// when known, else 0.
+    FirstToken,
+    /// Request exited the scheduler. `a` = generated tokens, `b` = 0 clean /
+    /// 1 errored / 2 cancelled.
+    Finished,
+    /// A device call left for the backend. `a` = 0 prefill / 1 decode,
+    /// `b` = tokens in the call.
+    SubmitCall,
+    /// A device call came back. `a` = 0 ok / 1 error.
+    ReapCall,
+    /// A failed call was rolled back and re-submitted. `a` = attempt number,
+    /// `b` = backoff milliseconds.
+    Retry,
+    /// Retry budget exhausted or fatal error: the request exits with a
+    /// structured error. `a` = attempts used. A second, shard-level form
+    /// marks a device tier tripping its sticky degraded bypass:
+    /// `seq` = 0 (no single sequence at fault), `shard` = device ordinal,
+    /// `a` = consecutive failures, `b` = 1.
+    Quarantine,
+    /// Client cancelled (disconnect). `a` = tokens generated so far.
+    Cancelled,
+    /// Deadline exceeded. `a` = tokens generated so far.
+    Deadline,
+    /// Device residency tier served a decode from a resident image.
+    /// `seq` = KV cache id, `a` = reconciled bytes.
+    ResidencyHit,
+    /// Residency miss: full image upload. `seq` = KV cache id,
+    /// `a` = image bytes, `b` = 1 on the degraded bypass path, else 0.
+    ResidencyMiss,
+    /// LRU spill of a resident image to host scratch. `seq` = KV cache id,
+    /// `a` = bytes.
+    Spill,
+    /// Donated decode step kept the image resident. `seq` = KV cache id,
+    /// `a` = resident bytes kept on-device.
+    Donation,
+    /// A prefix snapshot was adopted by a new sequence. `seq` = the tree's
+    /// LRU clock tick, `shard` = the snapshot's home shard, `a` = matched
+    /// tokens, `b` = snapshot bytes.
+    PrefixAdopt,
+    /// A full-window boundary froze pages into the prefix cache.
+    /// `seq` = the tree's LRU clock tick, `shard` = home shard,
+    /// `a` = snapshot tokens, `b` = snapshot bytes.
+    PrefixFreeze,
+    /// Capacity eviction from the prefix cache. `seq` = the tree's LRU
+    /// clock tick, `a` = evicted bytes.
+    PrefixEvict,
+    /// A cold page was demoted to int8. `seq` = KV cache id, `a` = layer,
+    /// `b` = page index.
+    QuantDemote,
+    /// A Q8 page was promoted back to f32 (write / un-share).
+    /// `seq` = KV cache id, `a` = page index, `b` = 1 when the promotion
+    /// CoW-copied a shared page, 0 for an in-place owned promote.
+    QuantPromote,
+}
+
+/// Every kind, in discriminant order (indexes the per-kind sampling
+/// counters; keep in sync with the enum).
+pub const KINDS: [EventKind; 21] = [
+    EventKind::Queued,
+    EventKind::Admitted,
+    EventKind::Placed,
+    EventKind::PrefillWindow,
+    EventKind::FirstToken,
+    EventKind::Finished,
+    EventKind::SubmitCall,
+    EventKind::ReapCall,
+    EventKind::Retry,
+    EventKind::Quarantine,
+    EventKind::Cancelled,
+    EventKind::Deadline,
+    EventKind::ResidencyHit,
+    EventKind::ResidencyMiss,
+    EventKind::Spill,
+    EventKind::Donation,
+    EventKind::PrefixAdopt,
+    EventKind::PrefixFreeze,
+    EventKind::PrefixEvict,
+    EventKind::QuantDemote,
+    EventKind::QuantPromote,
+];
+
+impl EventKind {
+    /// Wire name (kebab-case), used by `op:trace` filters and dumps.
+    pub fn as_str(self) -> &'static str {
+        match self {
+            EventKind::Queued => "queued",
+            EventKind::Admitted => "admitted",
+            EventKind::Placed => "placed",
+            EventKind::PrefillWindow => "prefill-window",
+            EventKind::FirstToken => "first-token",
+            EventKind::Finished => "finished",
+            EventKind::SubmitCall => "submit-call",
+            EventKind::ReapCall => "reap-call",
+            EventKind::Retry => "retry",
+            EventKind::Quarantine => "quarantine",
+            EventKind::Cancelled => "cancelled",
+            EventKind::Deadline => "deadline",
+            EventKind::ResidencyHit => "residency-hit",
+            EventKind::ResidencyMiss => "residency-miss",
+            EventKind::Spill => "spill",
+            EventKind::Donation => "donation",
+            EventKind::PrefixAdopt => "prefix-adopt",
+            EventKind::PrefixFreeze => "prefix-freeze",
+            EventKind::PrefixEvict => "prefix-evict",
+            EventKind::QuantDemote => "quant-demote",
+            EventKind::QuantPromote => "quant-promote",
+        }
+    }
+
+    /// Inverse of [`Self::as_str`] (`None` for unknown names).
+    pub fn parse(s: &str) -> Option<Self> {
+        KINDS.iter().copied().find(|k| k.as_str() == s)
+    }
+}
+
+/// One recorded lifecycle edge. Fixed-size and `Copy`: recording never
+/// allocates.
+#[derive(Clone, Copy, Debug)]
+pub struct Event {
+    /// Global monotonic event sequence number (1-based); the `since`
+    /// watermark of `op:trace` filters on this.
+    pub at: u64,
+    /// Microseconds since the recorder was created (monotonic clock).
+    pub t_us: u64,
+    /// Request id for scheduler lifecycle kinds; KV cache id (or other
+    /// kind-specific key) for runtime kinds.
+    pub seq: u64,
+    /// Shard the event happened on (0 when not shard-specific).
+    pub shard: u16,
+    pub kind: EventKind,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub a: i64,
+    /// Kind-specific payload (see [`EventKind`]).
+    pub b: i64,
+}
+
+impl Event {
+    /// Wire form for `op:trace` dumps.
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("at", (self.at as i64).into()),
+            ("t_us", (self.t_us as i64).into()),
+            ("seq", (self.seq as i64).into()),
+            ("shard", (self.shard as i64).into()),
+            ("kind", self.kind.as_str().into()),
+            ("a", self.a.into()),
+            ("b", self.b.into()),
+        ])
+    }
+}
+
+/// `op:trace` query: every field is optional and conjunctive.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct TraceFilter {
+    /// Only events with this `seq` key.
+    pub seq: Option<u64>,
+    /// Only events of this kind.
+    pub kind: Option<EventKind>,
+    /// Only events with `at > since` (resume from a watermark).
+    pub since: Option<u64>,
+    /// Keep at most the LAST `limit` matching events (0 = unlimited).
+    pub limit: usize,
+}
+
+impl TraceFilter {
+    fn matches(&self, e: &Event) -> bool {
+        self.seq.map_or(true, |s| e.seq == s)
+            && self.kind.map_or(true, |k| e.kind == k)
+            && self.since.map_or(true, |w| e.at > w)
+    }
+}
+
+/// Fixed-capacity drop-oldest ring. `buf` is preallocated at configure time;
+/// once full, `head` walks the buffer circularly overwriting the oldest
+/// slot.
+struct Ring {
+    buf: Vec<Event>,
+    cap: usize,
+    /// Next write index once `buf.len() == cap`.
+    head: usize,
+}
+
+impl Ring {
+    fn with_capacity(cap: usize) -> Self {
+        let cap = cap.max(16);
+        Self { buf: Vec::with_capacity(cap), cap, head: 0 }
+    }
+
+    /// Append, overwriting the oldest event when full. Returns true when an
+    /// event was overwritten (counted as dropped).
+    fn push(&mut self, e: Event) -> bool {
+        if self.buf.len() < self.cap {
+            self.buf.push(e);
+            return false;
+        }
+        self.buf[self.head] = e;
+        self.head = (self.head + 1) % self.cap;
+        true
+    }
+
+    /// Visit events oldest-first.
+    fn iter_ordered(&self) -> impl Iterator<Item = &Event> {
+        let (older, newer) = self.buf.split_at(self.head);
+        newer.iter().chain(older.iter())
+    }
+}
+
+/// The process-global flight recorder. See the module docs for the
+/// guarantees; obtain the singleton via [`recorder`].
+pub struct FlightRecorder {
+    epoch: Instant,
+    ring: Mutex<Ring>,
+    next_at: AtomicU64,
+    dropped: AtomicU64,
+    sample_every: AtomicU64,
+    /// Per-kind sampling counters (indexed by discriminant).
+    seen: [AtomicU64; KINDS.len()],
+}
+
+impl FlightRecorder {
+    fn new(capacity: usize, sample_every: u64) -> Self {
+        Self {
+            epoch: Instant::now(),
+            ring: Mutex::new(Ring::with_capacity(capacity)),
+            next_at: AtomicU64::new(0),
+            dropped: AtomicU64::new(0),
+            sample_every: AtomicU64::new(sample_every),
+            seen: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    /// Re-arm the recorder: set the sampling stride (`0` disables recording,
+    /// `1` records everything, `N` keeps every Nth event per kind) and
+    /// reallocate the ring to `capacity` events. The one allocation happens
+    /// here; recording afterwards is allocation-free. Existing events are
+    /// discarded; the `at` sequence and `trace_dropped_total` keep counting.
+    pub fn configure(&self, sample_every: usize, capacity: usize) {
+        self.sample_every.store(sample_every as u64, Ordering::Relaxed);
+        let mut g = lock_ring(&self.ring);
+        *g = Ring::with_capacity(capacity);
+    }
+
+    /// Record one event. Never blocks and never allocates: a contended ring
+    /// lock drops the event (counted in `trace_dropped_total`), a full ring
+    /// overwrites the oldest event (also counted).
+    #[inline]
+    pub fn record(&self, kind: EventKind, seq: u64, shard: usize, a: i64, b: i64) {
+        let every = self.sample_every.load(Ordering::Relaxed);
+        if every == 0 {
+            return;
+        }
+        if every > 1 {
+            let n = self.seen[kind as usize].fetch_add(1, Ordering::Relaxed);
+            if n % every != 0 {
+                return;
+            }
+        }
+        let mut g = match self.ring.try_lock() {
+            Ok(g) => g,
+            Err(TryLockError::Poisoned(p)) => p.into_inner(),
+            Err(TryLockError::WouldBlock) => {
+                self.dropped.fetch_add(1, Ordering::Relaxed);
+                return;
+            }
+        };
+        let at = self.next_at.fetch_add(1, Ordering::Relaxed) + 1;
+        let t_us = self.epoch.elapsed().as_micros() as u64;
+        let overwrote = g.push(Event { at, t_us, seq, shard: shard as u16, kind, a, b });
+        drop(g);
+        if overwrote {
+            self.dropped.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Events dropped so far: ring overwrites + lock-contention drops.
+    /// Exposed on `op:ping` as `trace_dropped_total`.
+    pub fn dropped_total(&self) -> u64 {
+        self.dropped.load(Ordering::Relaxed)
+    }
+
+    /// The `at` of the most recently issued event (0 before any). A client
+    /// resuming a trace passes this back as `since`.
+    pub fn watermark(&self) -> u64 {
+        self.next_at.load(Ordering::Relaxed)
+    }
+
+    /// Dump matching events oldest-first (at most `filter.limit` newest when
+    /// the limit is nonzero).
+    pub fn snapshot(&self, filter: &TraceFilter) -> Vec<Event> {
+        let g = lock_ring(&self.ring);
+        let mut out: Vec<Event> = g.iter_ordered().filter(|e| filter.matches(e)).copied().collect();
+        if filter.limit > 0 && out.len() > filter.limit {
+            out.drain(..out.len() - filter.limit);
+        }
+        out
+    }
+
+    /// All events for one request id, oldest-first — the per-request phase
+    /// breakdown a `trace: true` generate attaches to its reply.
+    pub fn phases_for(&self, seq: u64) -> Vec<Event> {
+        self.snapshot(&TraceFilter { seq: Some(seq), ..TraceFilter::default() })
+    }
+}
+
+fn lock_ring(m: &Mutex<Ring>) -> std::sync::MutexGuard<'_, Ring> {
+    m.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+static GLOBAL: OnceLock<FlightRecorder> = OnceLock::new();
+
+/// The process-global recorder (created on first use with the default
+/// capacity and sample-every 1; `run_server` re-arms it from `ServeConfig`).
+pub fn recorder() -> &'static FlightRecorder {
+    GLOBAL.get_or_init(|| FlightRecorder::new(DEFAULT_CAPACITY, 1))
+}
+
+/// Record one event on the global recorder — the one-liner the
+/// instrumentation hooks call.
+#[inline]
+pub fn record(kind: EventKind, seq: u64, shard: usize, a: i64, b: i64) {
+    recorder().record(kind, seq, shard, a, b);
+}
+
+/// Serializes tests (and benches) that reconfigure the global recorder —
+/// sampling stride and ring capacity are process-global, so concurrent
+/// `cargo test` threads that toggle them must take this guard first.
+#[doc(hidden)]
+pub fn test_guard() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: Mutex<()> = Mutex::new(());
+    LOCK.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kind_names_round_trip() {
+        for k in KINDS {
+            assert_eq!(EventKind::parse(k.as_str()), Some(k), "{}", k.as_str());
+        }
+        assert_eq!(EventKind::parse("no-such-kind"), None);
+        // discriminants index the sampling counters: they must be dense
+        for (i, k) in KINDS.iter().enumerate() {
+            assert_eq!(*k as usize, i);
+        }
+    }
+
+    #[test]
+    fn ring_drops_oldest_and_counts() {
+        let r = FlightRecorder::new(16, 1);
+        for i in 0..40u64 {
+            r.record(EventKind::Queued, i, 0, 0, 0);
+        }
+        assert_eq!(r.dropped_total(), 24, "40 events into 16 slots drop 24");
+        let ev = r.snapshot(&TraceFilter::default());
+        assert_eq!(ev.len(), 16);
+        // the survivors are the NEWEST 16, oldest-first
+        assert_eq!(ev.first().unwrap().seq, 24);
+        assert_eq!(ev.last().unwrap().seq, 39);
+        let ats: Vec<u64> = ev.iter().map(|e| e.at).collect();
+        assert!(ats.windows(2).all(|w| w[0] < w[1]), "dump must be at-ordered");
+        assert_eq!(r.watermark(), 40);
+    }
+
+    #[test]
+    fn filters_by_seq_kind_since_and_limit() {
+        let r = FlightRecorder::new(64, 1);
+        r.record(EventKind::Queued, 7, 0, 0, 0);
+        r.record(EventKind::Admitted, 7, 0, 0, 0);
+        r.record(EventKind::Queued, 8, 0, 0, 0);
+        let w = r.watermark();
+        r.record(EventKind::Finished, 7, 0, 5, 0);
+        r.record(EventKind::Finished, 8, 0, 3, 0);
+
+        let f7 = r.snapshot(&TraceFilter { seq: Some(7), ..Default::default() });
+        assert_eq!(f7.len(), 3);
+        assert!(f7.iter().all(|e| e.seq == 7));
+
+        let fins =
+            r.snapshot(&TraceFilter { kind: Some(EventKind::Finished), ..Default::default() });
+        assert_eq!(fins.len(), 2);
+
+        let after = r.snapshot(&TraceFilter { since: Some(w), ..Default::default() });
+        assert_eq!(after.len(), 2, "watermark resume returns only newer events");
+        assert!(after.iter().all(|e| e.at > w));
+
+        let last2 = r.snapshot(&TraceFilter { limit: 2, ..Default::default() });
+        assert_eq!(last2.len(), 2);
+        assert_eq!(last2[1].seq, 8, "limit keeps the newest events");
+
+        // conjunctive: seq AND kind
+        let q7 = r.snapshot(&TraceFilter {
+            seq: Some(7),
+            kind: Some(EventKind::Queued),
+            ..Default::default()
+        });
+        assert_eq!(q7.len(), 1);
+    }
+
+    #[test]
+    fn sampling_keeps_every_nth_per_kind() {
+        let _g = test_guard();
+        let r = FlightRecorder::new(256, 3);
+        for i in 0..9u64 {
+            r.record(EventKind::Donation, i, 0, 0, 0);
+        }
+        // a rare kind is NOT starved by the chatty one: its own counter
+        // starts fresh, so its first occurrence records
+        r.record(EventKind::Quarantine, 99, 0, 0, 0);
+        let d = r.snapshot(&TraceFilter { kind: Some(EventKind::Donation), ..Default::default() });
+        assert_eq!(d.len(), 3, "every 3rd of 9 donations");
+        let q =
+            r.snapshot(&TraceFilter { kind: Some(EventKind::Quarantine), ..Default::default() });
+        assert_eq!(q.len(), 1, "per-kind counters: first quarantine always records");
+    }
+
+    #[test]
+    fn sample_every_zero_disables() {
+        let r = FlightRecorder::new(64, 0);
+        r.record(EventKind::Queued, 1, 0, 0, 0);
+        assert!(r.snapshot(&TraceFilter::default()).is_empty());
+        assert_eq!(r.dropped_total(), 0, "disabled recording is not 'dropping'");
+        r.configure(1, 64);
+        r.record(EventKind::Queued, 2, 0, 0, 0);
+        assert_eq!(r.snapshot(&TraceFilter::default()).len(), 1);
+    }
+
+    #[test]
+    fn event_json_shape() {
+        let e = Event {
+            at: 3,
+            t_us: 250,
+            seq: 42,
+            shard: 1,
+            kind: EventKind::Placed,
+            a: 64,
+            b: 0,
+        };
+        let j = e.to_json();
+        assert_eq!(j.usize_of("at"), Some(3));
+        assert_eq!(j.usize_of("seq"), Some(42));
+        assert_eq!(j.usize_of("shard"), Some(1));
+        assert_eq!(j.str_of("kind"), Some("placed"));
+        assert_eq!(j.f64_of("a"), Some(64.0));
+    }
+
+    #[test]
+    fn recorder_is_send_sync() {
+        fn assert_send_sync<T: Send + Sync>() {}
+        assert_send_sync::<FlightRecorder>();
+        assert_send_sync::<Event>();
+    }
+}

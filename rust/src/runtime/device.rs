@@ -41,6 +41,7 @@ use anyhow::Result;
 
 use super::kv::KvCache;
 use super::transfer::ScratchPool;
+use crate::obs::{self, EventKind};
 
 /// One sequence's resident device K/V image (`[L, H, C, Dh]` f32 each side),
 /// stamped with the cache state it equals.
@@ -195,6 +196,9 @@ impl DeviceTier {
                  failures; serving via the host/scratch path",
                 self.consec_failures
             );
+            // shard-level quarantine (seq 0 = no single sequence at fault):
+            // the trace shows WHEN the shard left the residency fast path
+            obs::record(EventKind::Quarantine, 0, self.device, self.consec_failures as i64, 1);
             self.degraded = true;
             self.drop_entries();
         }
@@ -290,6 +294,13 @@ impl DeviceTier {
             // behavior. The arena pages stay the source of truth, so this is
             // always correct, just slower.
             self.stats.misses += 1;
+            obs::record(
+                EventKind::ResidencyMiss,
+                cache.id(),
+                self.device,
+                image_bytes as i64,
+                1,
+            );
             let (k_b, v_b) = {
                 let img = pool.gather(cache);
                 (
@@ -319,6 +330,13 @@ impl DeviceTier {
                 };
                 self.entries[i].last_sync_bytes = uploaded;
                 self.stats.hits += 1;
+                obs::record(
+                    EventKind::ResidencyHit,
+                    cache.id(),
+                    self.device,
+                    uploaded as i64,
+                    0,
+                );
                 self.stats.reconciled_bytes += uploaded;
                 self.stats.uploaded_bytes += uploaded;
                 self.touch(i);
@@ -335,6 +353,13 @@ impl DeviceTier {
                 self.entries[i].sync_gen = cache.sync_gen();
                 self.entries[i].last_sync_bytes = image_bytes as u64;
                 self.stats.misses += 1;
+                obs::record(
+                    EventKind::ResidencyMiss,
+                    cache.id(),
+                    self.device,
+                    image_bytes as i64,
+                    0,
+                );
                 self.stats.uploaded_bytes += image_bytes as u64;
                 self.touch(i);
                 // resident again: the scratch copy is redundant staging
@@ -345,6 +370,13 @@ impl DeviceTier {
         // host-hit or cold: gather (incremental when the scratch stamp
         // matches — e.g. right after a spill), upload, promote
         self.stats.misses += 1;
+        obs::record(
+            EventKind::ResidencyMiss,
+            cache.id(),
+            self.device,
+            image_bytes as i64,
+            0,
+        );
         let retain = self.capacity_bytes > 0 && image_bytes <= self.capacity_bytes;
         if retain {
             // free room BEFORE the upload, so peak device occupancy stays
@@ -420,6 +452,13 @@ impl DeviceTier {
         self.stats.donations += 1;
         self.release_quietly(cache.id());
         let bytes = k.on_device_size_bytes() + v.on_device_size_bytes();
+        obs::record(
+            EventKind::Donation,
+            cache.id(),
+            self.device,
+            bytes as i64,
+            0,
+        );
         if self.capacity_bytes == 0 || bytes > self.capacity_bytes {
             return Ok(());
         }
@@ -489,6 +528,13 @@ impl DeviceTier {
         }
         self.stats.spills += 1;
         self.stats.spill_bytes_d2h += e.bytes as u64;
+        obs::record(
+            EventKind::Spill,
+            e.cache_id,
+            self.device,
+            e.bytes as i64,
+            0,
+        );
         let mut k = vec![0.0f32; e.elems];
         let mut v = vec![0.0f32; e.elems];
         e.k.copy_to_host_partial(&mut k, 0)?;

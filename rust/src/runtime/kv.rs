@@ -53,6 +53,7 @@ use anyhow::{bail, Result};
 
 use super::arena::{KvArena, Page, PageData, Precision, SharedPage, PAGE_SLOTS};
 use super::error::CallError;
+use crate::obs::{self, EventKind};
 
 /// Unique-per-instance cache ids: the scratch-pool key that makes a dense
 /// image attributable to exactly one cache (clones and resets get fresh ids).
@@ -146,6 +147,7 @@ impl PageEntry {
 fn owned_page<'a>(
     arena: &KvArena,
     row_width: usize,
+    cache_id: u64,
     table: &'a mut [PageEntry],
     pi: usize,
 ) -> Result<&'a mut Page> {
@@ -169,7 +171,10 @@ fn owned_page<'a>(
                         copy.k.copy_from_slice(&p.k);
                         copy.v.copy_from_slice(&p.v);
                     }
-                    PageData::Q8(q) => q.decode_into(&mut copy),
+                    PageData::Q8(q) => {
+                        q.decode_into(&mut copy);
+                        obs::record(EventKind::QuantPromote, cache_id, 0, pi as i64, 1);
+                    }
                 }
                 arena.note_cow();
                 PageData::F32(copy)
@@ -185,6 +190,7 @@ fn owned_page<'a>(
             unreachable!("entry is owned (un-shared above) and Q8 (checked)");
         };
         q.decode_into(&mut promoted);
+        obs::record(EventKind::QuantPromote, cache_id, 0, pi as i64, 0);
         let old = std::mem::replace(&mut table[pi], PageEntry::Owned(PageData::F32(promoted)));
         let PageEntry::Owned(data) = old else {
             unreachable!("owned checked above");
@@ -446,7 +452,8 @@ impl KvCache {
             let slot = len + i;
             let sp = slot % PAGE_SLOTS;
             let run = (PAGE_SLOTS - sp).min(n_valid - i);
-            let page = owned_page(&self.arena, rw, &mut self.pages[layer], slot / PAGE_SLOTS)?;
+            let page =
+                owned_page(&self.arena, rw, self.id, &mut self.pages[layer], slot / PAGE_SLOTS)?;
             for hh in 0..h {
                 let src = (hh * w + i) * dh;
                 let dst = (hh * PAGE_SLOTS + sp) * dh;
@@ -507,7 +514,7 @@ impl KvCache {
         // failure partway) never leaves a half-moved layer
         for (dst_i, &src_i) in keep.iter().enumerate() {
             if dst_i != src_i {
-                owned_page(&self.arena, rw, &mut self.pages[layer], dst_i / PAGE_SLOTS)?;
+                owned_page(&self.arena, rw, self.id, &mut self.pages[layer], dst_i / PAGE_SLOTS)?;
             }
         }
         for (dst_i, &src_i) in keep.iter().enumerate() {
@@ -626,7 +633,8 @@ impl KvCache {
             while slot < new_len {
                 let sp = slot % PAGE_SLOTS;
                 let run = (PAGE_SLOTS - sp).min(new_len - slot);
-                let page = owned_page(&self.arena, rw, &mut self.pages[l], slot / PAGE_SLOTS)?;
+                let page =
+                    owned_page(&self.arena, rw, self.id, &mut self.pages[l], slot / PAGE_SLOTS)?;
                 for hh in 0..h {
                     let src = ((l * h + hh) * c + slot) * dh;
                     let dst = (hh * PAGE_SLOTS + sp) * dh;
@@ -864,6 +872,7 @@ impl KvCache {
         let mut q =
             self.arena.alloc_q8(rw, self.h, false).expect("unchecked q8 alloc cannot fail");
         q.encode(self.pages[layer][pi].page().expect_f32(), valid_slots);
+        obs::record(EventKind::QuantDemote, self.id, 0, layer as i64, pi as i64);
         let old =
             std::mem::replace(&mut self.pages[layer][pi], PageEntry::Owned(PageData::Q8(q)));
         let PageEntry::Owned(data) = old else {

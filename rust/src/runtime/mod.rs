@@ -38,6 +38,19 @@
 //! `device_resident_bytes` / `residency_hits` / `spills` / `donations`),
 //! which the serving admission gate and `op:stats` consume; per-shard
 //! gauges come from [`Runtime::shard_stats`].
+//!
+//! # Observability
+//!
+//! Beyond the cumulative counters, the storage tiers record structured
+//! events into the process-global flight recorder ([`crate::obs`]), keyed
+//! by **KV cache id** (`KvCache::id`, unlike the scheduler's request-keyed
+//! lifecycle events): `residency-hit` / `residency-miss` / `spill` /
+//! `donation` from [`device::DeviceTier`], `prefix-adopt` /
+//! `prefix-freeze` / `prefix-evict` from [`prefix::PrefixCache`],
+//! `quant-demote` / `quant-promote` from [`kv::KvCache`]'s tiered
+//! compression, and a shard-level `quarantine` when a tier trips its
+//! sticky degraded mode. Recording is non-blocking and byte-invisible to
+//! generation — `op:trace` exposes the ring.
 
 pub mod arena;
 pub mod device;

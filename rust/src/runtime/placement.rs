@@ -63,6 +63,19 @@ pub enum PlacementKind {
     HostOnly,
 }
 
+impl PlacementKind {
+    /// Dense code carried as the flight recorder's `placed` event payload
+    /// (`b` field): 0 local-prefix, 1 least-loaded, 2 spillover, 3 host-only.
+    pub fn code(self) -> i64 {
+        match self {
+            PlacementKind::LocalPrefix => 0,
+            PlacementKind::LeastLoaded => 1,
+            PlacementKind::Spillover => 2,
+            PlacementKind::HostOnly => 3,
+        }
+    }
+}
+
 /// A placement decision: shard index plus the rule that produced it.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct Placement {

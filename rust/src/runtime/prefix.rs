@@ -34,6 +34,7 @@ use anyhow::Result;
 
 use super::arena::SharedPage;
 use super::kv::KvCache;
+use crate::obs::{self, EventKind};
 
 /// A frozen cache state at one prefill-chunk boundary: shared page handles
 /// plus the occupancy bookkeeping a fork needs to resume from it.
@@ -231,6 +232,13 @@ impl PrefixCache {
         let snap = node.snap.clone().expect("snapshot verified by the read-only pass");
         self.stats.hits += 1;
         self.stats.tokens_reused += best_pos as u64;
+        obs::record(
+            EventKind::PrefixAdopt,
+            clock,
+            snap.home_shard(),
+            best_pos as i64,
+            snap.bytes() as i64,
+        );
         Some((best_pos, snap))
     }
 
@@ -291,6 +299,13 @@ impl PrefixCache {
             node.last_used = clock;
         }
         self.resident_bytes += snap.bytes();
+        obs::record(
+            EventKind::PrefixFreeze,
+            clock,
+            snap.home_shard(),
+            tokens.len() as i64,
+            snap.bytes() as i64,
+        );
         node.snap = Some(snap);
         self.stats.inserts += 1;
         self.evict_to_capacity();
@@ -310,6 +325,7 @@ impl PrefixCache {
             };
             self.resident_bytes -= freed;
             self.stats.evictions += 1;
+            obs::record(EventKind::PrefixEvict, self.clock, 0, freed as i64, 0);
         }
     }
 }

@@ -47,6 +47,7 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::obs::{self, EventKind};
 use crate::runtime::classify;
 
 /// How long a round blocks for a completion when calls are in flight but
@@ -265,6 +266,23 @@ pub trait SeqBackend {
     fn shard_health(&self) -> Vec<ShardHealth> {
         Vec::new()
     }
+    /// The shard [`Self::adopt_prefix`] placed this sequence on — stamped
+    /// into the sequence's flight-recorder events (`placed`, prefill/decode
+    /// submits) so a trace shows which device served it. Default 0
+    /// (single-shard backends).
+    fn seq_shard(&self, seq: &Self::Seq) -> usize {
+        let _ = seq;
+        0
+    }
+
+    /// Dense code of the placement rule that chose the sequence's shard
+    /// ([`crate::runtime::placement::PlacementKind::code`]) — the `b`
+    /// payload of the flight recorder's `placed` event. Default 0
+    /// (backends without a placement policy).
+    fn placement_code(&self, seq: &Self::Seq) -> i64 {
+        let _ = seq;
+        0
+    }
     /// Non-blocking prefill: ownership of `seq` moves into the call and
     /// comes back through [`Self::reap`] (or immediately, via
     /// [`Submitted::Done`]). The default shim runs [`Self::prefill_chunk`]
@@ -378,6 +396,7 @@ impl<S> Active<S> {
     /// state is `Ready`) is what returns the sequence's arena pages.
     fn into_cancelled(self) -> Finished {
         let now = Instant::now();
+        obs::record(EventKind::Cancelled, self.id, 0, self.generated.len() as i64, 0);
         Finished {
             id: self.id,
             tokens: self.generated,
@@ -522,6 +541,7 @@ impl<B: SeqBackend> Scheduler<B> {
         let id = self.next_id;
         self.next_id += 1;
         let now = Instant::now();
+        obs::record(EventKind::Queued, id, 0, prompt.len() as i64, max_new as i64);
         self.queue.push_back(Pending {
             id,
             prompt,
@@ -592,6 +612,17 @@ impl<B: SeqBackend> Scheduler<B> {
                 }
             }
         }
+        // one choke point records EVERY scheduler exit (clean, errored,
+        // cancelled, deadline, never-admitted), so a trace always ends in a
+        // `finished` event
+        for f in &done {
+            let outcome = if f.cancelled {
+                2
+            } else {
+                i64::from(f.error.is_some())
+            };
+            obs::record(EventKind::Finished, f.id, 0, f.tokens.len() as i64, outcome);
+        }
         done
     }
 
@@ -610,6 +641,7 @@ impl<B: SeqBackend> Scheduler<B> {
         for c in self.backend.reap(wait) {
             reaped += 1;
             self.inflight = self.inflight.saturating_sub(1);
+            obs::record(EventKind::ReapCall, c.ticket, 0, i64::from(c.result.is_err()), 0);
             let Some(i) = self.active.iter().position(|a| a.id == c.ticket) else {
                 continue; // sequence already gone; drop the returned state
             };
@@ -622,6 +654,13 @@ impl<B: SeqBackend> Scheduler<B> {
                 Some(seq) => self.settle(i, seq, c.result, done),
                 None => {
                     self.faults.quarantined += 1;
+                    obs::record(
+                        EventKind::Quarantine,
+                        c.ticket,
+                        0,
+                        self.active[i].attempts as i64,
+                        0,
+                    );
                     let e = c
                         .result
                         .err()
@@ -661,6 +700,7 @@ impl<B: SeqBackend> Scheduler<B> {
                 });
             } else if expired(&p) {
                 self.faults.deadline_exceeded += 1;
+                obs::record(EventKind::Deadline, p.id, 0, 0, 0);
                 done.push(Finished {
                     id: p.id,
                     tokens: Vec::new(),
@@ -717,6 +757,13 @@ impl<B: SeqBackend> Scheduler<B> {
             };
             if expired {
                 self.faults.deadline_exceeded += 1;
+                obs::record(
+                    EventKind::Deadline,
+                    self.active[i].id,
+                    0,
+                    self.active[i].generated.len() as i64,
+                    0,
+                );
                 let msg = match self.active[i].seq {
                     Slot::Ready(_) => "deadline exceeded".to_string(),
                     Slot::InFlight => {
@@ -767,6 +814,21 @@ impl<B: SeqBackend> Scheduler<B> {
                         .backend
                         .adopt_prefix(&mut seq, &p.prompt, p.allow_prefix)
                         .min(p.prompt.len());
+                    let shard = self.backend.seq_shard(&seq);
+                    obs::record(
+                        EventKind::Admitted,
+                        p.id,
+                        shard,
+                        (p.prompt.len() - matched) as i64,
+                        matched as i64,
+                    );
+                    obs::record(
+                        EventKind::Placed,
+                        p.id,
+                        shard,
+                        matched as i64,
+                        self.backend.placement_code(&seq),
+                    );
                     self.active.push(Active {
                         id: p.id,
                         prompt: p.prompt,
@@ -853,15 +915,25 @@ impl<B: SeqBackend> Scheduler<B> {
                 let Slot::Ready(seq) = std::mem::replace(&mut a.seq, Slot::InFlight) else {
                     unreachable!("submit candidates hold a ready slot");
                 };
+                let shard = backend.seq_shard(&seq);
                 if a.pos < a.prompt.len() {
                     let start = a.pos;
                     let end = (a.pos + window).min(a.prompt.len());
                     // pos advances at submit: on failure settle rolls it
                     // back to submit_base, and nothing reads pos in flight
                     a.pos = end;
+                    obs::record(
+                        EventKind::PrefillWindow,
+                        ticket,
+                        shard,
+                        start as i64,
+                        (end - start) as i64,
+                    );
+                    obs::record(EventKind::SubmitCall, ticket, shard, 0, (end - start) as i64);
                     backend.submit_prefill(ticket, seq, &a.prompt[start..end])
                 } else {
                     let n = quantum.min(a.max_new - a.generated.len());
+                    obs::record(EventKind::SubmitCall, ticket, shard, 1, n as i64);
                     backend.submit_decode(ticket, seq, n)
                 }
             };
@@ -874,6 +946,13 @@ impl<B: SeqBackend> Scheduler<B> {
                         // thread); a backend may still hand back seq-less
                         // failures — quarantine them like reap does
                         self.faults.quarantined += 1;
+                        obs::record(
+                            EventKind::Quarantine,
+                            self.active[i].id,
+                            0,
+                            self.active[i].attempts as i64,
+                            0,
+                        );
                         let e = cd
                             .result
                             .err()
@@ -916,7 +995,15 @@ impl<B: SeqBackend> Scheduler<B> {
                     a.attempts = 0;
                     a.not_before = None;
                     if a.t_first.is_none() {
-                        a.t_first = Some(d.t_first.unwrap_or(now));
+                        let tf = d.t_first.unwrap_or(now);
+                        a.t_first = Some(tf);
+                        obs::record(
+                            EventKind::FirstToken,
+                            a.id,
+                            0,
+                            tf.saturating_duration_since(a.t_submit).as_micros() as i64,
+                            0,
+                        );
                     }
                     if let Some(prev) = a.t_last {
                         if !d.tokens.is_empty() {
@@ -950,10 +1037,24 @@ impl<B: SeqBackend> Scheduler<B> {
                     let shift = (a.attempts - 1).min(10);
                     let backoff = self.retry.backoff.saturating_mul(1u32 << shift);
                     a.not_before = Some(Instant::now() + backoff);
+                    obs::record(
+                        EventKind::Retry,
+                        a.id,
+                        0,
+                        a.attempts as i64,
+                        backoff.as_millis() as i64,
+                    );
                     self.backend.recover(&mut seq, pos);
                     self.active[i].seq = Slot::Ready(seq);
                 } else {
                     self.faults.quarantined += 1;
+                    obs::record(
+                        EventKind::Quarantine,
+                        self.active[i].id,
+                        0,
+                        self.active[i].attempts as i64,
+                        0,
+                    );
                     let a = self.active.remove(i);
                     let attempts = a.attempts;
                     let mut msg = format!("{e:#}");
@@ -1873,6 +1974,68 @@ mod tests {
                 prop_assert!(
                     a.len() == trace.iter().filter(|&&(_, m)| m > 0).count(),
                     "each admitted sequence must record exactly one checksum"
+                );
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn tracing_is_byte_invisible_to_generation() {
+        // property: for the same seeded request trace, running with the
+        // flight recorder fully on (every event sampled) and fully off
+        // (sampling 0) yields identical per-request token streams and
+        // byte-identical final KV state — recording observes generation,
+        // never perturbs it
+        let _guard = crate::obs::test_guard();
+        struct Restore;
+        impl Drop for Restore {
+            fn drop(&mut self) {
+                crate::obs::recorder().configure(1, crate::obs::DEFAULT_CAPACITY);
+            }
+        }
+        let _restore = Restore;
+        fn run_once(trace: &[(usize, usize)]) -> (BTreeMap<u64, Vec<i32>>, BTreeMap<u64, u64>) {
+            let sums: KvSums = KvSums::default();
+            let mut tokens: BTreeMap<u64, Vec<i32>> = BTreeMap::new();
+            let backend =
+                TraceBackend { arena: KvArena::new(), sums: Arc::clone(&sums), next_tag: 0 };
+            let mut s = Scheduler::new(backend, 8, 4, 3, 64);
+            for &(p, m) in trace {
+                s.submit(vec![1; p], m, CancelToken::new()).unwrap();
+            }
+            let mut guard = 0;
+            while s.has_work() && guard < 10_000 {
+                for f in s.step() {
+                    assert!(f.error.is_none(), "unexpected error: {:?}", f.error);
+                    tokens.insert(f.id, f.tokens);
+                }
+                guard += 1;
+            }
+            assert!(!s.has_work(), "run did not drain");
+            drop(s);
+            let sums = sums.lock().unwrap().clone();
+            (tokens, sums)
+        }
+        PropRunner::new(10).run(
+            |rng| {
+                let n_req = 2 + rng.below(5) as usize;
+                (0..n_req)
+                    .map(|_| (1 + rng.below(40) as usize, rng.below(12) as usize))
+                    .collect::<Vec<(usize, usize)>>()
+            },
+            |trace| {
+                crate::obs::recorder().configure(1, crate::obs::DEFAULT_CAPACITY);
+                let (on_tokens, on_sums) = run_once(trace);
+                crate::obs::recorder().configure(0, crate::obs::DEFAULT_CAPACITY);
+                let (off_tokens, off_sums) = run_once(trace);
+                prop_assert!(
+                    on_tokens == off_tokens,
+                    "token streams diverge with tracing on: {on_tokens:?} vs {off_tokens:?}"
+                );
+                prop_assert!(
+                    on_sums == off_sums,
+                    "final KV state diverges with tracing on: {on_sums:?} vs {off_sums:?}"
                 );
                 Ok(())
             },

@@ -3,14 +3,33 @@
 //! depth, cancellation and
 //! post-shutdown rejection counters, and the runtime transfer counters
 //! (upload/download volume, incremental-gather traffic). Exported over the
-//! wire via `op:stats`.
+//! wire via `op:stats` (JSON) and `op:metrics` (Prometheus text, see
+//! [`prometheus_text`]).
+//!
+//! Latency distributions are fixed-memory log-bucket [`Histogram`]s (they
+//! used to be unbounded per-request sample vectors — one entry per request
+//! forever on a long-running server). Quantile keys keep their historical
+//! `*_p50` / `*_p95` names; values are bucket-resolution (~25% per step)
+//! clamped to the exact observed min/max.
 
 use std::time::Instant;
 
 use crate::runtime::{ArenaStats, PlacementStats, PrefixStats, RuntimeStats};
 use crate::server::batcher::ShardHealth;
 use crate::util::json::Json;
-use crate::util::stats::{Meter, Samples};
+use crate::util::stats::{Histogram, Meter};
+
+/// Log-bucket scheme for latency histograms: 64 geometric buckets over
+/// [100 µs, 100 s] (≈24% ratio per bucket), values in seconds.
+pub fn latency_histogram() -> Histogram {
+    Histogram::new(1e-4, 100.0, 64)
+}
+
+/// Log-bucket scheme for the intake burst-depth histogram: 49 geometric
+/// buckets over [1, 4096] requests per round (bounds land on powers of 2).
+pub fn depth_histogram() -> Histogram {
+    Histogram::new(1.0, 4096.0, 49)
+}
 
 #[derive(Debug)]
 pub struct Metrics {
@@ -29,15 +48,15 @@ pub struct Metrics {
     /// Generate requests drained per non-empty intake round (the burst
     /// depth the decoupled intake absorbs in one round; control ops like
     /// stats polls are excluded so they don't dilute the statistic).
-    pub intake_depth: Samples,
-    pub queue_s: Samples,
-    pub ttft_s: Samples,
-    pub total_s: Samples,
-    /// Per-step inter-token latency samples (seconds per token), recorded
-    /// at every decode-quantum completion across ALL sequences — unlike the
-    /// per-request means, this distribution exposes the stalls one long
-    /// prefill inflicts on concurrently decoding sequences.
-    pub itl_s: Samples,
+    pub intake_depth: Histogram,
+    pub queue_s: Histogram,
+    pub ttft_s: Histogram,
+    pub total_s: Histogram,
+    /// Per-step inter-token latency distribution (seconds per token),
+    /// recorded at every decode-quantum completion across ALL sequences —
+    /// unlike the per-request means, this distribution exposes the stalls
+    /// one long prefill inflicts on concurrently decoding sequences.
+    pub itl_s: Histogram,
     pub gen_tokens: Meter,
     pub prompt_tokens: u64,
 }
@@ -53,11 +72,11 @@ impl Default for Metrics {
             errored: 0,
             cancelled: 0,
             intake_rounds: 0,
-            intake_depth: Samples::new(),
-            queue_s: Samples::new(),
-            ttft_s: Samples::new(),
-            total_s: Samples::new(),
-            itl_s: Samples::new(),
+            intake_depth: depth_histogram(),
+            queue_s: latency_histogram(),
+            ttft_s: latency_histogram(),
+            total_s: latency_histogram(),
+            itl_s: latency_histogram(),
             gen_tokens: Meter::default(),
             prompt_tokens: 0,
         }
@@ -97,8 +116,6 @@ impl Metrics {
 
     pub fn to_json(&self) -> Json {
         let uptime = self.started.elapsed().as_secs_f64();
-        let intake_max = if self.intake_depth.is_empty() { 0.0 } else { self.intake_depth.max() };
-        let itl_max = if self.itl_s.is_empty() { 0.0 } else { self.itl_s.max() };
         Json::from_pairs(vec![
             ("uptime_s", uptime.into()),
             ("submitted", (self.submitted as i64).into()),
@@ -110,21 +127,97 @@ impl Metrics {
             ("intake_rounds", (self.intake_rounds as i64).into()),
             ("intake_depth_p50", self.intake_depth.p50().into()),
             ("intake_depth_p95", self.intake_depth.p95().into()),
-            ("intake_depth_max", intake_max.into()),
+            ("intake_depth_max", self.intake_depth.max().into()),
             ("prompt_tokens", (self.prompt_tokens as i64).into()),
             ("gen_tokens", (self.gen_tokens.count as i64).into()),
             ("gen_tokens_per_s", self.gen_tokens.rate().into()),
             ("throughput_req_per_s", (self.completed as f64 / uptime.max(1e-9)).into()),
             ("ttft_ms_p50", (self.ttft_s.p50() * 1e3).into()),
             ("ttft_ms_p95", (self.ttft_s.p95() * 1e3).into()),
+            ("ttft_ms_p99", (self.ttft_s.p99() * 1e3).into()),
             ("latency_ms_p50", (self.total_s.p50() * 1e3).into()),
             ("latency_ms_p95", (self.total_s.p95() * 1e3).into()),
+            ("latency_ms_p99", (self.total_s.p99() * 1e3).into()),
             ("queue_ms_p95", (self.queue_s.p95() * 1e3).into()),
             ("itl_ms_p50", (self.itl_s.p50() * 1e3).into()),
             ("itl_ms_p95", (self.itl_s.p95() * 1e3).into()),
-            ("itl_ms_max", (itl_max * 1e3).into()),
+            ("itl_ms_p99", (self.itl_s.p99() * 1e3).into()),
+            ("itl_ms_max", (self.itl_s.max() * 1e3).into()),
         ])
     }
+
+    /// The latency histograms by Prometheus metric name (seconds), for
+    /// native histogram exposition on `op:metrics`.
+    pub fn histograms(&self) -> [(&'static str, &Histogram); 5] {
+        [
+            ("lacache_queue_seconds", &self.queue_s),
+            ("lacache_ttft_seconds", &self.ttft_s),
+            ("lacache_request_seconds", &self.total_s),
+            ("lacache_itl_seconds", &self.itl_s),
+            ("lacache_intake_depth", &self.intake_depth),
+        ]
+    }
+}
+
+/// Render an `op:stats`-shaped JSON payload plus the metrics registry's
+/// native histograms as Prometheus text exposition (version 0.0.4).
+///
+/// Every scalar in `stats` becomes one `lacache_<key>` gauge (booleans as
+/// 0/1); the `shards` array becomes per-shard gauges labeled
+/// `{shard="<device>"}`; non-numeric strings and nested objects are
+/// skipped. Histograms are emitted natively (`_bucket{le=...}` / `_sum` /
+/// `_count`), so Prometheus can aggregate quantiles across servers instead
+/// of scraping pre-computed percentiles.
+pub fn prometheus_text(stats: &Json, m: &Metrics) -> String {
+    let mut out = String::with_capacity(4096);
+    let mut gauge = |name: &str, v: f64| {
+        // Prometheus floats: integers render without a fraction already
+        // (Json::Num formatting rules match), NaN/inf never reach here
+        out.push_str(&format!("# TYPE lacache_{name} gauge\nlacache_{name} {v}\n"));
+    };
+    if let Some(pairs) = stats.as_obj() {
+        for (k, v) in pairs {
+            match v {
+                Json::Num(x) => gauge(k, *x),
+                Json::Bool(b) => gauge(k, f64::from(u8::from(*b))),
+                _ => {}
+            }
+        }
+    }
+    if let Some(shards) = stats.get("shards").and_then(|s| s.as_arr()) {
+        for s in shards {
+            let Some(dev) = s.usize_of("device") else { continue };
+            let Some(pairs) = s.as_obj() else { continue };
+            for (k, v) in pairs {
+                if k == "device" {
+                    continue;
+                }
+                let x = match v {
+                    Json::Num(x) => *x,
+                    Json::Bool(b) => f64::from(u8::from(*b)),
+                    _ => continue,
+                };
+                out.push_str(&format!("lacache_shard_{k}{{shard=\"{dev}\"}} {x}\n"));
+            }
+        }
+    }
+    for (name, h) in m.histograms() {
+        out.push_str(&format!("# TYPE {name} histogram\n"));
+        for (le, n) in h.cumulative_buckets() {
+            if le.is_infinite() {
+                out.push_str(&format!("{name}_bucket{{le=\"+Inf\"}} {n}\n"));
+            } else {
+                out.push_str(&format!("{name}_bucket{{le=\"{le}\"}} {n}\n"));
+            }
+        }
+        out.push_str(&format!("{name}_sum {}\n", h.sum()));
+        out.push_str(&format!("{name}_count {}\n", h.count()));
+    }
+    out.push_str(&format!(
+        "# TYPE lacache_trace_dropped_total counter\nlacache_trace_dropped_total {}\n",
+        crate::obs::recorder().dropped_total()
+    ));
+    out
 }
 
 /// Attach the runtime's call/transfer/residency counters to an `op:stats`
@@ -478,6 +571,84 @@ mod tests {
         assert_eq!(j.usize_of("placement_least_loaded"), Some(3));
         assert_eq!(j.usize_of("placement_spillover"), Some(2));
         assert_eq!(j.usize_of("placement_host_only"), Some(1));
+    }
+
+    #[test]
+    fn empty_registry_exports_no_nan_percentiles() {
+        // zero requests: every percentile/max/rate key must be a finite
+        // number (0), never NaN or ±inf — health dashboards divide by these
+        let j = Metrics::default().to_json();
+        let pairs = j.as_obj().expect("stats is an object");
+        for (k, v) in pairs {
+            if let Json::Num(x) = v {
+                assert!(x.is_finite(), "{k} must be finite on an empty registry, got {x}");
+            }
+        }
+        for k in [
+            "intake_depth_p50",
+            "intake_depth_max",
+            "ttft_ms_p50",
+            "ttft_ms_p99",
+            "latency_ms_p95",
+            "queue_ms_p95",
+            "itl_ms_p50",
+            "itl_ms_max",
+        ] {
+            assert_eq!(j.f64_of(k), Some(0.0), "{k} must export 0 with no samples");
+        }
+    }
+
+    #[test]
+    fn export_hooks_tolerate_default_structs() {
+        // the op:metrics path renders every export_* gauge from whatever
+        // the hooks attach — all-default stats structs must round-trip
+        // without NaN so the Prometheus exposition stays parseable
+        let mut j = Metrics::default().to_json();
+        export_runtime(&mut j, &RuntimeStats::default());
+        export_arena(&mut j, &ArenaStats::default());
+        export_faults(&mut j, &crate::server::batcher::FaultStats::default(), false, 0);
+        export_prefix(&mut j, &PrefixStats::default(), 0);
+        export_placement(&mut j, &PlacementStats::default());
+        export_shards(&mut j, &[]);
+        for (k, v) in j.as_obj().expect("stats object") {
+            if let Json::Num(x) = v {
+                assert!(x.is_finite(), "{k} must stay finite from default structs");
+            }
+        }
+    }
+
+    #[test]
+    fn prometheus_text_is_well_formed() {
+        let mut m = Metrics::default();
+        m.submitted = 3;
+        m.record_finished(&fin(1));
+        let mut j = m.to_json();
+        export_faults(&mut j, &crate::server::batcher::FaultStats::default(), true, 0);
+        export_shards(
+            &mut j,
+            &[ShardHealth { device: 0, inflight: 2, resident_bytes: 4096, ..Default::default() }],
+        );
+        let text = prometheus_text(&j, &m);
+        // every non-comment line is `name[{labels}] value` with a finite value
+        for line in text.lines() {
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (name, value) = line.rsplit_once(' ').expect("metric line has a value");
+            assert!(name.starts_with("lacache_"), "metric namespaced: {line}");
+            assert!(value.parse::<f64>().map(f64::is_finite).unwrap_or(false), "bad: {line}");
+        }
+        assert!(text.contains("# TYPE lacache_submitted gauge"));
+        assert!(text.contains("lacache_submitted 3"));
+        // booleans export as 0/1 gauges
+        assert!(text.contains("lacache_device_degraded 1"));
+        // shard gauges are labeled by device ordinal
+        assert!(text.contains("lacache_shard_resident_bytes{shard=\"0\"} 4096"));
+        // native histograms: bucket series end at +Inf and count matches
+        assert!(text.contains("# TYPE lacache_ttft_seconds histogram"));
+        assert!(text.contains("lacache_ttft_seconds_bucket{le=\"+Inf\"} 1"));
+        assert!(text.contains("lacache_ttft_seconds_count 1"));
+        assert!(text.contains("lacache_trace_dropped_total"));
     }
 
     #[test]

@@ -93,6 +93,10 @@ pub fn prefix_signature(cfg: &ServeConfig) -> String {
 pub struct ServedSeq<'rt> {
     engine: Engine<'rt>,
     ingested: Vec<i32>,
+    /// Why placement chose this sequence's shard
+    /// ([`crate::runtime::placement::PlacementKind::code`]); carried into
+    /// the flight recorder's `placed` event.
+    placement_code: i64,
 }
 
 /// What an in-flight device call carries back through the worker pool: the
@@ -301,7 +305,7 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
             },
             policy,
         )?;
-        Ok(ServedSeq { engine, ingested: Vec::new() })
+        Ok(ServedSeq { engine, ingested: Vec::new(), placement_code: 0 })
     }
 
     /// Placement plus cross-request prefix adoption (called at admission
@@ -328,6 +332,7 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
         let placement = place(&self.shard_loads(), preferred);
         self.placement.borrow_mut().note(placement.kind);
         seq.engine.shard = placement.shard;
+        seq.placement_code = placement.kind.code();
         let Some((matched, snap)) = hit else {
             return 0;
         };
@@ -343,6 +348,18 @@ impl<'rt> SeqBackend for EngineBackend<'rt> {
             }
             Err(_) => 0,
         }
+    }
+
+    /// The placement policy's shard for this sequence — stamps the flight
+    /// recorder's admitted/placed/submit events with the real device shard.
+    fn seq_shard(&self, seq: &ServedSeq<'rt>) -> usize {
+        seq.engine.shard
+    }
+
+    /// The placement rule that chose the shard
+    /// ([`crate::runtime::placement::PlacementKind::code`]).
+    fn placement_code(&self, seq: &ServedSeq<'rt>) -> i64 {
+        seq.placement_code
     }
 
     fn prefill_chunk(&mut self, seq: &mut ServedSeq<'rt>, chunk: &[i32]) -> Result<()> {
@@ -595,6 +612,10 @@ fn handle_conn(conn: TcpStream, tx: Sender<Work>) -> Result<()> {
 
 /// The executor: owns the Runtime and drives the reactor.
 fn executor_loop(cfg: ServeConfig, rx: Receiver<Work>) -> Result<crate::util::json::Json> {
+    // arm the flight recorder before any sequence can emit events:
+    // per-kind sampling stride and ring capacity come from the config
+    // (`--trace-sample-every` / `--trace-buffer-events`)
+    crate::obs::recorder().configure(cfg.trace_sample_every, cfg.trace_buffer_events);
     let rt = Runtime::load_with(
         &crate::artifacts_dir(),
         &[cfg.model.as_str()],

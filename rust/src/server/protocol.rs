@@ -7,8 +7,11 @@
 //! {"op":"generate","id":2,"prompt_tokens":[0,5,20,...],"max_new_tokens":4}
 //! {"op":"generate","id":5,"prompt_tokens":[...],"prefix_hint":false}
 //! {"op":"generate","id":6,"prompt_tokens":[...],"deadline_ms":500}
+//! {"op":"generate","id":10,"prompt_tokens":[...],"trace":true}
 //! {"op":"stats","id":3}
 //! {"op":"ping","id":8}
+//! {"op":"trace","id":11,"seq":5,"kind":"retry","since":100,"limit":64}
+//! {"op":"metrics","id":12}
 //! {"op":"shutdown","id":4}
 //! ```
 //!
@@ -23,6 +26,13 @@
 //! "deadline-exceeded"` (a stuck in-flight device call is abandoned by a
 //! watchdog after a short grace period, so the reply never hangs on it).
 //!
+//! `trace: true` (default false) attaches the request's flight-recorder
+//! phase breakdown to the reply as a `trace` array — every recorded event
+//! for this request (queued / admitted / placed / prefill windows /
+//! submit-reap / first-token / retries / finished), oldest-first, in the
+//! same event shape `op:trace` dumps. Events already overwritten in the
+//! ring (or sampled out by `--trace-sample-every`) are simply absent.
+//!
 //! Responses:
 //!
 //! ```text
@@ -30,10 +40,15 @@
 //!  "itl_ms":..,"total_ms":..,"prompt_tokens":N,"prefix_tokens":P,
 //!  "gen_tokens":M}
 //! {"id":3,"ok":true,"stats":{...}}
-//! {"id":8,"ok":true,"version":"...","degraded":false,"inflight":0,
-//!  "queue_depth":0,"active_seqs":0,
+//! {"id":8,"ok":true,"version":"...","uptime_s":12.5,"degraded":false,
+//!  "inflight":0,"queue_depth":0,"active_seqs":0,"trace_dropped_total":0,
 //!  "shards":[{"device":0,"degraded":false,"inflight":0,
 //!             "resident_bytes":0}, ...]}
+//! {"id":11,"ok":true,"events":[{"at":1,"t_us":...,"seq":5,"shard":0,
+//!  "kind":"queued","a":128,"b":16}, ...],"watermark":412,
+//!  "trace_dropped_total":0}
+//! {"id":12,"ok":true,"content_type":"text/plain; version=0.0.4",
+//!  "metrics":"# TYPE lacache_submitted gauge\nlacache_submitted 3\n..."}
 //! {"id":2,"ok":false,"error":"...","code":"..."}
 //! {"id":7,"ok":false,"error":"overloaded: ...","code":"overloaded",
 //!  "retry_after_ms":50}
@@ -63,10 +78,30 @@
 //! `op:ping` is the health probe: `degraded` reports
 //! the FLEET-level sticky device-tier bypass — true only when every shard
 //! has tripped (see PERF.md "Failure handling & recovery") — `inflight` /
-//! `queue_depth` / `active_seqs` the load, and `shards` the per-device
-//! breakdown (one entry per shard, device order; a one-device server
-//! reports a one-element array), so orchestrators can see a single lost
-//! device while the fleet keeps serving.
+//! `queue_depth` / `active_seqs` the load, `uptime_s` the process age,
+//! `trace_dropped_total` the flight-recorder overflow counter (a rising
+//! value means the trace ring is overwriting events faster than anyone
+//! drains them — size it up or raise `--trace-sample-every`), and `shards`
+//! the per-device breakdown (one entry per shard, device order; a
+//! one-device server reports a one-element array), so orchestrators can see
+//! a single lost device while the fleet keeps serving.
+//!
+//! `op:trace` dumps the flight recorder's recent event window (see
+//! `crate::obs` for the taxonomy), oldest-first. Filters are optional and
+//! conjunctive: `seq` (request id for scheduler events, KV cache id for
+//! runtime events), `kind` (a kebab-case event name, e.g. `"retry"`;
+//! unknown names are a parse error), `since` (only events with
+//! `at > since` — pass a previous reply's `watermark` back to resume a
+//! tail), and `limit` (keep the newest N matches; default 256, 0 =
+//! unlimited). The reply's `watermark` is the global event sequence number
+//! at dump time; `trace_dropped_total` counts ring overwrites plus
+//! contention drops since startup.
+//!
+//! `op:metrics` renders every `op:stats` gauge (including the hook-attached
+//! `export_*` counters and the per-shard breakdown) plus the native latency
+//! histograms as Prometheus text exposition v0.0.4, returned as the
+//! `metrics` string field — a sidecar scraper can poll this op and serve
+//! the body over HTTP verbatim.
 //!
 //! Connection semantics: closing (or half-closing) the connection's write
 //! side ABANDONS all of that connection's in-flight requests — the server
@@ -76,12 +111,18 @@
 
 use anyhow::{bail, Result};
 
+use crate::obs::{Event, EventKind, TraceFilter};
 use crate::util::json::Json;
 
 /// Error message for generate requests that arrive after `op:shutdown` has
 /// been accepted: the reactor rejects them instead of admitting work no one
 /// will wait for. String-matched by clients and tests.
 pub const SHUTTING_DOWN: &str = "shutting-down";
+
+/// Default `limit` for `op:trace` when the request omits it: the newest 256
+/// matching events (a full ring dump over a line protocol is rarely what an
+/// interactive client wants; pass `limit: 0` explicitly for unlimited).
+pub const DEFAULT_TRACE_LIMIT: usize = 256;
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Op {
@@ -91,9 +132,16 @@ pub enum Op {
         prefix_hint: bool,
         /// Relative wall-clock bound from submit (`None` = unbounded).
         deadline_ms: Option<u64>,
+        /// Attach this request's flight-recorder phase breakdown to the
+        /// reply (`trace` array).
+        trace: bool,
     },
     Stats,
     Ping,
+    /// Dump the flight recorder's recent events through the filter.
+    Trace(TraceFilter),
+    /// Prometheus text exposition of stats gauges + latency histograms.
+    Metrics,
     Shutdown,
 }
 
@@ -123,16 +171,36 @@ pub fn parse_request(line: &str) -> Result<Request> {
                 max_new_tokens: j.usize_of("max_new_tokens").unwrap_or(16),
                 prefix_hint: j.bool_of("prefix_hint").unwrap_or(true),
                 deadline_ms: j.usize_of("deadline_ms").map(|d| d as u64),
+                trace: j.bool_of("trace").unwrap_or(false),
             }
         }
         Some("stats") => Op::Stats,
         Some("ping") => Op::Ping,
+        Some("trace") => {
+            let kind = match j.str_of("kind") {
+                Some(s) => match EventKind::parse(s) {
+                    Some(k) => Some(k),
+                    None => bail!("unknown trace kind {s:?}"),
+                },
+                None => None,
+            };
+            Op::Trace(TraceFilter {
+                seq: j.usize_of("seq").map(|s| s as u64),
+                kind,
+                since: j.usize_of("since").map(|w| w as u64),
+                limit: j.usize_of("limit").unwrap_or(DEFAULT_TRACE_LIMIT),
+            })
+        }
+        Some("metrics") => Op::Metrics,
         Some("shutdown") => Op::Shutdown,
         other => bail!("unknown op {other:?}"),
     };
     Ok(Request { id, op })
 }
 
+/// Success reply for a generate. `trace` is the request's flight-recorder
+/// phase breakdown (attached as a `trace` event array when the request set
+/// `trace: true`; `None` omits the key entirely).
 #[allow(clippy::too_many_arguments)]
 pub fn ok_generate(
     id: i64,
@@ -142,8 +210,9 @@ pub fn ok_generate(
     ttft_ms: f64,
     itl_ms: f64,
     total_ms: f64,
+    trace: Option<&[Event]>,
 ) -> String {
-    Json::from_pairs(vec![
+    let mut j = Json::from_pairs(vec![
         ("id", id.into()),
         ("ok", true.into()),
         ("text", super::text::detokenize(tokens).into()),
@@ -154,26 +223,60 @@ pub fn ok_generate(
         ("ttft_ms", ttft_ms.into()),
         ("itl_ms", itl_ms.into()),
         ("total_ms", total_ms.into()),
-    ])
-    .to_string()
+    ]);
+    if let Some(events) = trace {
+        j.set("trace", events.iter().map(Event::to_json).collect::<Vec<Json>>().into());
+    }
+    j.to_string()
 }
 
 pub fn ok_stats(id: i64, stats: Json) -> String {
     Json::from_pairs(vec![("id", id.into()), ("ok", true.into()), ("stats", stats)]).to_string()
 }
 
-/// Health-probe reply (`op:ping`): build version, the fleet-level sticky
-/// degraded flag (true only when EVERY shard has tripped), the current load
-/// gauges, and the per-shard health breakdown — always emitted, even for a
-/// one-device fleet, so probes never branch on its presence.
+/// `op:trace` reply: the filtered event window oldest-first, the recorder's
+/// current `watermark` (pass back as `since` to resume), and the overflow
+/// counter.
+pub fn ok_trace(id: i64, events: &[Event], watermark: u64, dropped_total: u64) -> String {
+    Json::from_pairs(vec![
+        ("id", id.into()),
+        ("ok", true.into()),
+        ("events", events.iter().map(Event::to_json).collect::<Vec<Json>>().into()),
+        ("watermark", (watermark as i64).into()),
+        ("trace_dropped_total", (dropped_total as i64).into()),
+    ])
+    .to_string()
+}
+
+/// `op:metrics` reply: the Prometheus text exposition body as a JSON string
+/// field (see [`crate::server::metrics::prometheus_text`]).
+pub fn ok_metrics(id: i64, body: &str) -> String {
+    Json::from_pairs(vec![
+        ("id", id.into()),
+        ("ok", true.into()),
+        ("content_type", "text/plain; version=0.0.4".into()),
+        ("metrics", body.into()),
+    ])
+    .to_string()
+}
+
+/// Health-probe reply (`op:ping`): build version, process uptime, the
+/// fleet-level sticky degraded flag (true only when EVERY shard has
+/// tripped), the current load gauges, the flight-recorder overflow counter
+/// (`trace_dropped_total` — probes watch it rise to detect ring overflow
+/// without pulling a full trace), and the per-shard health breakdown —
+/// always emitted, even for a one-device fleet, so probes never branch on
+/// its presence.
 #[allow(clippy::too_many_arguments)]
 pub fn ok_ping(
     id: i64,
     version: &str,
+    uptime_s: f64,
     degraded: bool,
     inflight: usize,
     queue_depth: usize,
     active_seqs: usize,
+    trace_dropped_total: u64,
     shards: &[super::batcher::ShardHealth],
 ) -> String {
     let shard_arr: Vec<Json> = shards
@@ -191,10 +294,12 @@ pub fn ok_ping(
         ("id", id.into()),
         ("ok", true.into()),
         ("version", version.into()),
+        ("uptime_s", uptime_s.into()),
         ("degraded", degraded.into()),
         ("inflight", inflight.into()),
         ("queue_depth", queue_depth.into()),
         ("active_seqs", active_seqs.into()),
+        ("trace_dropped_total", (trace_dropped_total as i64).into()),
         ("shards", shard_arr.into()),
     ])
     .to_string()
@@ -246,11 +351,12 @@ mod tests {
             .unwrap();
         assert_eq!(r.id, 7);
         match r.op {
-            Op::Generate { prompt, max_new_tokens, prefix_hint, deadline_ms } => {
+            Op::Generate { prompt, max_new_tokens, prefix_hint, deadline_ms, trace } => {
                 assert_eq!(prompt, vec![0, 17, 18]);
                 assert_eq!(max_new_tokens, 4);
                 assert!(prefix_hint, "prefix reuse defaults to on");
                 assert_eq!(deadline_ms, None, "deadline defaults to unbounded");
+                assert!(!trace, "per-request tracing defaults to off");
             }
             _ => panic!(),
         }
@@ -301,6 +407,85 @@ mod tests {
     }
 
     #[test]
+    fn parse_generate_trace_flag() {
+        let r = parse_request(r#"{"op":"generate","id":10,"prompt_tokens":[1,2],"trace":true}"#)
+            .unwrap();
+        match r.op {
+            Op::Generate { trace, .. } => assert!(trace),
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn parse_trace_op() {
+        let r = parse_request(
+            r#"{"op":"trace","id":11,"seq":5,"kind":"retry","since":100,"limit":64}"#,
+        )
+        .unwrap();
+        assert_eq!(r.id, 11);
+        match r.op {
+            Op::Trace(f) => {
+                assert_eq!(f.seq, Some(5));
+                assert_eq!(f.kind, Some(crate::obs::EventKind::Retry));
+                assert_eq!(f.since, Some(100));
+                assert_eq!(f.limit, 64);
+            }
+            _ => panic!(),
+        }
+        // all filters optional; limit defaults to the bounded window
+        match parse_request(r#"{"op":"trace","id":12}"#).unwrap().op {
+            Op::Trace(f) => {
+                assert_eq!(f, TraceFilter { limit: DEFAULT_TRACE_LIMIT, ..Default::default() });
+            }
+            _ => panic!(),
+        }
+        // an unknown kind is a parse error, not a silent empty dump
+        assert!(parse_request(r#"{"op":"trace","id":13,"kind":"no-such"}"#).is_err());
+    }
+
+    #[test]
+    fn parse_metrics_op() {
+        let r = parse_request(r#"{"op":"metrics","id":12}"#).unwrap();
+        assert_eq!(r.op, Op::Metrics);
+    }
+
+    #[test]
+    fn trace_and_metrics_responses_round_trip() {
+        let events = [
+            Event { at: 1, t_us: 10, seq: 5, shard: 0, kind: EventKind::Queued, a: 128, b: 16 },
+            Event { at: 2, t_us: 90, seq: 5, shard: 1, kind: EventKind::Placed, a: 0, b: 0 },
+        ];
+        let s = ok_trace(11, &events, 412, 3);
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(true));
+        assert_eq!(j.usize_of("watermark"), Some(412));
+        assert_eq!(j.usize_of("trace_dropped_total"), Some(3));
+        let arr = j.req("events").as_arr().expect("events array");
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].str_of("kind"), Some("queued"));
+        assert_eq!(arr[1].usize_of("shard"), Some(1));
+
+        let s = ok_metrics(12, "# TYPE lacache_submitted gauge\nlacache_submitted 3\n");
+        let j = Json::parse(&s).unwrap();
+        assert_eq!(j.str_of("content_type"), Some("text/plain; version=0.0.4"));
+        assert!(j.str_of("metrics").unwrap().contains("lacache_submitted 3"));
+    }
+
+    #[test]
+    fn generate_reply_attaches_trace_when_requested() {
+        let ev =
+            [Event { at: 7, t_us: 5, seq: 3, shard: 0, kind: EventKind::Finished, a: 2, b: 0 }];
+        let s = ok_generate(3, &[20, 21], 10, 0, 1.5, 2.25, 8.25, Some(&ev));
+        let j = Json::parse(&s).unwrap();
+        let arr = j.req("trace").as_arr().expect("trace array");
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].str_of("kind"), Some("finished"));
+        // and is omitted entirely when not requested
+        let s = ok_generate(3, &[20, 21], 10, 0, 1.5, 2.25, 8.25, None);
+        assert!(Json::parse(&s).unwrap().get("trace").is_none());
+    }
+
+    #[test]
     fn parse_errors() {
         assert!(parse_request("{}").is_err());
         assert!(parse_request(r#"{"op":"generate","id":1}"#).is_err());
@@ -310,7 +495,7 @@ mod tests {
 
     #[test]
     fn responses_are_valid_json() {
-        let s = ok_generate(3, &[20, 21], 10, 4, 1.5, 2.25, 8.25);
+        let s = ok_generate(3, &[20, 21], 10, 4, 1.5, 2.25, 8.25, None);
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.bool_of("ok"), Some(true));
         assert_eq!(j.usize_of("gen_tokens"), Some(2));
@@ -356,14 +541,16 @@ mod tests {
             },
             ShardHealth { device: 1, degraded: true, ..Default::default() },
         ];
-        let s = ok_ping(8, "0.1.0", true, 2, 3, 4, &shards);
+        let s = ok_ping(8, "0.1.0", 12.5, true, 2, 3, 4, 9, &shards);
         let j = Json::parse(&s).unwrap();
         assert_eq!(j.bool_of("ok"), Some(true));
         assert_eq!(j.str_of("version"), Some("0.1.0"));
+        assert_eq!(j.f64_of("uptime_s"), Some(12.5));
         assert_eq!(j.bool_of("degraded"), Some(true));
         assert_eq!(j.usize_of("inflight"), Some(2));
         assert_eq!(j.usize_of("queue_depth"), Some(3));
         assert_eq!(j.usize_of("active_seqs"), Some(4));
+        assert_eq!(j.usize_of("trace_dropped_total"), Some(9));
         let arr = j.req("shards").as_arr().expect("shards array");
         assert_eq!(arr.len(), 2);
         assert_eq!(arr[0].usize_of("device"), Some(0));
@@ -372,7 +559,7 @@ mod tests {
         assert_eq!(arr[0].usize_of("resident_bytes"), Some(4096));
         assert_eq!(arr[1].bool_of("degraded"), Some(true));
         // the shard array survives round-tripping even when empty
-        let empty = ok_ping(9, "0.1.0", false, 0, 0, 0, &[]);
+        let empty = ok_ping(9, "0.1.0", 0.0, false, 0, 0, 0, 0, &[]);
         let j = Json::parse(&empty).unwrap();
         assert_eq!(j.req("shards").as_arr().map(|a| a.len()), Some(0));
     }

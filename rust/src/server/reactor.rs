@@ -29,9 +29,10 @@ use std::sync::mpsc::{Receiver, Sender};
 use std::time::Duration;
 
 use super::batcher::{CancelToken, Finished, Overloaded, Scheduler, SeqBackend};
-use super::metrics::{export_faults, export_shards, Metrics};
+use super::metrics::{export_faults, export_shards, prometheus_text, Metrics};
 use super::protocol::{
-    err_full, err_response, ok_generate, ok_ping, ok_stats, parse_request, Op, SHUTTING_DOWN,
+    err_full, err_response, ok_generate, ok_metrics, ok_ping, ok_stats, ok_trace, parse_request,
+    Op, SHUTTING_DOWN,
 };
 use crate::util::json::Json;
 
@@ -52,7 +53,9 @@ const IDLE_POLL: Duration = Duration::from_millis(50);
 pub struct Reactor<B: SeqBackend> {
     sched: Scheduler<B>,
     metrics: Metrics,
-    waiting: BTreeMap<u64, (i64, Sender<String>)>,
+    /// In-flight generates by scheduler sequence id: client request id,
+    /// whether the request asked for its trace on the reply, reply channel.
+    waiting: BTreeMap<u64, (i64, bool, Sender<String>)>,
     shutdown: bool,
     max_new_tokens: usize,
 }
@@ -134,7 +137,7 @@ impl<B: SeqBackend> Reactor<B> {
             }
         };
         match req.op {
-            Op::Generate { prompt, max_new_tokens, prefix_hint, deadline_ms } => {
+            Op::Generate { prompt, max_new_tokens, prefix_hint, deadline_ms, trace } => {
                 self.metrics.submitted += 1;
                 if self.shutdown {
                     self.metrics.rejected_shutdown += 1;
@@ -145,7 +148,7 @@ impl<B: SeqBackend> Reactor<B> {
                 let deadline = deadline_ms.map(Duration::from_millis);
                 match self.sched.submit_req(prompt, max_new, cancel, prefix_hint, deadline) {
                     Ok(sid) => {
-                        self.waiting.insert(sid, (req.id, reply));
+                        self.waiting.insert(sid, (req.id, trace, reply));
                     }
                     Err(e) => {
                         self.metrics.rejected += 1;
@@ -185,12 +188,37 @@ impl<B: SeqBackend> Reactor<B> {
                 let _ = reply.send(ok_ping(
                     req.id,
                     env!("CARGO_PKG_VERSION"),
+                    self.metrics.started.elapsed().as_secs_f64(),
                     self.sched.backend().degraded(),
                     self.sched.inflight(),
                     q,
                     a,
+                    crate::obs::recorder().dropped_total(),
                     &self.sched.backend().shard_health(),
                 ));
+            }
+            Op::Trace(filter) => {
+                let rec = crate::obs::recorder();
+                let events = rec.snapshot(&filter);
+                let _ =
+                    reply.send(ok_trace(req.id, &events, rec.watermark(), rec.dropped_total()));
+            }
+            Op::Metrics => {
+                // same payload op:stats assembles (hook included), rendered
+                // as Prometheus text plus the native latency histograms
+                let mut j = self.metrics.to_json();
+                let (q, a) = self.sched.depth();
+                j.set("queue_depth", q.into());
+                j.set("active_seqs", a.into());
+                export_faults(
+                    &mut j,
+                    &self.sched.fault_stats(),
+                    self.sched.backend().degraded(),
+                    crate::runtime::lock_poisoned_total(),
+                );
+                export_shards(&mut j, &self.sched.backend().shard_health());
+                stats_hook(&mut j);
+                let _ = reply.send(ok_metrics(req.id, &prometheus_text(&j, &self.metrics)));
             }
             Op::Shutdown => {
                 self.shutdown = true;
@@ -201,7 +229,7 @@ impl<B: SeqBackend> Reactor<B> {
 
     fn deliver(&mut self, f: Finished) {
         self.metrics.record_finished(&f);
-        let Some((req_id, reply)) = self.waiting.remove(&f.id) else { return };
+        let Some((req_id, trace, reply)) = self.waiting.remove(&f.id) else { return };
         if f.cancelled {
             return; // the client is gone; there is no one to write to
         }
@@ -218,6 +246,10 @@ impl<B: SeqBackend> Reactor<B> {
                 } else {
                     0.0
                 };
+                // trace: true — attach the request's recorded phase chain
+                // (whatever of it is still in the ring / survived sampling)
+                let phases =
+                    if trace { Some(crate::obs::recorder().phases_for(f.id)) } else { None };
                 ok_generate(
                     req_id,
                     &f.tokens,
@@ -226,6 +258,7 @@ impl<B: SeqBackend> Reactor<B> {
                     f.ttft_s * 1e3,
                     itl_ms,
                     f.total_s * 1e3,
+                    phases.as_deref(),
                 )
             }
         };
@@ -413,9 +446,144 @@ mod tests {
         assert_eq!(j.usize_of("inflight"), Some(0));
         assert_eq!(j.usize_of("queue_depth"), Some(0));
         assert_eq!(j.usize_of("active_seqs"), Some(0));
+        // health-probe observability gauges: process age and recorder
+        // overflow, both present and finite even on a fresh server
+        assert!(j.f64_of("uptime_s").unwrap() >= 0.0);
+        assert!(j.f64_of("trace_dropped_total").unwrap() >= 0.0);
         // shard array is always present; a backend without shard awareness
         // (the trait default) reports an empty fleet
         assert_eq!(j.req("shards").as_arr().map(|a| a.len()), Some(0));
+    }
+
+    #[test]
+    fn trace_op_round_trips_filters_through_dispatch() {
+        // the ring and sampling stride are process-global: serialize against
+        // tests that reconfigure them (e.g. the tracing on/off property test)
+        let _g = crate::obs::test_guard();
+        let sched = Scheduler::new(Instant0, 128, 16, 16, 64);
+        let mut r = Reactor::new(sched, 64);
+        let (tx, rx) = mpsc::channel();
+        // watermark BEFORE this test's request: the since filter must hide
+        // everything already in the (process-global) ring
+        let w = crate::obs::recorder().watermark();
+        let gen = send(&tx, gen_line(1, 4));
+        while r.sched().has_work() || r.metrics().completed == 0 {
+            r.poll(&rx, &no_hook);
+        }
+        let ok = Json::parse(&gen.recv().unwrap()).unwrap();
+        assert_eq!(ok.bool_of("ok"), Some(true));
+
+        // by since: only events recorded after the watermark come back
+        let t = send(&tx, format!(r#"{{"op":"trace","id":2,"since":{w}}}"#));
+        r.poll(&rx, &no_hook);
+        let j = Json::parse(&t.recv().unwrap()).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(true));
+        let events = j.req("events").as_arr().expect("events array").to_vec();
+        assert!(!events.is_empty(), "the request must have recorded events");
+        assert!(events.iter().all(|e| e.usize_of("at").unwrap() as u64 > w));
+        assert!(j.usize_of("watermark").unwrap() as u64 >= w);
+        assert!(j.get("trace_dropped_total").is_some());
+        // the completed request's scheduler lifecycle chain is
+        // reconstructable from the dump: queued -> admitted -> placed ->
+        // first-token -> finished in at-order for its seq (other tests'
+        // schedulers may interleave events; at least OUR request's seq must
+        // carry a complete chain)
+        let full_chain = |sid: usize| {
+            let chain: Vec<&str> = events
+                .iter()
+                .filter(|e| e.usize_of("seq") == Some(sid))
+                .filter_map(|e| e.str_of("kind"))
+                .collect();
+            let mut want = ["queued", "admitted", "placed", "first-token", "finished"].iter();
+            let mut need = want.next();
+            for k in &chain {
+                if Some(*k) == need.copied() {
+                    need = want.next();
+                }
+            }
+            need.is_none()
+        };
+        let seqs: std::collections::BTreeSet<usize> =
+            events.iter().filter_map(|e| e.usize_of("seq")).collect();
+        let sid = *seqs
+            .iter()
+            .find(|&&s| full_chain(s))
+            .expect("one seq must carry a complete queued->finished chain");
+
+        // by kind: every returned event is of the asked kind
+        let t = send(&tx, format!(r#"{{"op":"trace","id":3,"kind":"finished","since":{w}}}"#));
+        r.poll(&rx, &no_hook);
+        let j = Json::parse(&t.recv().unwrap()).unwrap();
+        let fins = j.req("events").as_arr().unwrap().to_vec();
+        assert!(!fins.is_empty());
+        assert!(fins.iter().all(|e| e.str_of("kind") == Some("finished")));
+
+        // by seq: only the chosen request's events
+        let t = send(&tx, format!(r#"{{"op":"trace","id":4,"seq":{sid},"since":{w}}}"#));
+        r.poll(&rx, &no_hook);
+        let j = Json::parse(&t.recv().unwrap()).unwrap();
+        let evs = j.req("events").as_arr().unwrap().to_vec();
+        assert!(!evs.is_empty());
+        assert!(evs.iter().all(|e| e.usize_of("seq") == Some(sid)));
+
+        // unknown kind is rejected at parse time with an error reply
+        let t = send(&tx, r#"{"op":"trace","id":5,"kind":"bogus"}"#.into());
+        r.poll(&rx, &no_hook);
+        let j = Json::parse(&t.recv().unwrap()).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(false));
+    }
+
+    #[test]
+    fn generate_with_trace_flag_attaches_phase_breakdown() {
+        let _g = crate::obs::test_guard();
+        let sched = Scheduler::new(Instant0, 128, 16, 16, 64);
+        let mut r = Reactor::new(sched, 64);
+        let (tx, rx) = mpsc::channel();
+        let line = r#"{"op":"generate","id":7,"prompt_tokens":[1,2,3],"max_new_tokens":4,"trace":true}"#;
+        let gen = send(&tx, line.to_string());
+        while r.sched().has_work() || r.metrics().completed == 0 {
+            r.poll(&rx, &no_hook);
+        }
+        let j = Json::parse(&gen.recv().unwrap()).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(true));
+        let trace = j.req("trace").as_arr().expect("trace array on the reply").to_vec();
+        assert!(!trace.is_empty());
+        let kinds: Vec<&str> = trace.iter().filter_map(|e| e.str_of("kind")).collect();
+        assert!(kinds.contains(&"queued"));
+        assert!(kinds.contains(&"finished"));
+        // all events in the breakdown belong to ONE request
+        let seqs: std::collections::BTreeSet<usize> =
+            trace.iter().filter_map(|e| e.usize_of("seq")).collect();
+        assert_eq!(seqs.len(), 1);
+        // an untraced request's reply stays trace-free
+        let gen = send(&tx, gen_line(8, 2));
+        while r.sched().has_work() || r.metrics().completed < 2 {
+            r.poll(&rx, &no_hook);
+        }
+        let j = Json::parse(&gen.recv().unwrap()).unwrap();
+        assert!(j.get("trace").is_none());
+    }
+
+    #[test]
+    fn metrics_op_returns_prometheus_text() {
+        let sched = Scheduler::new(TwoShards, 128, 16, 16, 64);
+        let mut r = Reactor::new(sched, 64);
+        let (tx, rx) = mpsc::channel();
+        let m = send(&tx, r#"{"op":"metrics","id":9}"#.into());
+        r.poll(&rx, &|j: &mut Json| j.set("hooked_gauge", 5i64.into()));
+        let j = Json::parse(&m.recv().unwrap()).unwrap();
+        assert_eq!(j.bool_of("ok"), Some(true));
+        assert_eq!(j.str_of("content_type"), Some("text/plain; version=0.0.4"));
+        let body = j.str_of("metrics").expect("metrics body");
+        assert!(body.contains("# TYPE lacache_submitted gauge"));
+        assert!(body.contains("lacache_queue_depth 0"));
+        // the stats hook's additions are rendered too
+        assert!(body.contains("lacache_hooked_gauge 5"));
+        // per-shard gauges come through labeled
+        assert!(body.contains("lacache_shard_resident_bytes{shard=\"0\"} 2048"));
+        // native histogram series present
+        assert!(body.contains("lacache_itl_seconds_bucket{le=\"+Inf\"}"));
+        assert!(body.contains("lacache_trace_dropped_total"));
     }
 
     /// Backend reporting a two-shard fleet with one degraded shard, to pin

@@ -84,14 +84,21 @@ impl Samples {
     }
 }
 
-/// Fixed-bucket histogram (log-ish buckets) for latency tracking in the
-/// server metrics registry without unbounded memory.
+/// Fixed-memory log-bucket histogram for latency tracking in the server
+/// metrics registry: geometric bucket bounds, exact min/max/mean tracking,
+/// and bucket-resolution quantiles clamped to the observed range. Memory is
+/// `n_buckets + 1` counters regardless of how many samples are recorded —
+/// the replacement for the unbounded [`Samples`] vectors on a long-running
+/// server (quantile error is bounded by the bucket ratio, ~25% per step at
+/// the default serving scheme of 64 buckets over [100 µs, 100 s]).
 #[derive(Clone, Debug)]
 pub struct Histogram {
     bounds: Vec<f64>,
     counts: Vec<u64>,
     sum: f64,
     n: u64,
+    min: f64,
+    max: f64,
 }
 
 impl Histogram {
@@ -101,7 +108,7 @@ impl Histogram {
         let ratio = (hi / lo).powf(1.0 / (n_buckets as f64 - 1.0));
         let bounds: Vec<f64> = (0..n_buckets).map(|i| lo * ratio.powi(i as i32)).collect();
         let counts = vec![0; n_buckets + 1];
-        Self { bounds, counts, sum: 0.0, n: 0 }
+        Self { bounds, counts, sum: 0.0, n: 0, min: f64::INFINITY, max: f64::NEG_INFINITY }
     }
 
     pub fn record(&mut self, v: f64) {
@@ -109,10 +116,21 @@ impl Histogram {
         self.counts[idx] += 1;
         self.sum += v;
         self.n += 1;
+        self.min = self.min.min(v);
+        self.max = self.max.max(v);
     }
 
     pub fn count(&self) -> u64 {
         self.n
+    }
+
+    /// Sample count as usize ([`Samples`]-compatible).
+    pub fn len(&self) -> usize {
+        self.n as usize
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
     }
 
     pub fn mean(&self) -> f64 {
@@ -123,20 +141,74 @@ impl Histogram {
         }
     }
 
-    /// Approximate quantile from bucket boundaries.
+    pub fn sum(&self) -> f64 {
+        self.sum
+    }
+
+    /// Exact smallest recorded value (0 when empty — never NaN/±inf).
+    pub fn min(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.min
+        }
+    }
+
+    /// Exact largest recorded value (0 when empty — never NaN/±inf).
+    pub fn max(&self) -> f64 {
+        if self.n == 0 {
+            0.0
+        } else {
+            self.max
+        }
+    }
+
+    /// Approximate quantile: the bucket upper bound at rank `ceil(q·n)`,
+    /// clamped to the exact observed `[min, max]` so a quantile never
+    /// exceeds the largest (or undercuts the smallest) recorded value.
+    /// Returns 0 when empty — never NaN.
     pub fn quantile(&self, q: f64) -> f64 {
         if self.n == 0 {
             return 0.0;
         }
-        let target = (q * self.n as f64).ceil() as u64;
+        let target = (q * self.n as f64).ceil().max(1.0) as u64;
         let mut acc = 0;
+        let mut bound = *self.bounds.last().unwrap();
         for (i, c) in self.counts.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return if i < self.bounds.len() { self.bounds[i] } else { *self.bounds.last().unwrap() };
+                if i < self.bounds.len() {
+                    bound = self.bounds[i];
+                }
+                break;
             }
         }
-        *self.bounds.last().unwrap()
+        bound.clamp(self.min, self.max)
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.quantile(0.50)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.quantile(0.95)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.quantile(0.99)
+    }
+
+    /// Cumulative `(le, count)` pairs in Prometheus exposition order; the
+    /// final entry is `(f64::INFINITY, n)` (the `+Inf` bucket).
+    pub fn cumulative_buckets(&self) -> Vec<(f64, u64)> {
+        let mut out = Vec::with_capacity(self.counts.len());
+        let mut acc = 0u64;
+        for (i, c) in self.counts.iter().enumerate() {
+            acc += c;
+            let le = if i < self.bounds.len() { self.bounds[i] } else { f64::INFINITY };
+            out.push((le, acc));
+        }
+        out
     }
 }
 
@@ -207,6 +279,51 @@ mod tests {
         h.record(100.0); // beyond hi
         h.record(0.1); // below lo
         assert_eq!(h.count(), 2);
+        // min/max stay exact even outside the bucket range, and quantiles
+        // clamp to the observed values instead of reporting a bucket bound
+        assert_eq!(h.min(), 0.1);
+        assert_eq!(h.max(), 100.0);
+        assert_eq!(h.quantile(1.0), 100.0);
+        assert!(h.quantile(0.25) >= 0.1);
+    }
+
+    #[test]
+    fn histogram_empty_is_zero_not_nan() {
+        let h = Histogram::new(1e-4, 100.0, 64);
+        for v in [h.p50(), h.p95(), h.p99(), h.min(), h.max(), h.mean(), h.sum()] {
+            assert_eq!(v, 0.0, "empty histogram must export 0, got {v}");
+            assert!(!v.is_nan());
+        }
+        assert_eq!(h.len(), 0);
+        assert!(h.is_empty());
+    }
+
+    #[test]
+    fn histogram_single_sample_quantiles_are_exact() {
+        let mut h = Histogram::new(1e-4, 100.0, 64);
+        h.record(0.01);
+        // the [min, max] clamp collapses every quantile onto the one sample
+        assert_eq!(h.p50(), 0.01);
+        assert_eq!(h.p95(), 0.01);
+        assert_eq!(h.p99(), 0.01);
+        assert_eq!(h.max(), 0.01);
+    }
+
+    #[test]
+    fn histogram_cumulative_buckets_for_exposition() {
+        let mut h = Histogram::new(1.0, 16.0, 5);
+        for v in [0.5, 2.0, 3.0, 100.0] {
+            h.record(v);
+        }
+        let buckets = h.cumulative_buckets();
+        assert_eq!(buckets.len(), 6, "n_buckets + the +Inf overflow bucket");
+        let (last_le, last_n) = *buckets.last().unwrap();
+        assert!(last_le.is_infinite());
+        assert_eq!(last_n, 4, "+Inf bucket counts everything");
+        // cumulative counts are monotone non-decreasing
+        assert!(buckets.windows(2).all(|w| w[0].1 <= w[1].1));
+        // and the below-lo sample landed in the first bucket
+        assert_eq!(buckets[0].1, 1);
     }
 
     #[test]
